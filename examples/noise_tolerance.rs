@@ -1,0 +1,63 @@
+//! Figure 11: fault tolerance — ROC of the learner under cell-flip noise.
+//!
+//!     cargo run --release --example noise_tolerance [-- --iters 10000]
+//!
+//! The paper's protocol: two-state networks, each cell flips with
+//! probability p ∈ {0.01, 0.05, 0.06, 0.07, 0.08, 0.10, 0.11, 0.13,
+//! 0.15}; learn from 1 000 corrupted observations, 10 000 order samples,
+//! and report TP/FP. Expectation: graceful degradation, acceptable up to
+//! p ≈ 0.07, poor by p = 0.15 (paper saw TP 0.51 there).
+
+use bnlearn::coordinator::{run_learning_on, RunConfig, Workload};
+use bnlearn::util::csvio::Table;
+
+fn parse_flag(args: &[String], key: &str, default: u64) -> u64 {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let iters = parse_flag(&args, "--iters", 10_000);
+
+    // Two-state 20-node network (the paper tests binary networks here).
+    let spec = "random:20:25:2";
+    let noise_levels = [0.0, 0.01, 0.05, 0.06, 0.07, 0.08, 0.10, 0.11, 0.13, 0.15];
+
+    let mut csv = Table::new(&["p", "tpr", "fpr", "shd", "best_score"]);
+    println!("noise sweep on {spec}, {iters} iterations each");
+    for &p in &noise_levels {
+        // Same generating network + clean data per seed; only the
+        // corruption differs (the workload injects it after sampling).
+        let workload = Workload::build(spec, 1000, p, 99)?;
+        let cfg = RunConfig {
+            network: spec.into(),
+            rows: 1000,
+            iters,
+            noise: p,
+            seed: 3,
+            ..RunConfig::default()
+        };
+        let report = run_learning_on(&cfg, &workload, None)?;
+        println!(
+            "p={p:<5}: TPR {:.3} FPR {:.4} SHD {:<3} score {:.2}",
+            report.roc.tpr, report.roc.fpr, report.shd, report.result.best_score()
+        );
+        csv.push_row(vec![
+            p.to_string(),
+            format!("{:.4}", report.roc.tpr),
+            format!("{:.4}", report.roc.fpr),
+            report.shd.to_string(),
+            format!("{:.2}", report.result.best_score()),
+        ]);
+    }
+
+    csv.write_csv("results/fig11_noise_roc.csv")?;
+    println!("\n{}", csv.to_markdown());
+    println!("wrote results/fig11_noise_roc.csv");
+    println!("expectation (paper Fig. 11): TPR degrades slowly to p≈0.07, sharply past p≈0.1.");
+    Ok(())
+}

@@ -1,0 +1,151 @@
+"""AOT entry point: lower the L2 order-scoring computation to HLO **text**
+for every graph size the experiments use, plus a manifest the rust
+runtime reads.
+
+HLO text — NOT ``lowered.compile()`` artifacts or serialized
+HloModuleProto — is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids which the runtime's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--sizes 11,20,37] [--s 4]
+
+Outputs, per size n:
+    bn_score_n{n}_s{s}.hlo.txt   — score_order(ls, pst, pos)
+    bn_fold_priors_n{n}_s{s}.hlo.txt — fold_priors(ls, pst, ppf)
+and a single ``manifest.txt`` with one line per artifact:
+    name n s S S_padded tile_s file
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.order_score import DEFAULT_TILE_S
+from .subsets import subset_count
+
+# The graph sizes exercised by examples/ and benches/ (Tables III–V, Fig 8).
+DEFAULT_SIZES = [8, 11, 13, 15, 17, 20, 25, 30, 35, 37, 40, 45, 50, 55, 60]
+
+# Sizes that also get a Pallas-lowered parity artifact (integration tests
+# prove the L1 kernel composes through PJRT; the dense lowering is the
+# default runtime path on the CPU backend — see lower_score_order).
+PALLAS_PARITY_SIZES = {8, 11, 13}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def padded_s(n: int, s: int, tile_s: int) -> int:
+    total = subset_count(n, s)
+    return total + (-total) % tile_s
+
+
+def lower_score_order(n: int, s: int, tile_s: int, *, use_pallas: bool) -> str:
+    """Lower score_order.
+
+    Two lowerings of the same L2 computation (DESIGN.md §8):
+    * ``use_pallas=True`` — the L1 Pallas kernel (interpret mode). The
+      TPU-shaped program; on the CPU PJRT backend its grid becomes an HLO
+      while-loop, which this backend executes slowly — kept as the
+      three-layer parity artifact (`bn_score_pallas_*`).
+    * ``use_pallas=False`` — the dense one-shot formulation, which the CPU
+      backend fuses into a single masked-reduce — the fast path on this
+      testbed (`bn_score_*`, what the rust runtime loads by default).
+    """
+    sp = padded_s(n, s, tile_s)
+    ls = jax.ShapeDtypeStruct((n, sp), jnp.float32)
+    pst = jax.ShapeDtypeStruct((sp, max(s, 1)), jnp.int32)
+    pos = jax.ShapeDtypeStruct((n,), jnp.int32)
+
+    def fn(ls, pst, pos):
+        return model.score_order(ls, pst, pos, tile_s=tile_s, use_pallas=use_pallas)
+
+    return to_hlo_text(jax.jit(fn).lower(ls, pst, pos))
+
+
+def lower_fold_priors(n: int, s: int, tile_s: int) -> str:
+    sp = padded_s(n, s, tile_s)
+    ls = jax.ShapeDtypeStruct((n, sp), jnp.float32)
+    pst = jax.ShapeDtypeStruct((sp, max(s, 1)), jnp.int32)
+    ppf = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+    def fn(ls, pst, ppf):
+        return (model.fold_priors(ls, pst, ppf),)
+
+    return to_hlo_text(jax.jit(fn).lower(ls, pst, ppf))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default=",".join(str(n) for n in DEFAULT_SIZES))
+    ap.add_argument("--s", type=int, default=4, help="max parent-set size")
+    ap.add_argument("--tile-s", type=int, default=DEFAULT_TILE_S)
+    ap.add_argument(
+        "--skip-fold-priors", action="store_true",
+        help="emit only the per-iteration score_order artifacts",
+    )
+    args = ap.parse_args()
+
+    sizes = sorted({int(tok) for tok in args.sizes.split(",") if tok.strip()})
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+    for n in sizes:
+        s = args.s
+        total = subset_count(n, s)
+        sp = padded_s(n, s, args.tile_s)
+
+        name = f"bn_score_n{n}_s{s}"
+        text = lower_score_order(n, s, args.tile_s, use_pallas=False)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(
+            f"{name} {n} {s} {total} {sp} {args.tile_s} {os.path.basename(path)}"
+        )
+        print(f"wrote {path} ({len(text)} chars, S={total}, padded={sp})")
+
+        if n in PALLAS_PARITY_SIZES:
+            name = f"bn_score_pallas_n{n}_s{s}"
+            text = lower_score_order(n, s, args.tile_s, use_pallas=True)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest_lines.append(
+                f"{name} {n} {s} {total} {sp} {args.tile_s} {os.path.basename(path)}"
+            )
+            print(f"wrote {path} ({len(text)} chars, pallas parity)")
+
+        if not args.skip_fold_priors:
+            name = f"bn_fold_priors_n{n}_s{s}"
+            text = lower_fold_priors(n, s, args.tile_s)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest_lines.append(
+                f"{name} {n} {s} {total} {sp} {args.tile_s} {os.path.basename(path)}"
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("# name n s S S_padded tile_s file\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

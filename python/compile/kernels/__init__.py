@@ -1,0 +1,9 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from .order_score import (  # noqa: F401
+    DEFAULT_TILE_S,
+    NEG,
+    order_score_kernel,
+    pad_inputs,
+    vmem_estimate,
+)
+from .ref import order_score_ref, total_score_ref  # noqa: F401

@@ -1,0 +1,159 @@
+"""L1 Pallas kernel: per-node masked max/argmax over parent sets.
+
+This is the paper's GPU scoring kernel (Section V), re-thought for a
+TPU-shaped machine (DESIGN.md §3 Hardware-Adaptation):
+
+* the paper assigns h CUDA blocks per node and lets threads scan parent
+  sets; here the **grid tiles the parent-set axis S** (BlockSpec), and
+  each grid step processes a ``[n, TILE_S]`` slab with the VPU;
+* the paper's per-thread combinadic unranking / parent-set-table read
+  becomes a gather from the **PST tile** resident in VMEM;
+* the paper's shared-memory tree reduction (its Fig. 7) becomes an
+  in-tile ``max``/``argmax`` plus a **running carry** in the revisited
+  output block — the cross-tile reduction the grid performs for free.
+
+Inputs (shapes fixed at trace time, S pre-padded to a TILE_S multiple):
+    ls       f32[n, S]  — local scores, column j = subset j (padding and
+                          ``i ∈ subset`` entries poisoned with NEG).
+    pst      i32[S, s]  — parent-set table; row j lists subset j's node
+                          ids, padded with the sentinel ``n``.
+    pos_ext  i32[n+1]   — node→position, extended with pos_ext[n] = -1 so
+                          the sentinel gathers a harmless "-1" position.
+
+Outputs:
+    best f32[n] — max_j consistent ls[i, j]
+    arg  i32[n] — the argmax subset index (global, first-occurrence ties)
+
+Consistency test: subset j is consistent for node i iff every member
+precedes i, i.e. ``max_{m ∈ j} pos[m] < pos[i]``; the member-max is one
+gather + row-max over the PST tile. ``i ∈ subset`` needs no special case
+(pos[i] < pos[i] is false).
+
+interpret=True throughout: the CPU PJRT client cannot execute Mosaic
+custom-calls; the kernel still lowers into the same HLO module the rust
+runtime loads. Real-TPU resource estimates live in ``vmem_estimate``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Poison value for masked-out entries. Matches rust's NEG_SENTINEL.
+NEG = -1.0e30
+
+# Default parent-set tile (lanes axis): multiple of 128 for TPU layout.
+DEFAULT_TILE_S = 512
+
+
+def _kernel(ls_ref, pst_ref, posx_ref, best_ref, arg_ref, *, tile_s: int):
+    """One grid step: fold tile ``t`` into the running (best, arg)."""
+    t = pl.program_id(0)
+
+    pst = pst_ref[...]              # [TILE_S, s] i32
+    posx = posx_ref[...]            # [n+1] i32
+    pos = posx[:-1]                 # [n] i32
+
+    # Max member position per subset (empty set → -1 via the sentinel).
+    mp = jnp.max(posx[pst], axis=1)             # [TILE_S]
+
+    # Consistent iff every member strictly precedes node i.
+    cons = mp[None, :] < pos[:, None]            # [n, TILE_S] bool
+
+    ls = ls_ref[...]                             # [n, TILE_S] f32
+    masked = jnp.where(cons, ls, NEG)
+
+    tile_best = jnp.max(masked, axis=1)                       # [n]
+    tile_arg = jnp.argmax(masked, axis=1).astype(jnp.int32)   # [n], first max
+    tile_arg = tile_arg + t * tile_s
+
+    @pl.when(t == 0)
+    def _init():
+        best_ref[...] = tile_best
+        arg_ref[...] = tile_arg
+
+    @pl.when(t > 0)
+    def _merge():
+        prev_best = best_ref[...]
+        prev_arg = arg_ref[...]
+        # Strict > keeps the earliest tile on ties (global first-occurrence).
+        better = tile_best > prev_best
+        best_ref[...] = jnp.where(better, tile_best, prev_best)
+        arg_ref[...] = jnp.where(better, tile_arg, prev_arg)
+
+
+def order_score_kernel(ls, pst, pos_ext, *, tile_s: int = DEFAULT_TILE_S):
+    """Masked max/argmax over parent sets via the Pallas kernel.
+
+    ``ls``: f32[n, S]; ``pst``: i32[S, s]; ``pos_ext``: i32[n+1].
+    S must be a multiple of ``tile_s`` (pad with NEG columns / sentinel
+    rows — see ``pad_inputs``). Returns ``(best f32[n], arg i32[n])``.
+    """
+    n, s_total = ls.shape
+    if s_total % tile_s != 0:
+        raise ValueError(f"S={s_total} not a multiple of tile_s={tile_s}")
+    if pst.shape[0] != s_total:
+        raise ValueError("ls and pst disagree on S")
+    if pos_ext.shape != (n + 1,):
+        raise ValueError("pos_ext must have length n+1")
+    grid = (s_total // tile_s,)
+    kernel = functools.partial(_kernel, tile_s=tile_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, tile_s), lambda t: (0, t)),
+            pl.BlockSpec((tile_s, pst.shape[1]), lambda t: (t, 0)),
+            pl.BlockSpec((n + 1,), lambda t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n,), lambda t: (0,)),
+            pl.BlockSpec((n,), lambda t: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(ls, pst, pos_ext)
+
+
+def pad_inputs(ls, pst, *, tile_s: int = DEFAULT_TILE_S, sentinel: int | None = None):
+    """Pad ``ls``/``pst`` along S to a multiple of ``tile_s``.
+
+    Padding columns are poisoned with NEG; padding PST rows hold only the
+    sentinel (gathering pos_ext[-1] = -1, i.e. "consistent but worthless").
+    Done once on the host (rust uploads pre-padded buffers).
+    """
+    n, s_total = ls.shape
+    if sentinel is None:
+        sentinel = n
+    pad = (-s_total) % tile_s
+    if pad == 0:
+        return ls, pst
+    ls_p = jnp.concatenate([ls, jnp.full((n, pad), NEG, ls.dtype)], axis=1)
+    pst_p = jnp.concatenate(
+        [pst, jnp.full((pad, pst.shape[1]), sentinel, pst.dtype)], axis=0
+    )
+    return ls_p, pst_p
+
+
+def vmem_estimate(n: int, s: int, tile_s: int = DEFAULT_TILE_S) -> dict:
+    """Per-grid-step VMEM footprint (bytes) for the DESIGN.md §8 estimate."""
+    ls_tile = n * tile_s * 4
+    pst_tile = tile_s * s * 4
+    posx = (n + 1) * 4
+    carry = 2 * n * 4
+    scratch = 2 * n * tile_s * 4  # masked + cons intermediates (upper bound)
+    total = ls_tile + pst_tile + posx + carry + scratch
+    return {
+        "ls_tile": ls_tile,
+        "pst_tile": pst_tile,
+        "pos_ext": posx,
+        "carry": carry,
+        "scratch_upper": scratch,
+        "total": total,
+    }

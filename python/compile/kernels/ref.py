@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the order-scoring kernel.
+
+Straight-line dense formulation of the paper's Equation (6): no tiling,
+no carries — the ground truth the Pallas kernel is tested against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .order_score import NEG
+
+
+def order_score_ref(ls, pst, pos_ext):
+    """Reference (best, arg) over the full [n, S] slab in one shot."""
+    pos = pos_ext[:-1]
+    mp = jnp.max(pos_ext[pst], axis=1)            # [S]
+    cons = mp[None, :] < pos[:, None]             # [n, S]
+    masked = jnp.where(cons, ls, NEG)
+    best = jnp.max(masked, axis=1)
+    arg = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    return best, arg
+
+
+def total_score_ref(ls, pst, pos_ext):
+    """Total order score (Eq. 6): Σ_i best_i."""
+    best, _ = order_score_ref(ls, pst, pos_ext)
+    return jnp.sum(best)

@@ -1,0 +1,68 @@
+"""L2: the order-scoring computation — the paper's Equation (6) + (9) as
+a jax function over device-resident operands, calling the L1 Pallas
+kernel. Build-time only; ``aot.py`` lowers it to HLO text for the rust
+runtime.
+
+Two entry points:
+
+* :func:`score_order` — the per-iteration computation. Operands
+  ``(ls, pst, pos)`` where ``ls``/``pst`` stay device-resident across the
+  whole MCMC run and only ``pos`` (n ints) is re-uploaded per iteration —
+  the paper's CPU→GPU "pass a new order, get best graph + score back"
+  protocol with the PCIe transfer shrunk to n ints.
+* :func:`fold_priors` — the run-setup computation (Eq. 9): add the
+  pairwise-prior contribution Σ_{m∈π} PPF(i,m) to every table entry, as
+  one [n,n]×[n,S] matmul over the PST's one-hot membership — the
+  MXU-shaped piece of the TPU adaptation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import order_score_kernel
+from .kernels.order_score import DEFAULT_TILE_S, NEG
+
+
+def score_order(ls, pst, pos, *, tile_s: int = DEFAULT_TILE_S, use_pallas: bool = True):
+    """Score one order.
+
+    Args:
+        ls:  f32[n, S] prior-folded local scores (S a tile_s multiple).
+        pst: i32[S, s] parent-set table (sentinel = n).
+        pos: i32[n] node → position.
+
+    Returns:
+        (total f32[], best f32[n], arg i32[n]).
+    """
+    n = ls.shape[0]
+    pos = pos.astype(jnp.int32)
+    pos_ext = jnp.concatenate([pos, jnp.full((1,), -1, jnp.int32)])
+    if use_pallas:
+        best, arg = order_score_kernel(ls, pst, pos_ext, tile_s=tile_s)
+    else:
+        from .kernels.ref import order_score_ref
+
+        best, arg = order_score_ref(ls, pst, pos_ext)
+    total = jnp.sum(best)
+    del n
+    return total, best, arg
+
+
+def membership_from_pst(pst, n: int):
+    """f32[S, n] one-hot membership matrix from the PST (sentinel drops)."""
+    onehot = jax.nn.one_hot(pst, n + 1, dtype=jnp.float32)  # [S, s, n+1]
+    return jnp.sum(onehot[..., :n], axis=1)                 # [S, n]
+
+
+def fold_priors(ls, pst, ppf):
+    """Equation (9): ``ls[i,j] += Σ_{m ∈ subset_j} PPF(i, m)``.
+
+    ``ppf`` is f32[n, n] with ppf[i, m] = PPF(i, m) (edge m→i). Poisoned
+    entries stay poisoned. One matmul: [n,n] @ [n,S] — the MXU path.
+    """
+    n = ls.shape[0]
+    member = membership_from_pst(pst, n)                    # [S, n]
+    contrib = ppf @ member.T                                # [n, S]
+    return jnp.where(ls > NEG / 2, ls + contrib, ls)

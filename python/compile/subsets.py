@@ -1,0 +1,45 @@
+"""Python mirror of the rust subset layout (build-time / tests only).
+
+Generates the paper's parent-set layout — all subsets of {0..n-1} with
+|subset| ≤ s, blocks in decreasing size, lexicographic within a block —
+and the PST in exactly the order `rust/src/combinatorics/layout.rs`
+produces, so python-side tests exercise the same indexing the runtime
+uses. Never imported at runtime (rust builds its own PST).
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+
+import numpy as np
+
+
+def subset_count(n: int, s: int) -> int:
+    """S = Σ_{j≤s} C(n, j)."""
+    return sum(math.comb(n, j) for j in range(min(s, n) + 1))
+
+
+def enumerate_layout(n: int, s: int):
+    """Yield subsets in layout order: size s first (lex), …, ∅ last."""
+    for k in range(min(s, n), -1, -1):
+        yield from itertools.combinations(range(n), k)
+
+
+def build_pst(n: int, s: int) -> np.ndarray:
+    """The [S, max(s,1)] parent-set table, sentinel-padded with ``n``."""
+    width = max(s, 1)
+    rows = []
+    for subset in enumerate_layout(n, s):
+        row = list(subset) + [n] * (width - len(subset))
+        rows.append(row)
+    return np.asarray(rows, dtype=np.int32)
+
+
+def index_of(n: int, s: int, subset) -> int:
+    """Global layout index of a sorted subset (slow; tests only)."""
+    target = tuple(subset)
+    for idx, cand in enumerate(enumerate_layout(n, s)):
+        if cand == target:
+            return idx
+    raise KeyError(f"subset {subset} not in layout(n={n}, s={s})")

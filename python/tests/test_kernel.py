@@ -1,0 +1,153 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+"""The Pallas kernel must agree exactly with the pure-jnp oracle and with
+an independent numpy brute force, across shapes, tilings and seeds."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import order_score_kernel, order_score_ref, pad_inputs, NEG
+from compile.kernels.order_score import vmem_estimate
+from compile.subsets import build_pst, enumerate_layout, subset_count
+
+
+def make_case(n, s, tile_s, seed, poison_self=True):
+    """Random (ls, pst, pos_ext) with S padded to a tile_s multiple."""
+    rng = np.random.default_rng(seed)
+    total = subset_count(n, s)
+    ls = rng.normal(loc=-50.0, scale=10.0, size=(n, total)).astype(np.float32)
+    pst = build_pst(n, s)
+    if poison_self:
+        for j, subset in enumerate(enumerate_layout(n, s)):
+            for m in subset:
+                ls[m, j] = NEG
+    perm = rng.permutation(n)
+    pos = np.empty(n, dtype=np.int32)
+    pos[perm] = np.arange(n, dtype=np.int32)
+    ls_p, pst_p = pad_inputs(jnp.asarray(ls), jnp.asarray(pst), tile_s=tile_s)
+    pos_ext = jnp.concatenate([jnp.asarray(pos), jnp.full((1,), -1, jnp.int32)])
+    return np.asarray(ls_p), np.asarray(pst_p), np.asarray(pos_ext)
+
+
+def numpy_oracle(ls, pst, pos_ext):
+    """Brute force, independent of jax: loop over nodes and subsets."""
+    n = ls.shape[0]
+    pos = pos_ext[:-1]
+    best = np.full(n, -np.inf, dtype=np.float64)
+    arg = np.zeros(n, dtype=np.int64)
+    for j in range(ls.shape[1]):
+        members = [m for m in pst[j] if m != n]
+        mp = max((pos[m] for m in members), default=-1)
+        for i in range(n):
+            if mp < pos[i] and ls[i, j] > best[i]:
+                best[i] = ls[i, j]
+                arg[i] = j
+    return best.astype(np.float32), arg.astype(np.int32)
+
+
+@pytest.mark.parametrize("n,s,tile_s", [
+    (5, 2, 8),
+    (6, 4, 16),
+    (8, 3, 32),
+    (11, 4, 128),
+    (13, 4, 512),
+])
+def test_kernel_matches_ref(n, s, tile_s):
+    ls, pst, pos_ext = make_case(n, s, tile_s, seed=n * 1000 + s)
+    kb, ka = order_score_kernel(jnp.asarray(ls), jnp.asarray(pst), jnp.asarray(pos_ext),
+                                tile_s=tile_s)
+    rb, ra = order_score_ref(jnp.asarray(ls), jnp.asarray(pst), jnp.asarray(pos_ext))
+    np.testing.assert_array_equal(np.asarray(kb), np.asarray(rb))
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(ra))
+
+
+@pytest.mark.parametrize("n,s,tile_s", [(6, 3, 8), (7, 2, 16)])
+def test_kernel_matches_numpy_bruteforce(n, s, tile_s):
+    ls, pst, pos_ext = make_case(n, s, tile_s, seed=7)
+    kb, ka = order_score_kernel(jnp.asarray(ls), jnp.asarray(pst), jnp.asarray(pos_ext),
+                                tile_s=tile_s)
+    ob, oa = numpy_oracle(ls, pst, pos_ext)
+    np.testing.assert_array_equal(np.asarray(kb), ob)
+    np.testing.assert_array_equal(np.asarray(ka), oa)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=10),
+    s=st.integers(min_value=0, max_value=4),
+    tile_pow=st.integers(min_value=3, max_value=7),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_kernel_ref_agreement_hypothesis(n, s, tile_pow, seed):
+    tile_s = 1 << tile_pow
+    ls, pst, pos_ext = make_case(n, s, tile_s, seed=seed)
+    kb, ka = order_score_kernel(jnp.asarray(ls), jnp.asarray(pst), jnp.asarray(pos_ext),
+                                tile_s=tile_s)
+    rb, ra = order_score_ref(jnp.asarray(ls), jnp.asarray(pst), jnp.asarray(pos_ext))
+    np.testing.assert_array_equal(np.asarray(kb), np.asarray(rb))
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(ra))
+
+
+def test_argmax_subset_is_consistent_with_order():
+    n, s, tile_s = 9, 3, 64
+    ls, pst, pos_ext = make_case(n, s, tile_s, seed=11)
+    _, ka = order_score_kernel(jnp.asarray(ls), jnp.asarray(pst), jnp.asarray(pos_ext),
+                               tile_s=tile_s)
+    pos = pos_ext[:-1]
+    for i in range(n):
+        subset = [m for m in np.asarray(pst)[int(ka[i])] if m != n]
+        assert all(pos[m] < pos[i] for m in subset), (i, subset)
+
+
+def test_empty_set_always_available():
+    # With every non-empty subset poisoned, the argmax must be the empty
+    # set (the last unpadded layout index) for every node.
+    n, s, tile_s = 6, 2, 8
+    total = subset_count(n, s)
+    ls = np.full((n, total), NEG, dtype=np.float32)
+    ls[:, total - 1] = -3.0  # empty set is the final layout entry
+    pst = build_pst(n, s)
+    ls_p, pst_p = pad_inputs(jnp.asarray(ls), jnp.asarray(pst), tile_s=tile_s)
+    pos = np.arange(n, dtype=np.int32)
+    pos_ext = jnp.concatenate([jnp.asarray(pos), jnp.full((1,), -1, jnp.int32)])
+    kb, ka = order_score_kernel(ls_p, pst_p, pos_ext, tile_s=tile_s)
+    assert np.all(np.asarray(kb) == np.float32(-3.0))
+    assert np.all(np.asarray(ka) == total - 1)
+
+
+def test_first_occurrence_tie_breaking():
+    # Two consistent subsets with identical scores: argmax must pick the
+    # lower index, including across tile boundaries.
+    n, s, tile_s = 4, 1, 2  # S = 5 → padded 6, three tiles
+    total = subset_count(n, s)
+    ls = np.full((n, total), -90.0, dtype=np.float32)
+    pst = build_pst(n, s)
+    # For the last node in the identity order all singletons are
+    # consistent; give them all the same score.
+    ls_p, pst_p = pad_inputs(jnp.asarray(ls), jnp.asarray(pst), tile_s=tile_s)
+    pos = np.arange(n, dtype=np.int32)
+    pos_ext = jnp.concatenate([jnp.asarray(pos), jnp.full((1,), -1, jnp.int32)])
+    kb, ka = order_score_kernel(ls_p, pst_p, pos_ext, tile_s=tile_s)
+    rb, ra = order_score_ref(ls_p, pst_p, pos_ext)
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(ra))
+    np.testing.assert_array_equal(np.asarray(kb), np.asarray(rb))
+
+
+def test_rejects_unpadded_s():
+    n, s, tile_s = 5, 2, 64
+    total = subset_count(n, s)  # 16 — not a multiple of 64
+    ls = jnp.zeros((n, total), jnp.float32)
+    pst = jnp.asarray(build_pst(n, s))
+    pos_ext = jnp.concatenate([jnp.arange(n, dtype=jnp.int32),
+                               jnp.full((1,), -1, jnp.int32)])
+    with pytest.raises(ValueError, match="not a multiple"):
+        order_score_kernel(ls, pst, pos_ext, tile_s=tile_s)
+
+
+def test_vmem_estimate_within_budget():
+    # DESIGN.md §8: the n=60 tile must sit far below 16 MB VMEM.
+    est = vmem_estimate(60, 4, 512)
+    assert est["total"] < 4 * 1024 * 1024
+    assert est["ls_tile"] == 60 * 512 * 4

@@ -1,0 +1,84 @@
+"""L2 model tests: score_order totals, pallas/ref parity at the model
+level, and the fold_priors matmul against a numpy loop."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import NEG, pad_inputs
+from compile.subsets import build_pst, enumerate_layout, subset_count
+
+from .test_kernel import make_case
+
+
+def test_score_order_total_is_sum_of_best():
+    n, s, tile_s = 8, 3, 32
+    ls, pst, pos_ext = make_case(n, s, tile_s, seed=3)
+    total, best, arg = model.score_order(
+        jnp.asarray(ls), jnp.asarray(pst), jnp.asarray(pos_ext[:-1]), tile_s=tile_s
+    )
+    assert np.isclose(float(total), float(np.sum(np.asarray(best))), rtol=1e-6)
+    assert arg.dtype == jnp.int32
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_model_pallas_and_ref_paths_agree(seed):
+    n, s, tile_s = 7, 3, 16
+    ls, pst, pos_ext = make_case(n, s, tile_s, seed=seed)
+    args = (jnp.asarray(ls), jnp.asarray(pst), jnp.asarray(pos_ext[:-1]))
+    tp, bp, ap = model.score_order(*args, tile_s=tile_s, use_pallas=True)
+    tr, br, ar = model.score_order(*args, tile_s=tile_s, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(bp), np.asarray(br))
+    np.testing.assert_array_equal(np.asarray(ap), np.asarray(ar))
+    assert float(tp) == float(tr)
+
+
+def test_fold_priors_matches_numpy_loop():
+    n, s = 6, 3
+    rng = np.random.default_rng(9)
+    total = subset_count(n, s)
+    ls = rng.normal(-40, 5, size=(n, total)).astype(np.float32)
+    pst = build_pst(n, s)
+    # poison self-parent entries
+    for j, subset in enumerate(enumerate_layout(n, s)):
+        for m in subset:
+            ls[m, j] = NEG
+    ppf = rng.normal(0, 3, size=(n, n)).astype(np.float32)
+    ls_p, pst_p = pad_inputs(jnp.asarray(ls), jnp.asarray(pst), tile_s=16)
+    out = np.asarray(model.fold_priors(ls_p, pst_p, jnp.asarray(ppf)))
+
+    # numpy oracle over the unpadded region
+    want = ls.copy()
+    for j, subset in enumerate(enumerate_layout(n, s)):
+        for i in range(n):
+            if want[i, j] <= NEG / 2:
+                continue
+            want[i, j] += sum(ppf[i, m] for m in subset)
+    np.testing.assert_allclose(out[:, :total], want, rtol=1e-5, atol=1e-4)
+    # padded columns stay poisoned
+    assert np.all(out[:, total:] <= NEG / 2)
+
+
+def test_fold_priors_keeps_poison():
+    n, s = 5, 2
+    total = subset_count(n, s)
+    ls = np.full((n, total), NEG, dtype=np.float32)
+    pst = build_pst(n, s)
+    ppf = np.full((n, n), 5.0, dtype=np.float32)
+    ls_p, pst_p = pad_inputs(jnp.asarray(ls), jnp.asarray(pst), tile_s=16)
+    out = np.asarray(model.fold_priors(ls_p, pst_p, jnp.asarray(ppf)))
+    assert np.all(out <= NEG / 2)
+
+
+def test_membership_matrix():
+    n, s = 5, 2
+    pst = jnp.asarray(build_pst(n, s))
+    member = np.asarray(model.membership_from_pst(pst, n))
+    for j, subset in enumerate(enumerate_layout(n, s)):
+        row = np.zeros(n)
+        for m in subset:
+            row[m] = 1.0
+        np.testing.assert_array_equal(member[j], row)

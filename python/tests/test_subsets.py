@@ -1,0 +1,51 @@
+"""Layout parity tests: the python mirror must match the paper's Section
+V-B example and the rust layout conventions (size-descending blocks,
+lexicographic within a block, sentinel padding)."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.subsets import build_pst, enumerate_layout, index_of, subset_count
+
+
+def test_paper_example_n6_s4():
+    # S = 57; index 0 → {0,1,2,3}; 1 → {0,1,2,4}; S-2 → {5}; S-1 → ∅.
+    assert subset_count(6, 4) == 57
+    layout = list(enumerate_layout(6, 4))
+    assert layout[0] == (0, 1, 2, 3)
+    assert layout[1] == (0, 1, 2, 4)
+    assert layout[2] == (0, 1, 2, 5)
+    assert layout[55] == (5,)
+    assert layout[56] == ()
+
+
+def test_pst_shape_and_sentinel():
+    pst = build_pst(6, 4)
+    assert pst.shape == (57, 4)
+    assert pst.dtype == np.int32
+    # empty-set row is all sentinel
+    assert (pst[56] == 6).all()
+    # first row has no padding
+    assert (pst[0] == [0, 1, 2, 3]).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(min_value=1, max_value=9), s=st.integers(min_value=0, max_value=5))
+def test_layout_is_complete_and_unique(n, s):
+    layout = list(enumerate_layout(n, s))
+    assert len(layout) == subset_count(n, s)
+    assert len(set(layout)) == len(layout)
+    # blocks ordered by decreasing size, lexicographic within
+    sizes = [len(sub) for sub in layout]
+    assert sizes == sorted(sizes, reverse=True)
+    for k in set(sizes):
+        block = [sub for sub in layout if len(sub) == k]
+        assert block == sorted(block)
+        assert len(block) == math.comb(n, k)
+
+
+def test_index_of_roundtrip():
+    for idx, sub in enumerate(enumerate_layout(5, 3)):
+        assert index_of(5, 3, sub) == idx

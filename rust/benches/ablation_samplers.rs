@@ -1,0 +1,71 @@
+//! Ablation: order-space vs graph-space sampling (the paper's Section II
+//! argument, Table I made operational) — best score reached per candidate
+//! budget, plus the max-based vs sum-based order-score cost comparison
+//! from Section III-B.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{fmt_s, per_iter_secs, quick_mode, scaling_workload};
+use bnlearn::mcmc::{run_chain, GraphChain, Order};
+use bnlearn::scorer::{BestGraph, OrderScorer, SerialScorer, SumScorer};
+use bnlearn::util::csvio::Table;
+use bnlearn::util::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let n = 15usize;
+    let (_, table) = scaling_workload(n, 4, 400, 0x5A3Bu64);
+
+    // --- sampler comparison: score reached per scoring budget ---
+    let budgets: &[u64] = if quick_mode() { &[100] } else { &[50, 100, 300, 1000, 3000] };
+    let mut csv = Table::new(&["budget", "order_best", "graph_best_same", "graph_best_10x"]);
+    println!("Ablation — order-space vs graph-space sampling (n={n})\n");
+    for &budget in budgets {
+        let order_best = {
+            let mut scorer = SerialScorer::new(&table);
+            run_chain(&mut scorer, n, budget, 1, 11).best_score()
+        };
+        let graph_same = {
+            let mut chain = GraphChain::new(&table, 1, 12);
+            chain.run(budget);
+            chain.tracker.best().unwrap().0
+        };
+        let graph_10x = {
+            let mut chain = GraphChain::new(&table, 1, 13);
+            chain.run(budget * 10);
+            chain.tracker.best().unwrap().0
+        };
+        println!(
+            "budget {budget:>5}: order {order_best:>12.3}  graph(x1) {graph_same:>12.3}  graph(x10) {graph_10x:>12.3}"
+        );
+        csv.push_row(vec![
+            budget.to_string(),
+            format!("{order_best:.3}"),
+            format!("{graph_same:.3}"),
+            format!("{graph_10x:.3}"),
+        ]);
+    }
+    csv.write_csv("results/ablation_samplers.csv")?;
+    println!("\n{}", csv.to_markdown());
+
+    // --- scoring-function cost: max-based (ours) vs sum-based [5] ---
+    let mut rng = Pcg32::new(21);
+    let order = Order::random(n, &mut rng);
+    let mut out = BestGraph::new(n);
+    let mut maxs = SerialScorer::new(&table);
+    let t_max = per_iter_secs(0.3, 5, || {
+        maxs.score_order(&order, &mut out);
+    });
+    let mut sums = SumScorer::new(&table);
+    let t_sum = per_iter_secs(0.3, 5, || {
+        sums.score_order(&order, &mut out);
+    });
+    println!(
+        "\nscoring cost per iteration: max-based {}  sum-based {}  ratio {:.2}x",
+        fmt_s(t_max),
+        fmt_s(t_sum),
+        t_sum / t_max
+    );
+    println!("(paper III-B: max-based avoids the exponentiation/log the sum-based score needs)");
+    Ok(())
+}

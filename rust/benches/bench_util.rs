@@ -1,0 +1,45 @@
+//! Shared helpers for the hand-rolled benchmark harness (criterion is not
+//! in the offline crate set; each bench is a `harness = false` binary).
+//!
+//! Conventions: every bench prints a GitHub-markdown table mirroring the
+//! paper's table it reproduces and writes a CSV under `results/`. Quick
+//! mode (`BNLEARN_BENCH_QUICK=1`) trims sweeps for smoke runs.
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use bnlearn::bn::sampling::forward_sample;
+use bnlearn::bn::Network;
+use bnlearn::data::Dataset;
+use bnlearn::score::{BdeParams, ScoreTable};
+use bnlearn::util::Pcg32;
+
+/// True when quick (CI-ish) mode is requested.
+pub fn quick_mode() -> bool {
+    std::env::var_os("BNLEARN_BENCH_QUICK").is_some_and(|v| v != "0")
+}
+
+/// A synthetic n-node workload (3-state, ~1.25·n edges) for scaling
+/// sweeps: dataset + bounded score table.
+pub fn scaling_workload(n: usize, s: usize, rows: usize, seed: u64) -> (Dataset, ScoreTable) {
+    let mut rng = Pcg32::new(seed);
+    let dag = bnlearn::bn::random::random_dag(n, s.min(4), n + n / 4, &mut rng);
+    let net = Network::with_random_cpts(dag, vec![3; n], &mut rng);
+    let data = forward_sample(&net, rows, &mut rng);
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
+    let table = ScoreTable::build(&data, BdeParams::default(), s, threads);
+    (data, table)
+}
+
+/// Measure mean seconds/iteration of `f`, adaptively: at least
+/// `min_iters` runs and at least `min_secs` of wall time.
+pub fn per_iter_secs(min_secs: f64, min_iters: usize, f: impl FnMut()) -> f64 {
+    bnlearn::util::timer::bench_secs_per_iter(min_secs, min_iters, f)
+}
+
+/// Format seconds like the paper's tables (seconds with enough digits).
+pub fn fmt_s(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.2e}", secs)
+    } else {
+        format!("{secs:.6}")
+    }
+}

@@ -1,0 +1,102 @@
+//! Table III + Figure 8: per-iteration order-scoring runtime, serial GPP
+//! engine vs the accelerated XLA engine, for graph sizes 13…60, with the
+//! speedup column.
+//!
+//! Paper's shape (GPP Xeon E5620 vs Tesla M2090): the accelerator *loses*
+//! below ~13–15 nodes (dispatch/transfer overhead), crosses over, and
+//! saturates near 10× by n≈50.
+//!
+//! Testbed caveat (EXPERIMENTS.md §Table III): this container exposes
+//! **one CPU core**, so the "device" executing the XLA program has
+//! exactly the host's compute — the paper's 512-core parallelism cannot
+//! materialize in wall-clock. We therefore also report each engine's
+//! *candidate throughput* (parent-set slots processed per second): the
+//! dense engine scans n·S slots vs the serial engine's Σ_p C(p,≤s); the
+//! throughput ratio is what parallel lanes multiply (DESIGN.md §8 maps it
+//! to MXU/VPU lanes on a real TPU).
+//!
+//! Requires `make artifacts`.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{fmt_s, per_iter_secs, quick_mode, scaling_workload};
+use bnlearn::mcmc::Order;
+use bnlearn::runtime::{default_artifacts_dir, XlaScorer};
+use bnlearn::scorer::{BestGraph, OrderScorer, SerialScorer};
+use bnlearn::util::csvio::Table;
+use bnlearn::util::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    if !default_artifacts_dir().join("manifest.txt").exists() {
+        eprintln!("SKIP table3: artifacts missing — run `make artifacts`");
+        return Ok(());
+    }
+    let sizes: Vec<usize> = if quick_mode() {
+        vec![13, 20, 30]
+    } else {
+        vec![13, 15, 17, 20, 25, 30, 35, 37, 40, 45, 50, 55, 60]
+    };
+
+    let mut csv = Table::new(&[
+        "n", "gpp_s_per_iter", "xla_s_per_iter", "speedup",
+        "gpp_candidates", "xla_slots", "gpp_McandPerS", "xla_MslotsPerS", "throughput_ratio",
+    ]);
+    println!("Table III / Fig 8 — per-iteration scoring: serial (GPP) vs XLA engine\n");
+
+    for &n in &sizes {
+        // Preprocessing with few rows: per-iteration scoring cost does not
+        // depend on the row count, only the table does.
+        let rows = if n >= 45 { 120 } else { 200 };
+        let (_, table) = scaling_workload(n, 4, rows, 0xC0DE + n as u64);
+        let mut rng = Pcg32::new(n as u64);
+        let order = Order::random(n, &mut rng);
+        let mut out = BestGraph::new(n);
+
+        let mut serial = SerialScorer::new(&table);
+        let (budget, floor) = if n >= 50 { (1.0, 3) } else { (0.3, 5) };
+        let gpp = per_iter_secs(budget, floor, || {
+            serial.score_order(&order, &mut out);
+        });
+
+        let mut xla = XlaScorer::new(default_artifacts_dir(), &table)?;
+        let accel = per_iter_secs(budget, floor, || {
+            xla.score_order(&order, &mut out);
+        });
+
+        let speedup = gpp / accel;
+
+        // Work accounting: serial enumerates Σ_p Σ_{k≤s} C(p,k) candidate
+        // sets; the dense engine scans n·S slots.
+        let bt = table.layout().binomials();
+        let gpp_candidates: u64 = (0..n).map(|p| bt.subsets_up_to(p, 4)).sum();
+        let xla_slots = (n * table.subsets()) as u64;
+        let gpp_thru = gpp_candidates as f64 / gpp / 1e6;
+        let xla_thru = xla_slots as f64 / accel / 1e6;
+
+        println!(
+            "n={n:>2}: gpp {:>12}  xla {:>12}  speedup {speedup:>6.2}  thru {:.0}M vs {:.0}M slots/s ({:.1}x)",
+            fmt_s(gpp),
+            fmt_s(accel),
+            gpp_thru,
+            xla_thru,
+            xla_thru / gpp_thru,
+        );
+        csv.push_row(vec![
+            n.to_string(),
+            format!("{gpp:.6}"),
+            format!("{accel:.6}"),
+            format!("{speedup:.2}"),
+            gpp_candidates.to_string(),
+            xla_slots.to_string(),
+            format!("{gpp_thru:.1}"),
+            format!("{xla_thru:.1}"),
+            format!("{:.2}", xla_thru / gpp_thru),
+        ]);
+    }
+
+    println!("\n{}", csv.to_markdown());
+    csv.write_csv("results/table3_fig8_periter.csv")?;
+    println!("wrote results/table3_fig8_periter.csv (fig 8 = same series, plotted)");
+    Ok(())
+}

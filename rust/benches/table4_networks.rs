@@ -1,0 +1,64 @@
+//! Table IV: full-run decomposition (preprocessing / iteration / total)
+//! on the two real networks — the 11-node Sachs STN and the 37-node
+//! ALARM — with the serial GPP engine and the accelerated XLA engine.
+//!
+//! Paper's shape: on the 37-node network the accelerated run wins ~3×
+//! end-to-end (preprocessing, still on the CPU, becomes the new
+//! bottleneck); on the 11-node network acceleration *loses* (setup +
+//! dispatch overhead dominates tiny per-iteration work).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::quick_mode;
+use bnlearn::coordinator::{run_learning_on, EngineKind, RunConfig, Workload};
+use bnlearn::runtime::default_artifacts_dir;
+use bnlearn::util::csvio::Table;
+
+fn main() -> anyhow::Result<()> {
+    let iters: u64 = if quick_mode() { 100 } else { 1000 };
+    let rows = 1000;
+
+    let mut csv = Table::new(&[
+        "network", "engine", "preprocess_s", "setup_s", "iteration_s", "total_s", "tpr", "shd",
+    ]);
+    println!("Table IV — preprocessing/iteration/total on Sachs STN (11) and ALARM (37), {iters} iterations\n");
+
+    for network in ["sachs", "alarm"] {
+        let workload = Workload::build(network, rows, 0.0, 42)?;
+        for engine in [EngineKind::Serial, EngineKind::Xla] {
+            if engine == EngineKind::Xla
+                && !default_artifacts_dir().join("manifest.txt").exists()
+            {
+                eprintln!("SKIP xla rows: artifacts missing");
+                continue;
+            }
+            let cfg = RunConfig {
+                network: network.into(),
+                rows,
+                iters,
+                engine,
+                seed: 42,
+                ..RunConfig::default()
+            };
+            let report = run_learning_on(&cfg, &workload, None)?;
+            println!("  {}", report.summary());
+            csv.push_row(vec![
+                network.into(),
+                engine.name().into(),
+                format!("{:.3}", report.preprocess_secs),
+                format!("{:.3}", report.setup_secs),
+                format!("{:.3}", report.sampling_secs),
+                format!("{:.3}", report.total_secs()),
+                format!("{:.3}", report.roc.tpr),
+                report.shd.to_string(),
+            ]);
+        }
+    }
+
+    println!("\n{}", csv.to_markdown());
+    csv.write_csv("results/table4_networks.csv")?;
+    println!("wrote results/table4_networks.csv");
+    println!("\npaper reference: 37-node GPP 563+1685=2248s vs GPU 634+161=795s; 11-node GPP 1.71s vs GPU 6.28s.");
+    Ok(())
+}

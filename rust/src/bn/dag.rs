@@ -1,0 +1,211 @@
+//! Directed acyclic graph over `n` nodes with parent-list representation.
+//!
+//! This is the structure being *learned*: learning returns a `Dag`, the
+//! evaluation compares a learned `Dag` against a ground-truth one, and the
+//! MCMC best-graph tracker stores `Dag`s.
+
+/// A directed graph stored as sorted parent lists; acyclicity is enforced
+/// by the constructors that need it (`topological_order` returns `None`
+/// on cycles).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dag {
+    n: usize,
+    /// `parents[i]` — sorted node ids with an edge into `i`.
+    parents: Vec<Vec<usize>>,
+}
+
+impl Dag {
+    /// Empty graph on `n` nodes.
+    pub fn empty(n: usize) -> Self {
+        Dag { n, parents: vec![Vec::new(); n] }
+    }
+
+    /// Build from explicit parent lists (sorted + deduped internally).
+    pub fn from_parents(parents: Vec<Vec<usize>>) -> Self {
+        let n = parents.len();
+        let mut ps = parents;
+        for (i, p) in ps.iter_mut().enumerate() {
+            p.sort_unstable();
+            p.dedup();
+            assert!(p.iter().all(|&m| m < n && m != i), "invalid parent for node {i}");
+        }
+        Dag { n, parents: ps }
+    }
+
+    /// Build from an edge list `m → i`.
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut parents = vec![Vec::new(); n];
+        for &(from, to) in edges {
+            assert!(from < n && to < n && from != to, "bad edge {from}->{to}");
+            parents[to].push(from);
+        }
+        Dag::from_parents(parents)
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Sorted parents of node `i`.
+    pub fn parents(&self, i: usize) -> &[usize] {
+        &self.parents[i]
+    }
+
+    /// Replace the parent set of node `i`.
+    pub fn set_parents(&mut self, i: usize, mut parents: Vec<usize>) {
+        parents.sort_unstable();
+        parents.dedup();
+        assert!(parents.iter().all(|&m| m < self.n && m != i));
+        self.parents[i] = parents;
+    }
+
+    /// Total number of edges.
+    pub fn edge_count(&self) -> usize {
+        self.parents.iter().map(|p| p.len()).sum()
+    }
+
+    /// Is there an edge `from → to`?
+    pub fn has_edge(&self, from: usize, to: usize) -> bool {
+        self.parents[to].binary_search(&from).is_ok()
+    }
+
+    /// All edges `(from, to)` in node order.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.edge_count());
+        for (to, ps) in self.parents.iter().enumerate() {
+            for &from in ps {
+                out.push((from, to));
+            }
+        }
+        out
+    }
+
+    /// A topological order (`Some(order)` where `order[k]` = k-th node),
+    /// or `None` if the graph has a cycle. Kahn's algorithm; ties broken
+    /// by smallest node id for determinism.
+    pub fn topological_order(&self) -> Option<Vec<usize>> {
+        let mut indeg = vec![0usize; self.n];
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); self.n];
+        for (to, ps) in self.parents.iter().enumerate() {
+            indeg[to] = ps.len();
+            for &from in ps {
+                children[from].push(to);
+            }
+        }
+        // Min-id frontier via a sorted vec (n is small — ≤ ~64).
+        let mut frontier: Vec<usize> = (0..self.n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.n);
+        while let Some(&next) = frontier.iter().min() {
+            frontier.retain(|&x| x != next);
+            order.push(next);
+            for &c in &children[next] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    frontier.push(c);
+                }
+            }
+        }
+        if order.len() == self.n {
+            Some(order)
+        } else {
+            None
+        }
+    }
+
+    /// True iff acyclic.
+    pub fn is_acyclic(&self) -> bool {
+        self.topological_order().is_some()
+    }
+
+    /// Is this DAG consistent with the order (every parent precedes its
+    /// child)? `order[k]` is the k-th node.
+    pub fn consistent_with_order(&self, order: &[usize]) -> bool {
+        let mut pos = vec![0usize; self.n];
+        for (k, &v) in order.iter().enumerate() {
+            pos[v] = k;
+        }
+        self.parents
+            .iter()
+            .enumerate()
+            .all(|(i, ps)| ps.iter().all(|&m| pos[m] < pos[i]))
+    }
+
+    /// Maximum in-degree.
+    pub fn max_in_degree(&self) -> usize {
+        self.parents.iter().map(|p| p.len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Dag {
+        // 0 → 1, 0 → 2, 1 → 3, 2 → 3
+        Dag::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn parents_sorted_and_queried() {
+        let d = diamond();
+        assert_eq!(d.parents(3), &[1, 2]);
+        assert!(d.has_edge(0, 1));
+        assert!(!d.has_edge(1, 0));
+        assert_eq!(d.edge_count(), 4);
+    }
+
+    #[test]
+    fn topological_order_diamond() {
+        let d = diamond();
+        let order = d.topological_order().unwrap();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        assert!(d.consistent_with_order(&order));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut d = Dag::empty(3);
+        d.set_parents(0, vec![2]);
+        d.set_parents(1, vec![0]);
+        d.set_parents(2, vec![1]);
+        assert!(!d.is_acyclic());
+        assert_eq!(d.topological_order(), None);
+    }
+
+    #[test]
+    fn consistency_with_orders() {
+        let d = diamond();
+        assert!(d.consistent_with_order(&[0, 2, 1, 3]));
+        assert!(!d.consistent_with_order(&[3, 1, 2, 0]));
+        assert!(!d.consistent_with_order(&[1, 0, 2, 3])); // 0→1 violated
+    }
+
+    #[test]
+    fn edges_roundtrip() {
+        let d = diamond();
+        let d2 = Dag::from_edges(4, &d.edges());
+        assert_eq!(d, d2);
+    }
+
+    #[test]
+    fn empty_graph_properties() {
+        let d = Dag::empty(5);
+        assert!(d.is_acyclic());
+        assert_eq!(d.edge_count(), 0);
+        assert_eq!(d.topological_order().unwrap(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(d.max_in_degree(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_loop_rejected() {
+        Dag::from_edges(2, &[(1, 1)]);
+    }
+
+    #[test]
+    fn from_parents_dedups() {
+        let d = Dag::from_parents(vec![vec![], vec![0, 0]]);
+        assert_eq!(d.parents(1), &[0]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Discrete Bayesian network substrate: DAG structure, conditional
+//! probability tables, forward sampling, and graph/order counting.
+
+pub mod counting;
+pub mod dag;
+pub mod network;
+pub mod random;
+pub mod sampling;
+
+pub use dag::Dag;
+pub use network::{Cpt, Network};

@@ -1,0 +1,84 @@
+//! Random DAG generation for synthetic workloads (the paper's
+//! "randomly synthesized 20-node graph").
+
+use super::dag::Dag;
+use crate::util::Pcg32;
+
+/// Generate a random DAG on `n` nodes with in-degree capped at
+/// `max_parents`, aiming for roughly `edges_target` edges.
+///
+/// Construction: draw a random permutation as the hidden topological
+/// order, then for each node pick parents uniformly among its
+/// predecessors — guarantees acyclicity by construction and caps the
+/// in-degree, which keeps the ground truth inside the learner's
+/// hypothesis space (`|π| ≤ s`).
+pub fn random_dag(n: usize, max_parents: usize, edges_target: usize, rng: &mut Pcg32) -> Dag {
+    let order = rng.permutation(n);
+    let mut pos = vec![0usize; n];
+    for (k, &v) in order.iter().enumerate() {
+        pos[v] = k;
+    }
+    // Expected edges if each node draws d parents: Σ min(d, predecessors).
+    // Start from the per-node average needed to hit edges_target.
+    let mut parents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut edges = 0usize;
+    // Round-robin: repeatedly give a random node one more parent until the
+    // target is reached or nothing can take more.
+    let mut stalled = 0usize;
+    while edges < edges_target && stalled < 10 * n {
+        let v = order[rng.gen_range(n)];
+        let p = pos[v];
+        if p == 0 || parents[v].len() >= max_parents.min(p) {
+            stalled += 1;
+            continue;
+        }
+        let cand = order[rng.gen_range(p)];
+        if parents[v].contains(&cand) {
+            stalled += 1;
+            continue;
+        }
+        parents[v].push(cand);
+        edges += 1;
+        stalled = 0;
+    }
+    Dag::from_parents(parents)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_graph_is_acyclic_and_capped() {
+        let mut rng = Pcg32::new(11);
+        for _ in 0..20 {
+            let d = random_dag(20, 4, 25, &mut rng);
+            assert!(d.is_acyclic());
+            assert!(d.max_in_degree() <= 4);
+        }
+    }
+
+    #[test]
+    fn hits_edge_target_when_feasible() {
+        let mut rng = Pcg32::new(12);
+        let d = random_dag(20, 4, 25, &mut rng);
+        assert_eq!(d.edge_count(), 25);
+    }
+
+    #[test]
+    fn infeasible_target_degrades_gracefully() {
+        let mut rng = Pcg32::new(13);
+        // 3 nodes, max 1 parent each → at most 2 edges; ask for 100.
+        let d = random_dag(3, 1, 100, &mut rng);
+        assert!(d.is_acyclic());
+        assert!(d.edge_count() <= 2);
+    }
+
+    #[test]
+    fn single_node() {
+        let mut rng = Pcg32::new(14);
+        let d = random_dag(1, 4, 5, &mut rng);
+        assert_eq!(d.n(), 1);
+        assert_eq!(d.edge_count(), 0);
+    }
+}

@@ -1,0 +1,102 @@
+//! Forward (ancestral) sampling from a [`Network`] — the data generator
+//! for every experiment. The paper learns from "experimental data"; we
+//! produce the synthetic equivalent by sampling the published ground-truth
+//! structures (see DESIGN.md §7 Substitutions).
+
+use super::network::Network;
+use crate::data::Dataset;
+use crate::util::Pcg32;
+
+/// Draw `rows` complete joint samples by ancestral sampling (nodes visited
+/// in topological order, each drawn from its CPT row given sampled
+/// parents).
+pub fn forward_sample(net: &Network, rows: usize, rng: &mut Pcg32) -> Dataset {
+    let n = net.n();
+    let order = net.dag.topological_order().expect("generator network must be acyclic");
+    let mut columns: Vec<Vec<u8>> = vec![vec![0u8; rows]; n];
+    let mut parent_vals: Vec<u8> = Vec::with_capacity(8);
+    for r in 0..rows {
+        for &i in &order {
+            let cpt = &net.cpts[i];
+            parent_vals.clear();
+            for &m in net.dag.parents(i) {
+                parent_vals.push(columns[m][r]);
+            }
+            let config = cpt.config_of(&parent_vals);
+            let row = cpt.row(config);
+            columns[i][r] = sample_categorical(row, rng) as u8;
+        }
+    }
+    Dataset::from_columns(columns, net.states.clone())
+}
+
+/// Sample an index from a normalized probability row.
+#[inline]
+fn sample_categorical(probs: &[f64], rng: &mut Pcg32) -> usize {
+    let mut u = rng.gen_f64();
+    for (i, &p) in probs.iter().enumerate() {
+        u -= p;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::dag::Dag;
+
+    #[test]
+    fn sample_shapes() {
+        let mut rng = Pcg32::new(4);
+        let dag = Dag::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let net = Network::with_random_cpts(dag, vec![3; 4], &mut rng);
+        let ds = forward_sample(&net, 100, &mut rng);
+        assert_eq!(ds.rows(), 100);
+        assert_eq!(ds.cols(), 4);
+        for i in 0..4 {
+            assert!(ds.column(i).iter().all(|&v| v < 3));
+        }
+    }
+
+    #[test]
+    fn root_marginal_matches_cpt() {
+        // Single-node network with known distribution: empirical frequency
+        // must approach the CPT row.
+        let mut rng = Pcg32::new(5);
+        let dag = Dag::empty(1);
+        let mut net = Network::with_random_cpts(dag, vec![2], &mut rng);
+        net.cpts[0].probs = vec![0.3, 0.7];
+        let ds = forward_sample(&net, 50_000, &mut rng);
+        let ones = ds.column(0).iter().filter(|&&v| v == 1).count();
+        let frac = ones as f64 / 50_000.0;
+        assert!((frac - 0.7).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn child_tracks_parent_dependence() {
+        // X0 → X1 with near-deterministic copy CPT: correlation must show.
+        let mut rng = Pcg32::new(6);
+        let dag = Dag::from_edges(2, &[(0, 1)]);
+        let mut net = Network::with_random_cpts(dag, vec![2, 2], &mut rng);
+        net.cpts[0].probs = vec![0.5, 0.5];
+        net.cpts[1].probs = vec![0.95, 0.05, 0.05, 0.95]; // copies parent
+        let ds = forward_sample(&net, 20_000, &mut rng);
+        let agree = (0..ds.rows()).filter(|&r| ds.value(r, 0) == ds.value(r, 1)).count();
+        let frac = agree as f64 / ds.rows() as f64;
+        assert!(frac > 0.9, "frac={frac}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let dag = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let net = Network::with_random_cpts(dag, vec![3; 3], &mut Pcg32::new(7));
+        let a = forward_sample(&net, 50, &mut Pcg32::new(42));
+        let b = forward_sample(&net, 50, &mut Pcg32::new(42));
+        for i in 0..3 {
+            assert_eq!(a.column(i), b.column(i));
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Binomial coefficients via Pascal's triangle, precomputed once.
+//!
+//! Everything downstream (combinadic ranking, subset layouts, PST sizing,
+//! Table I/II reproductions) needs `C(n, k)` for `n ≤ ~70`, `k ≤ ~8` in
+//! `u64` — far from overflow (C(70,8) ≈ 9.4e9).
+
+/// Precomputed Pascal triangle `C(i, j)` for `0 ≤ i ≤ n_max`, `0 ≤ j ≤ i`.
+#[derive(Debug, Clone)]
+pub struct BinomialTable {
+    n_max: usize,
+    /// Row-major, row i has length i+1.
+    rows: Vec<Vec<u64>>,
+}
+
+impl BinomialTable {
+    /// Build the triangle up to `n_max` (panics on u64 overflow — caller
+    /// should keep `n_max` below ~67 for full rows, which all our uses do;
+    /// we saturate instead to stay safe for wide rows).
+    pub fn new(n_max: usize) -> Self {
+        let mut rows: Vec<Vec<u64>> = Vec::with_capacity(n_max + 1);
+        for i in 0..=n_max {
+            let mut row = vec![1u64; i + 1];
+            for j in 1..i {
+                row[j] = rows[i - 1][j - 1].saturating_add(rows[i - 1][j]);
+            }
+            rows.push(row);
+        }
+        BinomialTable { n_max, rows }
+    }
+
+    /// `C(n, k)`; zero when `k > n`.
+    #[inline]
+    pub fn c(&self, n: usize, k: usize) -> u64 {
+        debug_assert!(n <= self.n_max, "binomial table too small: n={n} > {}", self.n_max);
+        if k > n {
+            0
+        } else {
+            self.rows[n][k]
+        }
+    }
+
+    /// `Σ_{j=0..=s} C(n, j)` — the number of subsets with at most `s`
+    /// elements (the paper's `S`).
+    pub fn subsets_up_to(&self, n: usize, s: usize) -> u64 {
+        (0..=s.min(n)).map(|j| self.c(n, j)).sum()
+    }
+
+    /// Largest n this table covers.
+    pub fn n_max(&self) -> usize {
+        self.n_max
+    }
+}
+
+/// Direct (slow) binomial for cross-checking in tests.
+pub fn binomial_direct(n: u64, k: u64) -> u64 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num: u128 = 1;
+    let mut den: u128 = 1;
+    for i in 0..k {
+        num *= (n - i) as u128;
+        den *= (i + 1) as u128;
+    }
+    (num / den) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_direct_computation() {
+        let t = BinomialTable::new(40);
+        for n in 0..=40usize {
+            for k in 0..=n {
+                assert_eq!(t.c(n, k), binomial_direct(n as u64, k as u64), "C({n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        let t = BinomialTable::new(64);
+        assert_eq!(t.c(6, 4), 15);
+        assert_eq!(t.c(60, 4), 487_635);
+        assert_eq!(t.c(0, 0), 1);
+        assert_eq!(t.c(5, 9), 0);
+    }
+
+    #[test]
+    fn paper_subset_counts() {
+        // Section V-B example: n=6, s=4 → S = 57.
+        let t = BinomialTable::new(64);
+        assert_eq!(t.subsets_up_to(6, 4), 57);
+        // n=60, s=4 (Fig. 6b territory)
+        assert_eq!(t.subsets_up_to(60, 4), 487_635 + 34_220 + 1_770 + 60 + 1);
+    }
+
+    #[test]
+    fn s_larger_than_n_is_total_powerset() {
+        let t = BinomialTable::new(16);
+        assert_eq!(t.subsets_up_to(10, 10), 1 << 10);
+        assert_eq!(t.subsets_up_to(10, 99), 1 << 10);
+    }
+
+    #[test]
+    fn symmetry_property() {
+        let t = BinomialTable::new(50);
+        for n in 1..=50usize {
+            for k in 0..=n {
+                assert_eq!(t.c(n, k), t.c(n, n - k));
+            }
+        }
+    }
+
+    #[test]
+    fn pascal_identity_property() {
+        let t = BinomialTable::new(45);
+        for n in 2..=45usize {
+            for k in 1..n {
+                assert_eq!(t.c(n, k), t.c(n - 1, k - 1) + t.c(n - 1, k));
+            }
+        }
+    }
+}

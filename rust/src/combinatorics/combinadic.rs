@@ -1,0 +1,220 @@
+//! Combinadic rank ⇄ unrank for k-combinations in lexicographic order.
+//!
+//! `unrank_combination` is the paper's **Algorithm 2** ("obtaining the
+//! l-th k-combination of n elements in lexicographic order"), in its
+//! non-recursive form, restated over 0-based element ids `0..n-1` and a
+//! 0-based rank. It lets a worker derive its first parent set directly
+//! from its task index with no enumeration — the paper uses it so each
+//! GPU thread can find its slice of the parent-set space.
+//!
+//! Lexicographic order over sorted combinations `(a_1 < a_2 < … < a_k)`:
+//! `{0,1,2,3} < {0,1,2,4} < … < {2,3,4,5}` for n=6, k=4.
+
+use super::binomial::BinomialTable;
+
+/// Rank of a sorted k-combination (0-based) in lexicographic order.
+///
+/// Inverse of [`unrank_combination`]. `O(k + a_k)` time.
+pub fn rank_combination(bt: &BinomialTable, n: usize, comb: &[usize]) -> u64 {
+    let k = comb.len();
+    debug_assert!(comb.windows(2).all(|w| w[0] < w[1]), "combination must be strictly increasing");
+    debug_assert!(comb.iter().all(|&a| a < n));
+    let mut rank = 0u64;
+    let mut prev: isize = -1;
+    for (i, &a) in comb.iter().enumerate() {
+        // Combinations whose i-th element is some v in (prev, a) are all
+        // lexicographically smaller; each such v fixes the prefix and
+        // leaves C(n-1-v, k-1-i) completions.
+        for v in (prev + 1) as usize..a {
+            rank += bt.c(n - 1 - v, k - 1 - i);
+        }
+        prev = a as isize;
+    }
+    rank
+}
+
+/// The `rank`-th (0-based) k-combination of `{0..n-1}` in lexicographic
+/// order — the paper's Algorithm 2, non-recursive.
+///
+/// Writes into `out` (must have length `k`). Panics if
+/// `rank >= C(n, k)` in debug builds.
+pub fn unrank_combination(bt: &BinomialTable, n: usize, k: usize, rank: u64, out: &mut [usize]) {
+    debug_assert_eq!(out.len(), k);
+    debug_assert!(rank < bt.c(n, k), "rank {rank} out of range for C({n},{k})");
+    if k == 0 {
+        return;
+    }
+    // Walk candidate values low..n; at each position take the smallest
+    // value whose completion count covers the remaining rank (this is the
+    // paper's "largest s with sum <= l" scan, expressed with a running
+    // remainder).
+    let mut remaining = rank;
+    let mut kk = k;
+    let mut low = 0usize; // next candidate element value
+    for pos in 0..k {
+        // Find the element for this position.
+        let mut v = low;
+        loop {
+            let completions = bt.c(n - 1 - v, kk - 1);
+            if remaining < completions {
+                break;
+            }
+            remaining -= completions;
+            v += 1;
+        }
+        out[pos] = v;
+        low = v + 1;
+        kk -= 1;
+    }
+}
+
+/// Convenience allocating variant of [`unrank_combination`].
+pub fn unrank_combination_vec(bt: &BinomialTable, n: usize, k: usize, rank: u64) -> Vec<usize> {
+    let mut out = vec![0usize; k];
+    unrank_combination(bt, n, k, rank, &mut out);
+    out
+}
+
+/// Advance a sorted k-combination to its lexicographic successor in place.
+/// Returns `false` (leaving `comb` exhausted) when it was the last one.
+pub fn next_combination(n: usize, comb: &mut [usize]) -> bool {
+    let k = comb.len();
+    if k == 0 {
+        return false;
+    }
+    // Find rightmost position that can be incremented.
+    let mut i = k;
+    while i > 0 {
+        i -= 1;
+        if comb[i] < n - (k - i) {
+            comb[i] += 1;
+            for j in i + 1..k {
+                comb[j] = comb[j - 1] + 1;
+            }
+            return true;
+        }
+    }
+    false
+}
+
+/// Call `f(rank, comb)` for every k-combination of `{0..n-1}` in
+/// lexicographic order.
+pub fn for_each_combination(n: usize, k: usize, mut f: impl FnMut(u64, &[usize])) {
+    if k > n {
+        return;
+    }
+    let mut comb: Vec<usize> = (0..k).collect();
+    let mut rank = 0u64;
+    if k == 0 {
+        f(0, &comb);
+        return;
+    }
+    loop {
+        f(rank, &comb);
+        rank += 1;
+        if !next_combination(n, &mut comb) {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn paper_example_indices() {
+        // Section V-B: n=6, elements {0..5}, k=4 block:
+        // index 0 → {0,1,2,3}, 1 → {0,1,2,4}, 2 → {0,1,2,5}, 3 → {0,1,3,4}.
+        let bt = BinomialTable::new(8);
+        assert_eq!(unrank_combination_vec(&bt, 6, 4, 0), vec![0, 1, 2, 3]);
+        assert_eq!(unrank_combination_vec(&bt, 6, 4, 1), vec![0, 1, 2, 4]);
+        assert_eq!(unrank_combination_vec(&bt, 6, 4, 2), vec![0, 1, 2, 5]);
+        assert_eq!(unrank_combination_vec(&bt, 6, 4, 3), vec![0, 1, 3, 4]);
+        // last 4-combination
+        assert_eq!(unrank_combination_vec(&bt, 6, 4, 14), vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn rank_unrank_roundtrip_exhaustive() {
+        let bt = BinomialTable::new(16);
+        for n in 1..=9usize {
+            for k in 0..=n.min(5) {
+                let total = bt.c(n, k);
+                for r in 0..total {
+                    let c = unrank_combination_vec(&bt, n, k, r);
+                    assert_eq!(rank_combination(&bt, n, &c), r, "n={n} k={k} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unrank_is_lexicographically_increasing() {
+        let bt = BinomialTable::new(16);
+        let (n, k) = (10usize, 4usize);
+        let mut prev: Option<Vec<usize>> = None;
+        for r in 0..bt.c(n, k) {
+            let c = unrank_combination_vec(&bt, n, k, r);
+            if let Some(p) = &prev {
+                assert!(p < &c, "not increasing at r={r}");
+            }
+            prev = Some(c);
+        }
+    }
+
+    #[test]
+    fn property_roundtrip_random_large() {
+        // Property test (no proptest offline): random (n, k, rank) sweeps.
+        let bt = BinomialTable::new(64);
+        let mut rng = Pcg32::new(0xBEEF);
+        for _ in 0..2000 {
+            let n = 1 + rng.gen_range(60);
+            let k = rng.gen_range((n + 1).min(6));
+            let total = bt.c(n, k);
+            let r = (rng.next_u64() % total.max(1)) as u64;
+            let c = unrank_combination_vec(&bt, n, k, r);
+            assert!(c.windows(2).all(|w| w[0] < w[1]));
+            assert!(c.iter().all(|&a| a < n));
+            assert_eq!(rank_combination(&bt, n, &c), r);
+        }
+    }
+
+    #[test]
+    fn next_combination_enumerates_all() {
+        let bt = BinomialTable::new(12);
+        for n in 1..=8usize {
+            for k in 1..=n {
+                let mut comb: Vec<usize> = (0..k).collect();
+                let mut count = 1u64;
+                while next_combination(n, &mut comb) {
+                    count += 1;
+                }
+                assert_eq!(count, bt.c(n, k), "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_matches_unrank() {
+        let bt = BinomialTable::new(12);
+        for_each_combination(7, 3, |rank, comb| {
+            assert_eq!(unrank_combination_vec(&bt, 7, 3, rank), comb.to_vec());
+        });
+    }
+
+    #[test]
+    fn empty_combination() {
+        let bt = BinomialTable::new(4);
+        assert_eq!(unrank_combination_vec(&bt, 4, 0, 0), Vec::<usize>::new());
+        assert_eq!(rank_combination(&bt, 4, &[]), 0);
+        let mut seen = 0;
+        for_each_combination(5, 0, |r, c| {
+            assert_eq!(r, 0);
+            assert!(c.is_empty());
+            seen += 1;
+        });
+        assert_eq!(seen, 1);
+    }
+}

@@ -1,0 +1,191 @@
+//! The paper's global subset layout: every subset of `{0..n-1}` with at
+//! most `s` elements gets one index.
+//!
+//! Order (Section V-B example, n=6, s=4): index 0 → {0,1,2,3} … i.e. the
+//! s-subsets in lexicographic order first, then the (s-1)-subsets, …,
+//! then singletons ({5} at index S-2), and the empty set ∅ at index S-1.
+//!
+//! This layout is shared, bit-for-bit, by:
+//!  * the dense score table (`score::table`) — column j holds `ls(i, subset_j)`,
+//!  * the PST uploaded to the accelerator (`combinatorics::pst`),
+//!  * the argmax indices returned by the XLA executable,
+//! so an index coming back from the accelerator can be unranked here.
+
+use super::binomial::BinomialTable;
+use super::combinadic::{next_combination, rank_combination, unrank_combination};
+
+/// Index scheme for subsets of `{0..n-1}` with `|subset| ≤ s`.
+#[derive(Debug, Clone)]
+pub struct SubsetLayout {
+    n: usize,
+    s: usize,
+    /// `offsets[d]` = first global index of the block holding subsets of
+    /// size `s - d` (blocks ordered by decreasing size). Length s+2 with a
+    /// trailing total.
+    offsets: Vec<u64>,
+    bt: BinomialTable,
+}
+
+impl SubsetLayout {
+    /// Build the layout for `n` nodes and maximal subset size `s`.
+    pub fn new(n: usize, s: usize) -> Self {
+        let s = s.min(n);
+        let bt = BinomialTable::new(n.max(1));
+        let mut offsets = Vec::with_capacity(s + 2);
+        let mut acc = 0u64;
+        for d in 0..=s {
+            offsets.push(acc);
+            acc += bt.c(n, s - d);
+        }
+        offsets.push(acc);
+        SubsetLayout { n, s, offsets, bt }
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Maximal subset size.
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    /// Total number of indexed subsets (the paper's `S`).
+    pub fn total(&self) -> usize {
+        *self.offsets.last().unwrap() as usize
+    }
+
+    /// Binomial table in use (shared with callers that need `C(n,k)`).
+    pub fn binomials(&self) -> &BinomialTable {
+        &self.bt
+    }
+
+    /// Global index of a sorted subset (`|subset| ≤ s`, elements `< n`).
+    pub fn index_of(&self, subset: &[usize]) -> usize {
+        let k = subset.len();
+        assert!(k <= self.s, "subset larger than layout bound");
+        let block = self.offsets[self.s - k];
+        (block + rank_combination(&self.bt, self.n, subset)) as usize
+    }
+
+    /// Decode a global index into `(size, rank-within-block)`.
+    #[inline]
+    pub fn block_of(&self, index: usize) -> (usize, u64) {
+        let idx = index as u64;
+        debug_assert!(index < self.total());
+        // ≤ 6 blocks — linear scan beats binary search.
+        let mut d = 0usize;
+        while idx >= self.offsets[d + 1] {
+            d += 1;
+        }
+        (self.s - d, idx - self.offsets[d])
+    }
+
+    /// Recover the subset at a global index; writes into `buf` and returns
+    /// the filled prefix.
+    pub fn subset_of<'a>(&self, index: usize, buf: &'a mut [usize]) -> &'a [usize] {
+        let (k, rank) = self.block_of(index);
+        unrank_combination(&self.bt, self.n, k, rank, &mut buf[..k]);
+        &buf[..k]
+    }
+
+    /// Allocating variant of [`Self::subset_of`].
+    pub fn subset_vec(&self, index: usize) -> Vec<usize> {
+        let mut buf = vec![0usize; self.s];
+        self.subset_of(index, &mut buf).to_vec()
+    }
+
+    /// Visit every `(global_index, subset)` in layout order.
+    pub fn for_each(&self, mut f: impl FnMut(usize, &[usize])) {
+        let mut idx = 0usize;
+        for d in 0..=self.s {
+            let k = self.s - d;
+            if k > self.n {
+                continue;
+            }
+            if k == 0 {
+                f(idx, &[]);
+                idx += 1;
+                continue;
+            }
+            let mut comb: Vec<usize> = (0..k).collect();
+            loop {
+                f(idx, &comb);
+                idx += 1;
+                if !next_combination(self.n, &mut comb) {
+                    break;
+                }
+            }
+        }
+        debug_assert_eq!(idx, self.total());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_layout_endpoints() {
+        // n=6, s=4 → S=57; index 0 = {0,1,2,3}; S-2 = {5}; S-1 = ∅.
+        let l = SubsetLayout::new(6, 4);
+        assert_eq!(l.total(), 57);
+        assert_eq!(l.subset_vec(0), vec![0, 1, 2, 3]);
+        assert_eq!(l.subset_vec(1), vec![0, 1, 2, 4]);
+        assert_eq!(l.subset_vec(55), vec![5]);
+        assert_eq!(l.subset_vec(56), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn index_subset_roundtrip_exhaustive() {
+        for (n, s) in [(5usize, 3usize), (6, 4), (8, 2), (7, 7), (4, 0), (1, 1)] {
+            let l = SubsetLayout::new(n, s);
+            let mut buf = vec![0usize; s.max(1)];
+            for idx in 0..l.total() {
+                let sub = l.subset_of(idx, &mut buf).to_vec();
+                assert_eq!(l.index_of(&sub), idx, "n={n} s={s} idx={idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_matches_subset_of() {
+        let l = SubsetLayout::new(7, 3);
+        let mut count = 0usize;
+        l.for_each(|idx, sub| {
+            assert_eq!(l.subset_vec(idx), sub.to_vec());
+            count += 1;
+        });
+        assert_eq!(count, l.total());
+    }
+
+    #[test]
+    fn blocks_are_size_ordered_descending() {
+        let l = SubsetLayout::new(9, 4);
+        let mut prev_size = usize::MAX;
+        let mut buf = [0usize; 4];
+        for idx in 0..l.total() {
+            let size = l.subset_of(idx, &mut buf).len();
+            assert!(size <= prev_size || prev_size == usize::MAX || size == prev_size);
+            if size != prev_size {
+                assert!(prev_size == usize::MAX || size + 1 == prev_size);
+                prev_size = size;
+            }
+        }
+        assert_eq!(prev_size, 0);
+    }
+
+    #[test]
+    fn s_clamped_to_n() {
+        let l = SubsetLayout::new(3, 10);
+        assert_eq!(l.s(), 3);
+        assert_eq!(l.total(), 8); // full power set of 3 elements
+    }
+
+    #[test]
+    fn total_matches_formula() {
+        let l = SubsetLayout::new(60, 4);
+        assert_eq!(l.total(), 487_635 + 34_220 + 1_770 + 60 + 1);
+    }
+}

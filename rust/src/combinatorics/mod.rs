@@ -1,0 +1,19 @@
+//! Combinatorial machinery for parent-set indexing.
+//!
+//! The paper indexes all subsets of `{0..n-1}` with at most `s` elements in
+//! a fixed, regular layout (Section V-B): all s-subsets in lexicographic
+//! order first, then all (s-1)-subsets, …, down to singletons and finally
+//! the empty set. Algorithm 2 of the paper recovers the subset at a given
+//! index without enumeration; we implement both directions
+//! (rank ⇄ subset) plus the precomputed parent-set table (PST) the paper
+//! proposes as its faster alternative.
+
+pub mod binomial;
+pub mod combinadic;
+pub mod layout;
+pub mod pst;
+
+pub use binomial::BinomialTable;
+pub use combinadic::{rank_combination, unrank_combination};
+pub use layout::SubsetLayout;
+pub use pst::ParentSetTable;

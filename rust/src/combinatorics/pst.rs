@@ -1,0 +1,137 @@
+//! Parent-set table (PST) — the paper's second task-assignment strategy
+//! (Section V-B, Fig. 6).
+//!
+//! Instead of unranking combinations on the accelerator, all subsets are
+//! materialized once into a dense `[S, s]` table of node ids, padded with
+//! a sentinel (`n`) so every row has exactly `s` entries. A worker then
+//! just reads its rows. We upload this table to the XLA executable, which
+//! uses it to gather each subset's maximal position (`pos` extended with
+//! a `-1` at the sentinel slot) — the order-consistency test.
+//!
+//! Fig. 6(b)'s memory model: `S · s` entries; the paper reports 7.99 MB
+//! for n=60, s=4 at 4 bytes/entry (523 686 · 4 · 4 B = 8.0 MB ✓).
+
+use super::layout::SubsetLayout;
+
+/// Dense `[S, s]` table of parent-set node ids in layout order.
+#[derive(Debug, Clone)]
+pub struct ParentSetTable {
+    n: usize,
+    s: usize,
+    /// Row-major `[S, s]`; entries equal to `n` are padding.
+    entries: Vec<i32>,
+}
+
+impl ParentSetTable {
+    /// Materialize the table for a layout.
+    pub fn build(layout: &SubsetLayout) -> Self {
+        let n = layout.n();
+        let s = layout.s().max(1); // keep ≥1 column so the empty set has a row
+        let total = layout.total();
+        let mut entries = vec![n as i32; total * s];
+        layout.for_each(|idx, subset| {
+            for (j, &node) in subset.iter().enumerate() {
+                entries[idx * s + j] = node as i32;
+            }
+        });
+        ParentSetTable { n, s, entries }
+    }
+
+    /// Number of rows (subsets).
+    pub fn rows(&self) -> usize {
+        self.entries.len() / self.s
+    }
+
+    /// Padded row width.
+    pub fn width(&self) -> usize {
+        self.s
+    }
+
+    /// Sentinel value used for padding (== n).
+    pub fn sentinel(&self) -> i32 {
+        self.n as i32
+    }
+
+    /// One padded row.
+    pub fn row(&self, idx: usize) -> &[i32] {
+        &self.entries[idx * self.s..(idx + 1) * self.s]
+    }
+
+    /// The raw row-major buffer (uploaded to the device once per run).
+    pub fn raw(&self) -> &[i32] {
+        &self.entries
+    }
+
+    /// Memory footprint in bytes (Fig. 6b model).
+    pub fn bytes(&self) -> usize {
+        self.entries.len() * std::mem::size_of::<i32>()
+    }
+
+    /// Fig. 6(b): predicted PST bytes for a candidate-set size without
+    /// materializing anything.
+    pub fn predicted_bytes(n: usize, s: usize) -> u64 {
+        let layout = SubsetLayout::new(n, s);
+        layout.total() as u64 * s.max(1) as u64 * 4
+    }
+
+    /// Decode one row back into a sorted subset (dropping padding).
+    pub fn subset(&self, idx: usize) -> Vec<usize> {
+        self.row(idx).iter().filter(|&&v| v != self.n as i32).map(|&v| v as usize).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_match_layout() {
+        let layout = SubsetLayout::new(6, 4);
+        let pst = ParentSetTable::build(&layout);
+        assert_eq!(pst.rows(), 57);
+        assert_eq!(pst.subset(0), vec![0, 1, 2, 3]);
+        assert_eq!(pst.subset(55), vec![5]);
+        assert_eq!(pst.subset(56), Vec::<usize>::new());
+        // padding uses the sentinel
+        assert_eq!(pst.row(56), &[6, 6, 6, 6]);
+    }
+
+    #[test]
+    fn every_row_roundtrips_through_layout() {
+        let layout = SubsetLayout::new(8, 3);
+        let pst = ParentSetTable::build(&layout);
+        for idx in 0..pst.rows() {
+            assert_eq!(layout.index_of(&pst.subset(idx)), idx);
+        }
+    }
+
+    #[test]
+    fn paper_memory_figure() {
+        // Fig. 6(b): n=60, s=4 → ≈ 7.99 MB.
+        let bytes = ParentSetTable::predicted_bytes(60, 4);
+        let mb = bytes as f64 / (1024.0 * 1024.0);
+        assert!((mb - 7.99).abs() < 0.05, "mb={mb}");
+    }
+
+    #[test]
+    fn empty_set_has_a_row_even_when_s_zero() {
+        let layout = SubsetLayout::new(5, 0);
+        let pst = ParentSetTable::build(&layout);
+        assert_eq!(pst.rows(), 1);
+        assert_eq!(pst.subset(0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn sentinel_never_collides_with_node_ids() {
+        let layout = SubsetLayout::new(7, 2);
+        let pst = ParentSetTable::build(&layout);
+        for idx in 0..pst.rows() {
+            for &e in pst.row(idx) {
+                assert!((0..=7).contains(&e));
+                if e != 7 {
+                    assert!((e as usize) < 7);
+                }
+            }
+        }
+    }
+}

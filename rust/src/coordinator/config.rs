@@ -1,0 +1,177 @@
+//! Run configuration + a small `--key value` argument parser (the
+//! offline crate set has no clap).
+
+use anyhow::{bail, Result};
+
+/// Which order-scoring engine drives the chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-rust serial table lookup (the paper's GPP).
+    Serial,
+    /// AOT-compiled XLA executable (the paper's GPU analog).
+    Xla,
+    /// Bit-vector enumerate-and-filter baseline (Table II).
+    BitVec,
+    /// Linderman-style sum-over-graphs score (accuracy baseline).
+    Sum,
+    /// No-preprocessing ablation (recomputes Eq. 4 per candidate).
+    Recompute,
+}
+
+impl EngineKind {
+    /// Parse from CLI text.
+    pub fn parse(text: &str) -> Result<Self> {
+        Ok(match text {
+            "serial" | "gpp" => EngineKind::Serial,
+            "xla" | "accel" | "gpu" => EngineKind::Xla,
+            "bitvec" => EngineKind::BitVec,
+            "sum" => EngineKind::Sum,
+            "recompute" => EngineKind::Recompute,
+            other => bail!("unknown engine {other:?} (serial|xla|bitvec|sum|recompute)"),
+        })
+    }
+
+    /// Engine name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Serial => "serial",
+            EngineKind::Xla => "xla",
+            EngineKind::BitVec => "bitvec",
+            EngineKind::Sum => "sum",
+            EngineKind::Recompute => "recompute",
+        }
+    }
+}
+
+/// Full configuration of a learning run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Repository network name, or `random:<n>:<edges>`.
+    pub network: String,
+    /// Observations to sample.
+    pub rows: usize,
+    /// MCMC iterations per chain.
+    pub iters: u64,
+    /// Independent chains (serial engine only; accelerated runs use 1).
+    pub chains: usize,
+    /// Max parent-set size (the paper's s).
+    pub s: usize,
+    /// Structure penalty γ.
+    pub gamma: f64,
+    /// Scoring engine.
+    pub engine: EngineKind,
+    /// Best-graph tracker capacity.
+    pub topk: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Cell-corruption probability (Fig. 11), 0 = clean.
+    pub noise: f64,
+    /// Preprocessing threads.
+    pub threads: usize,
+    /// Artifacts directory for the XLA engine.
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            network: "sachs".into(),
+            rows: 1000,
+            iters: 1000,
+            chains: 1,
+            s: 4,
+            gamma: 0.1,
+            engine: EngineKind::Serial,
+            topk: 5,
+            seed: 42,
+            noise: 0.0,
+            threads: default_threads(),
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+        }
+    }
+}
+
+/// Available parallelism with a sane floor.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+impl RunConfig {
+    /// Parse `--key value` pairs (after the subcommand) into a config.
+    pub fn from_args(args: &[String]) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        let mut it = args.iter();
+        while let Some(key) = it.next() {
+            let mut next = || -> Result<&String> {
+                it.next().ok_or_else(|| anyhow::anyhow!("missing value after {key}"))
+            };
+            match key.as_str() {
+                "--network" => cfg.network = next()?.clone(),
+                "--rows" => cfg.rows = next()?.parse()?,
+                "--iters" => cfg.iters = next()?.parse()?,
+                "--chains" => cfg.chains = next()?.parse()?,
+                "--s" => cfg.s = next()?.parse()?,
+                "--gamma" => cfg.gamma = next()?.parse()?,
+                "--engine" => cfg.engine = EngineKind::parse(next()?)?,
+                "--topk" => cfg.topk = next()?.parse()?,
+                "--seed" => cfg.seed = next()?.parse()?,
+                "--noise" => cfg.noise = next()?.parse()?,
+                "--threads" => cfg.threads = next()?.parse()?,
+                "--artifacts" => cfg.artifacts_dir = next()?.into(),
+                other => bail!("unknown flag {other:?}"),
+            }
+        }
+        if cfg.chains == 0 {
+            bail!("--chains must be >= 1");
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.s, 4);
+        assert_eq!(c.engine, EngineKind::Serial);
+        assert!(c.threads >= 1);
+    }
+
+    #[test]
+    fn parses_flags() {
+        let c = RunConfig::from_args(&args(
+            "--network alarm --rows 500 --iters 2000 --engine xla --noise 0.05 --seed 7",
+        ))
+        .unwrap();
+        assert_eq!(c.network, "alarm");
+        assert_eq!(c.rows, 500);
+        assert_eq!(c.iters, 2000);
+        assert_eq!(c.engine, EngineKind::Xla);
+        assert_eq!(c.noise, 0.05);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn rejects_unknown_flag() {
+        assert!(RunConfig::from_args(&args("--bogus 1")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(RunConfig::from_args(&args("--rows")).is_err());
+    }
+
+    #[test]
+    fn engine_parse_aliases() {
+        assert_eq!(EngineKind::parse("gpu").unwrap(), EngineKind::Xla);
+        assert_eq!(EngineKind::parse("gpp").unwrap(), EngineKind::Serial);
+        assert!(EngineKind::parse("quantum").is_err());
+    }
+}

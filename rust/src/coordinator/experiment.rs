@@ -1,0 +1,205 @@
+//! The end-to-end learning driver: workload → preprocessing → engine →
+//! chains → evaluation, with stage timings — the paper's Table IV
+//! decomposition (preprocessing runtime / iteration runtime / total).
+
+use anyhow::{bail, Result};
+
+use super::config::{EngineKind, RunConfig};
+use super::workload::Workload;
+use crate::eval::roc::{roc_point, RocPoint};
+use crate::eval::shd;
+use crate::mcmc::runner::{run_chain, run_chains_parallel, LearnResult};
+use crate::priors::InterfaceMatrix;
+use crate::score::{BdeParams, ScoreTable};
+use crate::scorer::{BitVecScorer, RecomputeScorer, SerialScorer, SumScorer};
+use crate::util::Timer;
+
+/// Everything a learning run produces.
+pub struct LearnReport {
+    pub config: RunConfig,
+    pub result: LearnResult,
+    /// Preprocessing wall-clock (score-table build [+ prior folding]).
+    pub preprocess_secs: f64,
+    /// Engine setup wall-clock (artifact load/compile/upload for XLA).
+    pub setup_secs: f64,
+    /// Sampling wall-clock.
+    pub sampling_secs: f64,
+    /// Seconds per iteration (sampling / total iterations).
+    pub per_iter_secs: f64,
+    /// ROC of the best graph against the generating structure.
+    pub roc: RocPoint,
+    /// Structural Hamming distance of the best graph.
+    pub shd: usize,
+}
+
+impl LearnReport {
+    /// Total runtime (the paper's Table IV "Total" column).
+    pub fn total_secs(&self) -> f64 {
+        self.preprocess_secs + self.setup_secs + self.sampling_secs
+    }
+
+    /// One human-readable summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "net={} n={} engine={} iters={} chains={} | score={:.3} TPR={:.3} FPR={:.4} SHD={} | preproc={:.2}s setup={:.2}s sample={:.2}s ({:.3}ms/iter) accept={:.2}",
+            self.config.network,
+            self.result.best_dag().n(),
+            self.config.engine.name(),
+            self.config.iters,
+            self.config.chains,
+            self.result.best_score(),
+            self.roc.tpr,
+            self.roc.fpr,
+            self.shd,
+            self.preprocess_secs,
+            self.setup_secs,
+            self.sampling_secs,
+            self.per_iter_secs * 1e3,
+            self.result.stats.accept_rate(),
+        )
+    }
+}
+
+/// Run the full pipeline described by `cfg`, with optional pairwise
+/// priors (Eq. 9) folded into the score table.
+pub fn run_learning(cfg: &RunConfig, priors: Option<&InterfaceMatrix>) -> Result<LearnReport> {
+    let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
+    run_learning_on(cfg, &workload, priors)
+}
+
+/// Same, over an already-built workload (ROC protocols reuse one dataset
+/// across many prior settings).
+pub fn run_learning_on(
+    cfg: &RunConfig,
+    workload: &Workload,
+    priors: Option<&InterfaceMatrix>,
+) -> Result<LearnReport> {
+    let n = workload.n();
+    let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
+
+    // ---- preprocessing (Section III-A) ----
+    let timer = Timer::start();
+    let mut table = ScoreTable::build(&workload.data, params, cfg.s, cfg.threads);
+    if let Some(matrix) = priors {
+        table.add_priors(&matrix.ppf_matrix());
+    }
+    let preprocess_secs = timer.elapsed_secs();
+
+    // ---- engine setup + sampling ----
+    let mut setup_secs = 0.0;
+    let result = match cfg.engine {
+        EngineKind::Serial => {
+            run_chains_parallel(|_| SerialScorer::new(&table), n, cfg.iters, cfg.topk, cfg.seed, cfg.chains)
+        }
+        EngineKind::Sum => {
+            run_chains_parallel(|_| SumScorer::new(&table), n, cfg.iters, cfg.topk, cfg.seed, cfg.chains)
+        }
+        EngineKind::BitVec => {
+            run_chains_parallel(|_| BitVecScorer::bounded(&table), n, cfg.iters, cfg.topk, cfg.seed, cfg.chains)
+        }
+        EngineKind::Recompute => run_chains_parallel(
+            |_| RecomputeScorer::new(&workload.data, params, cfg.s),
+            n,
+            cfg.iters,
+            cfg.topk,
+            cfg.seed,
+            cfg.chains,
+        ),
+        EngineKind::Xla => {
+            if cfg.chains != 1 {
+                bail!("the accelerated engine runs single-chain (one device), got --chains {}", cfg.chains);
+            }
+            let t = Timer::start();
+            let mut scorer = crate::runtime::XlaScorer::new(&cfg.artifacts_dir, &table)?;
+            setup_secs = t.elapsed_secs();
+            run_chain(&mut scorer, n, cfg.iters, cfg.topk, cfg.seed)
+        }
+    };
+
+    let sampling_secs = result.sampling_secs;
+    let per_iter_secs = sampling_secs / (cfg.iters.max(1) as f64);
+    let best = result.best_dag().clone();
+    Ok(LearnReport {
+        config: cfg.clone(),
+        roc: roc_point(workload.truth_dag(), &best),
+        shd: shd(workload.truth_dag(), &best),
+        result,
+        preprocess_secs,
+        setup_secs,
+        sampling_secs,
+        per_iter_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_pipeline_runs_and_learns_asia() {
+        let cfg = RunConfig {
+            network: "asia".into(),
+            rows: 2000,
+            iters: 800,
+            ..RunConfig::default()
+        };
+        let report = run_learning(&cfg, None).unwrap();
+        // ASIA from 2000 rows: expect decent recovery.
+        assert!(report.roc.tpr >= 0.5, "TPR {}", report.roc.tpr);
+        assert!(report.roc.fpr <= 0.2, "FPR {}", report.roc.fpr);
+        assert!(report.total_secs() > 0.0);
+        assert!(!report.summary().is_empty());
+    }
+
+    #[test]
+    fn priors_improve_misled_learning() {
+        // Strong correct priors must not hurt TPR.
+        let cfg = RunConfig {
+            network: "random:10:12".into(),
+            rows: 300,
+            iters: 400,
+            seed: 5,
+            ..RunConfig::default()
+        };
+        let workload = Workload::build(&cfg.network, cfg.rows, 0.0, cfg.seed).unwrap();
+        let base = run_learning_on(&cfg, &workload, None).unwrap();
+        // oracle priors: boost every true edge
+        let mut m = InterfaceMatrix::unbiased(10);
+        for &(from, to) in workload.truth_dag().edges().iter() {
+            m.set(to, from, 0.95);
+        }
+        let with = run_learning_on(&cfg, &workload, Some(&m)).unwrap();
+        assert!(
+            with.roc.tpr >= base.roc.tpr - 1e-9,
+            "prior hurt: {} -> {}",
+            base.roc.tpr,
+            with.roc.tpr
+        );
+    }
+
+    #[test]
+    fn multichain_runs() {
+        let cfg = RunConfig {
+            network: "asia".into(),
+            rows: 300,
+            iters: 100,
+            chains: 3,
+            ..RunConfig::default()
+        };
+        let report = run_learning(&cfg, None).unwrap();
+        assert_eq!(report.result.stats.iterations, 300);
+    }
+
+    #[test]
+    fn xla_multichain_rejected() {
+        let cfg = RunConfig {
+            network: "asia".into(),
+            engine: EngineKind::Xla,
+            chains: 2,
+            iters: 10,
+            rows: 50,
+            ..RunConfig::default()
+        };
+        assert!(run_learning(&cfg, None).is_err());
+    }
+}

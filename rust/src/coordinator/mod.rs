@@ -1,0 +1,11 @@
+//! Experiment orchestration: configuration, workload construction, and
+//! the end-to-end learning driver shared by the CLI, the examples, and
+//! the benchmark harness.
+
+pub mod config;
+pub mod experiment;
+pub mod workload;
+
+pub use config::{EngineKind, RunConfig};
+pub use experiment::{run_learning, run_learning_on, LearnReport};
+pub use workload::Workload;

@@ -1,0 +1,186 @@
+//! Column-major discrete dataset.
+//!
+//! Column-major because score preprocessing walks one node column plus a
+//! handful of parent columns per local score — row-major would stride.
+//! States are `u8` (the paper's gene model uses 3 states; everything we
+//! learn has < 256).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Complete discrete data: `cols` variables × `rows` observations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dataset {
+    columns: Vec<Vec<u8>>,
+    /// Per-variable state count (arity).
+    states: Vec<usize>,
+    rows: usize,
+}
+
+impl Dataset {
+    /// Build from per-variable columns; all columns must share a length
+    /// and stay below their declared arity.
+    pub fn from_columns(columns: Vec<Vec<u8>>, states: Vec<usize>) -> Self {
+        assert_eq!(columns.len(), states.len());
+        let rows = columns.first().map_or(0, |c| c.len());
+        for (i, col) in columns.iter().enumerate() {
+            assert_eq!(col.len(), rows, "ragged column {i}");
+            assert!(
+                col.iter().all(|&v| (v as usize) < states[i]),
+                "column {i} exceeds arity {}",
+                states[i]
+            );
+        }
+        Dataset { columns, states, rows }
+    }
+
+    /// Observations count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Variable count.
+    pub fn cols(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Arity of variable `i`.
+    pub fn arity(&self, i: usize) -> usize {
+        self.states[i]
+    }
+
+    /// All arities.
+    pub fn arities(&self) -> &[usize] {
+        &self.states
+    }
+
+    /// Full column of variable `i`.
+    pub fn column(&self, i: usize) -> &[u8] {
+        &self.columns[i]
+    }
+
+    /// Mutable column (noise injection).
+    pub fn column_mut(&mut self, i: usize) -> &mut [u8] {
+        &mut self.columns[i]
+    }
+
+    /// Single cell.
+    #[inline]
+    pub fn value(&self, row: usize, col: usize) -> u8 {
+        self.columns[col][row]
+    }
+
+    /// Serialize as CSV (header `X0,X1,…`, one observation per line).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let header: Vec<String> = (0..self.cols()).map(|i| format!("X{i}")).collect();
+        let _ = writeln!(out, "{}", header.join(","));
+        for r in 0..self.rows {
+            let row: Vec<String> =
+                (0..self.cols()).map(|c| self.value(r, c).to_string()).collect();
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+
+    /// Write CSV to disk.
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_csv())
+    }
+
+    /// Parse the CSV form produced by [`Self::to_csv`]. Arities are
+    /// inferred as `max+1` per column unless provided.
+    pub fn load_csv(path: impl AsRef<Path>, states: Option<Vec<usize>>) -> io::Result<Self> {
+        let text = fs::read_to_string(path)?;
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| io::Error::other("empty csv"))?;
+        let cols = header.split(',').count();
+        let mut columns: Vec<Vec<u8>> = vec![Vec::new(); cols];
+        for (lineno, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut fields = 0;
+            for (c, field) in line.split(',').enumerate() {
+                let v: u8 = field
+                    .trim()
+                    .parse()
+                    .map_err(|e| io::Error::other(format!("line {}: {e}", lineno + 2)))?;
+                columns
+                    .get_mut(c)
+                    .ok_or_else(|| io::Error::other(format!("line {}: too many fields", lineno + 2)))?
+                    .push(v);
+                fields += 1;
+            }
+            if fields != cols {
+                return Err(io::Error::other(format!("line {}: {fields} fields != {cols}", lineno + 2)));
+            }
+        }
+        let states = states.unwrap_or_else(|| {
+            columns.iter().map(|c| c.iter().map(|&v| v as usize + 1).max().unwrap_or(1)).collect()
+        });
+        Ok(Dataset::from_columns(columns, states))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::from_columns(vec![vec![0, 1, 2], vec![1, 0, 1]], vec![3, 2])
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let d = tiny();
+        assert_eq!(d.rows(), 3);
+        assert_eq!(d.cols(), 2);
+        assert_eq!(d.arity(0), 3);
+        assert_eq!(d.value(2, 0), 2);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let d = tiny();
+        let path = std::env::temp_dir().join("bnlearn_ds_test.csv");
+        d.save_csv(&path).unwrap();
+        let d2 = Dataset::load_csv(&path, Some(vec![3, 2])).unwrap();
+        assert_eq!(d, d2);
+        let d3 = Dataset::load_csv(&path, None).unwrap();
+        assert_eq!(d3.column(0), d.column(0));
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rejected() {
+        Dataset::from_columns(vec![vec![0, 1], vec![0]], vec![2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds arity")]
+    fn arity_violation_rejected() {
+        Dataset::from_columns(vec![vec![0, 5]], vec![2]);
+    }
+
+    #[test]
+    fn empty_dataset() {
+        let d = Dataset::from_columns(vec![], vec![]);
+        assert_eq!(d.rows(), 0);
+        assert_eq!(d.cols(), 0);
+    }
+
+    #[test]
+    fn load_rejects_bad_field_count() {
+        let path = std::env::temp_dir().join("bnlearn_badcsv_test.csv");
+        fs::write(&path, "X0,X1\n0,1\n0\n").unwrap();
+        assert!(Dataset::load_csv(&path, None).is_err());
+        let _ = fs::remove_file(path);
+    }
+}

@@ -1,0 +1,7 @@
+//! Datasets of discrete observations and their perturbations.
+
+pub mod dataset;
+pub mod noise;
+
+pub use dataset::Dataset;
+pub use noise::inject_noise;

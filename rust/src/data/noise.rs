@@ -1,0 +1,102 @@
+//! Fault injection for the noise-tolerance study (Fig. 11).
+//!
+//! The paper's model: in binary data every cell flips state with
+//! probability `p` ("every data has a possibility to be overestimated or
+//! underestimated"). For variables with more than two states we
+//! generalize: with probability `p` the cell is replaced by a uniformly
+//! chosen *different* state.
+
+use super::dataset::Dataset;
+use crate::util::Pcg32;
+
+/// Return a copy of `data` where every cell was corrupted with
+/// probability `p`.
+pub fn inject_noise(data: &Dataset, p: f64, rng: &mut Pcg32) -> Dataset {
+    assert!((0.0..=1.0).contains(&p), "noise rate must be in [0,1]");
+    let mut out = data.clone();
+    for c in 0..out.cols() {
+        let arity = out.arity(c);
+        if arity < 2 {
+            continue;
+        }
+        let col = out.column_mut(c);
+        for v in col.iter_mut() {
+            if rng.gen_bool(p) {
+                // uniformly different state
+                let shift = 1 + rng.gen_range(arity - 1);
+                *v = ((*v as usize + shift) % arity) as u8;
+            }
+        }
+    }
+    out
+}
+
+/// Fraction of cells that differ between two same-shape datasets.
+pub fn corruption_rate(a: &Dataset, b: &Dataset) -> f64 {
+    assert_eq!(a.rows(), b.rows());
+    assert_eq!(a.cols(), b.cols());
+    let total = a.rows() * a.cols();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut diff = 0usize;
+    for c in 0..a.cols() {
+        diff += a
+            .column(c)
+            .iter()
+            .zip(b.column(c))
+            .filter(|(x, y)| x != y)
+            .count();
+    }
+    diff as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data(rows: usize) -> Dataset {
+        let cols = (0..3)
+            .map(|c| (0..rows).map(|r| ((r + c) % 2) as u8).collect())
+            .collect();
+        Dataset::from_columns(cols, vec![2, 2, 2])
+    }
+
+    #[test]
+    fn zero_noise_is_identity() {
+        let d = data(100);
+        let mut rng = Pcg32::new(21);
+        assert_eq!(inject_noise(&d, 0.0, &mut rng), d);
+    }
+
+    #[test]
+    fn full_noise_flips_every_binary_cell() {
+        let d = data(100);
+        let mut rng = Pcg32::new(22);
+        let noisy = inject_noise(&d, 1.0, &mut rng);
+        assert!((corruption_rate(&d, &noisy) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empirical_rate_tracks_p() {
+        let d = data(20_000);
+        let mut rng = Pcg32::new(23);
+        for &p in &[0.01, 0.07, 0.15] {
+            let noisy = inject_noise(&d, p, &mut rng);
+            let rate = corruption_rate(&d, &noisy);
+            assert!((rate - p).abs() < 0.01, "p={p} rate={rate}");
+        }
+    }
+
+    #[test]
+    fn noise_respects_arity() {
+        let cols = vec![(0..1000).map(|r| (r % 3) as u8).collect()];
+        let d = Dataset::from_columns(cols, vec![3]);
+        let mut rng = Pcg32::new(24);
+        let noisy = inject_noise(&d, 0.5, &mut rng);
+        assert!(noisy.column(0).iter().all(|&v| v < 3));
+        // corrupted cells never keep their value
+        let rate = corruption_rate(&d, &noisy);
+        assert!(rate > 0.4 && rate < 0.6, "rate={rate}");
+    }
+}

@@ -1,0 +1,70 @@
+//! Evaluation of learned structures against ground truth: the ROC
+//! quantities of the paper's Section VI plus standard structural metrics.
+
+pub mod roc;
+
+pub use roc::{auc_from_points, confusion, RocPoint};
+
+use crate::bn::Dag;
+
+/// Structural Hamming distance over *directed* edges: additions +
+/// deletions + reversals (a reversal counts once).
+pub fn shd(truth: &Dag, learned: &Dag) -> usize {
+    assert_eq!(truth.n(), learned.n());
+    let n = truth.n();
+    let mut dist = 0usize;
+    for to in 0..n {
+        for from in 0..n {
+            if from == to {
+                continue;
+            }
+            let t = truth.has_edge(from, to);
+            let l = learned.has_edge(from, to);
+            if t == l {
+                continue;
+            }
+            if t && !l {
+                // missing here — reversal if learned has the flipped edge
+                if learned.has_edge(to, from) && !truth.has_edge(to, from) {
+                    dist += 1; // counted once as a reversal (skip the add side)
+                } else {
+                    dist += 1;
+                }
+            } else if l && !t {
+                // spurious — unless it's the flip of a true edge (reversal
+                // already counted from the other direction)
+                if truth.has_edge(to, from) && !learned.has_edge(to, from) {
+                    continue;
+                }
+                dist += 1;
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shd_zero_for_identical() {
+        let d = Dag::from_edges(4, &[(0, 1), (1, 2)]);
+        assert_eq!(shd(&d, &d), 0);
+    }
+
+    #[test]
+    fn shd_counts_additions_and_deletions() {
+        let truth = Dag::from_edges(4, &[(0, 1), (1, 2)]);
+        let learned = Dag::from_edges(4, &[(0, 1), (2, 3)]);
+        // missing (1,2) + spurious (2,3)
+        assert_eq!(shd(&truth, &learned), 2);
+    }
+
+    #[test]
+    fn shd_counts_reversal_once() {
+        let truth = Dag::from_edges(3, &[(0, 1)]);
+        let learned = Dag::from_edges(3, &[(1, 0)]);
+        assert_eq!(shd(&truth, &learned), 1);
+    }
+}

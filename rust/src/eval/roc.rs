@@ -1,0 +1,101 @@
+//! ROC quantities as defined in the paper (Section VI, after Fawcett
+//! [18]): the true-positive rate is the fraction of true edges recovered;
+//! the false-positive rate is the fraction of non-edges mistakenly added.
+//! Both are over *directed* node pairs.
+
+use crate::bn::Dag;
+
+/// One point of a ROC curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RocPoint {
+    pub tpr: f64,
+    pub fpr: f64,
+}
+
+/// Directed-edge confusion counts `(tp, fp, fn, tn)` of `learned` against
+/// `truth`.
+pub fn confusion(truth: &Dag, learned: &Dag) -> (usize, usize, usize, usize) {
+    assert_eq!(truth.n(), learned.n());
+    let n = truth.n();
+    let (mut tp, mut fp, mut fneg, mut tn) = (0usize, 0usize, 0usize, 0usize);
+    for to in 0..n {
+        for from in 0..n {
+            if from == to {
+                continue;
+            }
+            match (truth.has_edge(from, to), learned.has_edge(from, to)) {
+                (true, true) => tp += 1,
+                (true, false) => fneg += 1,
+                (false, true) => fp += 1,
+                (false, false) => tn += 1,
+            }
+        }
+    }
+    (tp, fp, fneg, tn)
+}
+
+/// The paper's ROC point for one learned graph.
+pub fn roc_point(truth: &Dag, learned: &Dag) -> RocPoint {
+    let (tp, fp, fneg, tn) = confusion(truth, learned);
+    let positives = tp + fneg;
+    let negatives = fp + tn;
+    RocPoint {
+        tpr: if positives == 0 { 1.0 } else { tp as f64 / positives as f64 },
+        fpr: if negatives == 0 { 0.0 } else { fp as f64 / negatives as f64 },
+    }
+}
+
+/// Trapezoidal AUC over a set of ROC points (anchored at (0,0) and (1,1)).
+pub fn auc_from_points(points: &[RocPoint]) -> f64 {
+    let mut pts: Vec<(f64, f64)> = points.iter().map(|p| (p.fpr, p.tpr)).collect();
+    pts.push((0.0, 0.0));
+    pts.push((1.0, 1.0));
+    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut auc = 0f64;
+    for w in pts.windows(2) {
+        let (x0, y0) = w[0];
+        let (x1, y1) = w[1];
+        auc += (x1 - x0) * (y0 + y1) * 0.5;
+    }
+    auc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_recovery() {
+        let d = Dag::from_edges(5, &[(0, 1), (1, 2), (2, 3)]);
+        let p = roc_point(&d, &d);
+        assert_eq!(p.tpr, 1.0);
+        assert_eq!(p.fpr, 0.0);
+    }
+
+    #[test]
+    fn empty_learned_graph() {
+        let truth = Dag::from_edges(4, &[(0, 1), (1, 2)]);
+        let learned = Dag::empty(4);
+        let p = roc_point(&truth, &learned);
+        assert_eq!(p.tpr, 0.0);
+        assert_eq!(p.fpr, 0.0);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let truth = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let learned = Dag::from_edges(3, &[(0, 1), (0, 2)]);
+        let (tp, fp, fneg, tn) = confusion(&truth, &learned);
+        assert_eq!((tp, fp, fneg, tn), (1, 1, 1, 3));
+        let p = roc_point(&truth, &learned);
+        assert!((p.tpr - 0.5).abs() < 1e-12);
+        assert!((p.fpr - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_bounds() {
+        // Single perfect point → AUC 1.0; diagonal point → 0.5.
+        assert!((auc_from_points(&[RocPoint { tpr: 1.0, fpr: 0.0 }]) - 1.0).abs() < 1e-12);
+        assert!((auc_from_points(&[RocPoint { tpr: 0.5, fpr: 0.5 }]) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,28 @@
+//! # bnlearn
+//!
+//! Order-space MCMC Bayesian network structure learning with an
+//! XLA/PJRT-accelerated scoring engine — a reproduction of Wang, Zhang,
+//! Qian & Yuan, *"A Novel Learning Algorithm for Bayesian Network and Its
+//! Efficient Implementation on GPU"* (2012).
+//!
+//! Layering (see DESIGN.md):
+//! * substrates: [`util`], [`combinatorics`], [`bn`], [`data`], [`networks`]
+//! * scoring: [`score`] (BDe local scores, preprocessing), [`priors`]
+//! * the learner: [`mcmc`] (Metropolis–Hastings over orders) driving a
+//!   pluggable [`scorer`] engine — serial ("GPP"), baselines, or the
+//!   AOT-compiled XLA executable loaded by [`runtime`]
+//! * evaluation: [`eval`] (ROC / SHD), experiment drivers in `examples/`
+//!   and `benches/`, orchestrated through [`coordinator`].
+
+pub mod bn;
+pub mod combinatorics;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod mcmc;
+pub mod networks;
+pub mod priors;
+pub mod runtime;
+pub mod score;
+pub mod scorer;
+pub mod util;

@@ -1,0 +1,162 @@
+//! bnlearn CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   learn       run the full learning pipeline on a network spec
+//!   preprocess  time the score-table preprocessing stage only
+//!   tables      print paper artifacts: --table1, --ppf, --pst-mem
+//!   info        show artifact manifest + environment
+//!
+//! Examples:
+//!   bnlearn learn --network alarm --rows 1000 --iters 5000 --engine xla
+//!   bnlearn learn --network random:20:25 --iters 10000 --noise 0.05
+//!   bnlearn tables --table1
+
+use anyhow::{bail, Result};
+
+use bnlearn::bn::counting;
+use bnlearn::combinatorics::ParentSetTable;
+use bnlearn::coordinator::{run_learning, RunConfig, Workload};
+use bnlearn::priors::ppf;
+use bnlearn::runtime::{default_artifacts_dir, ArtifactManifest};
+use bnlearn::score::{BdeParams, ScoreTable};
+use bnlearn::util::csvio::Table;
+use bnlearn::util::Timer;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "learn" => cmd_learn(rest),
+        "preprocess" => cmd_preprocess(rest),
+        "tables" => cmd_tables(rest),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} — try `bnlearn help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "bnlearn — order-space MCMC Bayesian network structure learning\n\
+         \n\
+         usage: bnlearn <learn|preprocess|tables|info> [flags]\n\
+         \n\
+         learn flags:\n\
+           --network <name|random:n:edges[:states]>  (default sachs)\n\
+           --rows N --iters N --chains N --engine serial|xla|bitvec|sum|recompute\n\
+           --s N --gamma F --topk N --seed N --noise P --threads N --artifacts DIR\n\
+         \n\
+         tables flags: --table1 | --ppf | --pst-mem"
+    );
+}
+
+fn cmd_learn(args: &[String]) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let report = run_learning(&cfg, None)?;
+    println!("{}", report.summary());
+    println!("\ntop graphs:");
+    for (rank, (score, dag)) in report.result.best.iter().enumerate() {
+        println!("  #{rank}: score={score:.3} edges={}", dag.edge_count());
+    }
+    let best = report.result.best_dag();
+    println!("\nbest graph edges:");
+    for (from, to) in best.edges() {
+        println!("  {from} -> {to}");
+    }
+    Ok(())
+}
+
+fn cmd_preprocess(args: &[String]) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
+    let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
+    let timer = Timer::start();
+    let table = ScoreTable::build(&workload.data, params, cfg.s, cfg.threads);
+    let secs = timer.elapsed_secs();
+    println!(
+        "preprocessed {} nodes x {} subsets ({} MB) in {:.3}s with {} threads",
+        table.n(),
+        table.subsets(),
+        table.bytes() / (1024 * 1024),
+        secs,
+        cfg.threads
+    );
+    Ok(())
+}
+
+fn cmd_tables(args: &[String]) -> Result<()> {
+    let which = args.first().map(String::as_str).unwrap_or("--table1");
+    match which {
+        "--table1" => {
+            // Table I: #graphs vs #orders.
+            let mut t = Table::new(&["n", "log10_graphs", "log10_orders"]);
+            for n in [4usize, 5, 10, 20, 30, 40] {
+                let (n, lg, lo) = counting::table1_row(n);
+                t.push_row(vec![n.to_string(), format!("{lg:.2}"), format!("{lo:.2}")]);
+            }
+            print!("{}", t.to_markdown());
+            println!(
+                "\n(exact small counts: 4 nodes -> {} DAGs, 5 -> {})",
+                counting::count_dags_exact(4),
+                counting::count_dags_exact(5)
+            );
+        }
+        "--ppf" => {
+            // Fig. 3: the cubic prior function.
+            let mut t = Table::new(&["R", "PPF"]);
+            for k in 0..=20 {
+                let r = k as f64 / 20.0;
+                t.push_row(vec![format!("{r:.2}"), format!("{:.3}", ppf(r))]);
+            }
+            print!("{}", t.to_markdown());
+        }
+        "--pst-mem" => {
+            // Fig. 6(b): PST memory vs candidate-set size.
+            let mut t = Table::new(&["n", "subsets", "pst_mb"]);
+            for n in [10usize, 20, 30, 40, 50, 60] {
+                let bytes = ParentSetTable::predicted_bytes(n, 4);
+                let layout = bnlearn::combinatorics::SubsetLayout::new(n, 4);
+                t.push_row(vec![
+                    n.to_string(),
+                    layout.total().to_string(),
+                    format!("{:.2}", bytes as f64 / (1024.0 * 1024.0)),
+                ]);
+            }
+            print!("{}", t.to_markdown());
+        }
+        other => bail!("unknown tables flag {other:?} (--table1|--ppf|--pst-mem)"),
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("bnlearn {}", env!("CARGO_PKG_VERSION"));
+    println!("artifacts dir: {:?}", default_artifacts_dir());
+    match ArtifactManifest::load(default_artifacts_dir()) {
+        Ok(m) => {
+            println!(
+                "artifacts: {} entries; score sizes: {:?}",
+                m.entries().len(),
+                m.available_sizes(4)
+            );
+        }
+        Err(e) => println!("artifacts: not available ({e})"),
+    }
+    println!("threads: {}", bnlearn::coordinator::config::default_threads());
+    println!("networks: {:?}", bnlearn::networks::names());
+    Ok(())
+}

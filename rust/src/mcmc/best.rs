@@ -1,0 +1,112 @@
+//! Best-graph tracking (Section III-C): "we keep track of a number of
+//! best graphs obtained so far as the sampling procedure proceeds."
+
+use crate::bn::Dag;
+
+/// Top-k graphs by score, deduplicated by structure.
+#[derive(Debug, Clone)]
+pub struct BestGraphTracker {
+    capacity: usize,
+    /// Sorted descending by score.
+    entries: Vec<(f64, Dag)>,
+}
+
+impl BestGraphTracker {
+    /// Track the best `capacity` distinct graphs.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        BestGraphTracker { capacity, entries: Vec::with_capacity(capacity + 1) }
+    }
+
+    /// Offer a scored graph; returns `true` if it entered the top-k.
+    pub fn offer(&mut self, score: f64, graph: &Dag) -> bool {
+        if let Some(pos) = self.entries.iter().position(|(_, g)| g == graph) {
+            // Same structure seen before — keep the better score.
+            if score > self.entries[pos].0 {
+                self.entries[pos].0 = score;
+                self.entries.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                return true;
+            }
+            return false;
+        }
+        if self.entries.len() < self.capacity {
+            self.entries.push((score, graph.clone()));
+            self.entries.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            return true;
+        }
+        if score > self.entries.last().unwrap().0 {
+            self.entries.pop();
+            self.entries.push((score, graph.clone()));
+            self.entries.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            return true;
+        }
+        false
+    }
+
+    /// Best (score, graph), if any was offered.
+    pub fn best(&self) -> Option<&(f64, Dag)> {
+        self.entries.first()
+    }
+
+    /// All tracked entries, best first.
+    pub fn entries(&self) -> &[(f64, Dag)] {
+        &self.entries
+    }
+
+    /// Merge another tracker into this one (multi-chain reduction).
+    pub fn merge(&mut self, other: &BestGraphTracker) {
+        for (score, graph) in &other.entries {
+            self.offer(*score, graph);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(edges: &[(usize, usize)]) -> Dag {
+        Dag::from_edges(4, edges)
+    }
+
+    #[test]
+    fn keeps_topk_sorted() {
+        let mut t = BestGraphTracker::new(2);
+        assert!(t.offer(-10.0, &g(&[(0, 1)])));
+        assert!(t.offer(-5.0, &g(&[(1, 2)])));
+        assert!(t.offer(-7.0, &g(&[(2, 3)])));
+        assert_eq!(t.entries().len(), 2);
+        assert_eq!(t.entries()[0].0, -5.0);
+        assert_eq!(t.entries()[1].0, -7.0);
+        assert!(!t.offer(-20.0, &g(&[(0, 3)])));
+    }
+
+    #[test]
+    fn dedups_same_structure() {
+        let mut t = BestGraphTracker::new(3);
+        t.offer(-10.0, &g(&[(0, 1)]));
+        t.offer(-8.0, &g(&[(0, 1)])); // same graph, better score
+        assert_eq!(t.entries().len(), 1);
+        assert_eq!(t.best().unwrap().0, -8.0);
+        assert!(!t.offer(-9.0, &g(&[(0, 1)]))); // same graph, worse
+        assert_eq!(t.best().unwrap().0, -8.0);
+    }
+
+    #[test]
+    fn merge_combines_chains() {
+        let mut a = BestGraphTracker::new(2);
+        a.offer(-10.0, &g(&[(0, 1)]));
+        let mut b = BestGraphTracker::new(2);
+        b.offer(-5.0, &g(&[(1, 2)]));
+        b.offer(-3.0, &g(&[(2, 3)]));
+        a.merge(&b);
+        assert_eq!(a.best().unwrap().0, -3.0);
+        assert_eq!(a.entries().len(), 2);
+    }
+
+    #[test]
+    fn empty_tracker() {
+        let t = BestGraphTracker::new(1);
+        assert!(t.best().is_none());
+    }
+}

@@ -1,0 +1,15 @@
+//! The MCMC order sampler (Section III / Algorithm 1): Metropolis–Hastings
+//! random walk over topological orders, driving a pluggable order-scoring
+//! engine, with best-graph tracking.
+
+pub mod best;
+pub mod chain;
+pub mod graphspace;
+pub mod order;
+pub mod runner;
+
+pub use best::BestGraphTracker;
+pub use chain::{ChainStats, McmcChain};
+pub use graphspace::GraphChain;
+pub use order::Order;
+pub use runner::{run_chain, run_chains_parallel, LearnResult};

@@ -1,0 +1,141 @@
+//! Topological-order state for the sampler.
+//!
+//! Maintains both directions of the permutation: `seq[k]` = node at
+//! position k, and `pos[v]` = position of node v. The position vector is
+//! what the scoring engines consume (and the only thing re-uploaded to
+//! the accelerator each iteration).
+
+use crate::util::Pcg32;
+
+/// A total order over `n` nodes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Order {
+    seq: Vec<usize>,
+    pos: Vec<usize>,
+}
+
+impl Order {
+    /// Identity order `0, 1, …, n-1`.
+    pub fn identity(n: usize) -> Self {
+        Order { seq: (0..n).collect(), pos: (0..n).collect() }
+    }
+
+    /// Uniformly random order (the paper's order initialization).
+    pub fn random(n: usize, rng: &mut Pcg32) -> Self {
+        let seq = rng.permutation(n);
+        Order::from_seq(seq)
+    }
+
+    /// Build from an explicit sequence (`seq[k]` = node at position k).
+    pub fn from_seq(seq: Vec<usize>) -> Self {
+        let n = seq.len();
+        let mut pos = vec![usize::MAX; n];
+        for (k, &v) in seq.iter().enumerate() {
+            assert!(v < n && pos[v] == usize::MAX, "not a permutation");
+            pos[v] = k;
+        }
+        Order { seq, pos }
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.seq.len()
+    }
+
+    /// `seq[k]` = node at position k.
+    pub fn seq(&self) -> &[usize] {
+        &self.seq
+    }
+
+    /// `pos[v]` = position of node v.
+    pub fn pos(&self) -> &[usize] {
+        &self.pos
+    }
+
+    /// Position vector as i32 (the accelerator input layout).
+    pub fn pos_i32(&self) -> Vec<i32> {
+        self.pos.iter().map(|&p| p as i32).collect()
+    }
+
+    /// Swap the nodes at positions `a` and `b` (the paper's proposal move).
+    pub fn swap_positions(&mut self, a: usize, b: usize) {
+        let (va, vb) = (self.seq[a], self.seq[b]);
+        self.seq.swap(a, b);
+        self.pos[va] = b;
+        self.pos[vb] = a;
+    }
+
+    /// Nodes preceding position `p`, i.e. the candidate parents of
+    /// `seq[p]` — sorted by node id (the layout order scorers need).
+    pub fn predecessors_sorted(&self, p: usize) -> Vec<usize> {
+        let mut preds: Vec<usize> = self.seq[..p].to_vec();
+        preds.sort_unstable();
+        preds
+    }
+
+    /// Invariant check (tests / debug).
+    pub fn check(&self) -> bool {
+        self.seq.len() == self.pos.len()
+            && self.seq.iter().enumerate().all(|(k, &v)| self.pos[v] == k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_and_random_are_valid() {
+        assert!(Order::identity(7).check());
+        let mut rng = Pcg32::new(61);
+        for _ in 0..50 {
+            assert!(Order::random(9, &mut rng).check());
+        }
+    }
+
+    #[test]
+    fn swap_maintains_inverse() {
+        let mut o = Order::identity(6);
+        o.swap_positions(1, 4);
+        assert!(o.check());
+        assert_eq!(o.seq()[1], 4);
+        assert_eq!(o.seq()[4], 1);
+        assert_eq!(o.pos()[4], 1);
+        // swap back restores
+        o.swap_positions(1, 4);
+        assert_eq!(o, Order::identity(6));
+    }
+
+    #[test]
+    fn swap_same_position_is_noop() {
+        let mut o = Order::identity(5);
+        o.swap_positions(2, 2);
+        assert_eq!(o, Order::identity(5));
+    }
+
+    #[test]
+    fn random_swap_walk_stays_valid() {
+        let mut rng = Pcg32::new(62);
+        let mut o = Order::random(12, &mut rng);
+        for _ in 0..500 {
+            let a = rng.gen_range(12);
+            let b = rng.gen_range(12);
+            o.swap_positions(a, b);
+            assert!(o.check());
+        }
+    }
+
+    #[test]
+    fn predecessors_are_sorted_prefix() {
+        let o = Order::from_seq(vec![3, 1, 4, 0, 2]);
+        assert_eq!(o.predecessors_sorted(0), Vec::<usize>::new());
+        assert_eq!(o.predecessors_sorted(3), vec![1, 3, 4]);
+        assert_eq!(o.predecessors_sorted(5), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "permutation")]
+    fn rejects_non_permutation() {
+        Order::from_seq(vec![0, 0, 1]);
+    }
+}

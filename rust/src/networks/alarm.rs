@@ -1,0 +1,145 @@
+//! The ALARM monitoring network (Beinlich et al. 1989): 37 nodes,
+//! 46 edges, maximal in-degree 4 — the large real network of the paper's
+//! Table IV. Structure and arities follow the Bayesian network repository.
+
+use super::NamedStructure;
+use crate::bn::Dag;
+
+// Node indices (alphabetical-free: repository order).
+const NODES: [(&str, usize); 37] = [
+    ("CVP", 3),            // 0
+    ("PCWP", 3),           // 1
+    ("HISTORY", 2),        // 2
+    ("TPR", 3),            // 3
+    ("BP", 3),             // 4
+    ("CO", 3),             // 5
+    ("HRBP", 3),           // 6
+    ("HREKG", 3),          // 7
+    ("HRSAT", 3),          // 8
+    ("PAP", 3),            // 9
+    ("SAO2", 3),           // 10
+    ("FIO2", 2),           // 11
+    ("PRESS", 4),          // 12
+    ("EXPCO2", 4),         // 13
+    ("MINVOL", 4),         // 14
+    ("MINVOLSET", 3),      // 15
+    ("HYPOVOLEMIA", 2),    // 16
+    ("LVFAILURE", 2),      // 17
+    ("ANAPHYLAXIS", 2),    // 18
+    ("INSUFFANESTH", 2),   // 19
+    ("PULMEMBOLUS", 2),    // 20
+    ("INTUBATION", 3),     // 21
+    ("KINKEDTUBE", 2),     // 22
+    ("DISCONNECT", 2),     // 23
+    ("LVEDVOLUME", 3),     // 24
+    ("STROKEVOLUME", 3),   // 25
+    ("CATECHOL", 2),       // 26
+    ("ERRLOWOUTPUT", 2),   // 27
+    ("HR", 3),             // 28
+    ("ERRCAUTER", 2),      // 29
+    ("SHUNT", 2),          // 30
+    ("PVSAT", 3),          // 31
+    ("ARTCO2", 3),         // 32
+    ("VENTALV", 4),        // 33
+    ("VENTLUNG", 4),       // 34
+    ("VENTTUBE", 4),       // 35
+    ("VENTMACH", 4),       // 36
+];
+
+/// The 46 published arcs as `(from, to)` index pairs.
+const EDGES: [(usize, usize); 46] = [
+    (24, 0),  // LVEDVOLUME -> CVP
+    (24, 1),  // LVEDVOLUME -> PCWP
+    (17, 2),  // LVFAILURE -> HISTORY
+    (18, 3),  // ANAPHYLAXIS -> TPR
+    (5, 4),   // CO -> BP
+    (3, 4),   // TPR -> BP
+    (28, 5),  // HR -> CO
+    (25, 5),  // STROKEVOLUME -> CO
+    (27, 6),  // ERRLOWOUTPUT -> HRBP
+    (28, 6),  // HR -> HRBP
+    (29, 7),  // ERRCAUTER -> HREKG
+    (28, 7),  // HR -> HREKG
+    (29, 8),  // ERRCAUTER -> HRSAT
+    (28, 8),  // HR -> HRSAT
+    (20, 9),  // PULMEMBOLUS -> PAP
+    (31, 10), // PVSAT -> SAO2
+    (30, 10), // SHUNT -> SAO2
+    (21, 12), // INTUBATION -> PRESS
+    (22, 12), // KINKEDTUBE -> PRESS
+    (35, 12), // VENTTUBE -> PRESS
+    (32, 13), // ARTCO2 -> EXPCO2
+    (34, 13), // VENTLUNG -> EXPCO2
+    (21, 14), // INTUBATION -> MINVOL
+    (34, 14), // VENTLUNG -> MINVOL
+    (16, 24), // HYPOVOLEMIA -> LVEDVOLUME
+    (17, 24), // LVFAILURE -> LVEDVOLUME
+    (16, 25), // HYPOVOLEMIA -> STROKEVOLUME
+    (17, 25), // LVFAILURE -> STROKEVOLUME
+    (32, 26), // ARTCO2 -> CATECHOL
+    (19, 26), // INSUFFANESTH -> CATECHOL
+    (10, 26), // SAO2 -> CATECHOL
+    (3, 26),  // TPR -> CATECHOL
+    (26, 28), // CATECHOL -> HR
+    (21, 30), // INTUBATION -> SHUNT
+    (20, 30), // PULMEMBOLUS -> SHUNT
+    (11, 31), // FIO2 -> PVSAT
+    (33, 31), // VENTALV -> PVSAT
+    (33, 32), // VENTALV -> ARTCO2
+    (21, 33), // INTUBATION -> VENTALV
+    (34, 33), // VENTLUNG -> VENTALV
+    (21, 34), // INTUBATION -> VENTLUNG
+    (22, 34), // KINKEDTUBE -> VENTLUNG
+    (35, 34), // VENTTUBE -> VENTLUNG
+    (23, 35), // DISCONNECT -> VENTTUBE
+    (36, 35), // VENTMACH -> VENTTUBE
+    (15, 36), // MINVOLSET -> VENTMACH
+];
+
+/// The ALARM structure.
+pub fn alarm() -> NamedStructure {
+    NamedStructure {
+        name: "alarm",
+        node_names: NODES.iter().map(|&(n, _)| n).collect(),
+        dag: Dag::from_edges(37, &EDGES),
+        states: NODES.iter().map(|&(_, s)| s).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_literature() {
+        let a = alarm();
+        assert_eq!(a.dag.n(), 37);
+        assert_eq!(a.dag.edge_count(), 46);
+        assert!(a.dag.is_acyclic());
+        assert_eq!(a.dag.max_in_degree(), 4); // CATECHOL
+    }
+
+    #[test]
+    fn catechol_parents() {
+        let a = alarm();
+        // CATECHOL (26) <- {TPR(3), SAO2(10), INSUFFANESTH(19), ARTCO2(32)}
+        assert_eq!(a.dag.parents(26), &[3, 10, 19, 32]);
+    }
+
+    #[test]
+    fn roots_are_the_published_ones() {
+        let a = alarm();
+        let roots: Vec<&str> = (0..37)
+            .filter(|&i| a.dag.parents(i).is_empty())
+            .map(|i| a.node_names[i])
+            .collect();
+        assert_eq!(
+            roots,
+            vec![
+                "FIO2", "MINVOLSET", "HYPOVOLEMIA", "LVFAILURE", "ANAPHYLAXIS",
+                "INSUFFANESTH", "PULMEMBOLUS", "INTUBATION", "KINKEDTUBE",
+                "DISCONNECT", "ERRLOWOUTPUT", "ERRCAUTER"
+            ]
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! The 8-node ASIA ("chest clinic") network of Lauritzen & Spiegelhalter
+//! 1988 — the classic small sanity-check network; handy for fast tests
+//! and the quickstart example.
+
+use super::NamedStructure;
+use crate::bn::Dag;
+
+const NODES: [&str; 8] = [
+    "asia",   // 0 visit to Asia
+    "tub",    // 1 tuberculosis
+    "smoke",  // 2 smoking
+    "lung",   // 3 lung cancer
+    "bronc",  // 4 bronchitis
+    "either", // 5 tub or lung
+    "xray",   // 6 positive x-ray
+    "dysp",   // 7 dyspnoea
+];
+
+const EDGES: [(usize, usize); 8] = [
+    (0, 1), // asia -> tub
+    (2, 3), // smoke -> lung
+    (2, 4), // smoke -> bronc
+    (1, 5), // tub -> either
+    (3, 5), // lung -> either
+    (5, 6), // either -> xray
+    (5, 7), // either -> dysp
+    (4, 7), // bronc -> dysp
+];
+
+/// The ASIA structure (all binary).
+pub fn asia() -> NamedStructure {
+    NamedStructure {
+        name: "asia",
+        node_names: NODES.to_vec(),
+        dag: Dag::from_edges(8, &EDGES),
+        states: vec![2; 8],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape() {
+        let a = asia();
+        assert_eq!(a.dag.n(), 8);
+        assert_eq!(a.dag.edge_count(), 8);
+        assert!(a.dag.is_acyclic());
+        assert_eq!(a.dag.parents(7), &[4, 5]); // dysp <- bronc, either
+    }
+}

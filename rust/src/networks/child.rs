@@ -1,0 +1,88 @@
+//! The 20-node CHILD network (Spiegelhalter 1992, congenital heart
+//! disease) — a published 20-node reference structure, the same size
+//! class as the paper's synthetic ROC graphs.
+
+use super::NamedStructure;
+use crate::bn::Dag;
+
+const NODES: [(&str, usize); 20] = [
+    ("BirthAsphyxia", 2),   // 0
+    ("Disease", 6),         // 1
+    ("Age", 3),             // 2
+    ("LVH", 2),             // 3
+    ("DuctFlow", 3),        // 4
+    ("CardiacMixing", 4),   // 5
+    ("LungParench", 3),     // 6
+    ("LungFlow", 3),        // 7
+    ("Sick", 2),            // 8
+    ("LVHreport", 2),       // 9
+    ("HypDistrib", 2),      // 10
+    ("HypoxiaInO2", 3),     // 11
+    ("CO2", 3),             // 12
+    ("ChestXray", 5),       // 13
+    ("Grunting", 2),        // 14
+    ("LowerBodyO2", 3),     // 15
+    ("RUQO2", 3),           // 16
+    ("CO2Report", 2),       // 17
+    ("XrayReport", 5),      // 18
+    ("GruntingReport", 2),  // 19
+];
+
+const EDGES: [(usize, usize); 25] = [
+    (0, 1),   // BirthAsphyxia -> Disease
+    (1, 2),   // Disease -> Age
+    (8, 2),   // Sick -> Age
+    (1, 3),   // Disease -> LVH
+    (1, 4),   // Disease -> DuctFlow
+    (1, 5),   // Disease -> CardiacMixing
+    (1, 6),   // Disease -> LungParench
+    (1, 7),   // Disease -> LungFlow
+    (1, 8),   // Disease -> Sick
+    (3, 9),   // LVH -> LVHreport
+    (4, 10),  // DuctFlow -> HypDistrib
+    (5, 10),  // CardiacMixing -> HypDistrib
+    (5, 11),  // CardiacMixing -> HypoxiaInO2
+    (6, 11),  // LungParench -> HypoxiaInO2
+    (6, 12),  // LungParench -> CO2
+    (6, 13),  // LungParench -> ChestXray
+    (7, 13),  // LungFlow -> ChestXray
+    (6, 14),  // LungParench -> Grunting
+    (8, 14),  // Sick -> Grunting
+    (10, 15), // HypDistrib -> LowerBodyO2
+    (11, 15), // HypoxiaInO2 -> LowerBodyO2
+    (11, 16), // HypoxiaInO2 -> RUQO2
+    (12, 17), // CO2 -> CO2Report
+    (13, 18), // ChestXray -> XrayReport
+    (14, 19), // Grunting -> GruntingReport
+];
+
+/// The CHILD structure.
+pub fn child() -> NamedStructure {
+    NamedStructure {
+        name: "child",
+        node_names: NODES.iter().map(|&(n, _)| n).collect(),
+        dag: Dag::from_edges(20, &EDGES),
+        states: NODES.iter().map(|&(_, s)| s).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_literature() {
+        let c = child();
+        assert_eq!(c.dag.n(), 20);
+        assert_eq!(c.dag.edge_count(), 25);
+        assert!(c.dag.is_acyclic());
+        assert!(c.dag.max_in_degree() <= 4);
+    }
+
+    #[test]
+    fn disease_is_the_hub() {
+        let c = child();
+        let children = c.dag.edges().iter().filter(|&&(f, _)| f == 1).count();
+        assert_eq!(children, 7);
+    }
+}

@@ -1,0 +1,84 @@
+//! Repository of published benchmark network *structures*.
+//!
+//! The paper evaluates on the 11-node human T-cell signaling transduction
+//! network (Sachs et al. 2005) and the 37-node ALARM network (Beinlich et
+//! al. 1989, via the Bayesian network repository). We encode the published
+//! structures; CPTs are synthesized with peaked random rows
+//! (DESIGN.md §7 — the paper only consumes the *data*, which we generate
+//! by forward-sampling the true structure).
+
+pub mod alarm;
+pub mod asia;
+pub mod child;
+pub mod sachs;
+
+use crate::bn::{Dag, Network};
+use crate::util::Pcg32;
+
+/// A named structure with per-node arities.
+pub struct NamedStructure {
+    pub name: &'static str,
+    pub node_names: Vec<&'static str>,
+    pub dag: Dag,
+    pub states: Vec<usize>,
+}
+
+impl NamedStructure {
+    /// Attach synthesized CPTs (seeded) to get a sampling-ready network.
+    pub fn with_cpts(&self, seed: u64) -> Network {
+        let mut rng = Pcg32::new(seed);
+        let mut net =
+            Network::with_random_cpts(self.dag.clone(), self.states.clone(), &mut rng);
+        net.names = self.node_names.iter().map(|s| s.to_string()).collect();
+        net
+    }
+}
+
+/// Look a repository network up by name.
+pub fn by_name(name: &str) -> Option<NamedStructure> {
+    match name {
+        "alarm" => Some(alarm::alarm()),
+        "sachs" | "stn" => Some(sachs::sachs()),
+        "asia" => Some(asia::asia()),
+        "child" => Some(child::child()),
+        _ => None,
+    }
+}
+
+/// All repository network names.
+pub fn names() -> &'static [&'static str] {
+    &["alarm", "sachs", "asia", "child"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("alarm").is_some());
+        assert!(by_name("sachs").is_some());
+        assert!(by_name("stn").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn all_networks_are_valid() {
+        for name in names() {
+            let s = by_name(name).unwrap();
+            assert!(s.dag.is_acyclic(), "{name} has a cycle");
+            assert_eq!(s.node_names.len(), s.dag.n(), "{name} name count");
+            assert_eq!(s.states.len(), s.dag.n(), "{name} arity count");
+            let net = s.with_cpts(7);
+            assert!(net.validate().is_ok(), "{name} CPTs invalid");
+        }
+    }
+
+    #[test]
+    fn cpts_deterministic_by_seed() {
+        let s = by_name("asia").unwrap();
+        let a = s.with_cpts(3);
+        let b = s.with_cpts(3);
+        assert_eq!(a.cpts[1].probs, b.cpts[1].probs);
+    }
+}

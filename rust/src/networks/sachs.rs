@@ -1,0 +1,80 @@
+//! The 11-node human T-cell signaling transduction network (STN) of
+//! Sachs et al., *Science* 2005 — the paper's small real network
+//! (Table IV). 17 arcs over protein/phospholipid measurements,
+//! discretized to 3 states (low / medium / high) as in the original
+//! study and in the paper's gene-expression model.
+
+use super::NamedStructure;
+use crate::bn::Dag;
+
+const NODES: [&str; 11] = [
+    "Raf",  // 0
+    "Mek",  // 1
+    "Plcg", // 2
+    "PIP2", // 3
+    "PIP3", // 4
+    "Erk",  // 5
+    "Akt",  // 6
+    "PKA",  // 7
+    "PKC",  // 8
+    "P38",  // 9
+    "Jnk",  // 10
+];
+
+/// The 17 consensus arcs.
+const EDGES: [(usize, usize); 17] = [
+    (8, 0),  // PKC -> Raf
+    (7, 0),  // PKA -> Raf
+    (0, 1),  // Raf -> Mek
+    (8, 1),  // PKC -> Mek
+    (7, 1),  // PKA -> Mek
+    (2, 3),  // Plcg -> PIP2
+    (4, 3),  // PIP3 -> PIP2
+    (2, 4),  // Plcg -> PIP3
+    (1, 5),  // Mek -> Erk
+    (7, 5),  // PKA -> Erk
+    (5, 6),  // Erk -> Akt
+    (7, 6),  // PKA -> Akt
+    (8, 7),  // PKC -> PKA
+    (7, 9),  // PKA -> P38
+    (8, 9),  // PKC -> P38
+    (7, 10), // PKA -> Jnk
+    (8, 10), // PKC -> Jnk
+];
+
+/// The Sachs STN structure (3 states per node).
+pub fn sachs() -> NamedStructure {
+    NamedStructure {
+        name: "sachs",
+        node_names: NODES.to_vec(),
+        dag: Dag::from_edges(11, &EDGES),
+        states: vec![3; 11],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_literature() {
+        let s = sachs();
+        assert_eq!(s.dag.n(), 11);
+        assert_eq!(s.dag.edge_count(), 17);
+        assert!(s.dag.is_acyclic());
+        assert!(s.dag.max_in_degree() <= 4);
+    }
+
+    #[test]
+    fn pkc_is_a_root_driving_pka() {
+        let s = sachs();
+        assert!(s.dag.parents(8).is_empty()); // PKC root
+        assert!(s.dag.has_edge(8, 7)); // PKC -> PKA
+        assert_eq!(s.dag.parents(1), &[0, 7, 8]); // Mek <- Raf, PKA, PKC
+    }
+
+    #[test]
+    fn all_nodes_ternary() {
+        assert!(sachs().states.iter().all(|&r| r == 3));
+    }
+}

@@ -1,0 +1,7 @@
+//! Pairwise priors (Section IV): the user-facing interface matrix `R` and
+//! the cubic pairwise prior function (PPF) that injects edge-level
+//! confidence into every local score.
+
+pub mod ppf;
+
+pub use ppf::{ppf, InterfaceMatrix};

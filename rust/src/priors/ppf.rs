@@ -1,0 +1,176 @@
+//! The paper's pairwise prior component.
+//!
+//! Users express edge-level confidence in an `n × n` matrix `R` with
+//! `R[i][m] ∈ [0, 1]` — the belief in the existence of an edge `m → i`
+//! (0.5 = no bias). The score contribution is the cubic of Equation (10):
+//!
+//! ```text
+//! PPF(i, m) = 100 · (R[i][m] − 0.5)³
+//! ```
+//!
+//! which satisfies all the paper's requirements: zero at 0.5, sign
+//! follows the bias direction, and saturates near ±12.5 (≈ ±10 at
+//! R ≈ 0.04/0.96) so a confident prior is worth about ten decades of
+//! posterior odds — enough to matter, not enough to override strong data.
+
+use crate::bn::Dag;
+use crate::util::Pcg32;
+
+/// Equation (10).
+#[inline]
+pub fn ppf(r: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&r), "interface values live in [0,1], got {r}");
+    let d = r - 0.5;
+    100.0 * d * d * d
+}
+
+/// The user-facing `n × n` interface matrix (row `i`, column `m` = belief
+/// in edge m → i).
+#[derive(Debug, Clone)]
+pub struct InterfaceMatrix {
+    n: usize,
+    r: Vec<f64>,
+}
+
+impl InterfaceMatrix {
+    /// Unbiased matrix (all 0.5).
+    pub fn unbiased(n: usize) -> Self {
+        InterfaceMatrix { n, r: vec![0.5; n * n] }
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Belief in edge `from → to`.
+    pub fn get(&self, to: usize, from: usize) -> f64 {
+        self.r[to * self.n + from]
+    }
+
+    /// Set the belief in edge `from → to`.
+    pub fn set(&mut self, to: usize, from: usize, value: f64) {
+        assert!((0.0..=1.0).contains(&value));
+        assert_ne!(to, from, "no self-edges");
+        self.r[to * self.n + from] = value;
+    }
+
+    /// Row-major `PPF(i, m)` matrix (Eq. 10 applied elementwise) — the
+    /// operand consumed by `ScoreTable::add_priors` and the L2 graph.
+    pub fn ppf_matrix(&self) -> Vec<f64> {
+        self.r.iter().map(|&r| ppf(r)).collect()
+    }
+
+    /// The paper's ROC protocol (Section VI, Figs. 9–10): given the truth
+    /// and the graph learned *without* priors, assign interface value
+    /// `hit` to every mistakenly-removed true edge and `miss` to every
+    /// mistakenly-added false edge, each independently with probability
+    /// `coverage`. Models a user who knows a random fraction of the
+    /// learner's mistakes.
+    pub fn from_mistakes(
+        truth: &Dag,
+        learned: &Dag,
+        hit: f64,
+        miss: f64,
+        coverage: f64,
+        rng: &mut Pcg32,
+    ) -> Self {
+        let n = truth.n();
+        assert_eq!(learned.n(), n);
+        let mut m = InterfaceMatrix::unbiased(n);
+        for to in 0..n {
+            for from in 0..n {
+                if from == to {
+                    continue;
+                }
+                let in_truth = truth.has_edge(from, to);
+                let in_learned = learned.has_edge(from, to);
+                if in_truth && !in_learned && rng.gen_bool(coverage) {
+                    m.set(to, from, hit); // mistakenly removed → encourage
+                } else if !in_truth && in_learned && rng.gen_bool(coverage) {
+                    m.set(to, from, miss); // mistakenly added → discourage
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_requirements_hold() {
+        // PPF(0.5) = 0; sign matches bias; endpoints near ±10 (12.5).
+        assert_eq!(ppf(0.5), 0.0);
+        assert!(ppf(0.7) > 0.0);
+        assert!(ppf(0.2) < 0.0);
+        assert!((ppf(1.0) - 12.5).abs() < 1e-12);
+        assert!((ppf(0.0) + 12.5).abs() < 1e-12);
+        // "around 10" as R→1: at R=0.96, PPF ≈ 9.7
+        assert!((ppf(0.96) - 9.733).abs() < 0.01);
+    }
+
+    #[test]
+    fn ppf_is_odd_around_half() {
+        for &d in &[0.0, 0.1, 0.25, 0.4, 0.5] {
+            assert!((ppf(0.5 + d) + ppf(0.5 - d)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ppf_monotone() {
+        let mut prev = f64::NEG_INFINITY;
+        for k in 0..=100 {
+            let v = ppf(k as f64 / 100.0);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let mut m = InterfaceMatrix::unbiased(4);
+        assert_eq!(m.get(1, 0), 0.5);
+        m.set(1, 0, 0.9);
+        assert_eq!(m.get(1, 0), 0.9);
+        let p = m.ppf_matrix();
+        assert!((p[1 * 4 + 0] - ppf(0.9)).abs() < 1e-12);
+        assert_eq!(p[0], 0.0); // diagonal unbiased
+    }
+
+    #[test]
+    fn mistakes_protocol_targets_only_mistakes() {
+        let truth = Dag::from_edges(4, &[(0, 1), (1, 2)]);
+        // learned: missing (1,2), spurious (3, 2)
+        let learned = Dag::from_edges(4, &[(0, 1), (3, 2)]);
+        let mut rng = Pcg32::new(51);
+        let m = InterfaceMatrix::from_mistakes(&truth, &learned, 0.8, 0.1, 1.0, &mut rng);
+        assert_eq!(m.get(2, 1), 0.8); // mistakenly removed
+        assert_eq!(m.get(2, 3), 0.1); // mistakenly added
+        assert_eq!(m.get(1, 0), 0.5); // correct edge untouched
+        assert_eq!(m.get(3, 0), 0.5); // true negative untouched
+    }
+
+    #[test]
+    fn coverage_zero_leaves_unbiased() {
+        let truth = Dag::from_edges(3, &[(0, 1)]);
+        let learned = Dag::empty(3);
+        let mut rng = Pcg32::new(52);
+        let m = InterfaceMatrix::from_mistakes(&truth, &learned, 0.8, 0.1, 0.0, &mut rng);
+        for to in 0..3 {
+            for from in 0..3 {
+                if to != from {
+                    assert_eq!(m.get(to, from), 0.5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "self-edges")]
+    fn self_edge_rejected() {
+        InterfaceMatrix::unbiased(3).set(1, 1, 0.9);
+    }
+}

@@ -1,0 +1,168 @@
+//! Artifact manifest parsing.
+//!
+//! `python -m compile.aot` writes `manifest.txt` next to the HLO text
+//! files, one line per artifact:
+//! `name n s S S_padded tile_s file` (with `#` comments).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One artifact as described by the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub n: usize,
+    pub s: usize,
+    /// Unpadded subset count S.
+    pub total: usize,
+    /// S padded to the tile multiple (the compiled parameter extent).
+    pub padded: usize,
+    pub tile_s: usize,
+    pub file: String,
+}
+
+/// The parsed manifest plus its directory (for path resolution).
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    dir: PathBuf,
+    entries: Vec<ManifestEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(dir: PathBuf, text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() != 7 {
+                bail!("manifest line {}: expected 7 fields, got {}", lineno + 1, fields.len());
+            }
+            entries.push(ManifestEntry {
+                name: fields[0].to_string(),
+                n: fields[1].parse().context("n")?,
+                s: fields[2].parse().context("s")?,
+                total: fields[3].parse().context("S")?,
+                padded: fields[4].parse().context("S_padded")?,
+                tile_s: fields[5].parse().context("tile_s")?,
+                file: fields[6].to_string(),
+            });
+        }
+        Ok(ArtifactManifest { dir, entries })
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[ManifestEntry] {
+        &self.entries
+    }
+
+    /// Find the artifact `<stem>n{n}_s{s}` (exact name — prefixes like
+    /// `bn_score_` and `bn_score_pallas_` must not shadow each other).
+    pub fn find(&self, stem: &str, n: usize, s: usize) -> Option<&ManifestEntry> {
+        let name = format!("{stem}n{n}_s{s}");
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// The default (dense-lowered) score_order artifact for `(n, s)`.
+    pub fn score_entry(&self, n: usize, s: usize) -> Result<&ManifestEntry> {
+        self.find("bn_score_", n, s).with_context(|| {
+            format!("no bn_score artifact for n={n}, s={s} — regenerate with `make artifacts`")
+        })
+    }
+
+    /// The Pallas-lowered parity artifact for `(n, s)`, where emitted.
+    pub fn pallas_entry(&self, n: usize, s: usize) -> Result<&ManifestEntry> {
+        self.find("bn_score_pallas_", n, s).with_context(|| {
+            format!("no bn_score_pallas artifact for n={n}, s={s}")
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ManifestEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Graph sizes with score artifacts available.
+    pub fn available_sizes(&self, s: usize) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.s == s && e.name.starts_with("bn_score_n"))
+            .map(|e| e.n)
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# name n s S S_padded tile_s file
+bn_score_n8_s4 8 4 163 512 512 bn_score_n8_s4.hlo.txt
+bn_fold_priors_n8_s4 8 4 163 512 512 bn_fold_priors_n8_s4.hlo.txt
+bn_score_n20_s4 20 4 6196 6656 512 bn_score_n20_s4.hlo.txt
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = ArtifactManifest::parse(PathBuf::from("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.entries().len(), 3);
+        let e = m.score_entry(20, 4).unwrap();
+        assert_eq!(e.total, 6196);
+        assert_eq!(e.padded, 6656);
+        assert_eq!(m.path_of(e), PathBuf::from("/tmp/bn_score_n20_s4.hlo.txt"));
+    }
+
+    #[test]
+    fn find_distinguishes_prefixes() {
+        let m = ArtifactManifest::parse(PathBuf::from("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.find("bn_fold_priors_", 8, 4).unwrap().name, "bn_fold_priors_n8_s4");
+        assert!(m.find("bn_fold_priors_", 20, 4).is_none());
+    }
+
+    #[test]
+    fn missing_size_is_error() {
+        let m = ArtifactManifest::parse(PathBuf::from("/tmp"), SAMPLE).unwrap();
+        assert!(m.score_entry(99, 4).is_err());
+    }
+
+    #[test]
+    fn available_sizes_sorted() {
+        let m = ArtifactManifest::parse(PathBuf::from("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.available_sizes(4), vec![8, 20]);
+    }
+
+    #[test]
+    fn rejects_malformed_line() {
+        assert!(ArtifactManifest::parse(PathBuf::from("/tmp"), "bad line here").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        // Integration-ish: if `make artifacts` has run, the real manifest
+        // must parse and contain the default sizes.
+        let dir = crate::runtime::default_artifacts_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = ArtifactManifest::load(&dir).unwrap();
+            assert!(m.score_entry(20, 4).is_ok());
+        }
+    }
+}

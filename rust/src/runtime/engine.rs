@@ -1,0 +1,138 @@
+//! The compiled scoring engine: one PJRT executable per graph size with
+//! the big operands pinned on-device.
+//!
+//! Mirrors the paper's GPU protocol: the score table (and PST) travel to
+//! the device **once**; each iteration ships only the new order's
+//! position vector and reads back `(total, best[n], argmax[n])`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::{ArtifactManifest, ManifestEntry};
+use crate::combinatorics::ParentSetTable;
+use crate::score::table::NEG_SENTINEL;
+use crate::score::ScoreTable;
+
+/// Result of one accelerated scoring call.
+#[derive(Debug, Clone)]
+pub struct DeviceScore {
+    /// In-graph f32 total (Σ best) — recorded for diagnostics; prefer the
+    /// f64 host-side sum of `best` for MH decisions.
+    pub total_f32: f32,
+    /// Per-node best local score.
+    pub best: Vec<f32>,
+    /// Per-node argmax subset index (global layout index, unpadded range).
+    pub arg: Vec<i32>,
+}
+
+/// A loaded + compiled score_order executable with device-resident
+/// operands.
+pub struct ScoreEngine {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ManifestEntry,
+    ls_buf: Option<xla::PjRtBuffer>,
+    pst_buf: Option<xla::PjRtBuffer>,
+    client: xla::PjRtClient,
+}
+
+impl ScoreEngine {
+    /// Load and compile the default (dense-lowered) score artifact for
+    /// `(n, s)` from `dir`.
+    pub fn load(dir: impl AsRef<Path>, n: usize, s: usize) -> Result<Self> {
+        Self::load_variant(dir, "bn_score_", n, s)
+    }
+
+    /// Load a specific artifact variant (`bn_score_` or `bn_score_pallas_`).
+    pub fn load_variant(dir: impl AsRef<Path>, stem: &str, n: usize, s: usize) -> Result<Self> {
+        let manifest = ArtifactManifest::load(&dir)?;
+        let entry = manifest
+            .find(stem, n, s)
+            .ok_or_else(|| anyhow!("no artifact {stem}n{n}_s{s} — run `make artifacts`"))?
+            .clone();
+        let path = manifest.path_of(&entry);
+        let client = super::shared_client()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+        Ok(ScoreEngine { exe, entry, ls_buf: None, pst_buf: None, client })
+    }
+
+    /// Manifest data of the loaded artifact.
+    pub fn entry(&self) -> &ManifestEntry {
+        &self.entry
+    }
+
+    /// Upload the score table and PST as device-resident buffers,
+    /// padding the subset axis to the compiled extent (padding columns
+    /// poisoned / sentinel rows, matching `kernels.order_score.pad_inputs`).
+    pub fn upload(&mut self, table: &ScoreTable, pst: &ParentSetTable) -> Result<()> {
+        let n = self.entry.n;
+        let s_total = self.entry.total;
+        let padded = self.entry.padded;
+        if table.n() != n || table.subsets() != s_total {
+            bail!(
+                "table shape [{} x {}] does not match artifact [{} x {}]",
+                table.n(),
+                table.subsets(),
+                n,
+                s_total
+            );
+        }
+        if pst.rows() != s_total {
+            bail!("PST rows {} != artifact S {}", pst.rows(), s_total);
+        }
+
+        // Pad LS rows host-side into one contiguous [n, padded] buffer.
+        let mut ls = vec![NEG_SENTINEL; n * padded];
+        for i in 0..n {
+            ls[i * padded..i * padded + s_total].copy_from_slice(table.row(i));
+        }
+        // Pad PST rows with sentinel-only rows.
+        let width = pst.width();
+        let mut pst_padded = vec![pst.sentinel(); padded * width];
+        pst_padded[..s_total * width].copy_from_slice(pst.raw());
+
+        self.ls_buf = Some(
+            self.client
+                .buffer_from_host_buffer::<f32>(&ls, &[n, padded], None)
+                .map_err(|e| anyhow!("uploading score table: {e:?}"))?,
+        );
+        self.pst_buf = Some(
+            self.client
+                .buffer_from_host_buffer::<i32>(&pst_padded, &[padded, width], None)
+                .map_err(|e| anyhow!("uploading PST: {e:?}"))?,
+        );
+        Ok(())
+    }
+
+    /// Score one order: upload `pos` (n ints), execute, read back.
+    pub fn score(&self, pos: &[i32]) -> Result<DeviceScore> {
+        let n = self.entry.n;
+        if pos.len() != n {
+            bail!("pos length {} != n {}", pos.len(), n);
+        }
+        let ls = self.ls_buf.as_ref().context("upload() must run before score()")?;
+        let pst = self.pst_buf.as_ref().context("upload() must run before score()")?;
+        let pos_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(pos, &[n], None)
+            .map_err(|e| anyhow!("uploading pos: {e:?}"))?;
+
+        let outs = self
+            .exe
+            .execute_b(&[ls, pst, &pos_buf])
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback: {e:?}"))?;
+        let (t, b, a) = lit.to_tuple3().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let total_f32 = t.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let best = b.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let arg = a.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(DeviceScore { total_f32, best, arg })
+    }
+}

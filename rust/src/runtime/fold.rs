@@ -1,0 +1,96 @@
+//! Device-side prior folding — the run-setup half of Eq. (9).
+//!
+//! `bn_fold_priors_*` artifacts lower `ls[i,j] += Σ_{m∈π_j} PPF(i,m)` as
+//! one `[n,n] × [n,S]` matmul over the PST's one-hot membership (the
+//! MXU-shaped piece of the TPU adaptation). The rust-side
+//! `ScoreTable::add_priors` does the same fold on the host; this path
+//! keeps the augmented table on the device without a host round-trip —
+//! useful when re-running the sampler under many prior settings (the
+//! Figs. 9–10 protocol), and it exercises the L2 matmul end-to-end.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::{ArtifactManifest, ManifestEntry};
+use crate::combinatorics::ParentSetTable;
+use crate::priors::InterfaceMatrix;
+use crate::score::table::NEG_SENTINEL;
+use crate::score::ScoreTable;
+
+/// A loaded fold_priors executable.
+pub struct PriorFolder {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ManifestEntry,
+    client: xla::PjRtClient,
+}
+
+impl PriorFolder {
+    /// Load + compile the fold artifact for `(n, s)`.
+    pub fn load(dir: impl AsRef<Path>, n: usize, s: usize) -> Result<Self> {
+        let manifest = ArtifactManifest::load(&dir)?;
+        let entry = manifest
+            .find("bn_fold_priors_", n, s)
+            .ok_or_else(|| anyhow!("no bn_fold_priors artifact for n={n}, s={s}"))?
+            .clone();
+        let path = manifest.path_of(&entry);
+        let client = super::shared_client()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let exe = client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+        Ok(PriorFolder { exe, entry, client })
+    }
+
+    /// Fold `priors` into `table` on the device and return the augmented
+    /// `[n × S]` scores (unpadded), verified against the artifact shapes.
+    pub fn fold(&self, table: &ScoreTable, priors: &InterfaceMatrix) -> Result<Vec<f32>> {
+        let n = self.entry.n;
+        let s_total = self.entry.total;
+        let padded = self.entry.padded;
+        if table.n() != n || table.subsets() != s_total {
+            bail!("table [{} x {}] != artifact [{n} x {s_total}]", table.n(), table.subsets());
+        }
+        if priors.n() != n {
+            bail!("priors n {} != {n}", priors.n());
+        }
+
+        // Padded operands (same conventions as ScoreEngine::upload).
+        let mut ls = vec![NEG_SENTINEL; n * padded];
+        for i in 0..n {
+            ls[i * padded..i * padded + s_total].copy_from_slice(table.row(i));
+        }
+        let pst = ParentSetTable::build(table.layout());
+        let width = pst.width();
+        let mut pst_padded = vec![pst.sentinel(); padded * width];
+        pst_padded[..s_total * width].copy_from_slice(pst.raw());
+        let ppf: Vec<f32> = priors.ppf_matrix().iter().map(|&v| v as f32).collect();
+
+        let ls_b = self
+            .client
+            .buffer_from_host_buffer::<f32>(&ls, &[n, padded], None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let pst_b = self
+            .client
+            .buffer_from_host_buffer::<i32>(&pst_padded, &[padded, width], None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let ppf_b = self
+            .client
+            .buffer_from_host_buffer::<f32>(&ppf, &[n, n], None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+
+        let outs = self.exe.execute_b(&[&ls_b, &pst_b, &ppf_b]).map_err(|e| anyhow!("{e:?}"))?;
+        let lit = outs[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        let folded = lit.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        let full = folded.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        // Strip padding columns.
+        let mut out = Vec::with_capacity(n * s_total);
+        for i in 0..n {
+            out.extend_from_slice(&full[i * padded..i * padded + s_total]);
+        }
+        Ok(out)
+    }
+}

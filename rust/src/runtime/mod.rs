@@ -1,0 +1,46 @@
+//! The accelerator runtime — the paper's Fig. 4 "host ⇄ GPU" boundary,
+//! realized as AOT-compiled XLA executables loaded over the PJRT C API.
+//!
+//! `make artifacts` (python, build-time) lowers the L2 scoring
+//! computation to HLO text per graph size; this module loads an artifact,
+//! compiles it on the CPU PJRT client, pins the large constant operands
+//! (score table, PST) as device-resident buffers, and exposes a
+//! per-iteration `score(pos)` call that uploads only the n-int position
+//! vector — python never runs on this path.
+
+pub mod artifacts;
+pub mod engine;
+pub mod fold;
+pub mod xla_scorer;
+
+pub use artifacts::{ArtifactManifest, ManifestEntry};
+pub use engine::ScoreEngine;
+pub use fold::PriorFolder;
+pub use xla_scorer::XlaScorer;
+
+use std::cell::RefCell;
+
+thread_local! {
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// Per-thread PJRT CPU client (`PjRtClient` is `Rc`-backed — not `Sync` —
+/// so each thread lazily creates one and hands out cheap `Rc` clones).
+pub fn shared_client() -> anyhow::Result<xla::PjRtClient> {
+    CLIENT.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(
+                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?,
+            );
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}
+
+/// Default artifacts directory: `$BNLEARN_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("BNLEARN_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,91 @@
+//! The accelerated order scorer — the analog of the paper's GPU path,
+//! plugged into the same `OrderScorer` interface the MCMC chain drives.
+
+use anyhow::Result;
+
+use super::engine::ScoreEngine;
+use crate::combinatorics::{ParentSetTable, SubsetLayout};
+use crate::mcmc::Order;
+use crate::score::ScoreTable;
+use crate::scorer::{BestGraph, OrderScorer};
+
+/// Order scorer backed by the AOT-compiled XLA executable.
+///
+/// Holds PJRT handles → not `Send`; use one per thread (or run the
+/// accelerated engine single-chain, as the paper does with one GPU).
+pub struct XlaScorer {
+    engine: ScoreEngine,
+    layout: SubsetLayout,
+    /// Scratch for pos upload.
+    pos: Vec<i32>,
+    /// Scratch for subset decode.
+    buf: Vec<usize>,
+}
+
+impl XlaScorer {
+    /// Load the default artifact for the table's `(n, s)`, build + upload
+    /// the PST and the score table.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>, table: &ScoreTable) -> Result<Self> {
+        Self::with_variant(artifacts_dir, table, "bn_score_")
+    }
+
+    /// Same, over the Pallas-lowered parity artifact (kernel-in-HLO
+    /// end-to-end; slower on the CPU backend — see aot.py).
+    pub fn new_pallas(
+        artifacts_dir: impl AsRef<std::path::Path>,
+        table: &ScoreTable,
+    ) -> Result<Self> {
+        Self::with_variant(artifacts_dir, table, "bn_score_pallas_")
+    }
+
+    /// Load a named artifact variant.
+    pub fn with_variant(
+        artifacts_dir: impl AsRef<std::path::Path>,
+        table: &ScoreTable,
+        stem: &str,
+    ) -> Result<Self> {
+        let layout = table.layout().clone();
+        let mut engine = ScoreEngine::load_variant(artifacts_dir, stem, layout.n(), layout.s())?;
+        let pst = ParentSetTable::build(&layout);
+        engine.upload(table, &pst)?;
+        Ok(XlaScorer {
+            engine,
+            pos: vec![0; layout.n()],
+            buf: vec![0; layout.s().max(1)],
+            layout,
+        })
+    }
+
+    /// The manifest entry in use (sizes, tiling).
+    pub fn entry(&self) -> &super::artifacts::ManifestEntry {
+        self.engine.entry()
+    }
+}
+
+impl OrderScorer for XlaScorer {
+    fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
+        let n = self.layout.n();
+        debug_assert_eq!(order.n(), n);
+        for (v, &p) in order.pos().iter().enumerate() {
+            self.pos[v] = p as i32;
+        }
+        let result = self
+            .engine
+            .score(&self.pos)
+            .expect("accelerated scoring failed (artifact/table mismatch?)");
+        let mut total = 0f64;
+        for i in 0..n {
+            let best = result.best[i] as f64;
+            out.node_scores[i] = best;
+            total += best;
+            let subset = self.layout.subset_of(result.arg[i] as usize, &mut self.buf);
+            out.parents[i].clear();
+            out.parents[i].extend_from_slice(subset);
+        }
+        total
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-accelerated"
+    }
+}

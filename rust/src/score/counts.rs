@@ -1,0 +1,232 @@
+//! Contingency counting: the `N_ik` / `N_ijk` statistics of Equation (3).
+//!
+//! For a node `i` with parent set `π`, `N_ijk` is the number of
+//! observations where `v_i` is in state `j` and the parents jointly take
+//! configuration `k`. Parent configurations are mixed-radix encoded
+//! (first parent fastest).
+//!
+//! Counting is *sparse*: only configurations that actually occur are
+//! materialized. Unobserved configurations contribute exactly zero to the
+//! BDe score (`logΓ(α)−logΓ(α+0) = 0`), so skipping them is both the
+//! correctness-preserving and the fast thing to do — with N observations
+//! at most N configurations are touched regardless of `r_i = Π arities`.
+
+use std::collections::HashMap;
+
+use crate::data::Dataset;
+
+/// Reusable scratch for one thread's counting loop; avoids re-allocating
+/// and re-zeroing per local score (the preprocessing stage computes
+/// millions of them).
+#[derive(Debug)]
+pub struct CountsWorkspace {
+    /// Dense per-(config,state) counts, length = capacity currently held.
+    dense: Vec<u32>,
+    /// Configs touched this round (for O(touched) clearing).
+    touched: Vec<u32>,
+    /// Per-row parent config codes (reused across nodes for a fixed π).
+    codes: Vec<u32>,
+    /// Sparse fallback for huge config spaces (`q·r` beyond the dense
+    /// limit): at most `rows` configs can be observed regardless of q.
+    sparse: HashMap<u32, Vec<u32>>,
+}
+
+/// Maximum `q_i · r_i` the dense buffer will grow to; beyond this the
+/// sparse (hash-map) path takes over. 3^4 parents × 4 states is 324, so
+/// the dense path covers everything the bounded learner does; the
+/// exhaustive "all parent sets" mode (up to 19 parents in Table V) goes
+/// sparse.
+const DENSE_LIMIT: usize = 1 << 22;
+
+impl CountsWorkspace {
+    /// Fresh workspace.
+    pub fn new() -> Self {
+        CountsWorkspace {
+            dense: Vec::new(),
+            touched: Vec::new(),
+            codes: Vec::new(),
+            sparse: HashMap::new(),
+        }
+    }
+
+    /// Count `N_ijk` for `(node, parents)` over `data`.
+    ///
+    /// Calls `f(n_ik, counts_j)` once per *observed* parent configuration,
+    /// where `counts_j` is the dense per-state histogram (`N_ijk` over j)
+    /// and `n_ik = Σ_j N_ijk`.
+    pub fn for_each_config(
+        &mut self,
+        data: &Dataset,
+        node: usize,
+        parents: &[usize],
+        mut f: impl FnMut(u32, &[u32]),
+    ) {
+        let rows = data.rows();
+        let arity = data.arity(node);
+        // joint parent-config count (checked: codes must fit u32)
+        let q_wide: u128 =
+            parents.iter().map(|&m| data.arity(m) as u128).product::<u128>().max(1);
+        assert!(q_wide <= u32::MAX as u128, "parent config space exceeds u32 codes");
+        let q = q_wide as usize;
+        let cells = q.saturating_mul(arity);
+
+        // Encode parent configs per row (mixed radix, first parent fastest).
+        self.codes.clear();
+        self.codes.resize(rows, 0);
+        let mut stride = 1u32;
+        for &m in parents {
+            let col = data.column(m);
+            if stride == 1 {
+                for (code, &v) in self.codes.iter_mut().zip(col) {
+                    *code = v as u32;
+                }
+            } else {
+                for (code, &v) in self.codes.iter_mut().zip(col) {
+                    *code += v as u32 * stride;
+                }
+            }
+            stride *= data.arity(m) as u32;
+        }
+
+        let node_col = data.column(node);
+        if cells <= DENSE_LIMIT {
+            // Dense path: grow the buffer lazily; it is kept zeroed
+            // between calls via the touched list.
+            if self.dense.len() < cells {
+                self.dense.resize(cells, 0);
+            }
+            self.touched.clear();
+            for (r, &code) in self.codes.iter().enumerate() {
+                let base = code as usize * arity;
+                let cell = base + node_col[r] as usize;
+                if self.dense[base..base + arity].iter().all(|&c| c == 0) {
+                    self.touched.push(code);
+                }
+                self.dense[cell] += 1;
+            }
+            // Emit per observed config, then clear. Sorted for
+            // deterministic emission (touched ≤ rows).
+            self.touched.sort_unstable();
+            for &code in &self.touched {
+                let base = code as usize * arity;
+                let counts = &self.dense[base..base + arity];
+                let n_ik: u32 = counts.iter().sum();
+                f(n_ik, counts);
+            }
+            for &code in &self.touched {
+                let base = code as usize * arity;
+                self.dense[base..base + arity].iter_mut().for_each(|c| *c = 0);
+            }
+        } else {
+            // Sparse path: at most `rows` configs occur no matter how
+            // large q is (Table V's exhaustive mode reaches 3^19 configs).
+            self.sparse.clear();
+            for (r, &code) in self.codes.iter().enumerate() {
+                let counts =
+                    self.sparse.entry(code).or_insert_with(|| vec![0u32; arity]);
+                counts[node_col[r] as usize] += 1;
+            }
+            self.touched.clear();
+            self.touched.extend(self.sparse.keys().copied());
+            self.touched.sort_unstable();
+            for &code in &self.touched {
+                let counts = &self.sparse[&code];
+                let n_ik: u32 = counts.iter().sum();
+                f(n_ik, counts);
+            }
+        }
+    }
+}
+
+impl Default for CountsWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dataset() -> Dataset {
+        // X0 ∈ {0,1}, X1 ∈ {0,1,2}, X2 ∈ {0,1}
+        Dataset::from_columns(
+            vec![
+                vec![0, 0, 1, 1, 0, 1],
+                vec![0, 1, 2, 0, 1, 2],
+                vec![0, 0, 0, 1, 1, 1],
+            ],
+            vec![2, 3, 2],
+        )
+    }
+
+    #[test]
+    fn no_parents_single_config() {
+        let d = dataset();
+        let mut ws = CountsWorkspace::new();
+        let mut seen = Vec::new();
+        ws.for_each_config(&d, 1, &[], |n_ik, counts| {
+            seen.push((n_ik, counts.to_vec()));
+        });
+        // X1 column: [0,1,2,0,1,2] → counts [2,2,2]
+        assert_eq!(seen, vec![(6, vec![2, 2, 2])]);
+    }
+
+    #[test]
+    fn one_parent_counts() {
+        let d = dataset();
+        let mut ws = CountsWorkspace::new();
+        let mut seen = Vec::new();
+        ws.for_each_config(&d, 0, &[2], |n_ik, counts| {
+            seen.push((n_ik, counts.to_vec()));
+        });
+        // X2=0 rows {0,1,2}: X0 = [0,0,1] → [2,1]; X2=1 rows {3,4,5}: X0 = [1,0,1] → [1,2]
+        assert_eq!(seen, vec![(3, vec![2, 1]), (3, vec![1, 2])]);
+    }
+
+    #[test]
+    fn two_parents_mixed_radix() {
+        let d = dataset();
+        let mut ws = CountsWorkspace::new();
+        let mut total = 0u32;
+        let mut configs = 0usize;
+        ws.for_each_config(&d, 0, &[1, 2], |n_ik, counts| {
+            assert_eq!(n_ik, counts.iter().sum::<u32>());
+            total += n_ik;
+            configs += 1;
+        });
+        assert_eq!(total, 6); // all rows accounted for
+        assert!(configs <= 6); // at most q=6 observed configs
+    }
+
+    #[test]
+    fn workspace_reuse_is_clean() {
+        // Two different queries back-to-back must not leak counts.
+        let d = dataset();
+        let mut ws = CountsWorkspace::new();
+        let mut first = Vec::new();
+        ws.for_each_config(&d, 0, &[1], |n, c| first.push((n, c.to_vec())));
+        let mut again = Vec::new();
+        ws.for_each_config(&d, 0, &[1], |n, c| again.push((n, c.to_vec())));
+        assert_eq!(first, again);
+        // and a differently-shaped query in between
+        let mut other = Vec::new();
+        ws.for_each_config(&d, 2, &[0, 1], |n, c| other.push((n, c.to_vec())));
+        let mut after = Vec::new();
+        ws.for_each_config(&d, 0, &[1], |n, c| after.push((n, c.to_vec())));
+        assert_eq!(first, after);
+    }
+
+    #[test]
+    fn totals_always_match_rows() {
+        let d = dataset();
+        let mut ws = CountsWorkspace::new();
+        for node in 0..3 {
+            for parents in [vec![], vec![(node + 1) % 3], vec![(node + 1) % 3, (node + 2) % 3]] {
+                let mut total = 0u32;
+                ws.for_each_config(&d, node, &parents, |n, _| total += n);
+                assert_eq!(total as usize, d.rows());
+            }
+        }
+    }
+}

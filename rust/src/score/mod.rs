@@ -1,0 +1,12 @@
+//! Bayesian–Dirichlet scoring: the paper's Equations (3)/(4) plus the
+//! preprocessing stage that materializes every local score once
+//! (Section III-A).
+
+pub mod bde;
+pub mod counts;
+pub mod lgamma;
+pub mod table;
+
+pub use bde::{BdeParams, LocalScorer};
+pub use lgamma::{lgamma, log10_gamma};
+pub use table::ScoreTable;

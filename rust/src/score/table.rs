@@ -1,0 +1,576 @@
+//! Preprocessing (Section III-A): materialize every local score once.
+//!
+//! The paper stores `ls(i, π)` in a hash table keyed by `(v_i, π_i)`. With
+//! the fixed subset layout of `combinatorics::layout`, a *dense* table
+//! `[n × S]` gives the same O(1) lookup with perfect locality and doubles
+//! as the operand uploaded to the accelerator. Entries where `i ∈ π` are
+//! poisoned with a large negative sentinel (they can never be selected —
+//! the consistency test also rejects them — but the sentinel makes misuse
+//! loud).
+//!
+//! `FullScoreTable` is the "all possible parent sets" variant used by the
+//! Table V study: bitmask-indexed, exhaustive over all `2^(n-1)` parent
+//! sets per node, feasible only for small n (the paper hit the same wall —
+//! its Table V stops at 20 nodes, and its 37-node runs never use it).
+
+use super::bde::{BdeParams, LocalScorer};
+use crate::combinatorics::SubsetLayout;
+use crate::data::Dataset;
+
+/// Sentinel for invalid (node ∈ parents) entries. f32-safe, far below any
+/// real log score, and still far from f32 −inf so sums stay finite.
+pub const NEG_SENTINEL: f32 = -1.0e30;
+
+/// Dense `[n × S]` local-score table over a bounded subset layout.
+pub struct ScoreTable {
+    layout: SubsetLayout,
+    n: usize,
+    /// Row-major: `data[i * S + j] = ls(i, subset_j)`.
+    data: Vec<f32>,
+}
+
+impl ScoreTable {
+    /// Compute the full table: every node × every subset with `|π| ≤ s`,
+    /// parallelized across `threads` workers (node-interleaved so the
+    /// expensive high-arity nodes spread out).
+    pub fn build(data: &Dataset, params: BdeParams, s: usize, threads: usize) -> Self {
+        let n = data.cols();
+        let layout = SubsetLayout::new(n, s);
+        let total = layout.total();
+        let mut table = vec![0f32; n * total];
+
+        let threads = threads.max(1).min(n.max(1));
+        // Partition the per-node row slices into interleaved buckets so the
+        // expensive high-arity nodes spread across workers.
+        let mut buckets: Vec<Vec<(usize, &mut [f32])>> = (0..threads).map(|_| Vec::new()).collect();
+        for (i, row) in table.chunks_mut(total).enumerate() {
+            buckets[i % threads].push((i, row));
+        }
+        std::thread::scope(|scope| {
+            let layout = &layout;
+            let mut handles = Vec::new();
+            for mine in buckets {
+                let handle = scope.spawn(move || {
+                    let mut scorer = LocalScorer::new(data, params);
+                    for (i, row) in mine {
+                        fill_node_row(&mut scorer, layout, i, row);
+                    }
+                });
+                handles.push(handle);
+            }
+            for h in handles {
+                h.join().expect("score worker panicked");
+            }
+        });
+        ScoreTable { layout, n, data: table }
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Subset layout (shared with scorers and the runtime upload).
+    pub fn layout(&self) -> &SubsetLayout {
+        &self.layout
+    }
+
+    /// Number of subsets per node row (the paper's S).
+    pub fn subsets(&self) -> usize {
+        self.layout.total()
+    }
+
+    /// Score of `node` with the subset at layout index `idx`.
+    #[inline]
+    pub fn get(&self, node: usize, idx: usize) -> f32 {
+        self.data[node * self.layout.total() + idx]
+    }
+
+    /// Score row of one node.
+    pub fn row(&self, node: usize) -> &[f32] {
+        let s = self.layout.total();
+        &self.data[node * s..(node + 1) * s]
+    }
+
+    /// Whole `[n × S]` buffer (row-major) — uploaded to the device once.
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Convenience: score of `node` with an explicit sorted parent set.
+    pub fn score_of(&self, node: usize, parents: &[usize]) -> f32 {
+        self.get(node, self.layout.index_of(parents))
+    }
+
+    /// Add the pairwise-prior contribution (Eq. 9): for every entry,
+    /// `Σ_{m ∈ π} PPF(i, m)`. `ppf` is row-major `[n × n]`,
+    /// `ppf[i*n + m] = PPF(i, m)` (prior on edge m → i).
+    pub fn add_priors(&mut self, ppf: &[f64]) {
+        let n = self.n;
+        assert_eq!(ppf.len(), n * n, "PPF matrix must be n×n");
+        let total = self.layout.total();
+        // Precompute per-subset sums once per node row: iterate layout
+        // subsets, add Σ PPF(i, m) to each node's entry.
+        let layout = self.layout.clone();
+        for i in 0..n {
+            let row = &mut self.data[i * total..(i + 1) * total];
+            layout.for_each(|j, subset| {
+                if row[j] <= NEG_SENTINEL {
+                    return; // keep poisoned entries poisoned
+                }
+                let mut add = 0f64;
+                for &m in subset {
+                    add += ppf[i * n + m];
+                }
+                row[j] += add as f32;
+            });
+        }
+    }
+
+    /// Bytes held by the table (reporting / Fig. 6-style accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Fill one node's row over the layout.
+///
+/// Hot path of preprocessing (millions of local scores at n=60). Instead
+/// of re-encoding parent configurations from scratch per subset
+/// (O(k·rows) each), subsets are enumerated as a lexicographic DFS where
+/// each tree level maintains the partial mixed-radix codes of its chosen
+/// parents — one O(rows) update per tree edge, one O(rows) counting pass
+/// per leaf (≈2 row passes per subset instead of k+1). Lexicographic DFS
+/// order == layout order, so the row index is a running counter; branches
+/// containing the node itself are skipped wholesale with a binomial jump.
+fn fill_node_row(scorer: &mut LocalScorer, layout: &SubsetLayout, node: usize, row: &mut [f32]) {
+    let mut builder = FastRowBuilder::new(scorer.data(), scorer.params(), layout.s());
+    builder.fill(layout, node, row);
+}
+
+/// DFS-based row filler (see [`fill_node_row`]).
+struct FastRowBuilder<'a> {
+    data: &'a crate::data::Dataset,
+    params: BdeParams,
+    /// `codes[level][row]` — mixed-radix parent config after `level`
+    /// chosen parents (level 0 = all zeros).
+    codes: Vec<Vec<u32>>,
+    /// Radix stride entering each level (product of chosen arities).
+    strides: Vec<u32>,
+    dense: Vec<u32>,
+    touched: Vec<u32>,
+    /// First-touch detection per config without rescanning count cells:
+    /// `stamp[code] == epoch` ⇔ config already seen this leaf.
+    stamp: Vec<u32>,
+    epoch: u32,
+    log10_gamma: f64,
+    /// `lg_int[m] = log10 Γ(m)` for integer m — with the K2 prior every
+    /// lgamma argument in Eq. (4) is an integer bounded by rows + max
+    /// arity, so the whole scoring loop becomes table lookups (the
+    /// Lanczos series was ~70% of preprocessing time before this).
+    lg_int: Vec<f64>,
+}
+
+impl<'a> FastRowBuilder<'a> {
+    fn new(data: &'a crate::data::Dataset, params: BdeParams, s: usize) -> Self {
+        let rows = data.rows();
+        let r_max = (0..data.cols()).map(|i| data.arity(i)).max().unwrap_or(2);
+        let lg_max = rows + r_max + 2;
+        let mut lg_int = Vec::with_capacity(lg_max + 1);
+        lg_int.push(f64::INFINITY); // Γ(0) pole — never queried
+        // lgΓ(m+1) = lgΓ(m) + log10(m): exact recurrence, no series error.
+        lg_int.push(0.0); // Γ(1)
+        for m in 1..lg_max {
+            let last = *lg_int.last().unwrap();
+            lg_int.push(last + (m as f64).log10());
+        }
+        FastRowBuilder {
+            data,
+            params,
+            codes: vec![vec![0u32; rows]; s + 1],
+            strides: vec![1; s + 2],
+            dense: Vec::new(),
+            touched: Vec::with_capacity(rows.min(4096)),
+            stamp: Vec::new(),
+            epoch: 0,
+            log10_gamma: params.gamma.log10(),
+            lg_int,
+        }
+    }
+
+    fn fill(&mut self, layout: &SubsetLayout, node: usize, row: &mut [f32]) {
+        let n = layout.n();
+        let s = layout.s();
+        let bt = layout.binomials().clone();
+        let mut idx = 0usize;
+        for d in 0..=s {
+            let k = s - d;
+            if k > n {
+                continue;
+            }
+            if k == 0 {
+                row[idx] = self.score_leaf(node, 0, 1) as f32;
+                idx += 1;
+                continue;
+            }
+            self.dfs(&bt, n, node, k, 1, 0, row, &mut idx);
+        }
+        debug_assert_eq!(idx, layout.total());
+    }
+
+    /// Choose the parent for `level` (1-based) from `start..`, recursing
+    /// until `level == k`, scoring at leaves. `idx` tracks the layout
+    /// index (lexicographic DFS == layout order within the size block).
+    #[allow(clippy::too_many_arguments)]
+    fn dfs(
+        &mut self,
+        bt: &crate::combinatorics::BinomialTable,
+        n: usize,
+        node: usize,
+        k: usize,
+        level: usize,
+        start: usize,
+        row: &mut [f32],
+        idx: &mut usize,
+    ) {
+        // Candidates at this level: start ..= n - (k - level + 1).
+        for cand in start..=(n - (k - level + 1)) {
+            let completions = bt.c(n - cand - 1, k - level) as usize;
+            if cand == node {
+                // Every subset under this branch contains `node` — poison.
+                row[*idx..*idx + completions].fill(NEG_SENTINEL);
+                *idx += completions;
+                continue;
+            }
+            // Extend codes: codes[level] = codes[level-1] + value * stride.
+            let arity = self.data.arity(cand) as u32;
+            let stride = self.strides[level];
+            {
+                let (prev, cur) = {
+                    let (a, b) = self.codes.split_at_mut(level);
+                    (&a[level - 1], &mut b[0])
+                };
+                let col = self.data.column(cand);
+                if stride == 1 {
+                    for ((c, &p), &v) in cur.iter_mut().zip(prev.iter()).zip(col) {
+                        *c = p + v as u32;
+                    }
+                } else {
+                    for ((c, &p), &v) in cur.iter_mut().zip(prev.iter()).zip(col) {
+                        *c = p + v as u32 * stride;
+                    }
+                }
+            }
+            self.strides[level + 1] = stride * arity;
+
+            if level == k {
+                row[*idx] = self.score_leaf(node, k, level) as f32;
+                *idx += 1;
+            } else {
+                self.dfs(bt, n, node, k, level + 1, cand + 1, row, idx);
+            }
+        }
+    }
+
+    /// DFS over **all** subsets of `{0..n-1} \ {node}` (exhaustive mode,
+    /// up to n-1 parents), writing Eq. (4) into `row[bitmask]`. Shares the
+    /// per-level code buffers exactly like the bounded DFS. Caller
+    /// pre-poisons the row.
+    fn dfs_masks(&mut self, n: usize, node: usize, level: usize, start: usize, mask: usize, row: &mut [f32]) {
+        for cand in start..n {
+            if cand == node {
+                continue;
+            }
+            let arity = self.data.arity(cand) as u32;
+            let stride = self.strides[level];
+            {
+                let (prev, cur) = {
+                    let (a, b) = self.codes.split_at_mut(level);
+                    (&a[level - 1], &mut b[0])
+                };
+                let col = self.data.column(cand);
+                if stride == 1 {
+                    for ((c, &p), &v) in cur.iter_mut().zip(prev.iter()).zip(col) {
+                        *c = p + v as u32;
+                    }
+                } else {
+                    for ((c, &p), &v) in cur.iter_mut().zip(prev.iter()).zip(col) {
+                        *c = p + v as u32 * stride;
+                    }
+                }
+            }
+            self.strides[level + 1] = stride * arity;
+            let new_mask = mask | (1 << cand);
+            // This DFS node *is* the subset — score it, then extend.
+            // score_leaf reads codes[k]/strides[k+1] with k = level.
+            row[new_mask] = self.score_leaf(node, level, level) as f32;
+            self.dfs_masks(n, node, level + 1, cand + 1, new_mask, row);
+        }
+    }
+
+    /// Equation (4) at a leaf: counts from `codes[k]`, K2/BDeu math.
+    fn score_leaf(&mut self, node: usize, k: usize, _level: usize) -> f64 {
+        let r_i = self.data.arity(node);
+        // At a leaf, `dfs` has set strides[k+1] = Π chosen arities = q_i.
+        let q_i = if k == 0 { 1 } else { self.strides[k + 1] as usize };
+        let (alpha_ijk, alpha_ik) = match self.params.prior {
+            crate::score::bde::DirichletPrior::K2 => (1.0f64, r_i as f64),
+            crate::score::bde::DirichletPrior::BDeu { ess } => {
+                let a = ess / (q_i as f64 * r_i as f64);
+                (a, ess / q_i as f64)
+            }
+        };
+        let cells = q_i * r_i;
+        if self.dense.len() < cells {
+            self.dense.resize(cells, 0);
+        }
+        if self.stamp.len() < q_i {
+            self.stamp.resize(q_i, u32::MAX);
+        }
+        self.touched.clear();
+        self.epoch = self.epoch.wrapping_add(1);
+        let epoch = self.epoch;
+
+        let node_col = self.data.column(node);
+        let codes = &self.codes[k];
+        for (row_i, &code) in codes.iter().enumerate() {
+            let c = code as usize;
+            if self.stamp[c] != epoch {
+                self.stamp[c] = epoch;
+                self.touched.push(code);
+            }
+            self.dense[c * r_i + node_col[row_i] as usize] += 1;
+        }
+
+        let mut acc = k as f64 * self.log10_gamma;
+        let k2 = matches!(self.params.prior, crate::score::bde::DirichletPrior::K2);
+        if k2 {
+            // Integer fast path: α_ijk = 1, α_ik = r_i.
+            let lg_r = self.lg_int[r_i];
+            for &code in &self.touched {
+                let base = code as usize * r_i;
+                let counts = &self.dense[base..base + r_i];
+                let n_ik: u32 = counts.iter().sum();
+                acc += lg_r - self.lg_int[r_i + n_ik as usize];
+                for &c in counts {
+                    // log10 Γ(c+1) − log10 Γ(1); Γ(1) term is 0.
+                    acc += self.lg_int[c as usize + 1];
+                }
+            }
+        } else {
+            let lg_alpha_ik = crate::score::lgamma::log10_gamma(alpha_ik);
+            let lg_alpha_ijk = crate::score::lgamma::log10_gamma(alpha_ijk);
+            for &code in &self.touched {
+                let base = code as usize * r_i;
+                let counts = &self.dense[base..base + r_i];
+                let n_ik: u32 = counts.iter().sum();
+                acc += lg_alpha_ik - crate::score::lgamma::log10_gamma(alpha_ik + n_ik as f64);
+                for &c in counts {
+                    if c > 0 {
+                        acc += crate::score::lgamma::log10_gamma(c as f64 + alpha_ijk)
+                            - lg_alpha_ijk;
+                    }
+                }
+            }
+        }
+        for &code in &self.touched {
+            let base = code as usize * r_i;
+            self.dense[base..base + r_i].iter_mut().for_each(|c| *c = 0);
+        }
+        acc
+    }
+}
+
+
+/// Exhaustive bitmask-indexed table: `ls(i, π)` for **every** subset π of
+/// the other nodes (the paper's "all possible parent sets" configuration).
+pub struct FullScoreTable {
+    n: usize,
+    /// `data[i << n | mask]`, mask over all n bits; entries with bit i set
+    /// are poisoned.
+    data: Vec<f32>,
+}
+
+impl FullScoreTable {
+    /// Hard cap — 2^n·n f32 grows fast; 16 nodes = 4 MB, 20 = 80 MB
+    /// (20 is the paper's own Table V ceiling — it skipped the 37-node
+    /// network for exactly this blowup).
+    pub const MAX_N: usize = 20;
+
+    /// Build the exhaustive table (single-threaded nodes × parallel level
+    /// is unnecessary at these sizes; still threaded per node for parity).
+    pub fn build(data: &Dataset, params: BdeParams, threads: usize) -> Self {
+        let n = data.cols();
+        assert!(n <= Self::MAX_N, "FullScoreTable limited to {} nodes", Self::MAX_N);
+        let size = 1usize << n;
+        let mut table = vec![0f32; n * size];
+        let threads = threads.max(1).min(n.max(1));
+        let mut buckets: Vec<Vec<(usize, &mut [f32])>> = (0..threads).map(|_| Vec::new()).collect();
+        for (i, row) in table.chunks_mut(size).enumerate() {
+            buckets[i % threads].push((i, row));
+        }
+        // Fast path only when the largest contingency table stays dense:
+        // q·r = Π arities (≈ full joint). Binary 20-node: 2 MB — fine;
+        // 3-state 20-node: 3^20 — falls back to the sparse LocalScorer.
+        let joint: u128 = (0..n).map(|i| data.arity(i) as u128).product();
+        let dense_ok = joint <= (1u128 << 24);
+        std::thread::scope(|scope| {
+            for mine in buckets {
+                scope.spawn(move || {
+                    if dense_ok {
+                        let mut builder = FastRowBuilder::new(data, params, n.saturating_sub(1));
+                        for (i, row) in mine {
+                            row.fill(NEG_SENTINEL);
+                            row[0] = builder.score_leaf(i, 0, 0) as f32;
+                            builder.dfs_masks(n, i, 1, 0, 0, row);
+                        }
+                    } else {
+                        let mut scorer = LocalScorer::new(data, params);
+                        let mut parents = Vec::with_capacity(n);
+                        for (i, row) in mine {
+                            for mask in 0usize..size {
+                                if mask & (1 << i) != 0 {
+                                    row[mask] = NEG_SENTINEL;
+                                    continue;
+                                }
+                                parents.clear();
+                                let mut m = mask;
+                                while m != 0 {
+                                    let b = m.trailing_zeros() as usize;
+                                    parents.push(b);
+                                    m &= m - 1;
+                                }
+                                row[mask] = scorer.score(i, &parents) as f32;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        FullScoreTable { n, data: table }
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Score of `node` with parent-set bitmask `mask`.
+    #[inline]
+    pub fn get(&self, node: usize, mask: usize) -> f32 {
+        self.data[(node << self.n) | mask]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::sampling::forward_sample;
+    use crate::bn::Network;
+    use crate::util::Pcg32;
+
+    fn small_data(n: usize, rows: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg32::new(seed);
+        let dag = crate::bn::random::random_dag(n, 2, n, &mut rng);
+        let net = Network::with_random_cpts(dag, vec![2; n], &mut rng);
+        forward_sample(&net, rows, &mut rng)
+    }
+
+    #[test]
+    fn table_matches_direct_scoring() {
+        let data = small_data(6, 150, 41);
+        let params = BdeParams::default();
+        let table = ScoreTable::build(&data, params, 3, 2);
+        let mut scorer = LocalScorer::new(&data, params);
+        let layout = table.layout().clone();
+        for i in 0..6usize {
+            layout.for_each(|idx, subset| {
+                let got = table.get(i, idx);
+                if subset.contains(&i) {
+                    assert_eq!(got, NEG_SENTINEL);
+                } else {
+                    let want = scorer.score(i, subset) as f32;
+                    assert!((got - want).abs() < 1e-5, "i={i} subset={subset:?}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn threading_is_deterministic() {
+        let data = small_data(7, 100, 42);
+        let t1 = ScoreTable::build(&data, BdeParams::default(), 3, 1);
+        let t4 = ScoreTable::build(&data, BdeParams::default(), 3, 4);
+        assert_eq!(t1.raw(), t4.raw());
+    }
+
+    #[test]
+    fn score_of_uses_layout_indexing() {
+        let data = small_data(5, 80, 43);
+        let table = ScoreTable::build(&data, BdeParams::default(), 2, 2);
+        let mut scorer = LocalScorer::new(&data, BdeParams::default());
+        assert!((table.score_of(0, &[1, 3]) - scorer.score(0, &[1, 3]) as f32).abs() < 1e-5);
+        assert!((table.score_of(4, &[]) - scorer.score(4, &[]) as f32).abs() < 1e-5);
+    }
+
+    #[test]
+    fn priors_shift_entries_by_subset_sum() {
+        let data = small_data(4, 60, 44);
+        let mut table = ScoreTable::build(&data, BdeParams::default(), 2, 1);
+        let before = table.raw().to_vec();
+        let n = 4usize;
+        let mut ppf = vec![0f64; n * n];
+        ppf[1 * n + 0] = 7.5; // PPF(1, 0): edge 0→1 favored
+        table.add_priors(&ppf);
+        let layout = table.layout().clone();
+        for i in 0..n {
+            layout.for_each(|j, subset| {
+                let delta = table.get(i, j) - before[i * layout.total() + j];
+                if before[i * layout.total() + j] <= NEG_SENTINEL {
+                    assert_eq!(delta, 0.0);
+                } else if i == 1 && subset.contains(&0) {
+                    assert!((delta - 7.5).abs() < 1e-5, "i={i} {subset:?}");
+                } else {
+                    assert_eq!(delta, 0.0, "i={i} {subset:?}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn full_table_agrees_with_bounded_on_small_sets() {
+        let data = small_data(5, 120, 45);
+        let params = BdeParams::default();
+        let bounded = ScoreTable::build(&data, params, 2, 2);
+        let full = FullScoreTable::build(&data, params, 2);
+        let layout = bounded.layout().clone();
+        for i in 0..5usize {
+            layout.for_each(|idx, subset| {
+                let mask: usize = subset.iter().map(|&m| 1usize << m).sum();
+                let a = bounded.get(i, idx);
+                let b = full.get(i, mask);
+                if subset.contains(&i) {
+                    assert_eq!(a, NEG_SENTINEL);
+                    assert_eq!(b, NEG_SENTINEL);
+                } else {
+                    assert!((a - b).abs() < 1e-6, "i={i} subset={subset:?}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn full_table_poisons_self_parent_masks() {
+        let data = small_data(4, 50, 46);
+        let full = FullScoreTable::build(&data, BdeParams::default(), 1);
+        for i in 0..4usize {
+            for mask in 0..(1usize << 4) {
+                if mask & (1 << i) != 0 {
+                    assert_eq!(full.get(i, mask), NEG_SENTINEL);
+                } else {
+                    assert!(full.get(i, mask) > NEG_SENTINEL);
+                }
+            }
+        }
+    }
+}

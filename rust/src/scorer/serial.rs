@@ -1,0 +1,249 @@
+//! The paper's GPP (serial CPU) scoring engine: for each node, enumerate
+//! only the parent sets drawn from its predecessors in the order
+//! (Section III-B's `Σ_j C(p, j)` insight — never the full 2^(n-1)) and
+//! fetch each candidate's local score from the preprocessed table.
+//!
+//! Layout-rank bookkeeping: candidates are combinations of the *sorted*
+//! predecessor list, so each candidate is already a sorted node set; its
+//! global index is `block_offset(k) + rank`, with the rank computed in
+//! O(k) from a prefix-sum table over completion counts (see
+//! `RankPrefix`).
+
+use super::{BestGraph, OrderScorer};
+use crate::combinatorics::combinadic::next_combination;
+use crate::mcmc::Order;
+use crate::score::ScoreTable;
+
+/// Prefix sums of combinadic completion counts:
+/// `cum[j][v] = Σ_{w < v} C(n-1-w, j)` — lets `rank_combination` run in
+/// O(k) per candidate instead of O(n).
+struct RankPrefix {
+    /// `cum[j]` has length n+1.
+    cum: Vec<Vec<u64>>,
+}
+
+impl RankPrefix {
+    fn new(n: usize, s: usize) -> Self {
+        let bt = crate::combinatorics::BinomialTable::new(n.max(1));
+        let mut cum = Vec::with_capacity(s);
+        for j in 0..s.max(1) {
+            let mut row = Vec::with_capacity(n + 1);
+            let mut acc = 0u64;
+            row.push(0);
+            for w in 0..n {
+                acc += bt.c(n - 1 - w, j);
+                row.push(acc);
+            }
+            cum.push(row);
+        }
+        RankPrefix { cum }
+    }
+
+    /// Lexicographic rank of sorted k-combination `comb` of `{0..n-1}`.
+    #[inline]
+    fn rank(&self, comb: &[usize]) -> u64 {
+        let k = comb.len();
+        let mut rank = 0u64;
+        let mut prev: usize = 0; // a_{i-1} + 1
+        for (i, &a) in comb.iter().enumerate() {
+            let row = &self.cum[k - 1 - i];
+            rank += row[a] - row[prev];
+            prev = a + 1;
+        }
+        rank
+    }
+}
+
+/// Serial table-lookup order scorer — the GPP reference implementation.
+pub struct SerialScorer<'a> {
+    table: &'a ScoreTable,
+    ranks: RankPrefix,
+    /// Per-size block offsets in the layout.
+    offsets: Vec<u64>,
+    /// Scratch: sorted predecessors.
+    preds: Vec<usize>,
+    /// Scratch: current combination (indices into `preds`).
+    comb: Vec<usize>,
+    /// Scratch: current candidate node ids.
+    cand: Vec<usize>,
+}
+
+impl<'a> SerialScorer<'a> {
+    /// New engine over a preprocessed table.
+    pub fn new(table: &'a ScoreTable) -> Self {
+        let layout = table.layout();
+        let (n, s) = (layout.n(), layout.s());
+        let bt = layout.binomials();
+        // offsets[k] = first index of the size-k block (layout stores
+        // blocks in decreasing size: s first).
+        let mut offsets = vec![0u64; s + 1];
+        let mut acc = 0u64;
+        for d in 0..=s {
+            let k = s - d;
+            offsets[k] = acc;
+            acc += bt.c(n, k);
+        }
+        SerialScorer {
+            table,
+            ranks: RankPrefix::new(n, s),
+            offsets,
+            preds: Vec::with_capacity(n),
+            comb: Vec::with_capacity(s),
+            cand: Vec::with_capacity(s),
+        }
+    }
+
+    /// The score table in use.
+    pub fn table(&self) -> &'a ScoreTable {
+        self.table
+    }
+}
+
+impl OrderScorer for SerialScorer<'_> {
+    fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
+        let layout = self.table.layout();
+        let n = layout.n();
+        let s = layout.s();
+        debug_assert_eq!(order.n(), n);
+        debug_assert_eq!(out.n(), n);
+
+        let mut total = 0f64;
+        for p in 0..n {
+            let node = order.seq()[p];
+            // Sorted candidate parents = the p predecessors.
+            self.preds.clear();
+            self.preds.extend_from_slice(&order.seq()[..p]);
+            self.preds.sort_unstable();
+
+            // Empty set is always consistent — the starting best.
+            let empty_idx = self.offsets[0] as usize;
+            let mut best = self.table.get(node, empty_idx);
+            let mut best_set_len = 0usize;
+            let mut best_set = [0usize; 8];
+
+            let kmax = s.min(p);
+            for k in 1..=kmax {
+                // Enumerate k-combinations of preds (as indices), mapping
+                // to node ids (already sorted because preds is sorted).
+                self.comb.clear();
+                self.comb.extend(0..k);
+                loop {
+                    self.cand.clear();
+                    for &ci in &self.comb {
+                        self.cand.push(self.preds[ci]);
+                    }
+                    let idx = self.offsets[k] + self.ranks.rank(&self.cand);
+                    let ls = self.table.get(node, idx as usize);
+                    if ls > best {
+                        best = ls;
+                        best_set_len = k;
+                        best_set[..k].copy_from_slice(&self.cand);
+                    }
+                    if !next_combination(p, &mut self.comb) {
+                        break;
+                    }
+                }
+            }
+
+            out.node_scores[node] = best as f64;
+            out.parents[node].clear();
+            out.parents[node].extend_from_slice(&best_set[..best_set_len]);
+            total += best as f64;
+        }
+        total
+    }
+
+    fn name(&self) -> &'static str {
+        "serial-gpp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scorer::testutil::fixture;
+    use crate::util::Pcg32;
+
+    /// Oracle: brute-force max over layout subsets filtered by position.
+    fn oracle_score(table: &ScoreTable, order: &Order) -> (f64, Vec<Vec<usize>>) {
+        let layout = table.layout().clone();
+        let n = layout.n();
+        let pos = order.pos();
+        let mut total = 0f64;
+        let mut parents = vec![Vec::new(); n];
+        for i in 0..n {
+            let mut best = f64::NEG_INFINITY;
+            layout.for_each(|j, subset| {
+                if subset.iter().all(|&m| pos[m] < pos[i]) {
+                    let ls = table.get(i, j) as f64;
+                    if ls > best {
+                        best = ls;
+                        parents[i] = subset.to_vec();
+                    }
+                }
+            });
+            total += best;
+        }
+        (total, parents)
+    }
+
+    #[test]
+    fn matches_oracle_on_random_orders() {
+        let (_, table) = fixture(8, 3, 200, 71);
+        let mut scorer = SerialScorer::new(&table);
+        let mut rng = Pcg32::new(72);
+        let mut out = BestGraph::new(8);
+        for _ in 0..20 {
+            let order = Order::random(8, &mut rng);
+            let total = scorer.score_order(&order, &mut out);
+            let (want_total, want_parents) = oracle_score(&table, &order);
+            assert!((total - want_total).abs() < 1e-4, "{total} vs {want_total}");
+            assert_eq!(out.parents, want_parents);
+            assert!((out.total() - total).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn best_graph_is_consistent_with_order() {
+        let (_, table) = fixture(10, 4, 150, 73);
+        let mut scorer = SerialScorer::new(&table);
+        let mut rng = Pcg32::new(74);
+        let mut out = BestGraph::new(10);
+        for _ in 0..10 {
+            let order = Order::random(10, &mut rng);
+            scorer.score_order(&order, &mut out);
+            let dag = out.to_dag();
+            assert!(dag.consistent_with_order(order.seq()));
+            assert!(dag.max_in_degree() <= 4);
+        }
+    }
+
+    #[test]
+    fn first_node_gets_empty_parents() {
+        let (_, table) = fixture(6, 2, 100, 75);
+        let mut scorer = SerialScorer::new(&table);
+        let mut out = BestGraph::new(6);
+        let order = Order::identity(6);
+        scorer.score_order(&order, &mut out);
+        assert!(out.parents[0].is_empty());
+    }
+
+    #[test]
+    fn score_improves_or_ties_with_more_predecessors() {
+        // Each node's local max can only improve when its predecessor set
+        // grows (supersets of candidate sets available).
+        let (_, table) = fixture(7, 3, 120, 76);
+        let mut scorer = SerialScorer::new(&table);
+        let mut out = BestGraph::new(7);
+        // node 3 last vs node 3 first
+        let mut order_first = vec![3usize];
+        order_first.extend((0..7).filter(|&v| v != 3));
+        let mut order_last: Vec<usize> = (0..7).filter(|&v| v != 3).collect();
+        order_last.push(3);
+        scorer.score_order(&Order::from_seq(order_first), &mut out);
+        let s_first = out.node_scores[3];
+        scorer.score_order(&Order::from_seq(order_last), &mut out);
+        let s_last = out.node_scores[3];
+        assert!(s_last >= s_first - 1e-9);
+    }
+}

@@ -1,0 +1,141 @@
+//! The sum-based order score of Linderman et al. [5] — the baseline the
+//! paper's Section III-B argues against.
+//!
+//! Here an order's score is `Σ_i log₁₀ Σ_{π consistent} 10^{ls(i,π)}`
+//! (every consistent graph contributes, not just the best one), computed
+//! with a numerically-stable log-sum-exp. Finding an actual *graph* then
+//! requires the postprocessing step the paper eliminates; for comparison
+//! purposes this engine also tracks the per-node argmax so its best graph
+//! can be evaluated with the same harness.
+
+use super::{BestGraph, OrderScorer};
+use crate::combinatorics::combinadic::next_combination;
+use crate::mcmc::Order;
+use crate::score::ScoreTable;
+
+/// Sum-over-graphs order scorer (log-sum-exp over consistent parent sets).
+pub struct SumScorer<'a> {
+    table: &'a ScoreTable,
+    offsets: Vec<u64>,
+    ranks: super::serial::SerialScorer<'a>, // reuse its rank machinery via delegation
+    preds: Vec<usize>,
+    comb: Vec<usize>,
+    cand: Vec<usize>,
+}
+
+impl<'a> SumScorer<'a> {
+    /// New engine over a preprocessed table.
+    pub fn new(table: &'a ScoreTable) -> Self {
+        let layout = table.layout();
+        let (n, s) = (layout.n(), layout.s());
+        let bt = layout.binomials();
+        let mut offsets = vec![0u64; s + 1];
+        let mut acc = 0u64;
+        for d in 0..=s {
+            let k = s - d;
+            offsets[k] = acc;
+            acc += bt.c(n, k);
+        }
+        SumScorer {
+            table,
+            offsets,
+            ranks: super::serial::SerialScorer::new(table),
+            preds: Vec::with_capacity(n),
+            comb: Vec::with_capacity(s),
+            cand: Vec::with_capacity(s),
+        }
+    }
+}
+
+impl OrderScorer for SumScorer<'_> {
+    fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
+        // The argmax graph: delegate to the serial max engine (this is the
+        // "postprocessing" the sum-based method needs anyway).
+        self.ranks.score_order(order, out);
+
+        // The sum-based order score, log-sum-exp per node in log10 space.
+        let layout = self.table.layout();
+        let n = layout.n();
+        let s = layout.s();
+        let ln10 = std::f64::consts::LN_10;
+        let mut total = 0f64;
+        for p in 0..n {
+            let node = order.seq()[p];
+            self.preds.clear();
+            self.preds.extend_from_slice(&order.seq()[..p]);
+            self.preds.sort_unstable();
+
+            // max is known from the serial pass: out.node_scores[node]
+            let max_ls = out.node_scores[node];
+            // Σ 10^(ls - max) over consistent sets
+            let mut acc = 0f64;
+            let empty_idx = self.offsets[0] as usize;
+            acc += 10f64.powf(self.table.get(node, empty_idx) as f64 - max_ls);
+            let kmax = s.min(p);
+            for k in 1..=kmax {
+                self.comb.clear();
+                self.comb.extend(0..k);
+                loop {
+                    self.cand.clear();
+                    for &ci in &self.comb {
+                        self.cand.push(self.preds[ci]);
+                    }
+                    let idx = layout.index_of(&self.cand);
+                    let ls = self.table.get(node, idx) as f64;
+                    acc += ((ls - max_ls) * ln10).exp();
+                    if !next_combination(p, &mut self.comb) {
+                        break;
+                    }
+                }
+            }
+            total += max_ls + acc.log10();
+        }
+        total
+    }
+
+    fn name(&self) -> &'static str {
+        "sum-linderman"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scorer::testutil::fixture;
+    use crate::scorer::SerialScorer;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn sum_score_upper_bounds_max_score() {
+        // log Σ ≥ log max, always.
+        let (_, table) = fixture(8, 3, 120, 101);
+        let mut sum = SumScorer::new(&table);
+        let mut max = SerialScorer::new(&table);
+        let mut rng = Pcg32::new(102);
+        let mut a = BestGraph::new(8);
+        let mut b = BestGraph::new(8);
+        for _ in 0..10 {
+            let order = Order::random(8, &mut rng);
+            let ts = sum.score_order(&order, &mut a);
+            let tm = max.score_order(&order, &mut b);
+            assert!(ts >= tm - 1e-6, "sum {ts} < max {tm}");
+            // and the sum can't exceed max + log10(#sets) per node
+            let layout_total = (table.layout().total() as f64).log10() * 8.0;
+            assert!(ts <= tm + layout_total);
+        }
+    }
+
+    #[test]
+    fn argmax_graph_matches_serial() {
+        let (_, table) = fixture(7, 2, 100, 103);
+        let mut sum = SumScorer::new(&table);
+        let mut max = SerialScorer::new(&table);
+        let mut rng = Pcg32::new(104);
+        let mut a = BestGraph::new(7);
+        let mut b = BestGraph::new(7);
+        let order = Order::random(7, &mut rng);
+        sum.score_order(&order, &mut a);
+        max.score_order(&order, &mut b);
+        assert_eq!(a.parents, b.parents);
+    }
+}

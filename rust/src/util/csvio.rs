@@ -1,0 +1,132 @@
+//! Minimal CSV and markdown-table writers for experiment outputs.
+//!
+//! All experiment harnesses (benches, examples) emit both a CSV file
+//! (machine-readable, plotted offline) and a markdown table (pasted into
+//! EXPERIMENTS.md). Values never contain commas/newlines in our usage, so
+//! no quoting machinery is needed — we assert that instead of silently
+//! corrupting output.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// An in-memory table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column names.
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; must match the header width.
+    pub fn push_row(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "row width != header width");
+        for cell in &row {
+            assert!(
+                !cell.contains(',') && !cell.contains('\n'),
+                "cell needs quoting, unsupported: {cell:?}"
+            );
+        }
+        self.rows.push(row);
+    }
+
+    /// Serialize as CSV text.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+
+    /// Serialize as a GitHub-flavored markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "| {} |", self.header.join(" | "));
+        let _ = writeln!(out, "|{}|", vec!["---"; self.header.len()].join("|"));
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        out
+    }
+
+    /// Write the CSV form to `path`, creating parent dirs.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_csv())
+    }
+}
+
+/// Format a float with `prec` significant-looking decimals, trimming noise.
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+/// Format seconds adaptively (µs/ms/s) for human-facing logs.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push_row(vec!["1".into(), "2".into()]);
+        t.push_row(vec!["3".into(), "4".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\n1,2\n3,4\n");
+    }
+
+    #[test]
+    fn markdown_has_separator() {
+        let mut t = Table::new(&["x"]);
+        t.push_row(vec!["7".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("|---|"));
+        assert!(md.contains("| 7 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push_row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(5e-6).ends_with("us"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn write_csv_creates_dirs() {
+        let dir = std::env::temp_dir().join("bnlearn_csv_test");
+        let _ = fs::remove_dir_all(&dir);
+        let mut t = Table::new(&["a"]);
+        t.push_row(vec!["1".into()]);
+        let p = dir.join("sub/out.csv");
+        t.write_csv(&p).unwrap();
+        assert!(p.exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,87 @@
+//! Tiny leveled logger (stderr). The offline crate set has no `log`/
+//! `env_logger`; experiments want timestamped progress lines, nothing more.
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log verbosity levels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global log level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current global log level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Emit one log line if `lvl` is enabled.
+pub fn log(lvl: Level, msg: &str) {
+    if lvl > level() {
+        return;
+    }
+    let secs = SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0);
+    let tag = match lvl {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{secs:.3} {tag}] {msg}");
+}
+
+/// Info-level log with format args.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, &format!($($arg)*)) };
+}
+
+/// Debug-level log with format args.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, &format!($($arg)*)) };
+}
+
+/// Warn-level log with format args.
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_roundtrip() {
+        let orig = level();
+        set_level(Level::Debug);
+        assert_eq!(level(), Level::Debug);
+        set_level(Level::Error);
+        assert_eq!(level(), Level::Error);
+        set_level(orig);
+    }
+
+    #[test]
+    fn log_does_not_panic() {
+        log(Level::Info, "test line");
+        log(Level::Debug, "debug line");
+    }
+}

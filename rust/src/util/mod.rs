@@ -1,0 +1,11 @@
+//! Small self-contained utilities (the offline crate set has no `rand`,
+//! `serde`, `csv`, or `log`, so we carry minimal equivalents).
+
+pub mod csvio;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Pcg32;
+pub use timer::Timer;

@@ -1,0 +1,251 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline vendored crate set has no `rand`, so we carry a small,
+//! well-tested generator of our own: [`Pcg32`] (PCG-XSH-RR 64/32,
+//! O'Neill 2014) seeded through SplitMix64. It is fast, has 2^64 period,
+//! and passes the statistical batteries we care about for MCMC proposals
+//! and synthetic-data generation.
+
+/// PCG-XSH-RR 64/32 generator.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+/// SplitMix64 step — used to expand a single u64 seed into stream state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Pcg32 {
+    /// Create a generator from a seed; distinct seeds give independent
+    /// streams (the stream id is derived from the seed as well).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let initstate = splitmix64(&mut sm);
+        let initseq = splitmix64(&mut sm);
+        let mut rng = Pcg32 { state: 0, inc: (initseq << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(initstate);
+        rng.next_u32();
+        rng
+    }
+
+    /// Next raw 32 random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` without modulo bias (Lemire's method).
+    #[inline]
+    pub fn gen_range(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        let bound = bound as u64;
+        // 64-bit Lemire: multiply-shift with rejection.
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)` (53 random bits).
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `(0, 1]` — safe as `ln(u)` argument for MH tests.
+    #[inline]
+    pub fn gen_f64_open(&mut self) -> f64 {
+        1.0 - self.gen_f64()
+    }
+
+    /// `true` with probability `p`.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn sample_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0, "sample_weighted needs positive mass");
+        let mut u = self.gen_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Choose `k` distinct values from `0..n` (Floyd's algorithm).
+    pub fn choose_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.gen_range(j + 1);
+            if chosen.contains(&t) {
+                chosen.push(j);
+            } else {
+                chosen.push(t);
+            }
+        }
+        chosen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut r = Pcg32::new(7);
+        for bound in [1usize, 2, 3, 10, 1000] {
+            for _ in 0..200 {
+                assert!(r.gen_range(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn gen_range_covers_all_values() {
+        let mut r = Pcg32::new(11);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.gen_range(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg32::new(3);
+        for _ in 0..1000 {
+            let u = r.gen_f64();
+            assert!((0.0..1.0).contains(&u));
+            let v = r.gen_f64_open();
+            assert!(v > 0.0 && v <= 1.0);
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Pcg32::new(5);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.gen_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Pcg32::new(9);
+        for n in [1usize, 2, 5, 30] {
+            let mut p = r.permutation(n);
+            p.sort_unstable();
+            assert_eq!(p, (0..n).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn choose_distinct_is_distinct() {
+        let mut r = Pcg32::new(13);
+        for _ in 0..100 {
+            let mut c = r.choose_distinct(20, 5);
+            c.sort_unstable();
+            c.dedup();
+            assert_eq!(c.len(), 5);
+            assert!(c.iter().all(|&x| x < 20));
+        }
+    }
+
+    #[test]
+    fn weighted_sampling_tracks_weights() {
+        let mut r = Pcg32::new(17);
+        let w = [1.0, 3.0];
+        let n = 20_000;
+        let ones = (0..n).filter(|_| r.sample_weighted(&w) == 1).count();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn shuffle_uniformity_smoke() {
+        // Each position roughly uniform over values for n=4.
+        let mut r = Pcg32::new(23);
+        let mut counts = [[0usize; 4]; 4];
+        for _ in 0..8000 {
+            let p = r.permutation(4);
+            for (pos, &v) in p.iter().enumerate() {
+                counts[pos][v] += 1;
+            }
+        }
+        for row in counts {
+            for c in row {
+                let f = c as f64 / 8000.0;
+                assert!((f - 0.25).abs() < 0.03, "f={f}");
+            }
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Wall-clock timing helpers used by the benchmark harness and the
+//! coordinator's metrics.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since start.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed as a `Duration`.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Restart and return the lap time in seconds.
+    pub fn lap_secs(&mut self) -> f64 {
+        let t = self.start.elapsed().as_secs_f64();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// Run `f` repeatedly until `min_time` seconds have elapsed (at least
+/// `min_iters` runs), returning the mean seconds per run. This is the
+/// measurement core of the hand-rolled bench harness (no criterion
+/// offline).
+pub fn bench_secs_per_iter(min_time: f64, min_iters: usize, mut f: impl FnMut()) -> f64 {
+    // Warmup once so lazy init (allocations, compile caches) is excluded.
+    f();
+    let t = Timer::start();
+    let mut iters = 0usize;
+    loop {
+        f();
+        iters += 1;
+        let el = t.elapsed_secs();
+        if iters >= min_iters && el >= min_time {
+            return el / iters as f64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_secs();
+        let b = t.elapsed_secs();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_runs_at_least_min_iters() {
+        let mut count = 0usize;
+        let per = bench_secs_per_iter(0.0, 5, || count += 1);
+        assert!(count >= 5 + 1); // +1 warmup
+        assert!(per >= 0.0);
+    }
+}

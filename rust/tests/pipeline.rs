@@ -1,0 +1,189 @@
+//! Cross-module integration + property tests that do not need artifacts:
+//! engine agreement sweeps, chain invariants, prior monotonicity, and
+//! failure injection.
+
+use bnlearn::bn::sampling::forward_sample;
+use bnlearn::bn::{Dag, Network};
+use bnlearn::coordinator::{run_learning, EngineKind, RunConfig};
+use bnlearn::data::Dataset;
+use bnlearn::eval::roc::roc_point;
+use bnlearn::mcmc::{run_chains_parallel, McmcChain, Order};
+use bnlearn::priors::InterfaceMatrix;
+use bnlearn::score::{BdeParams, ScoreTable};
+use bnlearn::scorer::{BestGraph, BitVecScorer, OrderScorer, SerialScorer, SumScorer};
+use bnlearn::util::Pcg32;
+
+fn workload(n: usize, rows: usize, seed: u64) -> (Dataset, ScoreTable, Dag) {
+    let mut rng = Pcg32::new(seed);
+    let dag = bnlearn::bn::random::random_dag(n, 3, n + 2, &mut rng);
+    let net = Network::with_random_cpts(dag.clone(), vec![3; n], &mut rng);
+    let data = forward_sample(&net, rows, &mut rng);
+    let table = ScoreTable::build(&data, BdeParams::default(), 3, 2);
+    (data, table, dag)
+}
+
+#[test]
+fn all_table_engines_agree_on_many_random_workloads() {
+    // Property sweep: serial, bitvec-bounded, and the sum engine's argmax
+    // graph must agree exactly on every (workload, order) pair.
+    for trial in 0..8u64 {
+        let n = 5 + (trial as usize % 4);
+        let (_, table, _) = workload(n, 120, 3000 + trial);
+        let mut serial = SerialScorer::new(&table);
+        let mut bitvec = BitVecScorer::bounded(&table);
+        let mut sum = SumScorer::new(&table);
+        let mut rng = Pcg32::new(4000 + trial);
+        let mut a = BestGraph::new(n);
+        let mut b = BestGraph::new(n);
+        let mut c = BestGraph::new(n);
+        for _ in 0..5 {
+            let order = Order::random(n, &mut rng);
+            let ta = serial.score_order(&order, &mut a);
+            let tb = bitvec.score_order(&order, &mut b);
+            sum.score_order(&order, &mut c);
+            assert!((ta - tb).abs() < 1e-9, "trial {trial}");
+            assert_eq!(a.parents, b.parents, "trial {trial}");
+            assert_eq!(a.parents, c.parents, "trial {trial} (sum argmax)");
+        }
+    }
+}
+
+#[test]
+fn mh_chain_score_is_always_achievable() {
+    // Invariant: the chain's current score always equals the serial
+    // engine's score of its current order.
+    let (_, table, _) = workload(7, 150, 11);
+    let mut scorer = SerialScorer::new(&table);
+    let mut chain = McmcChain::new(&mut scorer, 7, 2, 12);
+    for _ in 0..100 {
+        chain.step();
+        let order = chain.order().clone();
+        let score = chain.current_score();
+        let mut check = SerialScorer::new(&table);
+        let mut out = BestGraph::new(7);
+        let direct = check.score_order(&order, &mut out);
+        assert!((score - direct).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn best_graph_never_degrades_over_iterations() {
+    let (_, table, _) = workload(8, 200, 21);
+    let mut scorer = SerialScorer::new(&table);
+    let mut chain = McmcChain::new(&mut scorer, 8, 1, 22);
+    let mut last_best = f64::NEG_INFINITY;
+    for _ in 0..20 {
+        chain.run(25);
+        let best = chain.tracker.best().unwrap().0;
+        assert!(best >= last_best - 1e-12);
+        last_best = best;
+    }
+}
+
+#[test]
+fn stronger_priors_push_roc_toward_truth() {
+    // Oracle-prior property at increasing strength: ROC TPR is
+    // non-decreasing in prior strength (with high probability; fixed
+    // seeds make it deterministic here).
+    let cfg = RunConfig {
+        network: "random:12:14".into(),
+        rows: 250,
+        iters: 300,
+        seed: 31,
+        ..RunConfig::default()
+    };
+    let workload = bnlearn::coordinator::Workload::build(&cfg.network, cfg.rows, 0.0, cfg.seed).unwrap();
+    let mut tprs = Vec::new();
+    for strength in [0.5, 0.7, 0.95] {
+        let mut m = InterfaceMatrix::unbiased(12);
+        if strength > 0.5 {
+            for &(from, to) in workload.truth_dag().edges().iter() {
+                m.set(to, from, strength);
+            }
+        }
+        let report =
+            bnlearn::coordinator::run_learning_on(&cfg, &workload, Some(&m)).unwrap();
+        tprs.push(report.roc.tpr);
+    }
+    assert!(tprs[2] >= tprs[0] - 1e-9, "tprs={tprs:?}");
+}
+
+#[test]
+fn noise_degrades_recovery() {
+    // Fig. 11 property: heavy noise must not improve structure recovery.
+    let mk = |noise: f64| {
+        let cfg = RunConfig {
+            network: "random:10:12:2".into(),
+            rows: 600,
+            iters: 400,
+            noise,
+            seed: 41,
+            ..RunConfig::default()
+        };
+        run_learning(&cfg, None).unwrap()
+    };
+    let clean = mk(0.0);
+    let noisy = mk(0.35);
+    assert!(
+        noisy.roc.tpr <= clean.roc.tpr + 1e-9,
+        "clean {} vs noisy {}",
+        clean.roc.tpr,
+        noisy.roc.tpr
+    );
+}
+
+#[test]
+fn multichain_merges_strictly_better_or_equal() {
+    let (_, table, _) = workload(8, 150, 51);
+    for chains in [1usize, 2, 4] {
+        let res = run_chains_parallel(|_| SerialScorer::new(&table), 8, 150, 2, 99, chains);
+        assert_eq!(res.stats.iterations, 150 * chains as u64);
+        assert!(res.best_score().is_finite());
+    }
+}
+
+#[test]
+fn missing_artifacts_dir_fails_cleanly() {
+    let cfg = RunConfig {
+        network: "asia".into(),
+        rows: 50,
+        iters: 10,
+        engine: EngineKind::Xla,
+        artifacts_dir: "/nonexistent/artifacts".into(),
+        ..RunConfig::default()
+    };
+    let msg = match run_learning(&cfg, None) {
+        Ok(_) => panic!("missing artifacts dir must fail"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("artifacts") || msg.contains("manifest"), "{msg}");
+}
+
+#[test]
+fn unknown_network_fails_cleanly() {
+    let cfg = RunConfig { network: "not-a-net".into(), ..RunConfig::default() };
+    assert!(run_learning(&cfg, None).is_err());
+}
+
+#[test]
+fn roc_of_true_graph_is_perfect() {
+    let (_, _, dag) = workload(9, 100, 61);
+    let p = roc_point(&dag, &dag);
+    assert_eq!(p.tpr, 1.0);
+    assert_eq!(p.fpr, 0.0);
+}
+
+#[test]
+fn learning_with_enough_data_recovers_most_structure() {
+    // End-to-end statistical sanity on a well-identifiable workload.
+    let cfg = RunConfig {
+        network: "random:10:12".into(),
+        rows: 2000,
+        iters: 1500,
+        seed: 71,
+        ..RunConfig::default()
+    };
+    let report = run_learning(&cfg, None).unwrap();
+    assert!(report.roc.tpr >= 0.7, "TPR {}", report.roc.tpr);
+    assert!(report.roc.fpr <= 0.1, "FPR {}", report.roc.fpr);
+}

@@ -1,0 +1,173 @@
+//! Integration: the full AOT path — python-lowered HLO text, loaded and
+//! compiled over PJRT, device-resident operands — must agree with the
+//! pure-rust serial engine on real scoring workloads.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use bnlearn::bn::sampling::forward_sample;
+use bnlearn::bn::Network;
+use bnlearn::mcmc::{run_chain, McmcChain, Order};
+use bnlearn::runtime::{default_artifacts_dir, XlaScorer};
+use bnlearn::score::{BdeParams, ScoreTable};
+use bnlearn::scorer::{BestGraph, OrderScorer, SerialScorer};
+use bnlearn::util::Pcg32;
+
+fn artifacts_ready() -> bool {
+    default_artifacts_dir().join("manifest.txt").exists()
+}
+
+fn build_table(n: usize, s: usize, rows: usize, seed: u64) -> ScoreTable {
+    let mut rng = Pcg32::new(seed);
+    let dag = bnlearn::bn::random::random_dag(n, s.min(3), n + n / 3, &mut rng);
+    let net = Network::with_random_cpts(dag, vec![3; n], &mut rng);
+    let data = forward_sample(&net, rows, &mut rng);
+    ScoreTable::build(&data, BdeParams::default(), s, 4)
+}
+
+#[test]
+fn xla_matches_serial_on_random_orders() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    for &n in &[8usize, 11, 13] {
+        let table = build_table(n, 4, 200, 1000 + n as u64);
+        let mut serial = SerialScorer::new(&table);
+        let mut xla = XlaScorer::new(default_artifacts_dir(), &table).expect("load artifact");
+        let mut rng = Pcg32::new(2000 + n as u64);
+        let mut a = BestGraph::new(n);
+        let mut b = BestGraph::new(n);
+        for trial in 0..8 {
+            let order = Order::random(n, &mut rng);
+            let ts = serial.score_order(&order, &mut a);
+            let tx = xla.score_order(&order, &mut b);
+            assert!(
+                (ts - tx).abs() < 1e-3 * (1.0 + ts.abs() / 100.0),
+                "n={n} trial={trial}: serial {ts} vs xla {tx}"
+            );
+            // Per-node best scores are the max of identical f32 sets —
+            // must agree exactly.
+            for i in 0..n {
+                assert_eq!(
+                    a.node_scores[i] as f32, b.node_scores[i] as f32,
+                    "n={n} node={i}"
+                );
+            }
+            // Argmax parent sets may differ only on exact ties; verify
+            // the xla choice scores identically and is order-consistent.
+            let pos = order.pos();
+            for i in 0..n {
+                assert!(b.parents[i].iter().all(|&m| pos[m] < pos[i]), "inconsistent parents");
+                let sc = table.score_of(i, &b.parents[i]);
+                assert_eq!(sc, a.node_scores[i] as f32, "n={n} node={i} argmax mismatch");
+            }
+        }
+    }
+}
+
+#[test]
+fn pallas_lowering_matches_dense_lowering() {
+    // Three-layer parity: the L1 Pallas kernel, lowered through interpret
+    // mode into HLO, loaded over PJRT, must produce bit-identical results
+    // to the dense L2 lowering AND to the serial engine.
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let n = 11;
+    let table = build_table(n, 4, 150, 555);
+    let mut dense = XlaScorer::new(default_artifacts_dir(), &table).expect("dense artifact");
+    let mut pallas =
+        XlaScorer::new_pallas(default_artifacts_dir(), &table).expect("pallas artifact");
+    let mut serial = SerialScorer::new(&table);
+    let mut rng = Pcg32::new(556);
+    let mut a = BestGraph::new(n);
+    let mut b = BestGraph::new(n);
+    let mut c = BestGraph::new(n);
+    for _ in 0..6 {
+        let order = Order::random(n, &mut rng);
+        let td = dense.score_order(&order, &mut a);
+        let tp = pallas.score_order(&order, &mut b);
+        let ts = serial.score_order(&order, &mut c);
+        assert_eq!(td, tp, "dense vs pallas lowering");
+        assert_eq!(a.parents, b.parents, "argmax parity dense vs pallas");
+        for i in 0..n {
+            assert_eq!(a.node_scores[i] as f32, c.node_scores[i] as f32);
+        }
+        assert!((td - ts).abs() < 1e-3 * (1.0 + ts.abs() / 100.0));
+    }
+}
+
+#[test]
+fn xla_chain_learns_like_serial_chain() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let n = 11;
+    let table = build_table(n, 4, 300, 77);
+    let serial_best = {
+        let mut scorer = SerialScorer::new(&table);
+        run_chain(&mut scorer, n, 150, 1, 7).best_score()
+    };
+    let xla_best = {
+        let mut scorer = XlaScorer::new(default_artifacts_dir(), &table).unwrap();
+        run_chain(&mut scorer, n, 150, 1, 7).best_score()
+    };
+    // Same seed, same scores → identical chains up to f32-sum noise.
+    assert!(
+        (serial_best - xla_best).abs() < 1e-3 * (1.0 + serial_best.abs() / 100.0),
+        "serial {serial_best} vs xla {xla_best}"
+    );
+}
+
+#[test]
+fn device_prior_fold_matches_host_fold() {
+    // Eq. (9) on the device (bn_fold_priors matmul) vs ScoreTable::add_priors.
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let n = 11;
+    let table = build_table(n, 4, 150, 777);
+    let mut rng = Pcg32::new(778);
+    let mut priors = bnlearn::priors::InterfaceMatrix::unbiased(n);
+    for _ in 0..10 {
+        let to = rng.gen_range(n);
+        let from = (to + 1 + rng.gen_range(n - 1)) % n;
+        priors.set(to, from, if rng.gen_bool(0.5) { 0.9 } else { 0.15 });
+    }
+
+    let folder =
+        bnlearn::runtime::PriorFolder::load(default_artifacts_dir(), n, 4).expect("fold artifact");
+    let device = folder.fold(&table, &priors).expect("device fold");
+
+    let mut host = build_table(n, 4, 150, 777); // identical table (same seed)
+    host.add_priors(&priors.ppf_matrix());
+    let s_total = table.subsets();
+    for i in 0..n {
+        for j in 0..s_total {
+            let d = device[i * s_total + j];
+            let h = host.get(i, j);
+            assert!(
+                (d - h).abs() <= 1e-3 * (1.0 + h.abs() / 100.0),
+                "i={i} j={j}: device {d} vs host {h}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_scorer_works_inside_mcmc_chain_api() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let n = 8;
+    let table = build_table(n, 4, 150, 88);
+    let mut scorer = XlaScorer::new(default_artifacts_dir(), &table).unwrap();
+    let mut chain = McmcChain::new(&mut scorer, n, 2, 99);
+    chain.run(50);
+    assert!(chain.tracker.best().is_some());
+    assert!(chain.current_score().is_finite());
+}
