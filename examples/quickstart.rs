@@ -4,15 +4,14 @@
 //!     cargo run --release --example quickstart
 //!
 //! Walks the whole pipeline explicitly (the `coordinator` module wraps
-//! exactly this sequence): workload → preprocessing → engine → MCMC →
-//! evaluation.
+//! exactly this sequence): workload → preprocessing into a pluggable
+//! score store → engine from the registry → MCMC → evaluation.
 
-use bnlearn::coordinator::Workload;
+use bnlearn::coordinator::{build_store, make_engine, EngineKind, StoreKind, Workload};
 use bnlearn::eval::roc::roc_point;
 use bnlearn::eval::shd;
 use bnlearn::mcmc::run_chain;
-use bnlearn::score::{BdeParams, ScoreTable};
-use bnlearn::scorer::SerialScorer;
+use bnlearn::score::{BdeParams, ScoreStore};
 use bnlearn::util::Timer;
 
 fn main() -> anyhow::Result<()> {
@@ -22,14 +21,18 @@ fn main() -> anyhow::Result<()> {
     println!("workload: {} ({} nodes, {} true edges, {} rows)",
         workload.spec, n, workload.truth_dag().edge_count(), workload.data.rows());
 
-    // 2. Preprocessing (Section III-A): every local score, once.
+    // 2. Preprocessing (Section III-A): every local score, once, into a
+    //    pluggable store — swap StoreKind::Hash for the paper's pruned
+    //    hash-table backend (identical learning, smaller table).
     let t = Timer::start();
-    let table = ScoreTable::build(&workload.data, BdeParams::default(), 4, 4);
-    println!("preprocessing: {} x {} local scores in {:.2}s",
-        table.n(), table.subsets(), t.elapsed_secs());
+    let store = build_store(StoreKind::Dense, &workload.data, BdeParams::default(), 4, 4, None);
+    println!("preprocessing: {} x {} local scores into the {} store ({:.2} MB) in {:.2}s",
+        store.n(), store.subsets(), store.name(),
+        store.bytes() as f64 / (1024.0 * 1024.0), t.elapsed_secs());
 
-    // 3. MCMC over orders with the serial (GPP) engine.
-    let mut scorer = SerialScorer::new(&table);
+    // 3. MCMC over orders with the serial (GPP) engine from the registry.
+    let mut scorer = make_engine(EngineKind::Serial, &store, &workload.data,
+        BdeParams::default(), 4)?;
     let result = run_chain(&mut scorer, n, 2000, 3, 7);
     println!("sampling: {} iterations in {:.2}s (accept rate {:.2})",
         result.stats.iterations, result.sampling_secs, result.stats.accept_rate());

@@ -9,7 +9,7 @@
 use bnlearn::bn::sampling::forward_sample;
 use bnlearn::bn::Network;
 use bnlearn::data::Dataset;
-use bnlearn::score::{BdeParams, ScoreTable};
+use bnlearn::score::{BdeParams, HashScoreStore, ScoreStore, ScoreTable};
 use bnlearn::util::Pcg32;
 
 /// True when quick (CI-ish) mode is requested.
@@ -29,10 +29,24 @@ pub fn scaling_workload(n: usize, s: usize, rows: usize, seed: u64) -> (Dataset,
     (data, table)
 }
 
+/// Preprocess an existing workload's dataset into the pruned hash-table
+/// backend (the paper's memory-saving store) — same data by
+/// construction, so dense-vs-hash rows compare identical score grids.
+pub fn hash_store_for(data: &Dataset, s: usize) -> HashScoreStore {
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
+    HashScoreStore::build(data, BdeParams::default(), s, threads, None)
+}
+
 /// Measure mean seconds/iteration of `f`, adaptively: at least
 /// `min_iters` runs and at least `min_secs` of wall time.
 pub fn per_iter_secs(min_secs: f64, min_iters: usize, f: impl FnMut()) -> f64 {
     bnlearn::util::timer::bench_secs_per_iter(min_secs, min_iters, f)
+}
+
+/// Resident megabytes of a score store (per-backend memory column for the
+/// BENCH_* trade-off trajectories).
+pub fn store_mb(store: &dyn ScoreStore) -> f64 {
+    store.bytes() as f64 / (1024.0 * 1024.0)
 }
 
 /// Format seconds like the paper's tables (seconds with enough digits).

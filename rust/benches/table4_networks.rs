@@ -28,9 +28,10 @@ fn main() -> anyhow::Result<()> {
         let workload = Workload::build(network, rows, 0.0, 42)?;
         for engine in [EngineKind::Serial, EngineKind::Xla] {
             if engine == EngineKind::Xla
-                && !default_artifacts_dir().join("manifest.txt").exists()
+                && (!cfg!(feature = "xla")
+                    || !default_artifacts_dir().join("manifest.txt").exists())
             {
-                eprintln!("SKIP xla rows: artifacts missing");
+                eprintln!("SKIP xla rows: artifacts missing or xla feature off");
                 continue;
             }
             let cfg = RunConfig {

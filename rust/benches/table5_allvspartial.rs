@@ -19,7 +19,7 @@ use bnlearn::coordinator::Workload;
 use bnlearn::mcmc::run_chain;
 use bnlearn::score::table::FullScoreTable;
 use bnlearn::score::{BdeParams, ScoreTable};
-use bnlearn::scorer::{BitVecScorer, SerialScorer};
+use bnlearn::scorer::{FullBitVecScorer, SerialScorer};
 use bnlearn::util::csvio::Table;
 use bnlearn::util::Timer;
 
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         let full = FullScoreTable::build(&workload.data, params, threads);
         let preprocess_all = t.elapsed_secs();
         let t = Timer::start();
-        let mut scorer = BitVecScorer::full(&full);
+        let mut scorer = FullBitVecScorer::new(&full);
         let res = run_chain(&mut scorer, n, iters, 1, 7);
         let iteration_all = t.elapsed_secs();
         let _ = res;

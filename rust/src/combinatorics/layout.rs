@@ -61,6 +61,15 @@ impl SubsetLayout {
         &self.bt
     }
 
+    /// First global index of the size-`k` block (blocks are stored in
+    /// decreasing size: `s` first) — the one place the block ordering
+    /// invariant lives; engines and the hash-store pruner index with it.
+    #[inline]
+    pub fn block_start(&self, k: usize) -> u64 {
+        debug_assert!(k <= self.s);
+        self.offsets[self.s - k]
+    }
+
     /// Global index of a sorted subset (`|subset| ≤ s`, elements `< n`).
     pub fn index_of(&self, subset: &[usize]) -> usize {
         let k = subset.len();

@@ -43,6 +43,35 @@ impl EngineKind {
     }
 }
 
+/// Which score-store backend holds the preprocessed local scores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreKind {
+    /// Dense `[n × S]` table (perfect locality, RAM ∝ n·S).
+    Dense,
+    /// Per-node hash tables keeping only undominated scores (the paper's
+    /// memory-saving strategy; exact for max/argmax engines).
+    Hash,
+}
+
+impl StoreKind {
+    /// Parse from CLI text.
+    pub fn parse(text: &str) -> Result<Self> {
+        Ok(match text {
+            "dense" | "table" => StoreKind::Dense,
+            "hash" | "hashtable" | "sparse" => StoreKind::Hash,
+            other => bail!("unknown store {other:?} (dense|hash)"),
+        })
+    }
+
+    /// Store name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreKind::Dense => "dense",
+            StoreKind::Hash => "hash",
+        }
+    }
+}
+
 /// Full configuration of a learning run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -60,6 +89,8 @@ pub struct RunConfig {
     pub gamma: f64,
     /// Scoring engine.
     pub engine: EngineKind,
+    /// Score-store backend.
+    pub store: StoreKind,
     /// Best-graph tracker capacity.
     pub topk: usize,
     /// Master seed.
@@ -82,6 +113,7 @@ impl Default for RunConfig {
             s: 4,
             gamma: 0.1,
             engine: EngineKind::Serial,
+            store: StoreKind::Dense,
             topk: 5,
             seed: 42,
             noise: 0.0,
@@ -113,6 +145,7 @@ impl RunConfig {
                 "--s" => cfg.s = next()?.parse()?,
                 "--gamma" => cfg.gamma = next()?.parse()?,
                 "--engine" => cfg.engine = EngineKind::parse(next()?)?,
+                "--store" => cfg.store = StoreKind::parse(next()?)?,
                 "--topk" => cfg.topk = next()?.parse()?,
                 "--seed" => cfg.seed = next()?.parse()?,
                 "--noise" => cfg.noise = next()?.parse()?,
@@ -141,6 +174,7 @@ mod tests {
         let c = RunConfig::default();
         assert_eq!(c.s, 4);
         assert_eq!(c.engine, EngineKind::Serial);
+        assert_eq!(c.store, StoreKind::Dense);
         assert!(c.threads >= 1);
     }
 
@@ -173,5 +207,17 @@ mod tests {
         assert_eq!(EngineKind::parse("gpu").unwrap(), EngineKind::Xla);
         assert_eq!(EngineKind::parse("gpp").unwrap(), EngineKind::Serial);
         assert!(EngineKind::parse("quantum").is_err());
+    }
+
+    #[test]
+    fn store_parse_aliases_and_flag() {
+        assert_eq!(StoreKind::parse("dense").unwrap(), StoreKind::Dense);
+        assert_eq!(StoreKind::parse("table").unwrap(), StoreKind::Dense);
+        assert_eq!(StoreKind::parse("hash").unwrap(), StoreKind::Hash);
+        assert_eq!(StoreKind::parse("hashtable").unwrap(), StoreKind::Hash);
+        assert!(StoreKind::parse("btree").is_err());
+        let c = RunConfig::from_args(&args("--store hash --engine serial")).unwrap();
+        assert_eq!(c.store, StoreKind::Hash);
+        assert_eq!(c.store.name(), "hash");
     }
 }

@@ -1,24 +1,29 @@
 //! The end-to-end learning driver: workload → preprocessing → engine →
 //! chains → evaluation, with stage timings — the paper's Table IV
 //! decomposition (preprocessing runtime / iteration runtime / total).
+//!
+//! Engine and store construction both go through
+//! [`super::registry`] — this file never names a concrete scorer or
+//! table type (the device-bound XLA engine is the one exception, built
+//! on the chain thread because PJRT handles are not `Send`).
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use super::config::{EngineKind, RunConfig};
+use super::registry;
 use super::workload::Workload;
 use crate::eval::roc::{roc_point, RocPoint};
 use crate::eval::shd;
-use crate::mcmc::runner::{run_chain, run_chains_parallel, LearnResult};
+use crate::mcmc::runner::{run_chains_parallel, LearnResult};
 use crate::priors::InterfaceMatrix;
-use crate::score::{BdeParams, ScoreTable};
-use crate::scorer::{BitVecScorer, RecomputeScorer, SerialScorer, SumScorer};
+use crate::score::{BdeParams, ScoreStore};
 use crate::util::Timer;
 
 /// Everything a learning run produces.
 pub struct LearnReport {
     pub config: RunConfig,
     pub result: LearnResult,
-    /// Preprocessing wall-clock (score-table build [+ prior folding]).
+    /// Preprocessing wall-clock (score-store build [+ prior folding]).
     pub preprocess_secs: f64,
     /// Engine setup wall-clock (artifact load/compile/upload for XLA).
     pub setup_secs: f64,
@@ -30,6 +35,12 @@ pub struct LearnReport {
     pub roc: RocPoint,
     /// Structural Hamming distance of the best graph.
     pub shd: usize,
+    /// Score-store backend name.
+    pub store_name: &'static str,
+    /// Resident bytes of the score store (memory/speed trade-off axis).
+    pub store_bytes: usize,
+    /// Entries the store holds explicitly.
+    pub store_entries: usize,
 }
 
 impl LearnReport {
@@ -41,10 +52,12 @@ impl LearnReport {
     /// One human-readable summary line.
     pub fn summary(&self) -> String {
         format!(
-            "net={} n={} engine={} iters={} chains={} | score={:.3} TPR={:.3} FPR={:.4} SHD={} | preproc={:.2}s setup={:.2}s sample={:.2}s ({:.3}ms/iter) accept={:.2}",
+            "net={} n={} engine={} store={}({:.1}MB) iters={} chains={} | score={:.3} TPR={:.3} FPR={:.4} SHD={} | preproc={:.2}s setup={:.2}s sample={:.2}s ({:.3}ms/iter) accept={:.2}",
             self.config.network,
             self.result.best_dag().n(),
             self.config.engine.name(),
+            self.store_name,
+            self.store_bytes as f64 / (1024.0 * 1024.0),
             self.config.iters,
             self.config.chains,
             self.result.best_score(),
@@ -61,7 +74,7 @@ impl LearnReport {
 }
 
 /// Run the full pipeline described by `cfg`, with optional pairwise
-/// priors (Eq. 9) folded into the score table.
+/// priors (Eq. 9) folded into the score store.
 pub fn run_learning(cfg: &RunConfig, priors: Option<&InterfaceMatrix>) -> Result<LearnReport> {
     let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
     run_learning_on(cfg, &workload, priors)
@@ -74,45 +87,40 @@ pub fn run_learning_on(
     workload: &Workload,
     priors: Option<&InterfaceMatrix>,
 ) -> Result<LearnReport> {
+    registry::validate(cfg.engine, cfg.store, cfg.chains)?;
     let n = workload.n();
     let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
 
-    // ---- preprocessing (Section III-A) ----
+    // ---- preprocessing (Section III-A) into the configured backend ----
     let timer = Timer::start();
-    let mut table = ScoreTable::build(&workload.data, params, cfg.s, cfg.threads);
-    if let Some(matrix) = priors {
-        table.add_priors(&matrix.ppf_matrix());
-    }
+    let ppf = priors.map(|m| m.ppf_matrix());
+    let store = registry::build_store(
+        cfg.store,
+        &workload.data,
+        params,
+        cfg.s,
+        cfg.threads,
+        ppf.as_deref(),
+    );
     let preprocess_secs = timer.elapsed_secs();
 
     // ---- engine setup + sampling ----
     let mut setup_secs = 0.0;
     let result = match cfg.engine {
-        EngineKind::Serial => {
-            run_chains_parallel(|_| SerialScorer::new(&table), n, cfg.iters, cfg.topk, cfg.seed, cfg.chains)
-        }
-        EngineKind::Sum => {
-            run_chains_parallel(|_| SumScorer::new(&table), n, cfg.iters, cfg.topk, cfg.seed, cfg.chains)
-        }
-        EngineKind::BitVec => {
-            run_chains_parallel(|_| BitVecScorer::bounded(&table), n, cfg.iters, cfg.topk, cfg.seed, cfg.chains)
-        }
-        EngineKind::Recompute => run_chains_parallel(
-            |_| RecomputeScorer::new(&workload.data, params, cfg.s),
-            n,
-            cfg.iters,
-            cfg.topk,
-            cfg.seed,
-            cfg.chains,
-        ),
-        EngineKind::Xla => {
-            if cfg.chains != 1 {
-                bail!("the accelerated engine runs single-chain (one device), got --chains {}", cfg.chains);
-            }
-            let t = Timer::start();
-            let mut scorer = crate::runtime::XlaScorer::new(&cfg.artifacts_dir, &table)?;
-            setup_secs = t.elapsed_secs();
-            run_chain(&mut scorer, n, cfg.iters, cfg.topk, cfg.seed)
+        EngineKind::Xla => run_xla_chain(cfg, store.as_dyn(), n, &mut setup_secs)?,
+        kind => {
+            let store_ref = &store;
+            run_chains_parallel(
+                |_| {
+                    registry::make_engine(kind, store_ref, &workload.data, params, cfg.s)
+                        .expect("validated engine construction")
+                },
+                n,
+                cfg.iters,
+                cfg.topk,
+                cfg.seed,
+                cfg.chains,
+            )
         }
     };
 
@@ -128,12 +136,44 @@ pub fn run_learning_on(
         setup_secs,
         sampling_secs,
         per_iter_secs,
+        store_name: store.name(),
+        store_bytes: store.bytes(),
+        store_entries: store.stored_entries(),
     })
+}
+
+/// Single-chain accelerated run (the paper's one-GPU protocol).
+#[cfg(feature = "xla")]
+fn run_xla_chain(
+    cfg: &RunConfig,
+    store: &dyn ScoreStore,
+    n: usize,
+    setup_secs: &mut f64,
+) -> Result<LearnResult> {
+    let t = Timer::start();
+    let mut scorer = crate::runtime::XlaScorer::new(&cfg.artifacts_dir, store)?;
+    *setup_secs = t.elapsed_secs();
+    Ok(crate::mcmc::runner::run_chain(&mut scorer, n, cfg.iters, cfg.topk, cfg.seed))
+}
+
+/// Feature-off stand-in: fail with a pointer at the gate.
+#[cfg(not(feature = "xla"))]
+fn run_xla_chain(
+    _cfg: &RunConfig,
+    _store: &dyn ScoreStore,
+    _n: usize,
+    _setup_secs: &mut f64,
+) -> Result<LearnResult> {
+    anyhow::bail!(
+        "engine 'xla' needs the artifacts runtime, which is compiled out — rebuild with \
+         `--features xla`"
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::StoreKind;
 
     #[test]
     fn serial_pipeline_runs_and_learns_asia() {
@@ -149,6 +189,8 @@ mod tests {
         assert!(report.roc.fpr <= 0.2, "FPR {}", report.roc.fpr);
         assert!(report.total_secs() > 0.0);
         assert!(!report.summary().is_empty());
+        assert_eq!(report.store_name, "dense");
+        assert!(report.store_bytes > 0);
     }
 
     #[test]
@@ -201,5 +243,48 @@ mod tests {
             ..RunConfig::default()
         };
         assert!(run_learning(&cfg, None).is_err());
+    }
+
+    /// The hash backend drives the same chain to the same best score
+    /// (dominance pruning is exact for the max engine — identical scorer
+    /// outputs mean identical Metropolis–Hastings decisions).
+    #[test]
+    fn hash_store_run_matches_dense_run() {
+        let mk = |store: StoreKind| {
+            let cfg = RunConfig {
+                network: "random:12:14".into(),
+                rows: 300,
+                iters: 300,
+                seed: 9,
+                store,
+                ..RunConfig::default()
+            };
+            run_learning(&cfg, None).unwrap()
+        };
+        let dense = mk(StoreKind::Dense);
+        let hash = mk(StoreKind::Hash);
+        assert!(
+            (dense.result.best_score() - hash.result.best_score()).abs() < 1e-9,
+            "dense {} vs hash {}",
+            dense.result.best_score(),
+            hash.result.best_score()
+        );
+        assert_eq!(dense.result.best_dag().edges(), hash.result.best_dag().edges());
+        assert_eq!(hash.store_name, "hash");
+        assert!(hash.store_entries < dense.store_entries);
+    }
+
+    #[test]
+    fn sum_engine_rejects_hash_store() {
+        let cfg = RunConfig {
+            network: "asia".into(),
+            rows: 100,
+            iters: 10,
+            engine: EngineKind::Sum,
+            store: StoreKind::Hash,
+            ..RunConfig::default()
+        };
+        let msg = format!("{:#}", run_learning(&cfg, None).unwrap_err());
+        assert!(msg.contains("dense"), "{msg}");
     }
 }

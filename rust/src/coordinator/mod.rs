@@ -4,8 +4,10 @@
 
 pub mod config;
 pub mod experiment;
+pub mod registry;
 pub mod workload;
 
-pub use config::{EngineKind, RunConfig};
+pub use config::{EngineKind, RunConfig, StoreKind};
 pub use experiment::{run_learning, run_learning_on, LearnReport};
+pub use registry::{build_store, make_engine, StoreHandle};
 pub use workload::Workload;

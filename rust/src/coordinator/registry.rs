@@ -1,0 +1,212 @@
+//! The unified engine + store registry: the **one** place that turns
+//! `(EngineKind, StoreKind)` configuration into concrete objects.
+//!
+//! Before this seam existed, examples, benches, and the experiment
+//! driver each hand-constructed scorers against the concrete
+//! `ScoreTable`; now everything funnels through
+//! [`build_store`] / [`make_engine`], so adding a backend (or an engine)
+//! is a one-file change.
+//!
+//! [`StoreHandle`] keeps the built backend *concretely typed*: engine
+//! construction matches on the variant, so the per-candidate
+//! `store.get()` in the scoring hot loop stays monomorphized (an inline
+//! array load / hash probe), with only the once-per-iteration
+//! `score_order` call going through the `Box<dyn OrderScorer>` vtable.
+//!
+//! Combination rules live in [`validate`]:
+//! * `sum` × `hash` is rejected — the sum-over-graphs score needs every
+//!   parent-set mass, and the hash backend prunes dominated entries
+//!   (exact only for max/argmax engines);
+//! * `xla` is single-chain (one device) and is constructed by the
+//!   experiment driver because PJRT handles are not `Send`.
+
+use anyhow::{bail, Result};
+
+use super::config::{EngineKind, StoreKind};
+use crate::combinatorics::SubsetLayout;
+use crate::data::Dataset;
+use crate::score::{BdeParams, HashScoreStore, ScoreStore, ScoreTable};
+use crate::scorer::{BitVecScorer, OrderScorer, RecomputeScorer, SerialScorer, SumScorer};
+
+/// A built score store, concretely typed (see module docs for why this
+/// is an enum and not a `Box<dyn ScoreStore>`).
+pub enum StoreHandle {
+    /// Dense `[n × S]` table.
+    Dense(ScoreTable),
+    /// Dominance-pruned per-node hash tables.
+    Hash(HashScoreStore),
+}
+
+impl StoreHandle {
+    /// Type-erased view (accelerator upload, reporting).
+    pub fn as_dyn(&self) -> &dyn ScoreStore {
+        match self {
+            StoreHandle::Dense(t) => t,
+            StoreHandle::Hash(h) => h,
+        }
+    }
+}
+
+impl ScoreStore for StoreHandle {
+    fn layout(&self) -> &SubsetLayout {
+        self.as_dyn().layout()
+    }
+
+    fn get(&self, node: usize, idx: usize) -> f32 {
+        self.as_dyn().get(node, idx)
+    }
+
+    fn fill_row(&self, node: usize, out: &mut [f32]) {
+        self.as_dyn().fill_row(node, out)
+    }
+
+    fn bytes(&self) -> usize {
+        self.as_dyn().bytes()
+    }
+
+    fn stored_entries(&self) -> usize {
+        self.as_dyn().stored_entries()
+    }
+
+    fn name(&self) -> &'static str {
+        self.as_dyn().name()
+    }
+}
+
+/// Preprocess the dataset into the configured score-store backend,
+/// folding optional Eq. (9) pairwise priors (`ppf` is the row-major
+/// `[n × n]` PPF matrix). Priors fold *before* hash pruning — they can
+/// re-rank dominated parent sets.
+pub fn build_store(
+    kind: StoreKind,
+    data: &Dataset,
+    params: BdeParams,
+    s: usize,
+    threads: usize,
+    ppf: Option<&[f64]>,
+) -> StoreHandle {
+    match kind {
+        StoreKind::Dense => {
+            let mut table = ScoreTable::build(data, params, s, threads);
+            if let Some(matrix) = ppf {
+                table.add_priors(matrix);
+            }
+            StoreHandle::Dense(table)
+        }
+        StoreKind::Hash => StoreHandle::Hash(HashScoreStore::build(data, params, s, threads, ppf)),
+    }
+}
+
+/// Check an engine/store/chains combination before any work happens.
+pub fn validate(engine: EngineKind, store: StoreKind, chains: usize) -> Result<()> {
+    if engine == EngineKind::Sum && store == StoreKind::Hash {
+        bail!(
+            "engine 'sum' needs every parent-set mass, but the hash store prunes dominated \
+             entries — use --store dense"
+        );
+    }
+    if engine == EngineKind::Xla && chains != 1 {
+        bail!("the accelerated engine runs single-chain (one device), got --chains {chains}");
+    }
+    Ok(())
+}
+
+/// Construct a store-backed order-scoring engine, monomorphized over
+/// the store variant.
+///
+/// `data`/`params`/`s` feed the recompute ablation (the one engine that
+/// bypasses the store). `EngineKind::Xla` is rejected here — its PJRT
+/// handles are not `Send`, so the experiment driver builds it on the
+/// chain thread itself. `sum` over `hash` is constructible for
+/// ablations; [`validate`] is what rejects it for learning runs.
+pub fn make_engine<'a>(
+    engine: EngineKind,
+    store: &'a StoreHandle,
+    data: &'a Dataset,
+    params: BdeParams,
+    s: usize,
+) -> Result<Box<dyn OrderScorer + 'a>> {
+    Ok(match (engine, store) {
+        (EngineKind::Serial, StoreHandle::Dense(t)) => Box::new(SerialScorer::new(t)),
+        (EngineKind::Serial, StoreHandle::Hash(h)) => Box::new(SerialScorer::new(h)),
+        (EngineKind::Sum, StoreHandle::Dense(t)) => Box::new(SumScorer::new(t)),
+        (EngineKind::Sum, StoreHandle::Hash(h)) => Box::new(SumScorer::new(h)),
+        (EngineKind::BitVec, StoreHandle::Dense(t)) => Box::new(BitVecScorer::bounded(t)),
+        (EngineKind::BitVec, StoreHandle::Hash(h)) => Box::new(BitVecScorer::bounded(h)),
+        (EngineKind::Recompute, _) => Box::new(RecomputeScorer::new(data, params, s)),
+        (EngineKind::Xla, _) => {
+            bail!("the xla engine is device-bound — construct it via the experiment driver")
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::sampling::forward_sample;
+    use crate::bn::Network;
+    use crate::mcmc::Order;
+    use crate::scorer::BestGraph;
+    use crate::util::Pcg32;
+
+    fn data(n: usize, rows: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg32::new(seed);
+        let dag = crate::bn::random::random_dag(n, 3, n + 2, &mut rng);
+        let net = Network::with_random_cpts(dag, vec![2; n], &mut rng);
+        forward_sample(&net, rows, &mut rng)
+    }
+
+    #[test]
+    fn registry_builds_both_backends() {
+        let d = data(8, 150, 301);
+        let params = BdeParams::default();
+        let dense = build_store(StoreKind::Dense, &d, params, 3, 2, None);
+        let hash = build_store(StoreKind::Hash, &d, params, 3, 2, None);
+        assert_eq!(dense.name(), "dense");
+        assert_eq!(hash.name(), "hash");
+        assert_eq!(dense.subsets(), hash.subsets());
+        // Poisoned (i ∈ π) entries are implicit in the hash backend, so it
+        // always stores strictly fewer entries than the dense grid.
+        assert!(hash.stored_entries() < dense.stored_entries());
+        assert!(hash.bytes() > 0 && dense.bytes() > 0);
+    }
+
+    #[test]
+    fn registry_engines_agree_across_backends() {
+        let d = data(8, 200, 302);
+        let params = BdeParams::default();
+        let dense = build_store(StoreKind::Dense, &d, params, 3, 2, None);
+        let hash = build_store(StoreKind::Hash, &d, params, 3, 2, None);
+        let mut rng = Pcg32::new(303);
+        let mut a = BestGraph::new(8);
+        let mut b = BestGraph::new(8);
+        for engine in [EngineKind::Serial, EngineKind::BitVec] {
+            let mut ed = make_engine(engine, &dense, &d, params, 3).unwrap();
+            let mut eh = make_engine(engine, &hash, &d, params, 3).unwrap();
+            for _ in 0..5 {
+                let order = Order::random(8, &mut rng);
+                let ta = ed.score_order(&order, &mut a);
+                let tb = eh.score_order(&order, &mut b);
+                assert_eq!(ta, tb, "engine {engine:?}");
+                assert_eq!(a.parents, b.parents, "engine {engine:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_combinations() {
+        assert!(validate(EngineKind::Sum, StoreKind::Hash, 1).is_err());
+        assert!(validate(EngineKind::Sum, StoreKind::Dense, 4).is_ok());
+        assert!(validate(EngineKind::Xla, StoreKind::Dense, 2).is_err());
+        assert!(validate(EngineKind::Xla, StoreKind::Hash, 1).is_ok());
+        assert!(validate(EngineKind::Serial, StoreKind::Hash, 8).is_ok());
+    }
+
+    #[test]
+    fn make_engine_rejects_xla() {
+        let d = data(5, 60, 304);
+        let params = BdeParams::default();
+        let store = build_store(StoreKind::Dense, &d, params, 2, 1, None);
+        assert!(make_engine(EngineKind::Xla, &store, &d, params, 2).is_err());
+    }
+}

@@ -5,14 +5,29 @@
 //! Qian & Yuan, *"A Novel Learning Algorithm for Bayesian Network and Its
 //! Efficient Implementation on GPU"* (2012).
 //!
-//! Layering (see DESIGN.md):
+//! Layering (see DESIGN.md at the repository root):
 //! * substrates: [`util`], [`combinatorics`], [`bn`], [`data`], [`networks`]
-//! * scoring: [`score`] (BDe local scores, preprocessing), [`priors`]
+//! * scoring: [`score`] (BDe local scores, preprocessing, and the
+//!   pluggable [`score::ScoreStore`] substrate — dense table or pruned
+//!   hash table), [`priors`]
 //! * the learner: [`mcmc`] (Metropolis–Hastings over orders) driving a
 //!   pluggable [`scorer`] engine — serial ("GPP"), baselines, or the
-//!   AOT-compiled XLA executable loaded by [`runtime`]
+//!   AOT-compiled XLA executable loaded by [`runtime`] (behind the
+//!   `xla` cargo feature)
 //! * evaluation: [`eval`] (ROC / SHD), experiment drivers in `examples/`
-//!   and `benches/`, orchestrated through [`coordinator`].
+//!   and `benches/`, orchestrated through [`coordinator`] — whose
+//!   [`coordinator::registry`] is the single place engines and stores
+//!   are paired (`--engine … --store dense|hash`).
+
+// Carried codebase idioms clippy dislikes but that read better here
+// (index-parallel loops over node/subset grids, paper-shaped argument
+// lists, worker-bucket scaffolding types).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::manual_memcpy
+)]
 
 pub mod bn;
 pub mod combinatorics;

@@ -15,10 +15,10 @@ use anyhow::{bail, Result};
 
 use bnlearn::bn::counting;
 use bnlearn::combinatorics::ParentSetTable;
-use bnlearn::coordinator::{run_learning, RunConfig, Workload};
+use bnlearn::coordinator::{build_store, run_learning, RunConfig, Workload};
 use bnlearn::priors::ppf;
 use bnlearn::runtime::{default_artifacts_dir, ArtifactManifest};
-use bnlearn::score::{BdeParams, ScoreTable};
+use bnlearn::score::{BdeParams, ScoreStore};
 use bnlearn::util::csvio::Table;
 use bnlearn::util::Timer;
 
@@ -58,6 +58,7 @@ fn print_usage() {
          learn flags:\n\
            --network <name|random:n:edges[:states]>  (default sachs)\n\
            --rows N --iters N --chains N --engine serial|xla|bitvec|sum|recompute\n\
+           --store dense|hash  (score-store backend; hash prunes dominated sets)\n\
            --s N --gamma F --topk N --seed N --noise P --threads N --artifacts DIR\n\
          \n\
          tables flags: --table1 | --ppf | --pst-mem"
@@ -85,15 +86,23 @@ fn cmd_preprocess(args: &[String]) -> Result<()> {
     let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
     let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
     let timer = Timer::start();
-    let table = ScoreTable::build(&workload.data, params, cfg.s, cfg.threads);
+    let store = build_store(cfg.store, &workload.data, params, cfg.s, cfg.threads, None);
     let secs = timer.elapsed_secs();
+    let dense_equiv = store.n() * store.subsets() * std::mem::size_of::<f32>();
     println!(
-        "preprocessed {} nodes x {} subsets ({} MB) in {:.3}s with {} threads",
-        table.n(),
-        table.subsets(),
-        table.bytes() / (1024 * 1024),
+        "preprocessed {} nodes x {} subsets into the {} store in {:.3}s with {} threads",
+        store.n(),
+        store.subsets(),
+        store.name(),
         secs,
         cfg.threads
+    );
+    println!(
+        "resident: {:.2} MB, {} stored entries ({:.1}% of the {:.2} MB dense grid)",
+        store.bytes() as f64 / (1024.0 * 1024.0),
+        store.stored_entries(),
+        100.0 * store.stored_entries() as f64 / (store.n() * store.subsets()).max(1) as f64,
+        dense_equiv as f64 / (1024.0 * 1024.0),
     );
     Ok(())
 }

@@ -23,6 +23,14 @@ enum Move {
 }
 
 /// Graph-space MH chain over the bounded-parent-set hypothesis space.
+///
+/// Deliberately **dense-table only** (not generic over `ScoreStore`):
+/// unlike the order engines' one-shot max scan, where dominance pruning
+/// is exact, this incremental walk moves *through* intermediate parent
+/// sets — a pruned (dominated) intermediate would read back as the
+/// sentinel and be rejected with probability 1, silently changing the
+/// sampled distribution and blocking single-edge paths to sets whose
+/// intermediates are dominated.
 pub struct GraphChain<'a> {
     table: &'a ScoreTable,
     dag: Dag,

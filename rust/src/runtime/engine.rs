@@ -12,7 +12,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::artifacts::{ArtifactManifest, ManifestEntry};
 use crate::combinatorics::ParentSetTable;
 use crate::score::table::NEG_SENTINEL;
-use crate::score::ScoreTable;
+use crate::score::ScoreStore;
 
 /// Result of one accelerated scoring call.
 #[derive(Debug, Clone)]
@@ -66,18 +66,23 @@ impl ScoreEngine {
         &self.entry
     }
 
-    /// Upload the score table and PST as device-resident buffers,
+    /// Upload the score store and PST as device-resident buffers,
     /// padding the subset axis to the compiled extent (padding columns
     /// poisoned / sentinel rows, matching `kernels.order_score.pad_inputs`).
-    pub fn upload(&mut self, table: &ScoreTable, pst: &ParentSetTable) -> Result<()> {
+    ///
+    /// The dense-materialize path: any [`ScoreStore`] backend works —
+    /// each node row is rendered dense via [`ScoreStore::fill_row`]
+    /// (pruned hash entries become the sentinel, which the device argmax
+    /// treats exactly like the host engines do).
+    pub fn upload(&mut self, store: &dyn ScoreStore, pst: &ParentSetTable) -> Result<()> {
         let n = self.entry.n;
         let s_total = self.entry.total;
         let padded = self.entry.padded;
-        if table.n() != n || table.subsets() != s_total {
+        if store.n() != n || store.subsets() != s_total {
             bail!(
-                "table shape [{} x {}] does not match artifact [{} x {}]",
-                table.n(),
-                table.subsets(),
+                "store shape [{} x {}] does not match artifact [{} x {}]",
+                store.n(),
+                store.subsets(),
                 n,
                 s_total
             );
@@ -86,10 +91,11 @@ impl ScoreEngine {
             bail!("PST rows {} != artifact S {}", pst.rows(), s_total);
         }
 
-        // Pad LS rows host-side into one contiguous [n, padded] buffer.
+        // Materialize LS rows host-side into one contiguous [n, padded]
+        // buffer (padding columns stay poisoned).
         let mut ls = vec![NEG_SENTINEL; n * padded];
         for i in 0..n {
-            ls[i * padded..i * padded + s_total].copy_from_slice(table.row(i));
+            store.fill_row(i, &mut ls[i * padded..i * padded + s_total]);
         }
         // Pad PST rows with sentinel-only rows.
         let width = pst.width();

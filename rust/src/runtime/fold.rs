@@ -16,7 +16,7 @@ use super::artifacts::{ArtifactManifest, ManifestEntry};
 use crate::combinatorics::ParentSetTable;
 use crate::priors::InterfaceMatrix;
 use crate::score::table::NEG_SENTINEL;
-use crate::score::ScoreTable;
+use crate::score::ScoreStore;
 
 /// A loaded fold_priors executable.
 pub struct PriorFolder {
@@ -45,14 +45,14 @@ impl PriorFolder {
         Ok(PriorFolder { exe, entry, client })
     }
 
-    /// Fold `priors` into `table` on the device and return the augmented
+    /// Fold `priors` into `store` on the device and return the augmented
     /// `[n × S]` scores (unpadded), verified against the artifact shapes.
-    pub fn fold(&self, table: &ScoreTable, priors: &InterfaceMatrix) -> Result<Vec<f32>> {
+    pub fn fold(&self, store: &dyn ScoreStore, priors: &InterfaceMatrix) -> Result<Vec<f32>> {
         let n = self.entry.n;
         let s_total = self.entry.total;
         let padded = self.entry.padded;
-        if table.n() != n || table.subsets() != s_total {
-            bail!("table [{} x {}] != artifact [{n} x {s_total}]", table.n(), table.subsets());
+        if store.n() != n || store.subsets() != s_total {
+            bail!("store [{} x {}] != artifact [{n} x {s_total}]", store.n(), store.subsets());
         }
         if priors.n() != n {
             bail!("priors n {} != {n}", priors.n());
@@ -61,9 +61,9 @@ impl PriorFolder {
         // Padded operands (same conventions as ScoreEngine::upload).
         let mut ls = vec![NEG_SENTINEL; n * padded];
         for i in 0..n {
-            ls[i * padded..i * padded + s_total].copy_from_slice(table.row(i));
+            store.fill_row(i, &mut ls[i * padded..i * padded + s_total]);
         }
-        let pst = ParentSetTable::build(table.layout());
+        let pst = ParentSetTable::build(store.layout());
         let width = pst.width();
         let mut pst_padded = vec![pst.sentinel(); padded * width];
         pst_padded[..s_total * width].copy_from_slice(pst.raw());

@@ -4,28 +4,44 @@
 //! `make artifacts` (python, build-time) lowers the L2 scoring
 //! computation to HLO text per graph size; this module loads an artifact,
 //! compiles it on the CPU PJRT client, pins the large constant operands
-//! (score table, PST) as device-resident buffers, and exposes a
+//! (score store, PST) as device-resident buffers, and exposes a
 //! per-iteration `score(pos)` call that uploads only the n-int position
 //! vector — python never runs on this path.
+//!
+//! Everything that links against PJRT sits behind the **`xla` cargo
+//! feature** so the default build needs no accelerator toolchain; the
+//! manifest parsing ([`artifacts`]) stays available unconditionally for
+//! tooling (`bnlearn info`). Operands come from any
+//! [`crate::score::ScoreStore`] via its dense-materialize `fill_row`
+//! path, so the hash backend uploads exactly like the dense table.
 
 pub mod artifacts;
+#[cfg(feature = "xla")]
 pub mod engine;
+#[cfg(feature = "xla")]
 pub mod fold;
+#[cfg(feature = "xla")]
 pub mod xla_scorer;
 
 pub use artifacts::{ArtifactManifest, ManifestEntry};
+#[cfg(feature = "xla")]
 pub use engine::ScoreEngine;
+#[cfg(feature = "xla")]
 pub use fold::PriorFolder;
+#[cfg(feature = "xla")]
 pub use xla_scorer::XlaScorer;
 
+#[cfg(feature = "xla")]
 use std::cell::RefCell;
 
+#[cfg(feature = "xla")]
 thread_local! {
     static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
 }
 
 /// Per-thread PJRT CPU client (`PjRtClient` is `Rc`-backed — not `Sync` —
 /// so each thread lazily creates one and hands out cheap `Rc` clones).
+#[cfg(feature = "xla")]
 pub fn shared_client() -> anyhow::Result<xla::PjRtClient> {
     CLIENT.with(|cell| {
         let mut slot = cell.borrow_mut();

@@ -6,7 +6,7 @@ use anyhow::Result;
 use super::engine::ScoreEngine;
 use crate::combinatorics::{ParentSetTable, SubsetLayout};
 use crate::mcmc::Order;
-use crate::score::ScoreTable;
+use crate::score::ScoreStore;
 use crate::scorer::{BestGraph, OrderScorer};
 
 /// Order scorer backed by the AOT-compiled XLA executable.
@@ -23,31 +23,31 @@ pub struct XlaScorer {
 }
 
 impl XlaScorer {
-    /// Load the default artifact for the table's `(n, s)`, build + upload
-    /// the PST and the score table.
-    pub fn new(artifacts_dir: impl AsRef<std::path::Path>, table: &ScoreTable) -> Result<Self> {
-        Self::with_variant(artifacts_dir, table, "bn_score_")
+    /// Load the default artifact for the store's `(n, s)`, build + upload
+    /// the PST and the (dense-materialized) score store.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>, store: &dyn ScoreStore) -> Result<Self> {
+        Self::with_variant(artifacts_dir, store, "bn_score_")
     }
 
     /// Same, over the Pallas-lowered parity artifact (kernel-in-HLO
     /// end-to-end; slower on the CPU backend — see aot.py).
     pub fn new_pallas(
         artifacts_dir: impl AsRef<std::path::Path>,
-        table: &ScoreTable,
+        store: &dyn ScoreStore,
     ) -> Result<Self> {
-        Self::with_variant(artifacts_dir, table, "bn_score_pallas_")
+        Self::with_variant(artifacts_dir, store, "bn_score_pallas_")
     }
 
     /// Load a named artifact variant.
     pub fn with_variant(
         artifacts_dir: impl AsRef<std::path::Path>,
-        table: &ScoreTable,
+        store: &dyn ScoreStore,
         stem: &str,
     ) -> Result<Self> {
-        let layout = table.layout().clone();
+        let layout = store.layout().clone();
         let mut engine = ScoreEngine::load_variant(artifacts_dir, stem, layout.n(), layout.s())?;
         let pst = ParentSetTable::build(&layout);
-        engine.upload(table, &pst)?;
+        engine.upload(store, &pst)?;
         Ok(XlaScorer {
             engine,
             pos: vec![0; layout.n()],

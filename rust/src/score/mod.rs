@@ -5,8 +5,10 @@
 pub mod bde;
 pub mod counts;
 pub mod lgamma;
+pub mod store;
 pub mod table;
 
 pub use bde::{BdeParams, LocalScorer};
 pub use lgamma::{lgamma, log10_gamma};
-pub use table::ScoreTable;
+pub use store::{HashScoreStore, ScoreStore};
+pub use table::{ScoreTable, NEG_SENTINEL};

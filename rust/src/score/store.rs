@@ -1,0 +1,486 @@
+//! The pluggable score-store substrate: one trait, two backends.
+//!
+//! The paper stores every preprocessed local score `ls(i, π)` in a hash
+//! table keyed by `(v_i, π_i)` — its headline memory trick for scaling
+//! past 60 nodes. This module abstracts *where those scores live* behind
+//! [`ScoreStore`] so every consumer (the order-scoring engines, the
+//! accelerator upload, the coordinator) is backend-agnostic:
+//!
+//! * **dense** — the existing [`ScoreTable`]: a `[n × S]` array over the
+//!   fixed subset layout, perfect locality, doubles as the device operand;
+//! * **hash** — [`HashScoreStore`]: per-node open-addressing hash tables
+//!   holding only the *undominated* scores (à la the table pruning that
+//!   lets order/partition MCMC scale, Kuipers et al. 1803.07859), with
+//!   the poison sentinel implied for every absent entry.
+//!
+//! The hash backend is **exact for max/argmax engines**: an entry
+//! `ls(i, π)` is dropped only when some proper subset σ ⊂ π has
+//! `ls(i, σ) ≥ ls(i, π)`. Any order consistent with π is consistent with
+//! σ, and the engines scan smaller sets first with strict-improvement
+//! updates, so neither the per-node max nor the argmax parent set can
+//! change (see the agreement tests below and in `tests/pipeline.rs`).
+//! Sum-over-graphs scoring needs every mass and must use the dense
+//! backend — the coordinator registry enforces that.
+
+use super::bde::{BdeParams, LocalScorer};
+use super::table::{add_priors_to_row, fill_node_row, ScoreTable, NEG_SENTINEL};
+use crate::combinatorics::combinadic::{next_combination, rank_combination};
+use crate::combinatorics::SubsetLayout;
+use crate::data::Dataset;
+
+/// Backend-agnostic access to the preprocessed local-score table.
+///
+/// `Sync` is a supertrait so `&dyn ScoreStore` can be shared across the
+/// parallel-chain workers.
+pub trait ScoreStore: Sync {
+    /// The subset layout shared with engines and the runtime upload.
+    fn layout(&self) -> &SubsetLayout;
+
+    /// Score of `node` with the subset at global layout index `idx`;
+    /// [`NEG_SENTINEL`] for poisoned or pruned entries.
+    fn get(&self, node: usize, idx: usize) -> f32;
+
+    /// Materialize `node`'s dense row into `out` (`out.len() == subsets()`),
+    /// writing [`NEG_SENTINEL`] for entries the backend does not hold —
+    /// the dense-materialize path the accelerator upload relies on.
+    fn fill_row(&self, node: usize, out: &mut [f32]);
+
+    /// Resident bytes of the backing storage (Fig. 6-style accounting).
+    fn bytes(&self) -> usize;
+
+    /// Number of explicitly stored entries (dense: `n * subsets()`).
+    fn stored_entries(&self) -> usize;
+
+    /// Backend name for logs and benchmark tables.
+    fn name(&self) -> &'static str;
+
+    /// Node count.
+    fn n(&self) -> usize {
+        self.layout().n()
+    }
+
+    /// Subsets per node row (the paper's `S`).
+    fn subsets(&self) -> usize {
+        self.layout().total()
+    }
+
+    /// Convenience: score of `node` with an explicit sorted parent set.
+    fn score_of(&self, node: usize, parents: &[usize]) -> f32 {
+        self.get(node, self.layout().index_of(parents))
+    }
+}
+
+impl ScoreStore for ScoreTable {
+    fn layout(&self) -> &SubsetLayout {
+        ScoreTable::layout(self)
+    }
+
+    fn get(&self, node: usize, idx: usize) -> f32 {
+        ScoreTable::get(self, node, idx)
+    }
+
+    fn fill_row(&self, node: usize, out: &mut [f32]) {
+        out.copy_from_slice(self.row(node));
+    }
+
+    fn bytes(&self) -> usize {
+        ScoreTable::bytes(self)
+    }
+
+    fn stored_entries(&self) -> usize {
+        self.n() * self.subsets()
+    }
+
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+}
+
+/// One node's open-addressing hash row: layout-index keys (`u32`) →
+/// retained scores, linear probing over a power-of-two bucket array at
+/// ≤ 50% load. This *is* the paper's per-variable hash table, with the
+/// fixed subset layout providing the `π_i` key encoding.
+struct HashRow {
+    /// `EMPTY_KEY` marks free buckets.
+    keys: Vec<u32>,
+    vals: Vec<f32>,
+    mask: usize,
+    len: usize,
+}
+
+const EMPTY_KEY: u32 = u32::MAX;
+
+impl HashRow {
+    /// Build from the retained `(index, score)` pairs of one node.
+    fn build(entries: &[(u32, f32)]) -> Self {
+        let cap = (entries.len() * 2).next_power_of_two().max(4);
+        let mut row = HashRow {
+            keys: vec![EMPTY_KEY; cap],
+            vals: vec![0.0; cap],
+            mask: cap - 1,
+            len: 0,
+        };
+        for &(k, v) in entries {
+            row.insert(k, v);
+        }
+        row
+    }
+
+    #[inline]
+    fn slot(&self, key: u32) -> usize {
+        // Fibonacci multiplicative hash — layout indices are dense and
+        // sequential, so a plain mask would cluster probes.
+        (key.wrapping_mul(0x9E37_79B9) as usize) & self.mask
+    }
+
+    fn insert(&mut self, key: u32, val: f32) {
+        debug_assert_ne!(key, EMPTY_KEY);
+        let mut i = self.slot(key);
+        loop {
+            if self.keys[i] == EMPTY_KEY {
+                self.keys[i] = key;
+                self.vals[i] = val;
+                self.len += 1;
+                return;
+            }
+            debug_assert_ne!(self.keys[i], key, "duplicate key");
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    #[inline]
+    fn get(&self, key: u32) -> Option<f32> {
+        let mut i = self.slot(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                return Some(self.vals[i]);
+            }
+            if k == EMPTY_KEY {
+                return None;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        self.keys.len() * std::mem::size_of::<u32>() + self.vals.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Hash-table/sparse score store: per node, only the scores not dominated
+/// by a proper-subset score are kept; everything else reads back as
+/// [`NEG_SENTINEL`].
+pub struct HashScoreStore {
+    layout: SubsetLayout,
+    rows: Vec<HashRow>,
+}
+
+impl HashScoreStore {
+    /// Preprocess the dataset into pruned per-node hash rows.
+    ///
+    /// Each worker materializes one node's dense row at a time (peak
+    /// transient memory: one `S`-float row per thread instead of the full
+    /// `[n × S]` table), folds `ppf` priors in if given (priors must fold
+    /// *before* pruning — they can re-rank dominated sets), prunes, and
+    /// keeps the survivors.
+    pub fn build(
+        data: &Dataset,
+        params: BdeParams,
+        s: usize,
+        threads: usize,
+        ppf: Option<&[f64]>,
+    ) -> Self {
+        let n = data.cols();
+        let layout = SubsetLayout::new(n, s);
+        assert!(layout.total() <= u32::MAX as usize, "layout exceeds u32 key space");
+        if let Some(m) = ppf {
+            assert_eq!(m.len(), n * n, "PPF matrix must be n×n");
+        }
+
+        let threads = threads.max(1).min(n.max(1));
+        let mut buckets: Vec<Vec<usize>> = (0..threads).map(|_| Vec::new()).collect();
+        for i in 0..n {
+            buckets[i % threads].push(i);
+        }
+        let mut rows: Vec<Option<HashRow>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let layout = &layout;
+            let handles: Vec<_> = buckets
+                .into_iter()
+                .map(|mine| {
+                    scope.spawn(move || {
+                        let mut scorer = LocalScorer::new(data, params);
+                        let mut row = vec![0f32; layout.total()];
+                        let mut keep: Vec<(u32, f32)> = Vec::new();
+                        let mut done = Vec::with_capacity(mine.len());
+                        for i in mine {
+                            fill_node_row(&mut scorer, layout, i, &mut row);
+                            if let Some(m) = ppf {
+                                add_priors_to_row(layout, i, m, &mut row);
+                            }
+                            prune_dominated(layout, &row, &mut keep);
+                            done.push((i, HashRow::build(&keep)));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, hr) in h.join().expect("hash-store worker panicked") {
+                    rows[i] = Some(hr);
+                }
+            }
+        });
+        HashScoreStore {
+            layout,
+            rows: rows.into_iter().map(|r| r.expect("row built")).collect(),
+        }
+    }
+
+    /// Fraction of the dense table's entries this store retains.
+    pub fn retained_fraction(&self) -> f64 {
+        let dense = self.layout.n() * self.layout.total();
+        if dense == 0 {
+            return 0.0;
+        }
+        self.stored_entries() as f64 / dense as f64
+    }
+}
+
+impl ScoreStore for HashScoreStore {
+    fn layout(&self) -> &SubsetLayout {
+        &self.layout
+    }
+
+    fn get(&self, node: usize, idx: usize) -> f32 {
+        debug_assert!(idx < self.layout.total());
+        self.rows[node].get(idx as u32).unwrap_or(NEG_SENTINEL)
+    }
+
+    fn fill_row(&self, node: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.layout.total());
+        out.fill(NEG_SENTINEL);
+        let row = &self.rows[node];
+        for (slot, &k) in row.keys.iter().enumerate() {
+            if k != EMPTY_KEY {
+                out[k as usize] = row.vals[slot];
+            }
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        self.rows.iter().map(HashRow::bytes).sum()
+    }
+
+    fn stored_entries(&self) -> usize {
+        self.rows.iter().map(|r| r.len).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+}
+
+/// Collect the undominated `(layout index, score)` entries of one dense
+/// row into `keep`.
+///
+/// Level DP over subset sizes: `dom(π) = max(ls(π), max_{σ ⊂ π} ls(σ))`,
+/// computed from the k−1 level via the k immediate-subset ranks. An entry
+/// survives iff its score *strictly* beats every proper subset's — the
+/// exact condition under which the strict-improvement scan of the max
+/// engines can ever select it.
+fn prune_dominated(layout: &SubsetLayout, row: &[f32], keep: &mut Vec<(u32, f32)>) {
+    let n = layout.n();
+    let s = layout.s();
+    let bt = layout.binomials();
+
+    keep.clear();
+    let empty_idx = layout.block_start(0) as usize;
+    let empty = row[empty_idx];
+    keep.push((empty_idx as u32, empty));
+
+    // dom values of the previous (k-1) level, indexed by combinadic rank.
+    let mut prev_dom: Vec<f32> = vec![empty];
+    let mut sub = vec![0usize; s.max(1)];
+    for k in 1..=s.min(n) {
+        let count = bt.c(n, k) as usize;
+        let mut cur_dom = vec![0f32; count];
+        let mut comb: Vec<usize> = (0..k).collect();
+        let mut rank = 0usize;
+        let block = layout.block_start(k) as usize;
+        loop {
+            let idx = block + rank;
+            let ls = row[idx];
+            let mut best_sub = f32::NEG_INFINITY;
+            for drop in 0..k {
+                let mut m = 0;
+                for (j, &e) in comb.iter().enumerate() {
+                    if j != drop {
+                        sub[m] = e;
+                        m += 1;
+                    }
+                }
+                let r = rank_combination(bt, n, &sub[..k - 1]) as usize;
+                if prev_dom[r] > best_sub {
+                    best_sub = prev_dom[r];
+                }
+            }
+            if ls > best_sub && ls > NEG_SENTINEL {
+                keep.push((idx as u32, ls));
+            }
+            cur_dom[rank] = if ls > best_sub { ls } else { best_sub };
+            rank += 1;
+            if !next_combination(n, &mut comb) {
+                break;
+            }
+        }
+        debug_assert_eq!(rank, count);
+        prev_dom = cur_dom;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::sampling::forward_sample;
+    use crate::bn::Network;
+    use crate::util::Pcg32;
+
+    fn small_data(n: usize, rows: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg32::new(seed);
+        let dag = crate::bn::random::random_dag(n, 3, n + 2, &mut rng);
+        let net = Network::with_random_cpts(dag, vec![3; n], &mut rng);
+        forward_sample(&net, rows, &mut rng)
+    }
+
+    /// Hash entries are a subset of the dense table with equal values;
+    /// every absent entry is dominated by a retained subset's score.
+    #[test]
+    fn hash_entries_subset_of_dense_with_domination() {
+        let data = small_data(7, 150, 201);
+        let params = BdeParams::default();
+        let dense = ScoreTable::build(&data, params, 3, 2);
+        let hash = HashScoreStore::build(&data, params, 3, 2, None);
+        let layout = ScoreStore::layout(&dense).clone();
+        for i in 0..7usize {
+            layout.for_each(|idx, subset| {
+                let d = ScoreStore::get(&dense, i, idx);
+                let h = hash.get(i, idx);
+                if h > NEG_SENTINEL {
+                    assert_eq!(h, d, "i={i} subset={subset:?}");
+                } else if d > NEG_SENTINEL {
+                    // pruned: some proper subset must dominate
+                    let dominated = (0..layout.total()).any(|j| {
+                        let other = layout.subset_vec(j);
+                        other.len() < subset.len()
+                            && other.iter().all(|m| subset.contains(m))
+                            && ScoreStore::get(&dense, i, j) >= d
+                    });
+                    assert!(dominated, "i={i} subset={subset:?} pruned but undominated");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn self_parent_entries_are_poisoned_in_both_backends() {
+        let data = small_data(6, 100, 202);
+        let params = BdeParams::default();
+        let dense = ScoreTable::build(&data, params, 3, 1);
+        let hash = HashScoreStore::build(&data, params, 3, 1, None);
+        let layout = ScoreStore::layout(&hash).clone();
+        for i in 0..6usize {
+            layout.for_each(|idx, subset| {
+                if subset.contains(&i) {
+                    assert_eq!(ScoreStore::get(&dense, i, idx), NEG_SENTINEL);
+                    assert_eq!(hash.get(i, idx), NEG_SENTINEL);
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn pruning_retains_strictly_fewer_entries() {
+        let data = small_data(8, 200, 203);
+        let hash = HashScoreStore::build(&data, BdeParams::default(), 3, 2, None);
+        let dense_entries = hash.n() * hash.subsets();
+        assert!(hash.stored_entries() < dense_entries, "nothing pruned?");
+        assert!(hash.stored_entries() >= hash.n(), "empty set always kept");
+        assert!(hash.retained_fraction() < 1.0);
+        assert!(hash.bytes() > 0);
+    }
+
+    #[test]
+    fn fill_row_materializes_exactly_the_stored_entries() {
+        let data = small_data(6, 120, 204);
+        let hash = HashScoreStore::build(&data, BdeParams::default(), 2, 1, None);
+        let total = hash.subsets();
+        let mut row = vec![0f32; total];
+        for i in 0..6usize {
+            hash.fill_row(i, &mut row);
+            for (idx, &v) in row.iter().enumerate() {
+                assert_eq!(v, hash.get(i, idx), "i={i} idx={idx}");
+            }
+        }
+    }
+
+    /// Combinadic rank/unrank round-trip through the store boundary:
+    /// every stored key decodes to a subset that indexes back to the key
+    /// and scores identically through `score_of`.
+    #[test]
+    fn stored_keys_roundtrip_through_layout() {
+        let data = small_data(7, 120, 205);
+        let hash = HashScoreStore::build(&data, BdeParams::default(), 3, 2, None);
+        let layout = ScoreStore::layout(&hash).clone();
+        let mut buf = vec![0usize; layout.s().max(1)];
+        for i in 0..7usize {
+            let row = &hash.rows[i];
+            for (slot, &k) in row.keys.iter().enumerate() {
+                if k == EMPTY_KEY {
+                    continue;
+                }
+                let subset = layout.subset_of(k as usize, &mut buf).to_vec();
+                assert_eq!(layout.index_of(&subset), k as usize);
+                assert_eq!(hash.score_of(i, &subset), row.vals[slot]);
+            }
+        }
+    }
+
+    /// Priors folded at build time agree with the dense two-step path.
+    #[test]
+    fn prior_folding_matches_dense_add_priors_on_retained_entries() {
+        let data = small_data(6, 100, 206);
+        let params = BdeParams::default();
+        let n = 6usize;
+        let mut ppf = vec![0f64; n * n];
+        ppf[2 * n + 1] = 4.0; // favor edge 1 → 2
+        ppf[5 * n] = -2.5; // disfavor edge 0 → 5
+
+        let mut dense = ScoreTable::build(&data, params, 2, 1);
+        dense.add_priors(&ppf);
+        let hash = HashScoreStore::build(&data, params, 2, 1, Some(&ppf));
+        let layout = ScoreStore::layout(&hash).clone();
+        for i in 0..n {
+            layout.for_each(|idx, subset| {
+                let h = hash.get(i, idx);
+                if h > NEG_SENTINEL {
+                    let d = ScoreStore::get(&dense, i, idx);
+                    assert!((h - d).abs() < 1e-5, "i={i} subset={subset:?}: {h} vs {d}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn hash_row_probe_and_miss() {
+        let entries: Vec<(u32, f32)> = (0..100).map(|k| (k * 3, k as f32)).collect();
+        let row = HashRow::build(&entries);
+        assert_eq!(row.len, 100);
+        for &(k, v) in &entries {
+            assert_eq!(row.get(k), Some(v));
+        }
+        assert_eq!(row.get(1), None);
+        assert_eq!(row.get(299), None);
+    }
+}

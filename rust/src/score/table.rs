@@ -109,21 +109,10 @@ impl ScoreTable {
         let n = self.n;
         assert_eq!(ppf.len(), n * n, "PPF matrix must be n×n");
         let total = self.layout.total();
-        // Precompute per-subset sums once per node row: iterate layout
-        // subsets, add Σ PPF(i, m) to each node's entry.
         let layout = self.layout.clone();
         for i in 0..n {
             let row = &mut self.data[i * total..(i + 1) * total];
-            layout.for_each(|j, subset| {
-                if row[j] <= NEG_SENTINEL {
-                    return; // keep poisoned entries poisoned
-                }
-                let mut add = 0f64;
-                for &m in subset {
-                    add += ppf[i * n + m];
-                }
-                row[j] += add as f32;
-            });
+            add_priors_to_row(&layout, i, ppf, row);
         }
     }
 
@@ -131,6 +120,24 @@ impl ScoreTable {
     pub fn bytes(&self) -> usize {
         self.data.len() * std::mem::size_of::<f32>()
     }
+}
+
+/// Add the Eq. (9) pairwise-prior contribution to one node's dense row:
+/// `row[j] += Σ_{m ∈ subset_j} PPF(node, m)`, leaving poisoned entries
+/// poisoned. Shared by [`ScoreTable::add_priors`] and the hash-store
+/// build (which must fold priors *before* pruning).
+pub(crate) fn add_priors_to_row(layout: &SubsetLayout, node: usize, ppf: &[f64], row: &mut [f32]) {
+    let n = layout.n();
+    layout.for_each(|j, subset| {
+        if row[j] <= NEG_SENTINEL {
+            return; // keep poisoned entries poisoned
+        }
+        let mut add = 0f64;
+        for &m in subset {
+            add += ppf[node * n + m];
+        }
+        row[j] += add as f32;
+    });
 }
 
 /// Fill one node's row over the layout.
@@ -143,7 +150,12 @@ impl ScoreTable {
 /// per leaf (≈2 row passes per subset instead of k+1). Lexicographic DFS
 /// order == layout order, so the row index is a running counter; branches
 /// containing the node itself are skipped wholesale with a binomial jump.
-fn fill_node_row(scorer: &mut LocalScorer, layout: &SubsetLayout, node: usize, row: &mut [f32]) {
+pub(crate) fn fill_node_row(
+    scorer: &mut LocalScorer,
+    layout: &SubsetLayout,
+    node: usize,
+    row: &mut [f32],
+) {
     let mut builder = FastRowBuilder::new(scorer.data(), scorer.params(), layout.s());
     builder.fill(layout, node, row);
 }
@@ -520,7 +532,7 @@ mod tests {
         let before = table.raw().to_vec();
         let n = 4usize;
         let mut ppf = vec![0f64; n * n];
-        ppf[1 * n + 0] = 7.5; // PPF(1, 0): edge 0→1 favored
+        ppf[n] = 7.5; // PPF(1, 0) at index 1*n+0: edge 0→1 favored
         table.add_priors(&ppf);
         let layout = table.layout().clone();
         for i in 0..n {

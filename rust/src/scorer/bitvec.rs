@@ -3,52 +3,43 @@
 //! filter the order-consistent ones per node, instead of enumerating only
 //! the predecessors' subsets.
 //!
-//! Two modes:
-//! * **bounded** — candidates with `|π| ≤ s` score from the bounded
-//!   table (what Table II measures: the enumeration/filtering waste);
-//! * **full** — all consistent subsets score from a [`FullScoreTable`]
-//!   (the true "all possible parent sets" configuration of Table V,
-//!   feasible only for small n).
+//! Two engines:
+//! * [`BitVecScorer`] (**bounded**) — candidates with `|π| ≤ s` score
+//!   from a bounded [`ScoreStore`] (what Table II measures: the
+//!   enumeration/filtering waste); generic over the store backend.
+//! * [`FullBitVecScorer`] (**full**) — all consistent subsets score from
+//!   a [`FullScoreTable`] (the true "all possible parent sets"
+//!   configuration of Table V, feasible only for small n).
 
 use super::{BestGraph, OrderScorer};
 use crate::mcmc::Order;
 use crate::score::table::FullScoreTable;
-use crate::score::ScoreTable;
+use crate::score::{ScoreStore, ScoreTable};
 
-enum Mode<'a> {
-    Bounded(&'a ScoreTable),
-    Full(&'a FullScoreTable),
-}
-
-/// Bit-vector enumerate-and-filter order scorer.
-pub struct BitVecScorer<'a> {
-    mode: Mode<'a>,
+/// Bit-vector enumerate-and-filter order scorer over a bounded store.
+pub struct BitVecScorer<'a, S: ScoreStore + ?Sized = ScoreTable> {
+    store: &'a S,
     n: usize,
     /// scratch: node ids of a decoded mask
     decode: Vec<usize>,
 }
 
-impl<'a> BitVecScorer<'a> {
-    /// Bounded-table mode (|π| ≤ s candidates are scored; everything is
+impl<'a, S: ScoreStore + ?Sized> BitVecScorer<'a, S> {
+    /// Bounded-store mode (|π| ≤ s candidates are scored; everything is
     /// still *enumerated*, which is the cost being measured).
-    pub fn bounded(table: &'a ScoreTable) -> Self {
-        let n = table.n();
+    pub fn bounded(store: &'a S) -> Self {
+        let n = store.n();
         assert!(n <= 26, "bit-vector enumeration is 2^n — capped at 26 nodes");
-        BitVecScorer { mode: Mode::Bounded(table), n, decode: Vec::with_capacity(n) }
-    }
-
-    /// Full-table mode (every consistent subset scored).
-    pub fn full(table: &'a FullScoreTable) -> Self {
-        let n = table.n();
-        BitVecScorer { mode: Mode::Full(table), n, decode: Vec::with_capacity(n) }
+        BitVecScorer { store, n, decode: Vec::with_capacity(n) }
     }
 }
 
-impl OrderScorer for BitVecScorer<'_> {
+impl<S: ScoreStore + ?Sized> OrderScorer for BitVecScorer<'_, S> {
     fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
         let n = self.n;
         debug_assert_eq!(order.n(), n);
         let size = 1usize << n;
+        let s = self.store.layout().s();
         let mut total = 0f64;
         for p in 0..n {
             let node = order.seq()[p];
@@ -61,41 +52,24 @@ impl OrderScorer for BitVecScorer<'_> {
             let mut best_mask = 0usize;
             // The baseline's defining waste: scan ALL 2^n bit vectors and
             // filter, instead of enumerating the predecessors' subsets.
-            match self.mode {
-                Mode::Bounded(table) => {
-                    let s = table.layout().s();
-                    for mask in 0..size {
-                        if mask & !pred_mask != 0 {
-                            continue; // not a subset of the predecessors
-                        }
-                        if mask.count_ones() as usize > s {
-                            continue; // outside the bounded hypothesis space
-                        }
-                        self.decode.clear();
-                        let mut m = mask;
-                        while m != 0 {
-                            self.decode.push(m.trailing_zeros() as usize);
-                            m &= m - 1;
-                        }
-                        let idx = table.layout().index_of(&self.decode);
-                        let ls = table.get(node, idx);
-                        if ls > best {
-                            best = ls;
-                            best_mask = mask;
-                        }
-                    }
+            for mask in 0..size {
+                if mask & !pred_mask != 0 {
+                    continue; // not a subset of the predecessors
                 }
-                Mode::Full(table) => {
-                    for mask in 0..size {
-                        if mask & !pred_mask != 0 {
-                            continue;
-                        }
-                        let ls = table.get(node, mask);
-                        if ls > best {
-                            best = ls;
-                            best_mask = mask;
-                        }
-                    }
+                if mask.count_ones() as usize > s {
+                    continue; // outside the bounded hypothesis space
+                }
+                self.decode.clear();
+                let mut m = mask;
+                while m != 0 {
+                    self.decode.push(m.trailing_zeros() as usize);
+                    m &= m - 1;
+                }
+                let idx = self.store.layout().index_of(&self.decode);
+                let ls = self.store.get(node, idx);
+                if ls > best {
+                    best = ls;
+                    best_mask = mask;
                 }
             }
             out.node_scores[node] = best as f64;
@@ -111,17 +85,68 @@ impl OrderScorer for BitVecScorer<'_> {
     }
 
     fn name(&self) -> &'static str {
-        match self.mode {
-            Mode::Bounded(_) => "bitvec-bounded",
-            Mode::Full(_) => "bitvec-full",
+        "bitvec-bounded"
+    }
+}
+
+/// Bit-vector scorer over the exhaustive (all parent sets) table.
+pub struct FullBitVecScorer<'a> {
+    table: &'a FullScoreTable,
+    n: usize,
+}
+
+impl<'a> FullBitVecScorer<'a> {
+    /// Full-table mode (every consistent subset scored).
+    pub fn new(table: &'a FullScoreTable) -> Self {
+        FullBitVecScorer { table, n: table.n() }
+    }
+}
+
+impl OrderScorer for FullBitVecScorer<'_> {
+    fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
+        let n = self.n;
+        debug_assert_eq!(order.n(), n);
+        let size = 1usize << n;
+        let mut total = 0f64;
+        for p in 0..n {
+            let node = order.seq()[p];
+            let mut pred_mask = 0usize;
+            for &v in &order.seq()[..p] {
+                pred_mask |= 1 << v;
+            }
+            let mut best = f32::NEG_INFINITY;
+            let mut best_mask = 0usize;
+            for mask in 0..size {
+                if mask & !pred_mask != 0 {
+                    continue;
+                }
+                let ls = self.table.get(node, mask);
+                if ls > best {
+                    best = ls;
+                    best_mask = mask;
+                }
+            }
+            out.node_scores[node] = best as f64;
+            out.parents[node].clear();
+            let mut m = best_mask;
+            while m != 0 {
+                out.parents[node].push(m.trailing_zeros() as usize);
+                m &= m - 1;
+            }
+            total += best as f64;
         }
+        total
+    }
+
+    fn name(&self) -> &'static str {
+        "bitvec-full"
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::score::{BdeParams, table::FullScoreTable};
+    use crate::score::{table::FullScoreTable, BdeParams};
     use crate::scorer::testutil::fixture;
     use crate::scorer::SerialScorer;
     use crate::util::Pcg32;
@@ -148,7 +173,7 @@ mod tests {
         let (data, table) = fixture(7, 2, 120, 83);
         let full = FullScoreTable::build(&data, BdeParams::default(), 2);
         let mut bounded = BitVecScorer::bounded(&table);
-        let mut fullsc = BitVecScorer::full(&full);
+        let mut fullsc = FullBitVecScorer::new(&full);
         let mut rng = Pcg32::new(84);
         let mut a = BestGraph::new(7);
         let mut b = BestGraph::new(7);
@@ -165,7 +190,7 @@ mod tests {
     fn full_mode_graph_consistent_and_unbounded_degree_allowed() {
         let (data, _) = fixture(6, 2, 100, 85);
         let full = FullScoreTable::build(&data, BdeParams::default(), 2);
-        let mut sc = BitVecScorer::full(&full);
+        let mut sc = FullBitVecScorer::new(&full);
         let mut out = BestGraph::new(6);
         let order = Order::identity(6);
         sc.score_order(&order, &mut out);

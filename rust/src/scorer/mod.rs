@@ -6,22 +6,28 @@
 //! postprocessing needed). The engines differ in *how*:
 //!
 //! * [`SerialScorer`] — the paper's GPP implementation: predecessor-only
-//!   enumeration + O(1) score-table lookups.
-//! * [`BitVecScorer`] — the prior work's bit-vector filtering baseline
-//!   (compares all 2^n candidate vectors per node) — Table II / Table V.
+//!   enumeration + O(1) score-store lookups.
+//! * [`BitVecScorer`] / [`FullBitVecScorer`] — the prior work's
+//!   bit-vector filtering baseline (compares all 2^n candidate vectors
+//!   per node) — Table II / Table V.
 //! * [`RecomputeScorer`] — no preprocessing table; recomputes Eq. (4) for
 //!   every candidate (the paper's ">10× slower on GPP" ablation).
 //! * [`SumScorer`] — Linderman et al. [5]-style sum-over-graphs order
 //!   score (log-sum-exp), the accuracy baseline the paper argues against.
-//! * [`XlaScorer`] (in `crate::runtime`) — the accelerated engine, the
-//!   analog of the paper's GPU path.
+//! * [`XlaScorer`] (in `crate::runtime`, behind the `xla` feature) — the
+//!   accelerated engine, the analog of the paper's GPU path.
+//!
+//! Store-backed engines are generic over [`crate::score::ScoreStore`], so
+//! every backend (dense table, pruned hash table) drives every engine;
+//! the coordinator registry (`coordinator::registry`) is the one place
+//! that pairs a store with an engine.
 
 pub mod bitvec;
 pub mod recompute;
 pub mod serial;
 pub mod sum;
 
-pub use bitvec::BitVecScorer;
+pub use bitvec::{BitVecScorer, FullBitVecScorer};
 pub use recompute::RecomputeScorer;
 pub use serial::SerialScorer;
 pub use sum::SumScorer;
@@ -68,6 +74,18 @@ pub trait OrderScorer {
 
     /// Engine name for logs and benchmark tables.
     fn name(&self) -> &'static str;
+}
+
+// Boxed engines (the registry hands out `Box<dyn OrderScorer>`) drive
+// chains exactly like concrete ones.
+impl<T: OrderScorer + ?Sized> OrderScorer for Box<T> {
+    fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
+        (**self).score_order(order, out)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
 }
 
 #[cfg(test)]

@@ -1,7 +1,11 @@
 //! The paper's GPP (serial CPU) scoring engine: for each node, enumerate
 //! only the parent sets drawn from its predecessors in the order
 //! (Section III-B's `Σ_j C(p, j)` insight — never the full 2^(n-1)) and
-//! fetch each candidate's local score from the preprocessed table.
+//! fetch each candidate's local score from the preprocessed store.
+//!
+//! Generic over [`ScoreStore`]: the engine never touches the backing
+//! representation — dense rows and pruned hash rows score identically
+//! (see `score::store` for why pruning is exact for this max scan).
 //!
 //! Layout-rank bookkeeping: candidates are combinations of the *sorted*
 //! predecessor list, so each candidate is already a sorted node set; its
@@ -12,7 +16,7 @@
 use super::{BestGraph, OrderScorer};
 use crate::combinatorics::combinadic::next_combination;
 use crate::mcmc::Order;
-use crate::score::ScoreTable;
+use crate::score::{ScoreStore, ScoreTable};
 
 /// Prefix sums of combinadic completion counts:
 /// `cum[j][v] = Σ_{w < v} C(n-1-w, j)` — lets `rank_combination` run in
@@ -55,8 +59,8 @@ impl RankPrefix {
 }
 
 /// Serial table-lookup order scorer — the GPP reference implementation.
-pub struct SerialScorer<'a> {
-    table: &'a ScoreTable,
+pub struct SerialScorer<'a, S: ScoreStore + ?Sized = ScoreTable> {
+    store: &'a S,
     ranks: RankPrefix,
     /// Per-size block offsets in the layout.
     offsets: Vec<u64>,
@@ -68,23 +72,15 @@ pub struct SerialScorer<'a> {
     cand: Vec<usize>,
 }
 
-impl<'a> SerialScorer<'a> {
-    /// New engine over a preprocessed table.
-    pub fn new(table: &'a ScoreTable) -> Self {
-        let layout = table.layout();
+impl<'a, S: ScoreStore + ?Sized> SerialScorer<'a, S> {
+    /// New engine over a preprocessed score store.
+    pub fn new(store: &'a S) -> Self {
+        let layout = store.layout();
         let (n, s) = (layout.n(), layout.s());
-        let bt = layout.binomials();
-        // offsets[k] = first index of the size-k block (layout stores
-        // blocks in decreasing size: s first).
-        let mut offsets = vec![0u64; s + 1];
-        let mut acc = 0u64;
-        for d in 0..=s {
-            let k = s - d;
-            offsets[k] = acc;
-            acc += bt.c(n, k);
-        }
+        // offsets[k] = first index of the size-k block.
+        let offsets: Vec<u64> = (0..=s).map(|k| layout.block_start(k)).collect();
         SerialScorer {
-            table,
+            store,
             ranks: RankPrefix::new(n, s),
             offsets,
             preds: Vec::with_capacity(n),
@@ -93,15 +89,16 @@ impl<'a> SerialScorer<'a> {
         }
     }
 
-    /// The score table in use.
-    pub fn table(&self) -> &'a ScoreTable {
-        self.table
+    /// The score store in use.
+    pub fn store(&self) -> &'a S {
+        self.store
     }
 }
 
-impl OrderScorer for SerialScorer<'_> {
+impl<S: ScoreStore + ?Sized> OrderScorer for SerialScorer<'_, S> {
     fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
-        let layout = self.table.layout();
+        let store = self.store;
+        let layout = store.layout();
         let n = layout.n();
         let s = layout.s();
         debug_assert_eq!(order.n(), n);
@@ -117,7 +114,7 @@ impl OrderScorer for SerialScorer<'_> {
 
             // Empty set is always consistent — the starting best.
             let empty_idx = self.offsets[0] as usize;
-            let mut best = self.table.get(node, empty_idx);
+            let mut best = store.get(node, empty_idx);
             let mut best_set_len = 0usize;
             let mut best_set = [0usize; 8];
 
@@ -133,7 +130,7 @@ impl OrderScorer for SerialScorer<'_> {
                         self.cand.push(self.preds[ci]);
                     }
                     let idx = self.offsets[k] + self.ranks.rank(&self.cand);
-                    let ls = self.table.get(node, idx as usize);
+                    let ls = store.get(node, idx as usize);
                     if ls > best {
                         best = ls;
                         best_set_len = k;
@@ -166,7 +163,7 @@ mod tests {
 
     /// Oracle: brute-force max over layout subsets filtered by position.
     fn oracle_score(table: &ScoreTable, order: &Order) -> (f64, Vec<Vec<usize>>) {
-        let layout = table.layout().clone();
+        let layout = ScoreTable::layout(table).clone();
         let n = layout.n();
         let pos = order.pos();
         let mut total = 0f64;
@@ -245,5 +242,24 @@ mod tests {
         scorer.score_order(&Order::from_seq(order_last), &mut out);
         let s_last = out.node_scores[3];
         assert!(s_last >= s_first - 1e-9);
+    }
+
+    /// The generic engine runs unchanged over a `&dyn ScoreStore`.
+    #[test]
+    fn works_over_dyn_store() {
+        let (_, table) = fixture(7, 3, 150, 77);
+        let dyn_store: &dyn ScoreStore = &table;
+        let mut concrete = SerialScorer::new(&table);
+        let mut erased = SerialScorer::new(dyn_store);
+        let mut rng = Pcg32::new(78);
+        let mut a = BestGraph::new(7);
+        let mut b = BestGraph::new(7);
+        for _ in 0..5 {
+            let order = Order::random(7, &mut rng);
+            let ta = concrete.score_order(&order, &mut a);
+            let tb = erased.score_order(&order, &mut b);
+            assert_eq!(ta, tb);
+            assert_eq!(a.parents, b.parents);
+        }
     }
 }

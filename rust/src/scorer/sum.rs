@@ -7,39 +7,37 @@
 //! requires the postprocessing step the paper eliminates; for comparison
 //! purposes this engine also tracks the per-node argmax so its best graph
 //! can be evaluated with the same harness.
+//!
+//! Generic over [`ScoreStore`] like the max engines — but note the sum
+//! needs *every* parent-set mass, so running it over the pruned hash
+//! backend changes the score. The coordinator registry rejects that
+//! combination; constructing it directly is allowed for ablations.
 
 use super::{BestGraph, OrderScorer};
 use crate::combinatorics::combinadic::next_combination;
 use crate::mcmc::Order;
-use crate::score::ScoreTable;
+use crate::score::{ScoreStore, ScoreTable};
 
 /// Sum-over-graphs order scorer (log-sum-exp over consistent parent sets).
-pub struct SumScorer<'a> {
-    table: &'a ScoreTable,
+pub struct SumScorer<'a, S: ScoreStore + ?Sized = ScoreTable> {
+    store: &'a S,
     offsets: Vec<u64>,
-    ranks: super::serial::SerialScorer<'a>, // reuse its rank machinery via delegation
+    ranks: super::serial::SerialScorer<'a, S>, // reuse its rank machinery via delegation
     preds: Vec<usize>,
     comb: Vec<usize>,
     cand: Vec<usize>,
 }
 
-impl<'a> SumScorer<'a> {
-    /// New engine over a preprocessed table.
-    pub fn new(table: &'a ScoreTable) -> Self {
-        let layout = table.layout();
+impl<'a, S: ScoreStore + ?Sized> SumScorer<'a, S> {
+    /// New engine over a preprocessed score store.
+    pub fn new(store: &'a S) -> Self {
+        let layout = store.layout();
         let (n, s) = (layout.n(), layout.s());
-        let bt = layout.binomials();
-        let mut offsets = vec![0u64; s + 1];
-        let mut acc = 0u64;
-        for d in 0..=s {
-            let k = s - d;
-            offsets[k] = acc;
-            acc += bt.c(n, k);
-        }
+        let offsets: Vec<u64> = (0..=s).map(|k| layout.block_start(k)).collect();
         SumScorer {
-            table,
+            store,
             offsets,
-            ranks: super::serial::SerialScorer::new(table),
+            ranks: super::serial::SerialScorer::new(store),
             preds: Vec::with_capacity(n),
             comb: Vec::with_capacity(s),
             cand: Vec::with_capacity(s),
@@ -47,14 +45,15 @@ impl<'a> SumScorer<'a> {
     }
 }
 
-impl OrderScorer for SumScorer<'_> {
+impl<S: ScoreStore + ?Sized> OrderScorer for SumScorer<'_, S> {
     fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
         // The argmax graph: delegate to the serial max engine (this is the
         // "postprocessing" the sum-based method needs anyway).
         self.ranks.score_order(order, out);
 
         // The sum-based order score, log-sum-exp per node in log10 space.
-        let layout = self.table.layout();
+        let store = self.store;
+        let layout = store.layout();
         let n = layout.n();
         let s = layout.s();
         let ln10 = std::f64::consts::LN_10;
@@ -70,7 +69,7 @@ impl OrderScorer for SumScorer<'_> {
             // Σ 10^(ls - max) over consistent sets
             let mut acc = 0f64;
             let empty_idx = self.offsets[0] as usize;
-            acc += 10f64.powf(self.table.get(node, empty_idx) as f64 - max_ls);
+            acc += 10f64.powf(store.get(node, empty_idx) as f64 - max_ls);
             let kmax = s.min(p);
             for k in 1..=kmax {
                 self.comb.clear();
@@ -81,7 +80,7 @@ impl OrderScorer for SumScorer<'_> {
                         self.cand.push(self.preds[ci]);
                     }
                     let idx = layout.index_of(&self.cand);
-                    let ls = self.table.get(node, idx) as f64;
+                    let ls = store.get(node, idx) as f64;
                     acc += ((ls - max_ls) * ln10).exp();
                     if !next_combination(p, &mut self.comb) {
                         break;
@@ -120,7 +119,7 @@ mod tests {
             let tm = max.score_order(&order, &mut b);
             assert!(ts >= tm - 1e-6, "sum {ts} < max {tm}");
             // and the sum can't exceed max + log10(#sets) per node
-            let layout_total = (table.layout().total() as f64).log10() * 8.0;
+            let layout_total = (table.subsets() as f64).log10() * 8.0;
             assert!(ts <= tm + layout_total);
         }
     }

@@ -4,12 +4,12 @@
 
 use bnlearn::bn::sampling::forward_sample;
 use bnlearn::bn::{Dag, Network};
-use bnlearn::coordinator::{run_learning, EngineKind, RunConfig};
+use bnlearn::coordinator::{run_learning, EngineKind, RunConfig, StoreKind};
 use bnlearn::data::Dataset;
 use bnlearn::eval::roc::roc_point;
 use bnlearn::mcmc::{run_chains_parallel, McmcChain, Order};
 use bnlearn::priors::InterfaceMatrix;
-use bnlearn::score::{BdeParams, ScoreTable};
+use bnlearn::score::{BdeParams, HashScoreStore, ScoreStore, ScoreTable, NEG_SENTINEL};
 use bnlearn::scorer::{BestGraph, BitVecScorer, OrderScorer, SerialScorer, SumScorer};
 use bnlearn::util::Pcg32;
 
@@ -171,6 +171,136 @@ fn roc_of_true_graph_is_perfect() {
     let p = roc_point(&dag, &dag);
     assert_eq!(p.tpr, 1.0);
     assert_eq!(p.fpr, 0.0);
+}
+
+#[test]
+fn dense_and_hash_stores_agree_on_30_node_network() {
+    // The acceptance sweep for the hash backend: on a 30-node random
+    // network, the serial max engine must produce bit-identical totals
+    // and argmax parent sets over either store (dominance pruning is
+    // exact for strict-improvement max scans).
+    let n = 30usize;
+    let mut rng = Pcg32::new(9001);
+    let dag = bnlearn::bn::random::random_dag(n, 3, n + 6, &mut rng);
+    let net = Network::with_random_cpts(dag, vec![2; n], &mut rng);
+    let data = forward_sample(&net, 120, &mut rng);
+    let params = BdeParams::default();
+    let dense = ScoreTable::build(&data, params, 3, 4);
+    let hash = HashScoreStore::build(&data, params, 3, 4, None);
+
+    // Pointwise: hash entries mirror the dense grid or read back poisoned.
+    let total = dense.subsets();
+    for i in 0..n {
+        for idx in 0..total {
+            let h = ScoreStore::get(&hash, i, idx);
+            if h > NEG_SENTINEL {
+                assert_eq!(h, dense.get(i, idx), "i={i} idx={idx}");
+            }
+        }
+    }
+    assert!(
+        hash.stored_entries() < n * total,
+        "hash kept everything: {} of {}",
+        hash.stored_entries(),
+        n * total
+    );
+
+    // Engine-level: identical scores and graphs on random orders.
+    let mut on_dense = SerialScorer::new(&dense);
+    let mut on_hash = SerialScorer::new(&hash);
+    let mut order_rng = Pcg32::new(9002);
+    let mut a = BestGraph::new(n);
+    let mut b = BestGraph::new(n);
+    for trial in 0..6 {
+        let order = Order::random(n, &mut order_rng);
+        let td = on_dense.score_order(&order, &mut a);
+        let th = on_hash.score_order(&order, &mut b);
+        assert_eq!(td, th, "trial {trial}");
+        assert_eq!(a.parents, b.parents, "trial {trial}");
+        assert_eq!(a.node_scores, b.node_scores, "trial {trial}");
+    }
+}
+
+#[test]
+fn hash_store_poisons_self_parent_subsets() {
+    let (data, table, _) = workload(8, 120, 77);
+    let hash = HashScoreStore::build(&data, BdeParams::default(), 3, 2, None);
+    let layout = ScoreStore::layout(&hash).clone();
+    for i in 0..8usize {
+        layout.for_each(|idx, subset| {
+            if subset.contains(&i) {
+                assert_eq!(ScoreStore::get(&hash, i, idx), NEG_SENTINEL, "i={i} {subset:?}");
+                assert_eq!(table.get(i, idx), NEG_SENTINEL, "i={i} {subset:?}");
+            }
+        });
+    }
+}
+
+#[test]
+fn layout_rank_unrank_roundtrip_property_through_stores() {
+    // Combinadic rank ⇄ unrank property at the store seam: random sorted
+    // subsets index into the layout and decode back; both backends agree
+    // through `score_of` on the decoded set.
+    let (data, table, _) = workload(9, 100, 79);
+    let hash = HashScoreStore::build(&data, BdeParams::default(), 3, 2, None);
+    let layout = table.layout().clone();
+    let mut rng = Pcg32::new(80);
+    let mut buf = vec![0usize; layout.s().max(1)];
+    for _ in 0..500 {
+        let k = rng.gen_range(layout.s() + 1);
+        // random sorted k-subset of {0..8}
+        let mut subset: Vec<usize> = Vec::with_capacity(k);
+        while subset.len() < k {
+            let v = rng.gen_range(9);
+            if !subset.contains(&v) {
+                subset.push(v);
+            }
+        }
+        subset.sort_unstable();
+        let idx = layout.index_of(&subset);
+        assert_eq!(layout.subset_of(idx, &mut buf), &subset[..]);
+        for i in 0..9usize {
+            let h = hash.score_of(i, &subset);
+            if h > NEG_SENTINEL {
+                assert_eq!(h, table.score_of(i, &subset), "i={i} {subset:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn bitvec_engine_agrees_across_store_backends() {
+    let (data, table, _) = workload(8, 150, 81);
+    let hash = HashScoreStore::build(&data, BdeParams::default(), 3, 2, None);
+    let mut on_dense = BitVecScorer::bounded(&table);
+    let mut on_hash = BitVecScorer::bounded(&hash);
+    let mut rng = Pcg32::new(82);
+    let mut a = BestGraph::new(8);
+    let mut b = BestGraph::new(8);
+    for _ in 0..5 {
+        let order = Order::random(8, &mut rng);
+        let td = on_dense.score_order(&order, &mut a);
+        let th = on_hash.score_order(&order, &mut b);
+        assert_eq!(td, th);
+        assert_eq!(a.parents, b.parents);
+    }
+}
+
+#[test]
+fn run_learning_exercises_hash_store_end_to_end() {
+    let cfg = RunConfig {
+        network: "random:10:12".into(),
+        rows: 400,
+        iters: 300,
+        seed: 83,
+        store: StoreKind::Hash,
+        ..RunConfig::default()
+    };
+    let report = run_learning(&cfg, None).unwrap();
+    assert_eq!(report.store_name, "hash");
+    assert!(report.store_bytes > 0);
+    assert!(report.result.best_score().is_finite());
+    assert!(report.summary().contains("store=hash"));
 }
 
 #[test]

@@ -2,7 +2,10 @@
 //! compiled over PJRT, device-resident operands — must agree with the
 //! pure-rust serial engine on real scoring workloads.
 //!
-//! Requires `make artifacts` (skips with a message otherwise).
+//! Requires the `xla` cargo feature (the whole file is compiled out
+//! otherwise) and `make artifacts` (skips with a message if missing).
+
+#![cfg(feature = "xla")]
 
 use bnlearn::bn::sampling::forward_sample;
 use bnlearn::bn::Network;

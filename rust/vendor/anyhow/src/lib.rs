@@ -1,0 +1,183 @@
+//! Offline stand-in for the `anyhow` crate, covering exactly the subset
+//! bnlearn uses: `Error`, `Result`, the `anyhow!` / `bail!` macros, and
+//! the `Context` extension trait on `Result` and `Option`.
+//!
+//! Behaviour matches anyhow where it matters to callers:
+//! * `{}` prints the outermost message, `{:#}` the whole context chain
+//!   (`outer: inner: root`), `{:?}` a `Caused by:` listing;
+//! * `Error` converts from any `std::error::Error + Send + Sync + 'static`
+//!   (so `?` works on parse/io errors), and deliberately does **not**
+//!   implement `std::error::Error` itself (same coherence trick as the
+//!   real crate).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chained error value.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// New error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The messages from outermost to root cause.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            f.write_str("\n\nCaused by:")?;
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Flatten the std source chain into the context chain.
+        let mut msgs: Vec<String> = Vec::new();
+        let mut cur: Option<&(dyn StdError + 'static)> = Some(&e);
+        while let Some(c) = cur {
+            msgs.push(c.to_string());
+            cur = c.source();
+        }
+        let mut err = Error::msg(msgs.pop().expect("at least one message"));
+        while let Some(m) = msgs.pop() {
+            err = err.context(m);
+        }
+        err
+    }
+}
+
+/// Attach context to fallible values (`Result` / `Option`).
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Lazily-built variant of [`Context::context`].
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_num(s: &str) -> Result<i32> {
+        let v: i32 = s.parse().context("parsing number")?;
+        Ok(v)
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e = Error::msg("root").context("mid").context("top");
+        assert_eq!(format!("{e}"), "top");
+        assert_eq!(format!("{e:#}"), "top: mid: root");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        assert_eq!(parse_num("41").unwrap(), 41);
+        let e = parse_num("nope").unwrap_err();
+        assert_eq!(format!("{e}"), "parsing number");
+        assert!(format!("{e:#}").contains("invalid digit"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros() {
+        fn f(fail: bool) -> Result<u8> {
+            if fail {
+                bail!("failed with code {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "failed with code 7");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.chain(), vec!["x = 3"]);
+    }
+}
