@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
                 format!("{:.3}", report.sampling_secs),
                 format!("{:.4}", report.per_iter_secs * 1e3),
                 format!("{:.3}", report.total_secs()),
-                format!("{:.3}", report.result.best_score()),
+                format!("{:.3}", report.result.best_score().unwrap_or(f64::NAN)),
                 format!("{:.3}", report.roc.tpr),
                 format!("{:.4}", report.roc.fpr),
                 report.shd.to_string(),

@@ -44,14 +44,14 @@ fn main() -> anyhow::Result<()> {
         let report = run_learning_on(&cfg, &workload, None)?;
         println!(
             "p={p:<5}: TPR {:.3} FPR {:.4} SHD {:<3} score {:.2}",
-            report.roc.tpr, report.roc.fpr, report.shd, report.result.best_score()
+            report.roc.tpr, report.roc.fpr, report.shd, report.result.best_score().unwrap_or(f64::NAN)
         );
         csv.push_row(vec![
             p.to_string(),
             format!("{:.4}", report.roc.tpr),
             format!("{:.4}", report.roc.fpr),
             report.shd.to_string(),
-            format!("{:.2}", report.result.best_score()),
+            format!("{:.2}", report.result.best_score().unwrap_or(f64::NAN)),
         ]);
     }
 

@@ -7,7 +7,10 @@
 //! exactly this sequence): workload → preprocessing into a pluggable
 //! score store → engine from the registry → MCMC → evaluation.
 
-use bnlearn::coordinator::{build_store, make_engine, EngineKind, StoreKind, Workload};
+use anyhow::Context;
+use bnlearn::coordinator::{
+    build_store, make_engine, run_posterior_on, EngineKind, RunConfig, StoreKind, Workload,
+};
 use bnlearn::eval::roc::roc_point;
 use bnlearn::eval::shd;
 use bnlearn::mcmc::run_chain;
@@ -38,9 +41,9 @@ fn main() -> anyhow::Result<()> {
         result.stats.iterations, result.sampling_secs, result.stats.accept_rate());
 
     // 4. Evaluate against the generating structure.
-    let best = result.best_dag();
+    let best = result.best_dag().context("run produced no graphs")?;
     let point = roc_point(workload.truth_dag(), best);
-    println!("best score: {:.3}", result.best_score());
+    println!("best score: {:.3}", result.best_score().unwrap_or(f64::NAN));
     println!("recovered {} edges | TPR {:.3} FPR {:.4} SHD {}",
         best.edge_count(), point.tpr, point.fpr, shd(workload.truth_dag(), best));
 
@@ -49,6 +52,29 @@ fn main() -> anyhow::Result<()> {
     for (from, to) in best.edges() {
         let mark = if workload.truth_dag().has_edge(from, to) { "true " } else { "extra" };
         println!("  [{mark}] {} -> {}", names[from], names[to]);
+    }
+
+    // 5. Beyond the argmax: Bayesian model averaging over the same
+    //    machinery — per-edge posteriors, convergence diagnostics, a
+    //    consensus graph, and a threshold-swept ROC curve (`learn
+    //    --posterior` wraps exactly this).
+    let cfg = RunConfig {
+        network: "asia".into(),
+        rows: 2000,
+        iters: 1500,
+        chains: 2,
+        burnin: 250,
+        thin: 2,
+        seed: 7,
+        ..RunConfig::default()
+    };
+    let posterior = run_posterior_on(&cfg, &workload, None)?;
+    println!("\n{}", posterior.summary());
+    println!("consensus edges with posterior probability:");
+    for (from, to) in posterior.consensus.edges() {
+        let p = posterior.edge_probs[to * n + from];
+        let mark = if workload.truth_dag().has_edge(from, to) { "true " } else { "extra" };
+        println!("  [{mark}] P={p:.3} {} -> {}", names[from], names[to]);
     }
     Ok(())
 }

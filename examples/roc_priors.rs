@@ -62,7 +62,8 @@ fn main() -> anyhow::Result<()> {
     ]);
 
     // Points 2–5: priors targeting the base run's mistakes.
-    let base_dag = base.result.best_dag().clone();
+    let base_dag =
+        base.result.best_dag().expect("baseline run produced no graphs").clone();
     let settings = [
         (2, 0.7, 0.2, 0.2),
         (3, 0.7, 0.2, 0.4),

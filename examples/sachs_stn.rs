@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!("{}", report.summary());
-    let best = report.result.best_dag();
+    let best = report.result.best_dag().expect("run produced no graphs");
     println!("\nrecovered signaling edges (engine: {}):", report.config.engine.name());
     for (from, to) in best.edges() {
         let mark = if workload.truth_dag().has_edge(from, to) {

@@ -16,7 +16,10 @@
 #[path = "bench_util.rs"]
 mod bench_util;
 
-use bench_util::{fmt_s, hash_store_for, per_iter_secs, quick_mode, scaling_workload, store_mb};
+use bench_util::{
+    fmt_s, hash_store_for, per_iter_secs, posterior_overhead, quick_mode, scaling_workload,
+    store_mb,
+};
 use bnlearn::mcmc::Order;
 use bnlearn::score::{BdeParams, ScoreStore};
 use bnlearn::scorer::{BestGraph, OrderScorer, RecomputeScorer, SerialScorer};
@@ -95,5 +98,29 @@ fn main() -> anyhow::Result<()> {
     println!("wrote results/ablation_hashtable.csv");
     println!("\npaper claim: >10x on GPP — any chain longer than the breakeven count wins;");
     println!("the hash backend buys the same speedup class at a fraction of the table bytes.");
+
+    // --- posterior marginal-accumulation overhead (the 30-node sweep) ---
+    let overhead_sizes: Vec<usize> = if quick_mode() { vec![11] } else { vec![15, 30] };
+    let mut ocsv =
+        Table::new(&["n", "iters_per_sec_plain", "iters_per_sec_posterior", "posterior_overhead"]);
+    println!("\nposterior accumulation overhead (serial engine, dense store):");
+    for &n in &overhead_sizes {
+        let (_, table) = scaling_workload(n, 4, 400, 0x9A00 + n as u64);
+        let iters = if quick_mode() { 50 } else { 200 };
+        let (plain, with_marginals) = posterior_overhead(&table, n, iters, 0xBEEF + n as u64);
+        let ratio = plain / with_marginals;
+        println!(
+            "  n={n:>2}: plain {plain:>10.1} it/s  with-marginals {with_marginals:>10.1} it/s  overhead {ratio:>5.2}x"
+        );
+        ocsv.push_row(vec![
+            n.to_string(),
+            format!("{plain:.1}"),
+            format!("{with_marginals:.1}"),
+            format!("{ratio:.3}"),
+        ]);
+    }
+    println!("\n{}", ocsv.to_markdown());
+    ocsv.write_csv("results/posterior_overhead.csv")?;
+    println!("wrote results/posterior_overhead.csv");
     Ok(())
 }

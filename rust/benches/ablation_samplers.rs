@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     for &budget in budgets {
         let order_best = {
             let mut scorer = SerialScorer::new(&table);
-            run_chain(&mut scorer, n, budget, 1, 11).best_score()
+            run_chain(&mut scorer, n, budget, 1, 11).best_score().expect("no graphs tracked")
         };
         let graph_same = {
             let mut chain = GraphChain::new(&table, 1, 12);

@@ -9,8 +9,11 @@
 use bnlearn::bn::sampling::forward_sample;
 use bnlearn::bn::Network;
 use bnlearn::data::Dataset;
+use bnlearn::mcmc::McmcChain;
+use bnlearn::posterior::MarginalAccumulator;
 use bnlearn::score::{BdeParams, HashScoreStore, ScoreStore, ScoreTable};
-use bnlearn::util::Pcg32;
+use bnlearn::scorer::SerialScorer;
+use bnlearn::util::{Pcg32, Timer};
 
 /// True when quick (CI-ish) mode is requested.
 pub fn quick_mode() -> bool {
@@ -41,6 +44,32 @@ pub fn hash_store_for(data: &Dataset, s: usize) -> HashScoreStore {
 /// `min_iters` runs and at least `min_secs` of wall time.
 pub fn per_iter_secs(min_secs: f64, min_iters: usize, f: impl FnMut()) -> f64 {
     bnlearn::util::timer::bench_secs_per_iter(min_secs, min_iters, f)
+}
+
+/// Iterations/sec of a serial-engine chain with posterior marginal
+/// accumulation off vs on — the `posterior_overhead` column of the
+/// scaling sweeps. Returns `(iters_per_sec_plain, iters_per_sec_posterior)`;
+/// the ratio is what `--posterior` costs on top of plain sampling.
+pub fn posterior_overhead(table: &ScoreTable, n: usize, iters: u64, seed: u64) -> (f64, f64) {
+    let t = Timer::start();
+    {
+        let mut scorer = SerialScorer::new(table);
+        let mut chain = McmcChain::new(&mut scorer, n, 1, seed);
+        chain.run(iters);
+    }
+    let plain = iters as f64 / t.elapsed_secs().max(1e-12);
+
+    let t = Timer::start();
+    let samples = {
+        let mut scorer = SerialScorer::new(table);
+        let mut chain = McmcChain::new(&mut scorer, n, 1, seed);
+        let mut acc = MarginalAccumulator::new(n, 0, 1);
+        chain.run_observed(iters, |order, _score| acc.observe(order, table));
+        acc.state().samples
+    };
+    let with_marginals = iters as f64 / t.elapsed_secs().max(1e-12);
+    std::hint::black_box(samples);
+    (plain, with_marginals)
 }
 
 /// Resident megabytes of a score store (per-backend memory column for the

@@ -101,6 +101,26 @@ pub struct RunConfig {
     pub threads: usize,
     /// Artifacts directory for the XLA engine.
     pub artifacts_dir: std::path::PathBuf,
+    /// Posterior mode: accumulate edge marginals, diagnostics, consensus
+    /// graph, and a threshold-swept ROC curve instead of only the argmax.
+    pub posterior: bool,
+    /// Orders discarded before marginal accumulation (posterior mode).
+    pub burnin: u64,
+    /// Keep every `thin`-th post-burn-in order (posterior mode, >= 1).
+    pub thin: u64,
+    /// Edge-probability threshold of the consensus graph.
+    pub threshold: f64,
+    /// Record per-iteration score traces (enables PSRF/ESS in the
+    /// report; posterior mode records regardless).
+    pub trace: bool,
+    /// Where `--trace` CSV dumps go.
+    pub trace_out: std::path::PathBuf,
+    /// Write a posterior checkpoint every N iterations (0 = never).
+    pub checkpoint_every: u64,
+    /// Posterior checkpoint file.
+    pub checkpoint_path: std::path::PathBuf,
+    /// Resume a posterior run from this checkpoint.
+    pub resume: Option<std::path::PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -119,6 +139,15 @@ impl Default for RunConfig {
             noise: 0.0,
             threads: default_threads(),
             artifacts_dir: crate::runtime::default_artifacts_dir(),
+            posterior: false,
+            burnin: 0,
+            thin: 1,
+            threshold: 0.5,
+            trace: false,
+            trace_out: "results/trace.csv".into(),
+            checkpoint_every: 0,
+            checkpoint_path: "results/posterior.ckpt".into(),
+            resume: None,
         }
     }
 }
@@ -151,11 +180,27 @@ impl RunConfig {
                 "--noise" => cfg.noise = next()?.parse()?,
                 "--threads" => cfg.threads = next()?.parse()?,
                 "--artifacts" => cfg.artifacts_dir = next()?.into(),
+                // boolean flags take no value
+                "--posterior" => cfg.posterior = true,
+                "--trace" => cfg.trace = true,
+                "--burnin" => cfg.burnin = next()?.parse()?,
+                "--thin" => cfg.thin = next()?.parse()?,
+                "--threshold" => cfg.threshold = next()?.parse()?,
+                "--trace-out" => cfg.trace_out = next()?.into(),
+                "--checkpoint-every" => cfg.checkpoint_every = next()?.parse()?,
+                "--checkpoint" => cfg.checkpoint_path = next()?.into(),
+                "--resume" => cfg.resume = Some(next()?.into()),
                 other => bail!("unknown flag {other:?}"),
             }
         }
         if cfg.chains == 0 {
             bail!("--chains must be >= 1");
+        }
+        if cfg.thin == 0 {
+            bail!("--thin must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&cfg.threshold) {
+            bail!("--threshold must be in [0, 1], got {}", cfg.threshold);
         }
         Ok(cfg)
     }
@@ -190,6 +235,37 @@ mod tests {
         assert_eq!(c.engine, EngineKind::Xla);
         assert_eq!(c.noise, 0.05);
         assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn parses_posterior_flags() {
+        let c = RunConfig::from_args(&args(
+            "--posterior --burnin 200 --thin 4 --threshold 0.7 --trace --checkpoint-every 500 \
+             --checkpoint results/run.ckpt --resume results/old.ckpt --network asia",
+        ))
+        .unwrap();
+        assert!(c.posterior);
+        assert!(c.trace);
+        assert_eq!(c.burnin, 200);
+        assert_eq!(c.thin, 4);
+        assert_eq!(c.threshold, 0.7);
+        assert_eq!(c.checkpoint_every, 500);
+        assert_eq!(c.checkpoint_path, std::path::PathBuf::from("results/run.ckpt"));
+        assert_eq!(c.resume, Some(std::path::PathBuf::from("results/old.ckpt")));
+        assert_eq!(c.network, "asia");
+        // defaults stay off
+        let d = RunConfig::default();
+        assert!(!d.posterior && !d.trace);
+        assert_eq!(d.thin, 1);
+        assert_eq!(d.checkpoint_every, 0);
+        assert!(d.resume.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_posterior_values() {
+        assert!(RunConfig::from_args(&args("--thin 0")).is_err());
+        assert!(RunConfig::from_args(&args("--threshold 1.5")).is_err());
+        assert!(RunConfig::from_args(&args("--threshold -0.1")).is_err());
     }
 
     #[test]

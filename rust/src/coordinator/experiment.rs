@@ -7,14 +7,17 @@
 //! table type (the device-bound XLA engine is the one exception, built
 //! on the chain thread because PJRT handles are not `Send`).
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::config::{EngineKind, RunConfig};
 use super::registry;
 use super::workload::Workload;
-use crate::eval::roc::{roc_point, RocPoint};
+use crate::bn::Dag;
+use crate::eval::roc::{auc_from_points, implied_auc, roc_point, RocPoint};
 use crate::eval::shd;
-use crate::mcmc::runner::{run_chains_parallel, LearnResult};
+use crate::mcmc::runner::{run_chains_parallel_traced, LearnResult};
+use crate::posterior::sampler::{run_posterior_chains, SamplerOptions};
+use crate::posterior::{consensus, diagnostics};
 use crate::priors::InterfaceMatrix;
 use crate::score::{BdeParams, ScoreStore};
 use crate::util::Timer;
@@ -41,6 +44,12 @@ pub struct LearnReport {
     pub store_bytes: usize,
     /// Entries the store holds explicitly.
     pub store_entries: usize,
+    /// Gelman–Rubin PSRF over the chain traces (needs `--trace` and
+    /// at least two chains).
+    pub psrf: Option<f64>,
+    /// Total effective sample size over the chain traces (needs
+    /// `--trace`).
+    pub ess: Option<f64>,
 }
 
 impl LearnReport {
@@ -51,16 +60,25 @@ impl LearnReport {
 
     /// One human-readable summary line.
     pub fn summary(&self) -> String {
+        let (score, n) = match self.result.best.first() {
+            Some((s, d)) => (format!("{s:.3}"), d.n().to_string()),
+            None => ("n/a".into(), "?".into()),
+        };
+        let diag = match (self.psrf, self.ess) {
+            (Some(r), Some(e)) => format!(" PSRF={r:.3} ESS={e:.1}"),
+            (None, Some(e)) => format!(" ESS={e:.1}"),
+            _ => String::new(),
+        };
         format!(
-            "net={} n={} engine={} store={}({:.1}MB) iters={} chains={} | score={:.3} TPR={:.3} FPR={:.4} SHD={} | preproc={:.2}s setup={:.2}s sample={:.2}s ({:.3}ms/iter) accept={:.2}",
+            "net={} n={} engine={} store={}({:.1}MB) iters={} chains={} | score={} TPR={:.3} FPR={:.4} SHD={} | preproc={:.2}s setup={:.2}s sample={:.2}s ({:.3}ms/iter) accept={:.2}{}",
             self.config.network,
-            self.result.best_dag().n(),
+            n,
             self.config.engine.name(),
             self.store_name,
             self.store_bytes as f64 / (1024.0 * 1024.0),
             self.config.iters,
             self.config.chains,
-            self.result.best_score(),
+            score,
             self.roc.tpr,
             self.roc.fpr,
             self.shd,
@@ -69,6 +87,7 @@ impl LearnReport {
             self.sampling_secs,
             self.per_iter_secs * 1e3,
             self.result.stats.accept_rate(),
+            diag,
         )
     }
 }
@@ -110,7 +129,7 @@ pub fn run_learning_on(
         EngineKind::Xla => run_xla_chain(cfg, store.as_dyn(), n, &mut setup_secs)?,
         kind => {
             let store_ref = &store;
-            run_chains_parallel(
+            run_chains_parallel_traced(
                 |_| {
                     registry::make_engine(kind, store_ref, &workload.data, params, cfg.s)
                         .expect("validated engine construction")
@@ -120,13 +139,19 @@ pub fn run_learning_on(
                 cfg.topk,
                 cfg.seed,
                 cfg.chains,
+                cfg.trace,
             )
         }
     };
 
     let sampling_secs = result.sampling_secs;
     let per_iter_secs = sampling_secs / (cfg.iters.max(1) as f64);
-    let best = result.best_dag().clone();
+    let best = result
+        .best_dag()
+        .context("learning tracked no graphs (zero-iteration empty run?)")?
+        .clone();
+    let psrf = diagnostics::psrf(&result.traces);
+    let ess = diagnostics::ess_total(&result.traces);
     Ok(LearnReport {
         config: cfg.clone(),
         roc: roc_point(workload.truth_dag(), &best),
@@ -139,6 +164,8 @@ pub fn run_learning_on(
         store_name: store.name(),
         store_bytes: store.bytes(),
         store_entries: store.stored_entries(),
+        psrf,
+        ess,
     })
 }
 
@@ -153,7 +180,14 @@ fn run_xla_chain(
     let t = Timer::start();
     let mut scorer = crate::runtime::XlaScorer::new(&cfg.artifacts_dir, store)?;
     *setup_secs = t.elapsed_secs();
-    Ok(crate::mcmc::runner::run_chain(&mut scorer, n, cfg.iters, cfg.topk, cfg.seed))
+    Ok(crate::mcmc::runner::run_chain_traced(
+        &mut scorer,
+        n,
+        cfg.iters,
+        cfg.topk,
+        cfg.seed,
+        cfg.trace,
+    ))
 }
 
 /// Feature-off stand-in: fail with a pointer at the gate.
@@ -168,6 +202,201 @@ fn run_xla_chain(
         "engine 'xla' needs the artifacts runtime, which is compiled out — rebuild with \
          `--features xla`"
     )
+}
+
+/// Everything a `--posterior` run produces: the usual learning result
+/// plus the edge-probability matrix, convergence diagnostics, the
+/// consensus graph, and the threshold-swept ROC curve.
+pub struct PosteriorReport {
+    pub config: RunConfig,
+    /// Best graphs + aggregate stats + per-chain traces.
+    pub result: LearnResult,
+    /// Node count.
+    pub n: usize,
+    /// Orders accumulated into the marginal matrix (post burn-in/thin,
+    /// summed over chains).
+    pub samples: u64,
+    /// `edge_probs[child * n + parent]` = posterior `P(parent → child)`.
+    pub edge_probs: Vec<f64>,
+    /// Gelman–Rubin PSRF over post-burn-in traces (None for one chain).
+    pub psrf: Option<f64>,
+    /// Total effective sample size over post-burn-in traces.
+    pub ess: Option<f64>,
+    /// Consensus DAG at `config.threshold` (cycle-repaired).
+    pub consensus: Dag,
+    /// ROC of the consensus DAG.
+    pub consensus_point: RocPoint,
+    /// `(threshold, roc)` sweep over every distinct edge probability.
+    pub curve: Vec<(f64, RocPoint)>,
+    /// Trapezoidal AUC of the swept curve.
+    pub auc: f64,
+    /// AUC implied by the single best graph — the baseline the curve is
+    /// compared against.
+    pub baseline_auc: f64,
+    /// Preprocessing wall-clock.
+    pub preprocess_secs: f64,
+    /// Sampling wall-clock (includes checkpoint writes).
+    pub sampling_secs: f64,
+    /// Iterations completed per chain.
+    pub iters_done: u64,
+}
+
+impl PosteriorReport {
+    /// One human-readable summary line (the CI smoke test greps the
+    /// `PSRF=`/`AUC=` fields for finiteness).
+    pub fn summary(&self) -> String {
+        let psrf = match self.psrf {
+            Some(r) => format!("PSRF={r:.3}"),
+            None => "PSRF=n/a".into(),
+        };
+        let ess = match self.ess {
+            Some(e) => format!("ESS={e:.1}"),
+            None => "ESS=n/a".into(),
+        };
+        let best = match self.result.best_score() {
+            Some(s) => format!("{s:.3}"),
+            None => "n/a".into(),
+        };
+        format!(
+            "posterior net={} n={} engine={} chains={} iters={} samples={} | AUC={:.3} baseAUC={:.3} {psrf} {ess} | consensus thr={:.2}: {} edges TPR={:.3} FPR={:.4} | best={best} accept={:.2} | preproc={:.2}s sample={:.2}s",
+            self.config.network,
+            self.n,
+            self.config.engine.name(),
+            self.config.chains,
+            self.iters_done,
+            self.samples,
+            self.auc,
+            self.baseline_auc,
+            self.config.threshold,
+            self.consensus.edge_count(),
+            self.consensus_point.tpr,
+            self.consensus_point.fpr,
+            self.result.stats.accept_rate(),
+            self.preprocess_secs,
+            self.sampling_secs,
+        )
+    }
+}
+
+/// FNV-1a fingerprint of everything that shapes the workload and the
+/// score table. Baked into posterior checkpoints so `--resume` against
+/// different data or scoring parameters (which would silently mix two
+/// posteriors) is rejected; `--iters`, `--chains`-independent knobs
+/// like `--threshold`, and output paths are deliberately excluded —
+/// those may change across a resume.
+fn posterior_fingerprint(cfg: &RunConfig) -> u64 {
+    let text = format!(
+        "{}|{}|{}|{}|{}|{}|{}",
+        cfg.network,
+        cfg.rows,
+        cfg.noise.to_bits(),
+        cfg.gamma.to_bits(),
+        cfg.s,
+        cfg.engine.name(),
+        cfg.store.name()
+    );
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for byte in text.bytes() {
+        hash ^= byte as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    hash
+}
+
+/// Run the posterior pipeline described by `cfg` (requires
+/// `cfg.posterior`-style flags; the `--posterior` CLI mode lands here).
+pub fn run_posterior(cfg: &RunConfig, priors: Option<&InterfaceMatrix>) -> Result<PosteriorReport> {
+    let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
+    run_posterior_on(cfg, &workload, priors)
+}
+
+/// Same, over an already-built workload.
+pub fn run_posterior_on(
+    cfg: &RunConfig,
+    workload: &Workload,
+    priors: Option<&InterfaceMatrix>,
+) -> Result<PosteriorReport> {
+    registry::validate_posterior(cfg.engine, cfg.store, cfg.chains)?;
+    let n = workload.n();
+    let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
+
+    // ---- preprocessing into the (dense) backend ----
+    let timer = Timer::start();
+    let ppf = priors.map(|m| m.ppf_matrix());
+    let store = registry::build_store(
+        cfg.store,
+        &workload.data,
+        params,
+        cfg.s,
+        cfg.threads,
+        ppf.as_deref(),
+    );
+    let preprocess_secs = timer.elapsed_secs();
+
+    // ---- checkpointed multi-chain posterior sampling ----
+    let opts = SamplerOptions {
+        n,
+        iters: cfg.iters,
+        topk: cfg.topk,
+        seed: cfg.seed,
+        fingerprint: posterior_fingerprint(cfg),
+        chains: cfg.chains,
+        burnin: cfg.burnin,
+        thin: cfg.thin,
+        record_trace: true,
+        checkpoint_every: cfg.checkpoint_every,
+        checkpoint_path: Some(cfg.checkpoint_path.clone()),
+        resume: cfg.resume.clone(),
+    };
+    let run = run_posterior_chains(
+        |_| {
+            registry::make_engine(cfg.engine, &store, &workload.data, params, cfg.s)
+                .expect("validated engine construction")
+        },
+        &store,
+        &opts,
+    )?;
+
+    // ---- posterior products ----
+    let edge_probs = run.marginals.edge_probabilities();
+    let samples = run.marginals.samples;
+    let burn = cfg.burnin as usize;
+    let post_traces: Vec<Vec<f64>> = run
+        .result
+        .traces
+        .iter()
+        .map(|t| t.iter().copied().skip(burn).collect())
+        .collect();
+    let psrf = diagnostics::psrf(&post_traces);
+    let ess = diagnostics::ess_total(&post_traces);
+
+    let truth = workload.truth_dag();
+    let consensus_graph = consensus::consensus_dag(n, &edge_probs, cfg.threshold);
+    let consensus_point = roc_point(truth, &consensus_graph);
+    let thresholds = consensus::default_thresholds(&edge_probs);
+    let curve = consensus::threshold_sweep(truth, &edge_probs, &thresholds);
+    let points: Vec<RocPoint> = curve.iter().map(|(_, p)| *p).collect();
+    let auc = auc_from_points(&points);
+    let baseline_auc =
+        run.result.best_dag().map(|d| implied_auc(roc_point(truth, d))).unwrap_or(0.5);
+
+    Ok(PosteriorReport {
+        config: cfg.clone(),
+        n,
+        samples,
+        edge_probs,
+        psrf,
+        ess,
+        consensus: consensus_graph,
+        consensus_point,
+        curve,
+        auc,
+        baseline_auc,
+        preprocess_secs,
+        sampling_secs: run.result.sampling_secs,
+        iters_done: run.iters_done,
+        result: run.result,
+    })
 }
 
 #[cfg(test)]
@@ -263,13 +492,12 @@ mod tests {
         };
         let dense = mk(StoreKind::Dense);
         let hash = mk(StoreKind::Hash);
-        assert!(
-            (dense.result.best_score() - hash.result.best_score()).abs() < 1e-9,
-            "dense {} vs hash {}",
-            dense.result.best_score(),
-            hash.result.best_score()
+        let (ds, hs) = (dense.result.best_score().unwrap(), hash.result.best_score().unwrap());
+        assert!((ds - hs).abs() < 1e-9, "dense {ds} vs hash {hs}");
+        assert_eq!(
+            dense.result.best_dag().unwrap().edges(),
+            hash.result.best_dag().unwrap().edges()
         );
-        assert_eq!(dense.result.best_dag().edges(), hash.result.best_dag().edges());
         assert_eq!(hash.store_name, "hash");
         assert!(hash.store_entries < dense.store_entries);
     }
@@ -286,5 +514,87 @@ mod tests {
         };
         let msg = format!("{:#}", run_learning(&cfg, None).unwrap_err());
         assert!(msg.contains("dense"), "{msg}");
+    }
+
+    #[test]
+    fn traced_learning_reports_diagnostics() {
+        let cfg = RunConfig {
+            network: "asia".into(),
+            rows: 300,
+            iters: 200,
+            chains: 2,
+            trace: true,
+            ..RunConfig::default()
+        };
+        let report = run_learning(&cfg, None).unwrap();
+        assert_eq!(report.result.traces.len(), 2);
+        assert!(report.psrf.unwrap().is_finite());
+        assert!(report.ess.unwrap() >= 2.0);
+        assert!(report.summary().contains("PSRF="));
+        // untraced runs report no diagnostics
+        let cfg = RunConfig { trace: false, ..cfg };
+        let report = run_learning(&cfg, None).unwrap();
+        assert!(report.psrf.is_none() && report.ess.is_none());
+        assert!(!report.summary().contains("PSRF="));
+    }
+
+    #[test]
+    fn posterior_run_produces_calibrated_products() {
+        let cfg = RunConfig {
+            network: "asia".into(),
+            rows: 1000,
+            iters: 600,
+            chains: 2,
+            burnin: 100,
+            thin: 2,
+            seed: 11,
+            ..RunConfig::default()
+        };
+        let report = run_posterior(&cfg, None).unwrap();
+        assert_eq!(report.n, 8);
+        // (600 - 100) / 2 kept per chain
+        assert_eq!(report.samples, 2 * 250);
+        assert!(report.psrf.unwrap().is_finite());
+        assert!(report.ess.unwrap() > 0.0);
+        assert!(report.auc.is_finite() && report.auc > 0.5, "AUC {}", report.auc);
+        assert!(!report.curve.is_empty());
+        assert!(report.consensus.is_acyclic());
+        // probabilities well-formed
+        assert!(report.edge_probs.iter().all(|p| (0.0..=1.0 + 1e-9).contains(p)));
+        // true edges should carry more posterior mass than non-edges
+        let truth = Workload::build(&cfg.network, cfg.rows, 0.0, cfg.seed).unwrap();
+        let (mut on, mut non, mut cnt_on, mut cnt_non) = (0.0, 0.0, 0usize, 0usize);
+        for child in 0..8 {
+            for parent in 0..8 {
+                if parent == child {
+                    continue;
+                }
+                let p = report.edge_probs[child * 8 + parent];
+                if truth.truth_dag().has_edge(parent, child) {
+                    on += p;
+                    cnt_on += 1;
+                } else {
+                    non += p;
+                    cnt_non += 1;
+                }
+            }
+        }
+        assert!(
+            on / cnt_on as f64 > non / cnt_non as f64,
+            "true-edge mean {} vs non-edge mean {}",
+            on / cnt_on as f64,
+            non / cnt_non as f64
+        );
+        assert!(report.summary().contains("AUC="));
+    }
+
+    #[test]
+    fn posterior_rejects_hash_store_and_xla() {
+        let base =
+            RunConfig { network: "asia".into(), rows: 100, iters: 20, ..RunConfig::default() };
+        let cfg = RunConfig { store: StoreKind::Hash, ..base.clone() };
+        assert!(run_posterior(&cfg, None).is_err());
+        let cfg = RunConfig { engine: EngineKind::Xla, ..base };
+        assert!(run_posterior(&cfg, None).is_err());
     }
 }

@@ -8,6 +8,8 @@ pub mod registry;
 pub mod workload;
 
 pub use config::{EngineKind, RunConfig, StoreKind};
-pub use experiment::{run_learning, run_learning_on, LearnReport};
+pub use experiment::{
+    run_learning, run_learning_on, run_posterior, run_posterior_on, LearnReport, PosteriorReport,
+};
 pub use registry::{build_store, make_engine, StoreHandle};
 pub use workload::Workload;

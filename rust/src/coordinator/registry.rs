@@ -111,6 +111,31 @@ pub fn validate(engine: EngineKind, store: StoreKind, chains: usize) -> Result<(
     Ok(())
 }
 
+/// Extra rules for `--posterior` runs, on top of [`validate`]:
+/// * the store must be **dense** — edge marginals log-sum-exp over
+///   *every* consistent parent-set mass, and the hash backend prunes
+///   dominated entries (the same reason `sum` × `hash` is rejected);
+/// * the engine must be host-side — the device engine has no sample
+///   emission hook (its chain never surfaces per-iteration orders to
+///   the accumulator).
+pub fn validate_posterior(engine: EngineKind, store: StoreKind, chains: usize) -> Result<()> {
+    validate(engine, store, chains)?;
+    if store != StoreKind::Dense {
+        bail!(
+            "--posterior sums every parent-set mass, but the '{}' store prunes dominated \
+             entries — use --store dense",
+            store.name()
+        );
+    }
+    if engine == EngineKind::Xla {
+        bail!(
+            "--posterior needs the host-side sample emission hook, which the device engine \
+             does not expose — use --engine serial"
+        );
+    }
+    Ok(())
+}
+
 /// Construct a store-backed order-scoring engine, monomorphized over
 /// the store variant.
 ///
@@ -200,6 +225,18 @@ mod tests {
         assert!(validate(EngineKind::Xla, StoreKind::Dense, 2).is_err());
         assert!(validate(EngineKind::Xla, StoreKind::Hash, 1).is_ok());
         assert!(validate(EngineKind::Serial, StoreKind::Hash, 8).is_ok());
+    }
+
+    #[test]
+    fn validate_posterior_requires_dense_host_engine() {
+        assert!(validate_posterior(EngineKind::Serial, StoreKind::Dense, 4).is_ok());
+        assert!(validate_posterior(EngineKind::Sum, StoreKind::Dense, 2).is_ok());
+        let msg = format!(
+            "{:#}",
+            validate_posterior(EngineKind::Serial, StoreKind::Hash, 1).unwrap_err()
+        );
+        assert!(msg.contains("dense"), "{msg}");
+        assert!(validate_posterior(EngineKind::Xla, StoreKind::Dense, 1).is_err());
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 pub mod roc;
 
-pub use roc::{auc_from_points, confusion, RocPoint};
+pub use roc::{auc_from_points, confusion, implied_auc, RocPoint};
 
 use crate::bn::Dag;
 

@@ -45,6 +45,14 @@ pub fn roc_point(truth: &Dag, learned: &Dag) -> RocPoint {
     }
 }
 
+/// The AUC a *single* learned graph implies: the trapezoid through
+/// (0,0) → point → (1,1). This is the operating-point baseline a
+/// threshold-swept posterior curve is compared against — a curve that
+/// dominates the point everywhere has strictly higher AUC.
+pub fn implied_auc(point: RocPoint) -> f64 {
+    auc_from_points(&[point])
+}
+
 /// Trapezoidal AUC over a set of ROC points (anchored at (0,0) and (1,1)).
 pub fn auc_from_points(points: &[RocPoint]) -> f64 {
     let mut pts: Vec<(f64, f64)> = points.iter().map(|p| (p.fpr, p.tpr)).collect();
@@ -97,5 +105,14 @@ mod tests {
         // Single perfect point → AUC 1.0; diagonal point → 0.5.
         assert!((auc_from_points(&[RocPoint { tpr: 1.0, fpr: 0.0 }]) - 1.0).abs() < 1e-12);
         assert!((auc_from_points(&[RocPoint { tpr: 0.5, fpr: 0.5 }]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn implied_auc_matches_anchored_trapezoid() {
+        let p = RocPoint { tpr: 0.8, fpr: 0.1 };
+        // 0.5·fpr·tpr + (1-fpr)·(tpr+1)/2
+        let expect = 0.5 * 0.1 * 0.8 + 0.9 * 0.9;
+        assert!((implied_auc(p) - expect).abs() < 1e-12);
+        assert!((implied_auc(RocPoint { tpr: 1.0, fpr: 0.0 }) - 1.0).abs() < 1e-12);
     }
 }

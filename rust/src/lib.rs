@@ -14,6 +14,9 @@
 //!   pluggable [`scorer`] engine — serial ("GPP"), baselines, or the
 //!   AOT-compiled XLA executable loaded by [`runtime`] (behind the
 //!   `xla` cargo feature)
+//! * posterior inference: [`posterior`] (exact per-order edge marginals,
+//!   PSRF/ESS convergence diagnostics, consensus graphs, checkpointed
+//!   multi-chain sampling) — `--posterior` runs
 //! * evaluation: [`eval`] (ROC / SHD), experiment drivers in `examples/`
 //!   and `benches/`, orchestrated through [`coordinator`] — whose
 //!   [`coordinator::registry`] is the single place engines and stores
@@ -36,6 +39,7 @@ pub mod data;
 pub mod eval;
 pub mod mcmc;
 pub mod networks;
+pub mod posterior;
 pub mod priors;
 pub mod runtime;
 pub mod score;

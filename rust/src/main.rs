@@ -12,10 +12,11 @@
 //!   bnlearn tables --table1
 
 use anyhow::{bail, Result};
+use std::path::Path;
 
 use bnlearn::bn::counting;
 use bnlearn::combinatorics::ParentSetTable;
-use bnlearn::coordinator::{build_store, run_learning, RunConfig, Workload};
+use bnlearn::coordinator::{build_store, run_learning, run_posterior, RunConfig, Workload};
 use bnlearn::priors::ppf;
 use bnlearn::runtime::{default_artifacts_dir, ArtifactManifest};
 use bnlearn::score::{BdeParams, ScoreStore};
@@ -60,6 +61,11 @@ fn print_usage() {
            --rows N --iters N --chains N --engine serial|xla|bitvec|sum|recompute\n\
            --store dense|hash  (score-store backend; hash prunes dominated sets)\n\
            --s N --gamma F --topk N --seed N --noise P --threads N --artifacts DIR\n\
+           --trace [--trace-out PATH]  (record per-iteration score traces to CSV)\n\
+         \n\
+         posterior flags (learn --posterior; needs --store dense, host engine):\n\
+           --posterior --burnin N --thin N --threshold P\n\
+           --checkpoint-every N --checkpoint PATH --resume PATH\n\
          \n\
          tables flags: --table1 | --ppf | --pst-mem"
     );
@@ -67,17 +73,89 @@ fn print_usage() {
 
 fn cmd_learn(args: &[String]) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
+    if cfg.posterior {
+        return cmd_posterior(&cfg);
+    }
     let report = run_learning(&cfg, None)?;
     println!("{}", report.summary());
+    if cfg.trace {
+        dump_traces(&cfg.trace_out, &report.result.traces)?;
+    }
     println!("\ntop graphs:");
     for (rank, (score, dag)) in report.result.best.iter().enumerate() {
         println!("  #{rank}: score={score:.3} edges={}", dag.edge_count());
     }
-    let best = report.result.best_dag();
-    println!("\nbest graph edges:");
-    for (from, to) in best.edges() {
-        println!("  {from} -> {to}");
+    if let Some(best) = report.result.best_dag() {
+        println!("\nbest graph edges:");
+        for (from, to) in best.edges() {
+            println!("  {from} -> {to}");
+        }
     }
+    Ok(())
+}
+
+/// The `learn --posterior` mode: edge marginals, convergence
+/// diagnostics, consensus graph, threshold-swept ROC curve.
+fn cmd_posterior(cfg: &RunConfig) -> Result<()> {
+    let report = run_posterior(cfg, None)?;
+    println!("{}", report.summary());
+    if cfg.trace {
+        dump_traces(&cfg.trace_out, &report.result.traces)?;
+    }
+    let n = report.n;
+    let mut edges: Vec<(f64, usize, usize)> = Vec::new();
+    for child in 0..n {
+        for parent in 0..n {
+            let p = report.edge_probs[child * n + parent];
+            if parent != child && p >= 0.01 {
+                edges.push((p, parent, child));
+            }
+        }
+    }
+    edges.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    println!("\nedge posteriors (P >= 0.01, top {}):", (2 * n).min(edges.len()));
+    for (p, from, to) in edges.iter().take(2 * n) {
+        println!("  P={p:.3}  {from} -> {to}");
+    }
+    println!(
+        "\nconsensus graph at threshold {:.2} ({} edges):",
+        cfg.threshold,
+        report.consensus.edge_count()
+    );
+    for (from, to) in report.consensus.edges() {
+        println!("  {from} -> {to}  (P={:.3})", report.edge_probs[to * n + from]);
+    }
+    let mut curve = Table::new(&["threshold", "tpr", "fpr"]);
+    for (thr, pt) in &report.curve {
+        curve.push_row(vec![
+            format!("{thr:.4}"),
+            format!("{:.4}", pt.tpr),
+            format!("{:.4}", pt.fpr),
+        ]);
+    }
+    curve.write_csv("results/posterior_roc.csv")?;
+    println!(
+        "\nROC sweep: {} thresholds, AUC={:.3} vs best-graph implied AUC {:.3} -> results/posterior_roc.csv",
+        report.curve.len(),
+        report.auc,
+        report.baseline_auc
+    );
+    if cfg.checkpoint_every > 0 {
+        println!("checkpoint: every {} iters -> {:?}", cfg.checkpoint_every, cfg.checkpoint_path);
+    }
+    Ok(())
+}
+
+/// Dump per-chain score traces as long-format CSV (`chain, iter, score`).
+fn dump_traces(path: &Path, traces: &[Vec<f64>]) -> Result<()> {
+    let mut t = Table::new(&["chain", "iter", "score"]);
+    for (chain, trace) in traces.iter().enumerate() {
+        for (iter, score) in trace.iter().enumerate() {
+            t.push_row(vec![chain.to_string(), iter.to_string(), format!("{score:.6}")]);
+        }
+    }
+    t.write_csv(path)?;
+    println!("wrote {} trace rows -> {path:?}", t.rows.len());
     Ok(())
 }
 

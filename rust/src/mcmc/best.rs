@@ -53,6 +53,16 @@ impl BestGraphTracker {
         &self.entries
     }
 
+    /// Rebuild a tracker from saved entries (checkpoint restore).
+    /// Offering in saved best-first order reproduces the entry list.
+    pub fn from_entries(capacity: usize, entries: Vec<(f64, Dag)>) -> Self {
+        let mut tracker = BestGraphTracker::new(capacity);
+        for (score, graph) in &entries {
+            tracker.offer(*score, graph);
+        }
+        tracker
+    }
+
     /// Merge another tracker into this one (multi-chain reduction).
     pub fn merge(&mut self, other: &BestGraphTracker) {
         for (score, graph) in &other.entries {
@@ -102,6 +112,16 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.best().unwrap().0, -3.0);
         assert_eq!(a.entries().len(), 2);
+    }
+
+    #[test]
+    fn from_entries_roundtrips() {
+        let mut t = BestGraphTracker::new(3);
+        t.offer(-10.0, &g(&[(0, 1)]));
+        t.offer(-5.0, &g(&[(1, 2)]));
+        t.offer(-7.0, &g(&[(2, 3)]));
+        let rebuilt = BestGraphTracker::from_entries(3, t.entries().to_vec());
+        assert_eq!(rebuilt.entries(), t.entries());
     }
 
     #[test]

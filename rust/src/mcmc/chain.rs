@@ -65,6 +65,37 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
         }
     }
 
+    /// Rebuild a chain mid-stream from checkpointed parts: the current
+    /// order, its score, the RNG, and the tracker/stats accumulated so
+    /// far. The next [`Self::step`] continues the original trajectory
+    /// bit-for-bit (given the same deterministic scorer).
+    pub fn resume(
+        scorer: &'s mut S,
+        order: Order,
+        current_score: f64,
+        rng: Pcg32,
+        tracker: BestGraphTracker,
+        stats: ChainStats,
+    ) -> Self {
+        let n = order.n();
+        McmcChain {
+            scorer,
+            order,
+            current_score,
+            out: BestGraph::new(n),
+            tracker,
+            stats,
+            record_trace: false,
+            rng,
+        }
+    }
+
+    /// Tear the chain down into its resumable parts:
+    /// `(order, current_score, rng, tracker, stats)`.
+    pub fn into_parts(self) -> (Order, f64, Pcg32, BestGraphTracker, ChainStats) {
+        (self.order, self.current_score, self.rng, self.tracker, self.stats)
+    }
+
     /// Record a per-iteration score trace (costs one f64 per step).
     pub fn set_record_trace(&mut self, on: bool) {
         self.record_trace = on;
@@ -115,6 +146,18 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
     pub fn run(&mut self, iters: u64) {
         for _ in 0..iters {
             self.step();
+        }
+    }
+
+    /// Run `iters` steps, handing the post-step state (current order +
+    /// its score) to `observe` after every transition — the sample
+    /// emission hook the posterior layer accumulates edge marginals
+    /// through. Rejected proposals re-emit the unchanged state, as MCMC
+    /// averaging requires.
+    pub fn run_observed<F: FnMut(&Order, f64)>(&mut self, iters: u64, mut observe: F) {
+        for _ in 0..iters {
+            self.step();
+            observe(&self.order, self.current_score);
         }
     }
 }
@@ -175,6 +218,47 @@ mod tests {
         c2.run(200);
         assert_eq!(c1.current_score(), c2.current_score());
         assert_eq!(c1.stats.accepted, c2.stats.accepted);
+    }
+
+    #[test]
+    fn resume_continues_trajectory_bit_for_bit() {
+        let (_, table) = fixture(7, 2, 150, 120);
+        // Uninterrupted 200-step chain.
+        let mut s1 = SerialScorer::new(&table);
+        let mut full = McmcChain::new(&mut s1, 7, 2, 55);
+        full.set_record_trace(true);
+        full.run(200);
+
+        // Same chain, split 80 + 120 through into_parts/resume.
+        let mut s2 = SerialScorer::new(&table);
+        let mut head = McmcChain::new(&mut s2, 7, 2, 55);
+        head.set_record_trace(true);
+        head.run(80);
+        let (order, score, rng, tracker, stats) = head.into_parts();
+        let mut s3 = SerialScorer::new(&table);
+        let mut tail = McmcChain::resume(&mut s3, order, score, rng, tracker, stats);
+        tail.set_record_trace(true);
+        tail.run(120);
+
+        assert_eq!(full.current_score(), tail.current_score());
+        assert_eq!(full.order(), tail.order());
+        assert_eq!(full.stats.accepted, tail.stats.accepted);
+        assert_eq!(full.stats.trace, tail.stats.trace);
+        assert_eq!(full.tracker.entries(), tail.tracker.entries());
+    }
+
+    #[test]
+    fn run_observed_emits_every_iteration() {
+        let (_, table) = fixture(6, 2, 120, 121);
+        let mut scorer = SerialScorer::new(&table);
+        let mut chain = McmcChain::new(&mut scorer, 6, 1, 122);
+        let mut emitted = Vec::new();
+        chain.run_observed(40, |order, score| {
+            assert!(order.check());
+            emitted.push(score);
+        });
+        assert_eq!(emitted.len(), 40);
+        assert_eq!(*emitted.last().unwrap(), chain.current_score());
     }
 
     #[test]

@@ -229,7 +229,7 @@ mod tests {
 
         let mut scorer = crate::scorer::SerialScorer::new(&table);
         let order_best =
-            crate::mcmc::run_chain(&mut scorer, 10, budget, 1, 209).best_score();
+            crate::mcmc::run_chain(&mut scorer, 10, budget, 1, 209).best_score().unwrap();
         assert!(
             order_best >= graph_best - 1e-6,
             "order {order_best} < graph {graph_best}"

@@ -12,4 +12,6 @@ pub use best::BestGraphTracker;
 pub use chain::{ChainStats, McmcChain};
 pub use graphspace::GraphChain;
 pub use order::Order;
-pub use runner::{run_chain, run_chains_parallel, LearnResult};
+pub use runner::{
+    run_chain, run_chain_traced, run_chains_parallel, run_chains_parallel_traced, LearnResult,
+};

@@ -15,8 +15,13 @@ use crate::util::Timer;
 pub struct LearnResult {
     /// Best graphs found (best first) with their scores.
     pub best: Vec<(f64, Dag)>,
-    /// Aggregated chain statistics.
+    /// Aggregated chain statistics (the per-chain traces live in
+    /// [`Self::traces`], so the aggregate's `trace` stays empty for
+    /// multi-chain runs).
     pub stats: ChainStats,
+    /// Per-chain score traces (empty unless trace recording was on) —
+    /// the raw material of the PSRF/ESS convergence diagnostics.
+    pub traces: Vec<Vec<f64>>,
     /// Wall-clock seconds spent sampling (excludes preprocessing).
     pub sampling_secs: f64,
     /// Number of chains run.
@@ -24,14 +29,15 @@ pub struct LearnResult {
 }
 
 impl LearnResult {
-    /// The single best graph.
-    pub fn best_dag(&self) -> &Dag {
-        &self.best.first().expect("no graphs tracked").1
+    /// The single best graph, if any iteration tracked one (a
+    /// zero-iteration run tracks nothing).
+    pub fn best_dag(&self) -> Option<&Dag> {
+        self.best.first().map(|(_, dag)| dag)
     }
 
-    /// The best score.
-    pub fn best_score(&self) -> f64 {
-        self.best.first().expect("no graphs tracked").0
+    /// The best score, if any graph was tracked.
+    pub fn best_score(&self) -> Option<f64> {
+        self.best.first().map(|(score, _)| *score)
     }
 }
 
@@ -43,12 +49,27 @@ pub fn run_chain<S: OrderScorer + ?Sized>(
     topk: usize,
     seed: u64,
 ) -> LearnResult {
+    run_chain_traced(scorer, n, iters, topk, seed, false)
+}
+
+/// [`run_chain`] with optional per-iteration score-trace recording.
+pub fn run_chain_traced<S: OrderScorer + ?Sized>(
+    scorer: &mut S,
+    n: usize,
+    iters: u64,
+    topk: usize,
+    seed: u64,
+    record_trace: bool,
+) -> LearnResult {
     let timer = Timer::start();
     let mut chain = McmcChain::new(scorer, n, topk, seed);
+    chain.set_record_trace(record_trace);
     chain.run(iters);
+    let traces = if record_trace { vec![chain.stats.trace.clone()] } else { Vec::new() };
     LearnResult {
         best: chain.tracker.entries().to_vec(),
         stats: chain.stats.clone(),
+        traces,
         sampling_secs: timer.elapsed_secs(),
         chains: 1,
     }
@@ -72,6 +93,25 @@ where
     F: Fn(usize) -> S + Sync,
     S: OrderScorer,
 {
+    run_chains_parallel_traced(make_scorer, n, iters, topk, seed, chains, false)
+}
+
+/// [`run_chains_parallel`] with optional trace recording: each chain's
+/// per-iteration score trace is returned in [`LearnResult::traces`]
+/// (chain order), feeding the multi-chain convergence diagnostics.
+pub fn run_chains_parallel_traced<F, S>(
+    make_scorer: F,
+    n: usize,
+    iters: u64,
+    topk: usize,
+    seed: u64,
+    chains: usize,
+    record_trace: bool,
+) -> LearnResult
+where
+    F: Fn(usize) -> S + Sync,
+    S: OrderScorer,
+{
     assert!(chains >= 1);
     let timer = Timer::start();
     let results: Vec<(BestGraphTracker, ChainStats)> = std::thread::scope(|scope| {
@@ -82,6 +122,7 @@ where
                     let mut scorer = make_scorer(c);
                     let mut chain =
                         McmcChain::new(&mut scorer, n, topk, seed.wrapping_add(c as u64 * 0x9E37));
+                    chain.set_record_trace(record_trace);
                     chain.run(iters);
                     (chain.tracker.clone(), chain.stats.clone())
                 })
@@ -92,14 +133,19 @@ where
 
     let mut merged = BestGraphTracker::new(topk);
     let mut stats = ChainStats::default();
+    let mut traces = Vec::new();
     for (tracker, s) in &results {
         merged.merge(tracker);
         stats.iterations += s.iterations;
         stats.accepted += s.accepted;
+        if record_trace {
+            traces.push(s.trace.clone());
+        }
     }
     LearnResult {
         best: merged.entries().to_vec(),
         stats,
+        traces,
         sampling_secs: timer.elapsed_secs(),
         chains,
     }
@@ -117,8 +163,9 @@ mod tests {
         let mut scorer = SerialScorer::new(&table);
         let res = run_chain(&mut scorer, 7, 200, 3, 122);
         assert!(!res.best.is_empty());
-        assert!(res.best_score().is_finite());
+        assert!(res.best_score().unwrap().is_finite());
         assert!(res.sampling_secs > 0.0);
+        assert!(res.traces.is_empty());
         // entries sorted descending
         for w in res.best.windows(2) {
             assert!(w[0].0 >= w[1].0);
@@ -134,7 +181,7 @@ mod tests {
         };
         let multi = run_chains_parallel(|_| SerialScorer::new(&table), 7, 300, 1, 42, 4);
         // 4 chains including the same seed as the single run ⇒ can't do worse
-        assert!(multi.best_score() >= single.best_score() - 1e-9);
+        assert!(multi.best_score().unwrap() >= single.best_score().unwrap() - 1e-9);
         assert_eq!(multi.stats.iterations, 4 * 300);
         assert_eq!(multi.chains, 4);
     }
@@ -146,5 +193,37 @@ mod tests {
         let b = run_chains_parallel(|_| SerialScorer::new(&table), 6, 100, 2, 7, 3);
         assert_eq!(a.best_score(), b.best_score());
         assert_eq!(a.stats.accepted, b.stats.accepted);
+    }
+
+    #[test]
+    fn traced_runs_return_per_chain_traces() {
+        let (_, table) = fixture(6, 2, 150, 125);
+        let res = run_chains_parallel_traced(|_| SerialScorer::new(&table), 6, 80, 1, 9, 3, true);
+        assert_eq!(res.traces.len(), 3);
+        assert!(res.traces.iter().all(|t| t.len() == 80));
+        assert!(res.traces.iter().flatten().all(|s| s.is_finite()));
+        // untraced leaves traces empty
+        let res = run_chains_parallel(|_| SerialScorer::new(&table), 6, 80, 1, 9, 2);
+        assert!(res.traces.is_empty());
+    }
+
+    #[test]
+    fn zero_iteration_single_chain_still_tracks_initial_order() {
+        // `McmcChain::new` offers the starting order's best graph, so
+        // even a 0-iteration run has a graph; the Option API is for
+        // degenerate constructions (e.g. empty merges), not this.
+        let (_, table) = fixture(5, 2, 100, 126);
+        let mut scorer = SerialScorer::new(&table);
+        let res = run_chain(&mut scorer, 5, 0, 1, 127);
+        assert!(res.best_dag().is_some());
+        let empty = LearnResult {
+            best: Vec::new(),
+            stats: ChainStats::default(),
+            traces: Vec::new(),
+            sampling_secs: 0.0,
+            chains: 0,
+        };
+        assert!(empty.best_dag().is_none());
+        assert!(empty.best_score().is_none());
     }
 }

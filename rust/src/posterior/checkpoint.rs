@@ -1,0 +1,395 @@
+//! Versioned binary checkpointing of posterior runs: per-chain order,
+//! current score, RNG stream, best-graph tracker, stats (including the
+//! score trace), and the accumulated marginal matrix — everything needed
+//! to resume a run bit-for-bit.
+//!
+//! Format (all integers little-endian):
+//!
+//! ```text
+//! magic "BNPC" | version u32 | n u64 | topk u64 | seed u64
+//! | fingerprint u64 | iters_done u64 | chain_count u64
+//! per chain:
+//!   order (n × u32) | score f64 | rng_state u64 | rng_inc u64
+//!   | iterations u64 | accepted u64 | trace_len u64 | trace (f64 …)
+//!   | tracker_len u64 | per entry: score f64, edge_count u64, edges ((u32, u32) …)
+//!   | burnin u64 | thin u64 | seen u64 | samples u64 | sums (n·n × f64)
+//! ```
+//!
+//! The version is bumped whenever the layout changes; loaders reject
+//! unknown versions and size mismatches instead of misreading. The
+//! offline crate set has no `serde`, so this is a hand-rolled writer and
+//! a bounds-checked reader.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use super::marginals::MarginalState;
+use crate::bn::Dag;
+use crate::mcmc::ChainStats;
+
+const MAGIC: [u8; 4] = *b"BNPC";
+const VERSION: u32 = 1;
+
+/// One chain's resumable state.
+#[derive(Debug, Clone)]
+pub struct ChainState {
+    /// Current order (`order[k]` = node at position k).
+    pub order: Vec<usize>,
+    /// Score of the current order.
+    pub score: f64,
+    /// PCG32 `(state, inc)` pair.
+    pub rng: (u64, u64),
+    /// Counters + optional score trace accumulated so far.
+    pub stats: ChainStats,
+    /// Best-graph tracker entries, best first.
+    pub tracker: Vec<(f64, Dag)>,
+    /// Accumulated edge-marginal state.
+    pub marginals: MarginalState,
+}
+
+/// A whole run's checkpoint: per-chain states plus the run identity
+/// used to validate a resume against a mismatched configuration.
+#[derive(Debug, Clone)]
+pub struct RunCheckpoint {
+    /// Node count.
+    pub n: usize,
+    /// Tracker capacity.
+    pub topk: usize,
+    /// Master seed the run started from.
+    pub seed: u64,
+    /// Workload/score-configuration fingerprint (see the coordinator's
+    /// `posterior_fingerprint`): a resume against different data or
+    /// scoring parameters would silently corrupt the accumulated
+    /// posterior, so the sampler rejects mismatches.
+    pub fingerprint: u64,
+    /// Iterations completed per chain when the checkpoint was written.
+    pub iters_done: u64,
+    /// Per-chain states.
+    pub chains: Vec<ChainState>,
+}
+
+impl RunCheckpoint {
+    /// Serialize to the versioned binary layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        put_u32(&mut out, VERSION);
+        put_u64(&mut out, self.n as u64);
+        put_u64(&mut out, self.topk as u64);
+        put_u64(&mut out, self.seed);
+        put_u64(&mut out, self.fingerprint);
+        put_u64(&mut out, self.iters_done);
+        put_u64(&mut out, self.chains.len() as u64);
+        for chain in &self.chains {
+            debug_assert_eq!(chain.order.len(), self.n);
+            for &v in &chain.order {
+                put_u32(&mut out, v as u32);
+            }
+            put_f64(&mut out, chain.score);
+            put_u64(&mut out, chain.rng.0);
+            put_u64(&mut out, chain.rng.1);
+            put_u64(&mut out, chain.stats.iterations);
+            put_u64(&mut out, chain.stats.accepted);
+            put_u64(&mut out, chain.stats.trace.len() as u64);
+            for &x in &chain.stats.trace {
+                put_f64(&mut out, x);
+            }
+            put_u64(&mut out, chain.tracker.len() as u64);
+            for (score, dag) in &chain.tracker {
+                put_f64(&mut out, *score);
+                let edges = dag.edges();
+                put_u64(&mut out, edges.len() as u64);
+                for (from, to) in edges {
+                    put_u32(&mut out, from as u32);
+                    put_u32(&mut out, to as u32);
+                }
+            }
+            let m = &chain.marginals;
+            debug_assert_eq!(m.sums.len(), self.n * self.n);
+            put_u64(&mut out, m.burnin);
+            put_u64(&mut out, m.thin);
+            put_u64(&mut out, m.seen);
+            put_u64(&mut out, m.samples);
+            for &x in &m.sums {
+                put_f64(&mut out, x);
+            }
+        }
+        out
+    }
+
+    /// Parse and validate the binary layout.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader { buf, off: 0 };
+        if r.take(4)? != MAGIC.as_slice() {
+            bail!("not a bnlearn checkpoint (bad magic)");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("checkpoint format v{version} is not supported (this build reads v{VERSION})");
+        }
+        let n = r.u64()? as usize;
+        let topk = r.u64()? as usize;
+        let seed = r.u64()?;
+        let fingerprint = r.u64()?;
+        let iters_done = r.u64()?;
+        let chain_count = r.u64()? as usize;
+        // Bound every allocation by what the buffer could actually hold
+        // before trusting header-declared sizes (a corrupt file must
+        // error, not abort on a capacity overflow or OOM).
+        let budget = buf.len();
+        if n == 0 || n > budget / 4 {
+            bail!("corrupt checkpoint: implausible node count {n}");
+        }
+        if chain_count == 0 || chain_count > budget / (4 * n).max(1) {
+            bail!("corrupt checkpoint: implausible chain count {chain_count}");
+        }
+        let matrix = n.checked_mul(n).ok_or_else(|| anyhow::anyhow!("n*n overflows"))?;
+        if matrix > budget / 8 {
+            bail!("corrupt checkpoint: marginal matrix {n}x{n} exceeds file size");
+        }
+        let mut chains = Vec::with_capacity(chain_count);
+        for _ in 0..chain_count {
+            let mut order = Vec::with_capacity(n);
+            let mut present = vec![false; n];
+            for _ in 0..n {
+                let v = r.u32()? as usize;
+                if v >= n || present[v] {
+                    bail!("corrupt checkpoint: order is not a permutation of 0..{n}");
+                }
+                present[v] = true;
+                order.push(v);
+            }
+            let score = r.f64()?;
+            let rng = (r.u64()?, r.u64()?);
+            let iterations = r.u64()?;
+            let accepted = r.u64()?;
+            let trace_len = r.u64()? as usize;
+            let mut trace = Vec::with_capacity(trace_len.min(buf.len() / 8));
+            for _ in 0..trace_len {
+                trace.push(r.f64()?);
+            }
+            let tracker_len = r.u64()? as usize;
+            let mut tracker = Vec::with_capacity(tracker_len.min(1024));
+            for _ in 0..tracker_len {
+                let entry_score = r.f64()?;
+                let edge_count = r.u64()? as usize;
+                let mut edges = Vec::with_capacity(edge_count.min(buf.len() / 8));
+                for _ in 0..edge_count {
+                    let from = r.u32()? as usize;
+                    let to = r.u32()? as usize;
+                    if from >= n || to >= n || from == to {
+                        bail!("corrupt checkpoint: edge {from} -> {to} out of range");
+                    }
+                    edges.push((from, to));
+                }
+                tracker.push((entry_score, Dag::from_edges(n, &edges)));
+            }
+            let burnin = r.u64()?;
+            let thin = r.u64()?;
+            if thin == 0 {
+                bail!("corrupt checkpoint: thinning interval 0");
+            }
+            let seen = r.u64()?;
+            let samples = r.u64()?;
+            let mut sums = Vec::with_capacity(matrix);
+            for _ in 0..matrix {
+                sums.push(r.f64()?);
+            }
+            chains.push(ChainState {
+                order,
+                score,
+                rng,
+                stats: ChainStats { iterations, accepted, trace },
+                tracker,
+                marginals: MarginalState { n, burnin, thin, seen, samples, sums },
+            });
+        }
+        if r.off != buf.len() {
+            bail!("corrupt checkpoint: {} trailing bytes", buf.len() - r.off);
+        }
+        Ok(RunCheckpoint { n, topk, seed, fingerprint, iters_done, chains })
+    }
+
+    /// Write to `path`, creating parent directories. The write goes to
+    /// a sibling `.tmp` file first and is renamed into place, so a
+    /// crash mid-write (the very scenario checkpointing exists for)
+    /// never destroys the previous recovery point.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating checkpoint dir {parent:?}"))?;
+            }
+        }
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp_name);
+        std::fs::write(&tmp, self.to_bytes())
+            .with_context(|| format!("writing checkpoint {tmp:?}"))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing checkpoint {path:?}"))
+    }
+
+    /// Read back from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let buf =
+            std::fs::read(path).with_context(|| format!("reading checkpoint {path:?}"))?;
+        Self::from_bytes(&buf).with_context(|| format!("parsing checkpoint {path:?}"))
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader.
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, len: usize) -> Result<&'a [u8]> {
+        if self.off + len > self.buf.len() {
+            bail!("truncated checkpoint at byte {}", self.off);
+        }
+        let slice = &self.buf[self.off..self.off + len];
+        self.off += len;
+        Ok(slice)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("length 4")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("length 8")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("length 8")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_checkpoint() -> RunCheckpoint {
+        let n = 4usize;
+        let dag = Dag::from_edges(n, &[(0, 1), (2, 3)]);
+        let marginals = MarginalState {
+            n,
+            burnin: 10,
+            thin: 2,
+            seen: 55,
+            samples: 22,
+            sums: (0..n * n).map(|i| i as f64 * 0.125).collect(),
+        };
+        let chain = ChainState {
+            order: vec![2, 0, 3, 1],
+            score: -123.456789,
+            rng: (0xDEAD_BEEF_u64, 0x1234_5679_u64),
+            stats: ChainStats { iterations: 500, accepted: 210, trace: vec![-1.5, -1.25, -1.0] },
+            tracker: vec![(-120.0, dag.clone()), (-125.5, Dag::empty(n))],
+            marginals,
+        };
+        RunCheckpoint {
+            n,
+            topk: 3,
+            seed: 42,
+            fingerprint: 0xF00D_F00D,
+            iters_done: 500,
+            chains: vec![chain],
+        }
+    }
+
+    #[test]
+    fn byte_roundtrip_preserves_everything() {
+        let ck = sample_checkpoint();
+        let back = RunCheckpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.n, ck.n);
+        assert_eq!(back.topk, ck.topk);
+        assert_eq!(back.seed, ck.seed);
+        assert_eq!(back.fingerprint, ck.fingerprint);
+        assert_eq!(back.iters_done, ck.iters_done);
+        assert_eq!(back.chains.len(), 1);
+        let (a, b) = (&back.chains[0], &ck.chains[0]);
+        assert_eq!(a.order, b.order);
+        assert_eq!(a.score.to_bits(), b.score.to_bits());
+        assert_eq!(a.rng, b.rng);
+        assert_eq!(a.stats.iterations, b.stats.iterations);
+        assert_eq!(a.stats.accepted, b.stats.accepted);
+        assert_eq!(a.stats.trace, b.stats.trace);
+        assert_eq!(a.tracker.len(), b.tracker.len());
+        for ((sa, ga), (sb, gb)) in a.tracker.iter().zip(&b.tracker) {
+            assert_eq!(sa.to_bits(), sb.to_bits());
+            assert_eq!(ga, gb);
+        }
+        assert_eq!(a.marginals, b.marginals);
+    }
+
+    #[test]
+    fn file_roundtrip_is_atomic_rename() {
+        let dir = std::env::temp_dir().join("bnlearn_ckpt_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("sub/run.ckpt");
+        let ck = sample_checkpoint();
+        ck.save(&path).unwrap();
+        // second save overwrites through the same tmp-then-rename path
+        ck.save(&path).unwrap();
+        let back = RunCheckpoint::load(&path).unwrap();
+        assert_eq!(back.chains[0].order, ck.chains[0].order);
+        // no stray temp file left behind
+        let leftovers: Vec<_> = std::fs::read_dir(dir.join("sub")).unwrap().collect();
+        assert_eq!(leftovers.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_truncation() {
+        let ck = sample_checkpoint();
+        let bytes = ck.to_bytes();
+
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(RunCheckpoint::from_bytes(&bad_magic).is_err());
+
+        let mut bad_version = bytes.clone();
+        bad_version[4] = 99;
+        let msg = format!("{:#}", RunCheckpoint::from_bytes(&bad_version).unwrap_err());
+        assert!(msg.contains("v99"), "{msg}");
+
+        assert!(RunCheckpoint::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(RunCheckpoint::from_bytes(&trailing).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_order() {
+        let ck = sample_checkpoint();
+        let mut bytes = ck.to_bytes();
+        // The first order entry sits right after the 56-byte header
+        // (magic 4 + version 4 + six u64 fields).
+        bytes[56] = 9; // out of range for n = 4
+        let msg = format!("{:#}", RunCheckpoint::from_bytes(&bytes).unwrap_err());
+        assert!(msg.contains("permutation"), "{msg}");
+    }
+
+    #[test]
+    fn missing_file_fails_with_path_context() {
+        let err = RunCheckpoint::load("/nonexistent/dir/run.ckpt").unwrap_err();
+        assert!(format!("{err:#}").contains("run.ckpt"));
+    }
+}

@@ -1,0 +1,217 @@
+//! Consensus-graph extraction from an edge-probability matrix, and the
+//! threshold sweep that turns the matrix into a genuine ROC *curve*
+//! (the single learned graph of a max run is one ROC point; the
+//! posterior matrix supports every operating point at once).
+//!
+//! Matrix convention (shared with `marginals`): `probs[child * n +
+//! parent]` = posterior probability of the edge `parent → child`.
+
+use crate::bn::Dag;
+use crate::eval::roc::{roc_point, RocPoint};
+
+/// Threshold the edge-probability matrix at `threshold` and repair any
+/// directed cycles by repeatedly dropping the lowest-probability edge on
+/// a cycle (per-order marginals averaged over *different* orders can
+/// disagree on direction, so the raw thresholded graph need not be
+/// acyclic). Deterministic: cycles are found by a smallest-id DFS.
+pub fn consensus_dag(n: usize, probs: &[f64], threshold: f64) -> Dag {
+    assert_eq!(probs.len(), n * n, "probability matrix must be n×n");
+    let mut parents: Vec<Vec<usize>> = (0..n)
+        .map(|child| {
+            (0..n).filter(|&j| j != child && probs[child * n + j] >= threshold).collect()
+        })
+        .collect();
+    while let Some(cycle) = find_cycle(n, &parents) {
+        let mut worst = cycle[0];
+        let mut worst_p = probs[worst.1 * n + worst.0];
+        for &(from, to) in &cycle[1..] {
+            let p = probs[to * n + from];
+            if p < worst_p {
+                worst = (from, to);
+                worst_p = p;
+            }
+        }
+        parents[worst.1].retain(|&j| j != worst.0);
+    }
+    Dag::from_parents(parents)
+}
+
+/// Find one directed cycle as `(from, to)` edges, or `None` if the
+/// parent lists already form a DAG.
+fn find_cycle(n: usize, parents: &[Vec<usize>]) -> Option<Vec<(usize, usize)>> {
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (child, ps) in parents.iter().enumerate() {
+        for &j in ps {
+            children[j].push(child);
+        }
+    }
+    // 0 = unvisited, 1 = on the DFS stack, 2 = finished.
+    let mut color = vec![0u8; n];
+    let mut path = Vec::new();
+    for start in 0..n {
+        if color[start] != 0 {
+            continue;
+        }
+        if let Some(cycle) = dfs(start, &children, &mut color, &mut path) {
+            return Some(cycle);
+        }
+    }
+    None
+}
+
+fn dfs(
+    node: usize,
+    children: &[Vec<usize>],
+    color: &mut [u8],
+    path: &mut Vec<usize>,
+) -> Option<Vec<(usize, usize)>> {
+    color[node] = 1;
+    path.push(node);
+    for &next in &children[node] {
+        if color[next] == 1 {
+            // Back edge: the cycle is the path suffix from `next`, plus
+            // the closing edge.
+            let pos = path.iter().position(|&x| x == next).expect("on stack");
+            let mut cycle: Vec<(usize, usize)> =
+                path[pos..].windows(2).map(|w| (w[0], w[1])).collect();
+            cycle.push((node, next));
+            return Some(cycle);
+        }
+        if color[next] != 0 {
+            continue;
+        }
+        if let Some(cycle) = dfs(next, children, color, path) {
+            return Some(cycle);
+        }
+    }
+    path.pop();
+    color[node] = 2;
+    None
+}
+
+/// Thresholds worth sweeping: every distinct positive probability in the
+/// matrix, descending (each one changes the thresholded edge set; the
+/// empty-graph and full anchors come from `auc_from_points`).
+pub fn default_thresholds(probs: &[f64]) -> Vec<f64> {
+    let mut ts: Vec<f64> = probs.iter().copied().filter(|p| *p > 0.0).collect();
+    ts.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    ts.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+    ts
+}
+
+/// One ROC point per threshold: the edge set `{P ≥ t}` against the
+/// ground truth. The raw thresholded sets are used (no cycle repair), so
+/// the sets are nested in `t` and the curve is monotone — the standard
+/// edge-posterior ROC protocol.
+pub fn threshold_sweep(truth: &Dag, probs: &[f64], thresholds: &[f64]) -> Vec<(f64, RocPoint)> {
+    let n = truth.n();
+    assert_eq!(probs.len(), n * n, "probability matrix must be n×n");
+    thresholds
+        .iter()
+        .map(|&t| {
+            let mut edges = Vec::new();
+            for child in 0..n {
+                for parent in 0..n {
+                    if parent != child && probs[child * n + parent] >= t {
+                        edges.push((parent, child));
+                    }
+                }
+            }
+            (t, roc_point(truth, &Dag::from_edges(n, &edges)))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::roc::auc_from_points;
+
+    fn probs_from(n: usize, entries: &[(usize, usize, f64)]) -> Vec<f64> {
+        let mut m = vec![0.0; n * n];
+        for &(from, to, p) in entries {
+            m[to * n + from] = p;
+        }
+        m
+    }
+
+    #[test]
+    fn thresholding_keeps_strong_edges() {
+        let probs = probs_from(3, &[(0, 1, 0.9), (1, 2, 0.6), (2, 0, 0.2)]);
+        let dag = consensus_dag(3, &probs, 0.5);
+        assert!(dag.has_edge(0, 1));
+        assert!(dag.has_edge(1, 2));
+        assert!(!dag.has_edge(2, 0));
+    }
+
+    #[test]
+    fn cycle_repair_drops_weakest_edge() {
+        // 0 → 1 → 2 → 0 all above threshold; 2 → 0 is weakest.
+        let probs = probs_from(3, &[(0, 1, 0.9), (1, 2, 0.8), (2, 0, 0.7)]);
+        let dag = consensus_dag(3, &probs, 0.5);
+        assert!(dag.is_acyclic());
+        assert!(dag.has_edge(0, 1));
+        assert!(dag.has_edge(1, 2));
+        assert!(!dag.has_edge(2, 0));
+        assert_eq!(dag.edge_count(), 2);
+    }
+
+    #[test]
+    fn two_cycles_both_repaired() {
+        let probs = probs_from(
+            5,
+            &[
+                (0, 1, 0.9),
+                (1, 0, 0.6), // 2-cycle with 0 → 1
+                (2, 3, 0.8),
+                (3, 4, 0.9),
+                (4, 2, 0.55), // 3-cycle
+            ],
+        );
+        let dag = consensus_dag(5, &probs, 0.5);
+        assert!(dag.is_acyclic());
+        assert!(dag.has_edge(0, 1));
+        assert!(!dag.has_edge(1, 0));
+        assert!(!dag.has_edge(4, 2));
+        assert_eq!(dag.edge_count(), 3);
+    }
+
+    #[test]
+    fn sweep_is_monotone_and_perfect_matrix_gives_auc_one() {
+        let truth = Dag::from_edges(4, &[(0, 1), (1, 2), (0, 3)]);
+        // Probabilities exactly aligned with the truth.
+        let mut probs = vec![0.0; 16];
+        for (from, to) in truth.edges() {
+            probs[to * 4 + from] = 0.95;
+        }
+        let ts = default_thresholds(&probs);
+        assert_eq!(ts, vec![0.95]);
+        let curve = threshold_sweep(&truth, &probs, &ts);
+        assert_eq!(curve.len(), 1);
+        assert_eq!(curve[0].1.tpr, 1.0);
+        assert_eq!(curve[0].1.fpr, 0.0);
+        let points: Vec<RocPoint> = curve.iter().map(|(_, p)| *p).collect();
+        assert!((auc_from_points(&points) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sweep_points_nest_with_threshold() {
+        let truth = Dag::from_edges(4, &[(0, 1), (1, 2)]);
+        let probs = probs_from(4, &[(0, 1, 0.9), (1, 2, 0.7), (3, 0, 0.4), (2, 3, 0.2)]);
+        let ts = default_thresholds(&probs);
+        let curve = threshold_sweep(&truth, &probs, &ts);
+        // Descending thresholds ⇒ non-decreasing TPR and FPR.
+        for w in curve.windows(2) {
+            assert!(w[0].0 > w[1].0);
+            assert!(w[1].1.tpr >= w[0].1.tpr);
+            assert!(w[1].1.fpr >= w[0].1.fpr);
+        }
+    }
+
+    #[test]
+    fn empty_matrix_gives_empty_graph() {
+        let probs = vec![0.0; 9];
+        assert_eq!(consensus_dag(3, &probs, 0.5).edge_count(), 0);
+        assert!(default_thresholds(&probs).is_empty());
+    }
+}

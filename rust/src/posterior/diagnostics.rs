@@ -1,0 +1,175 @@
+//! Multi-chain convergence diagnostics over score traces: the
+//! Gelman–Rubin potential scale reduction factor (PSRF) and an
+//! autocorrelation-based effective sample size — the diagnostics
+//! Minimal I-MAP MCMC (arXiv:1803.05554) reports to justify that its
+//! chains have actually mixed. Both operate on the per-chain traces
+//! recorded by `ChainStats.trace` (enable with `--trace`, or
+//! automatically in `--posterior` runs).
+//!
+//! Callers apply burn-in before handing traces in; these functions see
+//! the post-burn-in samples only.
+
+use crate::util::stats;
+
+/// Gelman–Rubin potential scale reduction factor over per-chain traces.
+///
+/// `None` with fewer than two chains or fewer than four samples in the
+/// shortest chain (the statistic needs within- *and* between-chain
+/// variance). Chains are truncated to the shortest length. A value near
+/// 1 indicates the chains sample the same distribution; > ~1.1 is the
+/// conventional "not converged" flag. Flat identical chains (zero
+/// within-chain variance) return exactly 1.0.
+pub fn psrf(traces: &[Vec<f64>]) -> Option<f64> {
+    let m = traces.len();
+    if m < 2 {
+        return None;
+    }
+    let len = traces.iter().map(Vec::len).min().unwrap_or(0);
+    if len < 4 {
+        return None;
+    }
+    let n = len as f64;
+    let means: Vec<f64> = traces.iter().map(|t| stats::mean(&t[..len])).collect();
+    let grand = stats::mean(&means);
+    // B/n: variance of the chain means.
+    let b_over_n =
+        means.iter().map(|mu| (mu - grand) * (mu - grand)).sum::<f64>() / (m as f64 - 1.0);
+    // W: mean within-chain sample variance.
+    let w = traces
+        .iter()
+        .zip(&means)
+        .map(|(t, mu)| t[..len].iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / (n - 1.0))
+        .sum::<f64>()
+        / m as f64;
+    if w <= 0.0 {
+        // Degenerate: every chain is flat. Identical flat chains are
+        // trivially "converged"; different flat chains are not.
+        return Some(if b_over_n <= 0.0 { 1.0 } else { f64::INFINITY });
+    }
+    let var_plus = (n - 1.0) / n * w + b_over_n;
+    Some((var_plus / w).sqrt())
+}
+
+/// Effective sample size of one trace via the initial-positive-sequence
+/// autocorrelation estimator (Geyer 1992): sum lag-pair autocorrelations
+/// `ρ(2t) + ρ(2t+1)` until a pair goes non-positive, then
+/// `ESS = n / (1 + 2 Σ ρ)`. Clamped to `[1, n]`; degenerate flat traces
+/// (zero variance) report `n` — there is nothing left to mix.
+///
+/// The lag scan is capped at [`ESS_MAX_LAG`]: each ρ is an O(n) pass, so
+/// an uncapped scan over a slowly-mixing million-sample trace would be
+/// O(n²). Hitting the cap means autocorrelation is still positive at
+/// lag 1024 — the returned (over)estimate `≤ n / (1 + 2 Σ ρ)` is
+/// already small, which is the only signal such a chain deserves.
+pub fn ess(trace: &[f64]) -> f64 {
+    let n = trace.len();
+    if n < 4 {
+        return n as f64;
+    }
+    let mu = stats::mean(trace);
+    let nf = n as f64;
+    let var = trace.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / nf;
+    if var <= 0.0 {
+        return nf;
+    }
+    let rho = |lag: usize| -> f64 {
+        let mut acc = 0.0;
+        for i in 0..n - lag {
+            acc += (trace[i] - mu) * (trace[i + lag] - mu);
+        }
+        acc / (nf * var)
+    };
+    let mut sum_rho = 0.0;
+    let mut lag = 1usize;
+    while lag + 1 < n && lag < ESS_MAX_LAG {
+        let pair = rho(lag) + rho(lag + 1);
+        if pair <= 0.0 {
+            break;
+        }
+        sum_rho += pair;
+        lag += 2;
+    }
+    (nf / (1.0 + 2.0 * sum_rho)).clamp(1.0, nf)
+}
+
+/// Largest lag the [`ess`] initial-positive-sequence scan visits.
+pub const ESS_MAX_LAG: usize = 1024;
+
+/// Total effective sample size across chains (sum of per-chain ESS);
+/// `None` when every trace is empty.
+pub fn ess_total(traces: &[Vec<f64>]) -> Option<f64> {
+    if traces.iter().all(|t| t.is_empty()) {
+        return None;
+    }
+    Some(traces.iter().filter(|t| !t.is_empty()).map(|t| ess(t.as_slice())).sum())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn noise_trace(len: usize, center: f64, spread: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg32::new(seed);
+        (0..len).map(|_| center + spread * (rng.gen_f64() - 0.5)).collect()
+    }
+
+    #[test]
+    fn psrf_near_one_for_same_distribution() {
+        let traces: Vec<Vec<f64>> =
+            (0..4).map(|c| noise_trace(500, -100.0, 2.0, 900 + c)).collect();
+        let r = psrf(&traces).unwrap();
+        assert!(r > 0.9 && r < 1.1, "psrf={r}");
+    }
+
+    #[test]
+    fn psrf_large_for_separated_chains() {
+        let a = noise_trace(300, 0.0, 1.0, 1);
+        let b = noise_trace(300, 50.0, 1.0, 2);
+        let r = psrf(&[a, b]).unwrap();
+        assert!(r > 5.0, "psrf={r}");
+    }
+
+    #[test]
+    fn psrf_needs_two_chains_and_samples() {
+        assert!(psrf(&[noise_trace(100, 0.0, 1.0, 3)]).is_none());
+        assert!(psrf(&[vec![1.0, 2.0], vec![1.0, 2.0]]).is_none());
+        assert!(psrf(&[]).is_none());
+    }
+
+    #[test]
+    fn psrf_flat_chains() {
+        assert_eq!(psrf(&[vec![2.0; 50], vec![2.0; 50]]), Some(1.0));
+        assert_eq!(psrf(&[vec![2.0; 50], vec![3.0; 50]]), Some(f64::INFINITY));
+    }
+
+    #[test]
+    fn ess_of_iid_noise_is_large() {
+        let t = noise_trace(1000, 0.0, 1.0, 5);
+        let e = ess(&t);
+        assert!(e > 100.0, "ess={e}");
+    }
+
+    #[test]
+    fn ess_of_correlated_ramp_is_small() {
+        let t: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let e = ess(&t);
+        assert!(e < 50.0, "ess={e}");
+    }
+
+    #[test]
+    fn ess_degenerate_cases() {
+        assert_eq!(ess(&[]), 0.0);
+        assert_eq!(ess(&[1.0, 1.0]), 2.0);
+        assert_eq!(ess(&[5.0; 100]), 100.0);
+    }
+
+    #[test]
+    fn ess_total_sums_chains() {
+        let traces = vec![noise_trace(200, 0.0, 1.0, 7), Vec::new(), noise_trace(200, 0.0, 1.0, 8)];
+        let total = ess_total(&traces).unwrap();
+        assert!(total > 100.0);
+        assert!(ess_total(&[Vec::new(), Vec::new()]).is_none());
+        assert!(ess_total(&[]).is_none());
+    }
+}

@@ -1,0 +1,380 @@
+//! Exact per-order edge marginals (Bayesian model averaging over the
+//! sampled orders).
+//!
+//! For a sampled order ≺ and node `i` at position `p`, the posterior
+//! probability of an edge `j → i` *given the order* is a ratio of
+//! parent-set masses over the sets consistent with ≺:
+//!
+//! ```text
+//! P(j → i | ≺) = Σ_{π ⊆ pred(i), j ∈ π} 10^{ls(i,π)}
+//!              / Σ_{π ⊆ pred(i)}        10^{ls(i,π)}
+//! ```
+//!
+//! computed with the same combinadic predecessor enumeration as the
+//! sum engine (`scorer::sum`) and stabilized by factoring out the
+//! per-node max before exponentiating. Averaging these per-order
+//! marginals over the chain (after burn-in, with thinning) yields the
+//! order-MCMC edge posterior of Kuipers et al. (arXiv:1803.07859).
+//!
+//! Like the sum engine, the computation needs **every** parent-set
+//! mass, so it is only exact over the dense store — the coordinator's
+//! `validate_posterior` rejects the pruned hash backend.
+
+use crate::combinatorics::combinadic::next_combination;
+use crate::mcmc::Order;
+use crate::score::ScoreStore;
+
+/// The plain-data accumulation state: everything that must survive a
+/// checkpoint, separated from the enumeration scratch buffers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MarginalState {
+    /// Node count (the matrix is `n × n`).
+    pub n: usize,
+    /// Orders to discard before accumulating.
+    pub burnin: u64,
+    /// Keep every `thin`-th post-burn-in order (1 = keep all).
+    pub thin: u64,
+    /// Orders observed so far (including burn-in and thinned-away ones).
+    pub seen: u64,
+    /// Orders actually accumulated into `sums`.
+    pub samples: u64,
+    /// `sums[child * n + parent]` = Σ over accumulated orders of
+    /// `P(parent → child | ≺)`; divide by `samples` for probabilities.
+    pub sums: Vec<f64>,
+}
+
+impl MarginalState {
+    /// Fresh all-zero state.
+    pub fn new(n: usize, burnin: u64, thin: u64) -> Self {
+        assert!(thin >= 1, "thinning interval must be >= 1");
+        MarginalState { n, burnin, thin, seen: 0, samples: 0, sums: vec![0.0; n * n] }
+    }
+
+    /// Fold another chain's accumulation into this one (multi-chain
+    /// reduction after join). Deterministic: plain elementwise adds in
+    /// chain order.
+    pub fn merge(&mut self, other: &MarginalState) {
+        assert_eq!(self.n, other.n, "marginal matrices differ in n");
+        self.seen += other.seen;
+        self.samples += other.samples;
+        for (a, b) in self.sums.iter_mut().zip(&other.sums) {
+            *a += b;
+        }
+    }
+
+    /// The running edge-probability matrix: `out[child * n + parent]` =
+    /// mean of `P(parent → child | ≺)` over accumulated orders (all
+    /// zeros before the first accumulated sample).
+    pub fn edge_probabilities(&self) -> Vec<f64> {
+        if self.samples == 0 {
+            return vec![0.0; self.sums.len()];
+        }
+        let inv = 1.0 / self.samples as f64;
+        self.sums.iter().map(|s| s * inv).collect()
+    }
+}
+
+/// Accumulates exact per-order edge marginals from a chain's sample
+/// stream (fed through `McmcChain::run_observed`).
+pub struct MarginalAccumulator {
+    state: MarginalState,
+    // enumeration scratch, kept across observations
+    preds: Vec<usize>,
+    comb: Vec<usize>,
+    cand: Vec<usize>,
+    edge_mass: Vec<f64>,
+    ls_buf: Vec<f64>,
+}
+
+impl MarginalAccumulator {
+    /// Fresh accumulator for `n` nodes.
+    pub fn new(n: usize, burnin: u64, thin: u64) -> Self {
+        Self::from_state(MarginalState::new(n, burnin, thin))
+    }
+
+    /// Resume from a checkpointed state.
+    pub fn from_state(state: MarginalState) -> Self {
+        let n = state.n;
+        MarginalAccumulator {
+            state,
+            preds: Vec::with_capacity(n),
+            comb: Vec::new(),
+            cand: Vec::new(),
+            edge_mass: vec![0.0; n],
+            ls_buf: Vec::new(),
+        }
+    }
+
+    /// The accumulated state (checkpointing, reporting).
+    pub fn state(&self) -> &MarginalState {
+        &self.state
+    }
+
+    /// Tear down into the plain state.
+    pub fn into_state(self) -> MarginalState {
+        self.state
+    }
+
+    /// Observe one sampled order: counts toward burn-in/thinning, and —
+    /// when kept — adds every `P(j → i | ≺)` into the running matrix.
+    pub fn observe<S: ScoreStore + ?Sized>(&mut self, order: &Order, store: &S) {
+        let seen = self.state.seen;
+        self.state.seen += 1;
+        if seen < self.state.burnin || (seen - self.state.burnin) % self.state.thin != 0 {
+            return;
+        }
+        self.accumulate(order, store);
+        self.state.samples += 1;
+    }
+
+    /// The exact per-order marginal pass: per node, one enumeration
+    /// that caches every consistent score while finding the per-node
+    /// max (the stabilizer must be order-consistent — a *global* row
+    /// max could sit so far above every consistent score that all
+    /// weights underflow to a 0/0), then a cheap replay of the cached
+    /// scores to accumulate the total and per-parent masses. The replay
+    /// re-walks the combinations (needed for edge membership anyway)
+    /// but skips the expensive `rank_combination` + store probe.
+    fn accumulate<S: ScoreStore + ?Sized>(&mut self, order: &Order, store: &S) {
+        let layout = store.layout();
+        let n = layout.n();
+        let s = layout.s();
+        debug_assert_eq!(n, self.state.n, "order/store node count mismatch");
+        let ln10 = std::f64::consts::LN_10;
+        let empty_idx = layout.block_start(0) as usize;
+
+        for p in 1..n {
+            let node = order.seq()[p];
+            self.preds.clear();
+            self.preds.extend_from_slice(&order.seq()[..p]);
+            self.preds.sort_unstable();
+            let kmax = s.min(p);
+
+            // Pass 1: cache every consistent score, track the max.
+            let empty_ls = store.get(node, empty_idx) as f64;
+            let mut max_ls = empty_ls;
+            self.ls_buf.clear();
+            for k in 1..=kmax {
+                self.comb.clear();
+                self.comb.extend(0..k);
+                loop {
+                    self.cand.clear();
+                    for &ci in &self.comb {
+                        self.cand.push(self.preds[ci]);
+                    }
+                    let ls = store.get(node, layout.index_of(&self.cand)) as f64;
+                    self.ls_buf.push(ls);
+                    if ls > max_ls {
+                        max_ls = ls;
+                    }
+                    if !next_combination(p, &mut self.comb) {
+                        break;
+                    }
+                }
+            }
+
+            // Pass 2: replay the cached scores in the same enumeration
+            // order; `10^(ls - max)` never overflows.
+            self.edge_mass.clear();
+            self.edge_mass.resize(n, 0.0);
+            let mut total = ((empty_ls - max_ls) * ln10).exp();
+            let mut cached = 0usize;
+            for k in 1..=kmax {
+                self.comb.clear();
+                self.comb.extend(0..k);
+                loop {
+                    self.cand.clear();
+                    for &ci in &self.comb {
+                        self.cand.push(self.preds[ci]);
+                    }
+                    let w = ((self.ls_buf[cached] - max_ls) * ln10).exp();
+                    cached += 1;
+                    total += w;
+                    for &j in &self.cand {
+                        self.edge_mass[j] += w;
+                    }
+                    if !next_combination(p, &mut self.comb) {
+                        break;
+                    }
+                }
+            }
+            debug_assert_eq!(cached, self.ls_buf.len());
+
+            for &j in &self.preds {
+                self.state.sums[node * n + j] += self.edge_mass[j] / total;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::combinatorics::SubsetLayout;
+    use crate::score::NEG_SENTINEL;
+
+    /// A store where every consistent parent set scores identically —
+    /// edge marginals then reduce to a subset-counting ratio.
+    struct ConstStore {
+        layout: SubsetLayout,
+    }
+
+    impl ScoreStore for ConstStore {
+        fn layout(&self) -> &SubsetLayout {
+            &self.layout
+        }
+
+        fn get(&self, _node: usize, _idx: usize) -> f32 {
+            -3.25
+        }
+
+        fn fill_row(&self, _node: usize, out: &mut [f32]) {
+            out.fill(-3.25);
+        }
+
+        fn bytes(&self) -> usize {
+            0
+        }
+
+        fn stored_entries(&self) -> usize {
+            0
+        }
+
+        fn name(&self) -> &'static str {
+            "const"
+        }
+    }
+
+    fn binom(n: usize, k: usize) -> f64 {
+        if k > n {
+            return 0.0;
+        }
+        let mut acc = 1.0f64;
+        for i in 0..k {
+            acc = acc * (n - i) as f64 / (i + 1) as f64;
+        }
+        acc
+    }
+
+    #[test]
+    fn uniform_scores_give_counting_marginals() {
+        // With all scores equal, P(j → i | ≺) for a node with p
+        // predecessors is Σ_k C(p-1, k-1) / Σ_k C(p, k) over k ≤ s.
+        let (n, s) = (5usize, 2usize);
+        let store = ConstStore { layout: SubsetLayout::new(n, s) };
+        let order = Order::identity(n);
+        let mut acc = MarginalAccumulator::new(n, 0, 1);
+        acc.observe(&order, &store);
+        let probs = acc.state().edge_probabilities();
+        for p in 1..n {
+            let node = p; // identity order
+            let kmax = s.min(p);
+            let total: f64 = (0..=kmax).map(|k| binom(p, k)).sum();
+            let with_j: f64 = (1..=kmax).map(|k| binom(p - 1, k - 1)).sum();
+            for j in 0..p {
+                let got = probs[node * n + j];
+                let want = with_j / total;
+                assert!((got - want).abs() < 1e-12, "p={p} j={j}: {got} vs {want}");
+            }
+            // nodes after `node` in the order can never be its parents
+            for j in p..n {
+                assert_eq!(probs[node * n + j], 0.0);
+            }
+        }
+        // the first node has no predecessors at all
+        for j in 0..n {
+            assert_eq!(probs[j], 0.0);
+        }
+    }
+
+    #[test]
+    fn burnin_and_thinning_gate_accumulation() {
+        let n = 4usize;
+        let store = ConstStore { layout: SubsetLayout::new(n, 2) };
+        let order = Order::identity(n);
+        let mut acc = MarginalAccumulator::new(n, 3, 2);
+        for _ in 0..10 {
+            acc.observe(&order, &store);
+        }
+        // seen 0,1,2 burned; kept at seen = 3,5,7,9.
+        assert_eq!(acc.state().seen, 10);
+        assert_eq!(acc.state().samples, 4);
+    }
+
+    #[test]
+    fn merge_sums_chains_elementwise() {
+        let n = 4usize;
+        let store = ConstStore { layout: SubsetLayout::new(n, 2) };
+        let order = Order::identity(n);
+        let mut a = MarginalAccumulator::new(n, 0, 1);
+        let mut b = MarginalAccumulator::new(n, 0, 1);
+        a.observe(&order, &store);
+        b.observe(&order, &store);
+        b.observe(&order, &store);
+        let mut merged = a.into_state();
+        merged.merge(b.state());
+        assert_eq!(merged.samples, 3);
+        let probs = merged.edge_probabilities();
+        let solo = MarginalState {
+            n,
+            burnin: 0,
+            thin: 1,
+            seen: 1,
+            samples: 1,
+            sums: {
+                let mut one = MarginalAccumulator::new(n, 0, 1);
+                one.observe(&order, &store);
+                one.into_state().sums
+            },
+        };
+        // Same order three times = same mean as once.
+        for (p3, p1) in probs.iter().zip(solo.edge_probabilities().iter()) {
+            assert!((p3 - p1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_samples_give_zero_matrix() {
+        let state = MarginalState::new(3, 5, 1);
+        assert_eq!(state.edge_probabilities(), vec![0.0; 9]);
+    }
+
+    #[test]
+    fn sentinel_masses_vanish() {
+        // A store poisoned everywhere except the empty set: every edge
+        // probability must be ~0 (the empty set holds all the mass).
+        struct EmptyOnly {
+            layout: SubsetLayout,
+        }
+        impl ScoreStore for EmptyOnly {
+            fn layout(&self) -> &SubsetLayout {
+                &self.layout
+            }
+            fn get(&self, _node: usize, idx: usize) -> f32 {
+                let empty = self.layout.block_start(0) as usize;
+                if idx == empty {
+                    -2.0
+                } else {
+                    NEG_SENTINEL
+                }
+            }
+            fn fill_row(&self, _node: usize, _out: &mut [f32]) {}
+            fn bytes(&self) -> usize {
+                0
+            }
+            fn stored_entries(&self) -> usize {
+                0
+            }
+            fn name(&self) -> &'static str {
+                "empty-only"
+            }
+        }
+        let n = 4usize;
+        let store = EmptyOnly { layout: SubsetLayout::new(n, 2) };
+        let mut acc = MarginalAccumulator::new(n, 0, 1);
+        acc.observe(&Order::identity(n), &store);
+        for p in acc.state().edge_probabilities() {
+            assert!(p.abs() < 1e-12, "p={p}");
+        }
+    }
+}

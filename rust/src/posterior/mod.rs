@@ -1,0 +1,34 @@
+//! Posterior inference over the order-MCMC samples: Bayesian model
+//! averaging instead of best-graph optimization.
+//!
+//! The sampler (`mcmc`) walks order space; everything here consumes the
+//! walk itself rather than just its argmax:
+//!
+//! * [`marginals`] — exact per-order edge marginals `P(j → i | ≺)` via
+//!   log-sum-exp over consistent parent sets, averaged (with burn-in and
+//!   thinning) into an `n × n` edge-probability matrix;
+//! * [`diagnostics`] — Gelman–Rubin PSRF and autocorrelation ESS over
+//!   the per-chain score traces;
+//! * [`consensus`] — consensus-DAG extraction at a probability
+//!   threshold (with cycle repair) and the threshold sweep that turns
+//!   the matrix into a full ROC curve + AUC;
+//! * [`checkpoint`] — versioned binary chain-state serialization;
+//! * [`sampler`] — the segmented multi-chain driver tying the above to
+//!   `McmcChain::run_observed`, with checkpoint/resume.
+//!
+//! The coordinator exposes all of this as `bnlearn learn --posterior`
+//! (see `coordinator::experiment::run_posterior`). Layering: this module
+//! sits on `mcmc` + `score` + `eval` and knows nothing about the
+//! coordinator.
+
+pub mod checkpoint;
+pub mod consensus;
+pub mod diagnostics;
+pub mod marginals;
+pub mod sampler;
+
+pub use checkpoint::{ChainState, RunCheckpoint};
+pub use consensus::{consensus_dag, default_thresholds, threshold_sweep};
+pub use diagnostics::{ess, ess_total, psrf};
+pub use marginals::{MarginalAccumulator, MarginalState};
+pub use sampler::{run_posterior_chains, PosteriorRun, SamplerOptions};

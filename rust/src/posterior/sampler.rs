@@ -1,0 +1,428 @@
+//! The posterior multi-chain driver: independent MH chains on scoped
+//! threads (mirroring `mcmc::runner::run_chains_parallel`), each feeding
+//! a per-chain [`MarginalAccumulator`] through the chain's sample
+//! emission hook, merged after join. Runs in segments of
+//! `checkpoint_every` iterations so a versioned [`RunCheckpoint`] can be
+//! written between segments and a killed run resumed bit-for-bit.
+
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+use super::checkpoint::{ChainState, RunCheckpoint};
+use super::marginals::{MarginalAccumulator, MarginalState};
+use crate::mcmc::best::BestGraphTracker;
+use crate::mcmc::chain::{ChainStats, McmcChain};
+use crate::mcmc::runner::LearnResult;
+use crate::mcmc::Order;
+use crate::score::ScoreStore;
+use crate::scorer::OrderScorer;
+use crate::util::{Pcg32, Timer};
+
+/// Everything the posterior driver needs to know about a run.
+#[derive(Debug, Clone)]
+pub struct SamplerOptions {
+    /// Node count.
+    pub n: usize,
+    /// Total iterations per chain (a resumed run continues toward this
+    /// same target).
+    pub iters: u64,
+    /// Best-graph tracker capacity.
+    pub topk: usize,
+    /// Master seed (chain c derives `seed + c · 0x9E37`).
+    pub seed: u64,
+    /// Workload/score-configuration fingerprint baked into checkpoints;
+    /// a resume whose fingerprint differs is rejected (the restored
+    /// score and marginal sums would silently mix two posteriors). The
+    /// coordinator hashes (network, rows, noise, gamma, s, engine,
+    /// store); direct sampler users may pass 0 consistently.
+    pub fingerprint: u64,
+    /// Independent chains.
+    pub chains: usize,
+    /// Orders discarded before marginal accumulation.
+    pub burnin: u64,
+    /// Keep every `thin`-th post-burn-in order.
+    pub thin: u64,
+    /// Record per-iteration score traces (the PSRF/ESS input).
+    pub record_trace: bool,
+    /// Write a checkpoint every this many iterations (0 = never).
+    pub checkpoint_every: u64,
+    /// Where checkpoints go (required when `checkpoint_every > 0`).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Resume from this checkpoint instead of starting fresh.
+    pub resume: Option<PathBuf>,
+}
+
+/// What a posterior run produces.
+pub struct PosteriorRun {
+    /// Best graphs + aggregate stats + per-chain traces, as a plain
+    /// learning run would report them.
+    pub result: LearnResult,
+    /// Merged edge-marginal accumulation across chains.
+    pub marginals: MarginalState,
+    /// Final per-chain states (what the last checkpoint would hold).
+    pub states: Vec<ChainState>,
+    /// Iterations completed per chain (equals `iters` unless resumed
+    /// past the target).
+    pub iters_done: u64,
+}
+
+/// Run (or resume) `opts.chains` posterior chains to `opts.iters`
+/// iterations each, accumulating exact per-order edge marginals.
+///
+/// `make_scorer(chain_id)` runs on the worker thread, exactly like
+/// `run_chains_parallel`; `store` is the dense score store the marginal
+/// sums read from (the coordinator's `validate_posterior` guarantees
+/// density — pruned stores would bias every mass).
+pub fn run_posterior_chains<F, S, St>(
+    make_scorer: F,
+    store: &St,
+    opts: &SamplerOptions,
+) -> Result<PosteriorRun>
+where
+    F: Fn(usize) -> S + Sync,
+    S: OrderScorer,
+    St: ScoreStore + ?Sized,
+{
+    assert!(opts.chains >= 1, "need at least one chain");
+    assert!(opts.thin >= 1, "thinning interval must be >= 1");
+    if opts.checkpoint_every > 0 && opts.checkpoint_path.is_none() {
+        bail!("checkpointing enabled but no checkpoint path configured");
+    }
+    let timer = Timer::start();
+
+    let (mut states, start): (Vec<Option<ChainState>>, u64) = match &opts.resume {
+        Some(path) => {
+            let ck = RunCheckpoint::load(path)?;
+            if ck.n != opts.n {
+                bail!("checkpoint has n={}, this run has n={}", ck.n, opts.n);
+            }
+            if ck.chains.len() != opts.chains {
+                bail!("checkpoint has {} chains, this run has {}", ck.chains.len(), opts.chains);
+            }
+            if ck.topk != opts.topk {
+                bail!("checkpoint has topk={}, this run has {}", ck.topk, opts.topk);
+            }
+            if ck.seed != opts.seed {
+                bail!("checkpoint was written with seed {}, this run uses {}", ck.seed, opts.seed);
+            }
+            if ck.fingerprint != opts.fingerprint {
+                bail!(
+                    "checkpoint was written against a different workload/score configuration \
+                     (fingerprint {:#x} vs {:#x}) — resuming would mix two posteriors",
+                    ck.fingerprint,
+                    opts.fingerprint
+                );
+            }
+            if ck.iters_done > opts.iters {
+                bail!(
+                    "checkpoint already holds {} iterations, past the target {}",
+                    ck.iters_done,
+                    opts.iters
+                );
+            }
+            // Burn-in/thinning are baked into the accumulated marginal
+            // state; resuming under different settings would silently
+            // mix two accumulation schedules.
+            if let Some(chain) = ck.chains.first() {
+                let m = &chain.marginals;
+                if m.burnin != opts.burnin || m.thin != opts.thin {
+                    bail!(
+                        "checkpoint was written with burnin={}/thin={}, this run uses {}/{}",
+                        m.burnin,
+                        m.thin,
+                        opts.burnin,
+                        opts.thin
+                    );
+                }
+            }
+            (ck.chains.into_iter().map(Some).collect(), ck.iters_done)
+        }
+        None => ((0..opts.chains).map(|_| None).collect(), 0),
+    };
+
+    let mut done = start;
+    while done < opts.iters {
+        let seg = match opts.checkpoint_every {
+            0 => opts.iters - done,
+            every => every.min(opts.iters - done),
+        };
+        // Workers are re-spawned per segment (engines rebuilt by
+        // `make_scorer`): store-backed engine construction is O(s)
+        // bookkeeping over an existing table, which is noise next to a
+        // checkpoint segment of MCMC iterations, and it keeps the
+        // between-segment state exactly the serializable `ChainState` —
+        // no channel machinery, nothing live to desync from the file.
+        let make_scorer = &make_scorer;
+        states = std::thread::scope(|scope| {
+            let handles: Vec<_> = states
+                .into_iter()
+                .enumerate()
+                .map(|(c, st)| {
+                    scope.spawn(move || {
+                        let mut scorer = make_scorer(c);
+                        advance_chain(&mut scorer, store, opts, c, st, seg)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| Some(h.join().expect("posterior chain panicked")))
+                .collect()
+        });
+        done += seg;
+        if opts.checkpoint_every > 0 {
+            let path = opts.checkpoint_path.as_ref().expect("validated above");
+            checkpoint_of(&states, opts, done).save(path)?;
+        }
+    }
+
+    // Merge after join: trackers, counters, traces, marginal sums — all
+    // folded in chain order for determinism.
+    let mut tracker = BestGraphTracker::new(opts.topk);
+    let mut stats = ChainStats::default();
+    let mut traces = Vec::new();
+    let mut marginals = MarginalState::new(opts.n, opts.burnin, opts.thin);
+    let mut finals = Vec::new();
+    for st in states.into_iter().flatten() {
+        for (score, dag) in &st.tracker {
+            tracker.offer(*score, dag);
+        }
+        stats.iterations += st.stats.iterations;
+        stats.accepted += st.stats.accepted;
+        if opts.record_trace {
+            traces.push(st.stats.trace.clone());
+        }
+        marginals.merge(&st.marginals);
+        finals.push(st);
+    }
+    Ok(PosteriorRun {
+        result: LearnResult {
+            best: tracker.entries().to_vec(),
+            stats,
+            traces,
+            sampling_secs: timer.elapsed_secs(),
+            chains: opts.chains,
+        },
+        marginals,
+        states: finals,
+        iters_done: done,
+    })
+}
+
+/// Advance one chain by `seg` iterations: fresh-start or resume, then
+/// run with the marginal accumulator attached to the emission hook.
+fn advance_chain<S, St>(
+    scorer: &mut S,
+    store: &St,
+    opts: &SamplerOptions,
+    c: usize,
+    st: Option<ChainState>,
+    seg: u64,
+) -> ChainState
+where
+    S: OrderScorer,
+    St: ScoreStore + ?Sized,
+{
+    let (mut chain, mut acc) = match st {
+        Some(st) => (
+            McmcChain::resume(
+                scorer,
+                Order::from_seq(st.order),
+                st.score,
+                Pcg32::from_state(st.rng.0, st.rng.1),
+                BestGraphTracker::from_entries(opts.topk, st.tracker),
+                st.stats,
+            ),
+            MarginalAccumulator::from_state(st.marginals),
+        ),
+        None => (
+            McmcChain::new(scorer, opts.n, opts.topk, opts.seed.wrapping_add(c as u64 * 0x9E37)),
+            MarginalAccumulator::new(opts.n, opts.burnin, opts.thin),
+        ),
+    };
+    chain.set_record_trace(opts.record_trace);
+    chain.run_observed(seg, |order, _score| acc.observe(order, store));
+    let (order, score, rng, tracker, stats) = chain.into_parts();
+    ChainState {
+        order: order.seq().to_vec(),
+        score,
+        rng: rng.state(),
+        stats,
+        tracker: tracker.entries().to_vec(),
+        marginals: acc.into_state(),
+    }
+}
+
+fn checkpoint_of(states: &[Option<ChainState>], opts: &SamplerOptions, done: u64) -> RunCheckpoint {
+    RunCheckpoint {
+        n: opts.n,
+        topk: opts.topk,
+        seed: opts.seed,
+        fingerprint: opts.fingerprint,
+        iters_done: done,
+        chains: states.iter().map(|s| s.as_ref().expect("advanced chain").clone()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcmc::run_chains_parallel;
+    use crate::scorer::testutil::fixture;
+    use crate::scorer::SerialScorer;
+
+    fn opts(n: usize, iters: u64, chains: usize) -> SamplerOptions {
+        SamplerOptions {
+            n,
+            iters,
+            topk: 2,
+            seed: 31,
+            fingerprint: 0x51,
+            chains,
+            burnin: 10,
+            thin: 2,
+            record_trace: true,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume: None,
+        }
+    }
+
+    #[test]
+    fn posterior_chains_match_plain_parallel_runner() {
+        // The observer must not perturb the trajectory: same seeds ⇒
+        // same best score and acceptance counts as the plain runner.
+        let (_, table) = fixture(7, 3, 250, 401);
+        let o = opts(7, 200, 3);
+        let run =
+            run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).unwrap();
+        let plain = run_chains_parallel(|_| SerialScorer::new(&table), 7, 200, 2, 31, 3);
+        assert_eq!(run.result.best_score(), plain.best_score());
+        assert_eq!(run.result.stats.accepted, plain.stats.accepted);
+        assert_eq!(run.result.stats.iterations, plain.stats.iterations);
+        assert_eq!(run.iters_done, 200);
+        assert_eq!(run.result.traces.len(), 3);
+        // (iters - burnin) orders kept every 2nd ⇒ 95 per chain.
+        assert_eq!(run.marginals.samples, 3 * 95);
+        assert_eq!(run.states.len(), 3);
+    }
+
+    #[test]
+    fn probabilities_are_probabilities() {
+        let (_, table) = fixture(6, 2, 200, 402);
+        let o = opts(6, 150, 2);
+        let run =
+            run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).unwrap();
+        let probs = run.marginals.edge_probabilities();
+        assert_eq!(probs.len(), 36);
+        for (i, p) in probs.iter().enumerate() {
+            assert!((0.0..=1.0 + 1e-12).contains(p), "probs[{i}] = {p}");
+        }
+        // diagonal must stay zero
+        for i in 0..6 {
+            assert_eq!(probs[i * 6 + i], 0.0);
+        }
+        // something was learned
+        assert!(probs.iter().sum::<f64>() > 0.0);
+    }
+
+    #[test]
+    fn segmented_run_equals_straight_run() {
+        // checkpoint_every splits the run into segments; the trajectory
+        // and the accumulated sums must not change.
+        let (_, table) = fixture(6, 2, 200, 403);
+        let dir = std::env::temp_dir().join("bnlearn_sampler_seg_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let straight = {
+            let o = opts(6, 120, 2);
+            run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).unwrap()
+        };
+        let segmented = {
+            let mut o = opts(6, 120, 2);
+            o.checkpoint_every = 50;
+            o.checkpoint_path = Some(dir.join("seg.ckpt"));
+            run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).unwrap()
+        };
+        assert_eq!(straight.result.best_score(), segmented.result.best_score());
+        assert_eq!(straight.result.stats.accepted, segmented.result.stats.accepted);
+        assert_eq!(straight.marginals.sums, segmented.marginals.sums);
+        assert_eq!(straight.marginals.samples, segmented.marginals.samples);
+        // final checkpoint exists and matches the end state
+        let ck = RunCheckpoint::load(dir.join("seg.ckpt")).unwrap();
+        assert_eq!(ck.iters_done, 120);
+        assert_eq!(ck.chains.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_reproduces_uninterrupted_run() {
+        let (_, table) = fixture(6, 2, 200, 404);
+        let dir = std::env::temp_dir().join("bnlearn_sampler_resume_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ckpt = dir.join("run.ckpt");
+
+        let full = {
+            let o = opts(6, 160, 2);
+            run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).unwrap()
+        };
+        {
+            // first half, checkpointed at 80
+            let mut o = opts(6, 80, 2);
+            o.checkpoint_every = 80;
+            o.checkpoint_path = Some(ckpt.clone());
+            run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).unwrap();
+        }
+        let resumed = {
+            let mut o = opts(6, 160, 2);
+            o.checkpoint_every = 80;
+            o.checkpoint_path = Some(ckpt.clone());
+            o.resume = Some(ckpt.clone());
+            run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).unwrap()
+        };
+        assert_eq!(full.result.best_score(), resumed.result.best_score());
+        assert_eq!(full.result.stats.accepted, resumed.result.stats.accepted);
+        assert_eq!(full.marginals.sums, resumed.marginals.sums);
+        assert_eq!(full.marginals.samples, resumed.marginals.samples);
+        assert_eq!(full.result.traces, resumed.result.traces);
+        assert_eq!(resumed.iters_done, 160);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_config() {
+        let (_, table) = fixture(5, 2, 150, 405);
+        let dir = std::env::temp_dir().join("bnlearn_sampler_mismatch_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ckpt = dir.join("run.ckpt");
+        {
+            let mut o = opts(5, 60, 2);
+            o.checkpoint_every = 60;
+            o.checkpoint_path = Some(ckpt.clone());
+            run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).unwrap();
+        }
+        // wrong seed
+        let mut o = opts(5, 100, 2);
+        o.seed = 999;
+        o.resume = Some(ckpt.clone());
+        assert!(run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).is_err());
+        // wrong chain count
+        let mut o = opts(5, 100, 3);
+        o.resume = Some(ckpt.clone());
+        assert!(run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).is_err());
+        // wrong accumulation schedule
+        let mut o = opts(5, 100, 2);
+        o.burnin = 0;
+        o.resume = Some(ckpt.clone());
+        assert!(run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).is_err());
+        // different workload/score fingerprint
+        let mut o = opts(5, 100, 2);
+        o.fingerprint = 0x52;
+        o.resume = Some(ckpt.clone());
+        assert!(run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).is_err());
+        // target below what the checkpoint holds
+        let mut o = opts(5, 30, 2);
+        o.resume = Some(ckpt.clone());
+        assert!(run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

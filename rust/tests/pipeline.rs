@@ -138,7 +138,7 @@ fn multichain_merges_strictly_better_or_equal() {
     for chains in [1usize, 2, 4] {
         let res = run_chains_parallel(|_| SerialScorer::new(&table), 8, 150, 2, 99, chains);
         assert_eq!(res.stats.iterations, 150 * chains as u64);
-        assert!(res.best_score().is_finite());
+        assert!(res.best_score().unwrap().is_finite());
     }
 }
 
@@ -299,7 +299,7 @@ fn run_learning_exercises_hash_store_end_to_end() {
     let report = run_learning(&cfg, None).unwrap();
     assert_eq!(report.store_name, "hash");
     assert!(report.store_bytes > 0);
-    assert!(report.result.best_score().is_finite());
+    assert!(report.result.best_score().unwrap().is_finite());
     assert!(report.summary().contains("store=hash"));
 }
 

@@ -111,11 +111,11 @@ fn xla_chain_learns_like_serial_chain() {
     let table = build_table(n, 4, 300, 77);
     let serial_best = {
         let mut scorer = SerialScorer::new(&table);
-        run_chain(&mut scorer, n, 150, 1, 7).best_score()
+        run_chain(&mut scorer, n, 150, 1, 7).best_score().unwrap()
     };
     let xla_best = {
         let mut scorer = XlaScorer::new(default_artifacts_dir(), &table).unwrap();
-        run_chain(&mut scorer, n, 150, 1, 7).best_score()
+        run_chain(&mut scorer, n, 150, 1, 7).best_score().unwrap()
     };
     // Same seed, same scores → identical chains up to f32-sum noise.
     assert!(
