@@ -34,8 +34,14 @@ fn main() -> anyhow::Result<()> {
         store.bytes() as f64 / (1024.0 * 1024.0), t.elapsed_secs());
 
     // 3. MCMC over orders with the serial (GPP) engine from the registry.
+    //    The final `true` enables incremental delta scoring: each MH step
+    //    rescores only the swapped interval (bit-for-bit identical
+    //    results, several times faster). On the CLI the same knobs are
+    //    `--delta on|off` and `--proposal swap|adjacent|mixed` —
+    //    `--proposal adjacent` pairs with delta scoring for the O(1)
+    //    per-step regime.
     let mut scorer = make_engine(EngineKind::Serial, &store, &workload.data,
-        BdeParams::default(), 4)?;
+        BdeParams::default(), 4, true)?;
     let result = run_chain(&mut scorer, n, 2000, 3, 7);
     println!("sampling: {} iterations in {:.2}s (accept rate {:.2})",
         result.stats.iterations, result.sampling_secs, result.stats.accept_rate());

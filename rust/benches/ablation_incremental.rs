@@ -1,0 +1,100 @@
+//! Ablation: incremental delta scoring vs full rescore — the
+//! `incremental_speedup` trajectory (steps/sec, full vs `DeltaScorer`)
+//! at n ∈ {15, 30, 60}, under uniform-swap and adjacent proposals.
+//!
+//! A swap of positions `a < b` only changes the predecessor sets inside
+//! `[a, b]`, so the delta engine rescores ~n/3 positions per uniform
+//! swap and exactly 2 per adjacent transposition, while the full engine
+//! re-enumerates all n. Every row asserts the two chains ended on the
+//! same score — the speedup is free, not approximate.
+//!
+//! Outputs: a markdown table, `results/ablation_incremental.csv`, and a
+//! machine-readable `results/BENCH_scoring.json` so future PRs have a
+//! perf trajectory to compare against.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{chain_steps_per_sec, quick_mode, scaling_workload};
+use bnlearn::mcmc::ProposalKind;
+use bnlearn::scorer::{DeltaScorer, SerialScorer};
+use bnlearn::util::csvio::Table;
+
+fn main() -> anyhow::Result<()> {
+    // (n, s, rows, iters) — s drops to 3 at n=60 to keep the score-table
+    // preprocessing (not the thing being measured) tractable.
+    let cases: Vec<(usize, usize, usize, u64)> = if quick_mode() {
+        vec![(12, 3, 200, 300)]
+    } else {
+        vec![(15, 4, 400, 2000), (30, 4, 300, 600), (60, 3, 200, 200)]
+    };
+    let proposals = [ProposalKind::Swap, ProposalKind::Adjacent];
+
+    let mut csv = Table::new(&[
+        "n",
+        "s",
+        "proposal",
+        "full_steps_per_sec",
+        "delta_steps_per_sec",
+        "incremental_speedup",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    println!("Ablation — incremental (delta) scoring vs full rescore per MH step\n");
+
+    for &(n, s, rows, iters) in &cases {
+        let (_, table) = scaling_workload(n, s, rows, 0x6A00 + n as u64);
+        for &proposal in &proposals {
+            let (full_sps, full_score) =
+                chain_steps_per_sec(SerialScorer::new(&table), n, iters, 77, proposal);
+            let (delta_sps, delta_score) = chain_steps_per_sec(
+                DeltaScorer::new(SerialScorer::new(&table)),
+                n,
+                iters,
+                77,
+                proposal,
+            );
+            assert_eq!(
+                full_score, delta_score,
+                "delta trajectory diverged from full rescore (n={n}, {proposal:?})"
+            );
+            let speedup = delta_sps / full_sps.max(1e-12);
+            println!(
+                "n={n:>2} s={s} proposal={:<8}: full {full_sps:>10.1} steps/s  delta {delta_sps:>10.1} steps/s  speedup {speedup:>6.2}x",
+                proposal.name()
+            );
+            csv.push_row(vec![
+                n.to_string(),
+                s.to_string(),
+                proposal.name().to_string(),
+                format!("{full_sps:.1}"),
+                format!("{delta_sps:.1}"),
+                format!("{speedup:.2}"),
+            ]);
+            json_rows.push(format!(
+                "    {{\"n\": {n}, \"s\": {s}, \"proposal\": \"{}\", \"iters\": {iters}, \
+                 \"full_steps_per_sec\": {full_sps:.1}, \"delta_steps_per_sec\": {delta_sps:.1}, \
+                 \"incremental_speedup\": {speedup:.3}}}",
+                proposal.name()
+            ));
+        }
+    }
+
+    println!("\n{}", csv.to_markdown());
+    csv.write_csv("results/ablation_incremental.csv")?;
+    println!("wrote results/ablation_incremental.csv");
+
+    // Machine-readable perf trajectory (hand-rolled JSON — the offline
+    // crate set has no serde).
+    let json = format!(
+        "{{\n  \"bench\": \"scoring\",\n  \"quick_mode\": {},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        quick_mode(),
+        json_rows.join(",\n")
+    );
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_scoring.json", json)?;
+    println!("wrote results/BENCH_scoring.json");
+    println!(
+        "\nexpected regime: ~3x at uniform swaps (interval ~ n/3), >5x adjacent (interval = 2)."
+    );
+    Ok(())
+}

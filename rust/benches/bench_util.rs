@@ -9,10 +9,10 @@
 use bnlearn::bn::sampling::forward_sample;
 use bnlearn::bn::Network;
 use bnlearn::data::Dataset;
-use bnlearn::mcmc::McmcChain;
+use bnlearn::mcmc::{McmcChain, ProposalKind};
 use bnlearn::posterior::MarginalAccumulator;
 use bnlearn::score::{BdeParams, HashScoreStore, ScoreStore, ScoreTable};
-use bnlearn::scorer::SerialScorer;
+use bnlearn::scorer::{OrderScorer, SerialScorer};
 use bnlearn::util::{Pcg32, Timer};
 
 /// True when quick (CI-ish) mode is requested.
@@ -70,6 +70,27 @@ pub fn posterior_overhead(table: &ScoreTable, n: usize, iters: u64, seed: u64) -
     let with_marginals = iters as f64 / t.elapsed_secs().max(1e-12);
     std::hint::black_box(samples);
     (plain, with_marginals)
+}
+
+/// Steps/sec of an MH chain driving `scorer` for `iters` steps under the
+/// given proposal move, plus the final chain score (so full-vs-delta
+/// rows can assert their trajectories stayed bit-for-bit identical).
+pub fn chain_steps_per_sec<S: OrderScorer>(
+    mut scorer: S,
+    n: usize,
+    iters: u64,
+    seed: u64,
+    proposal: ProposalKind,
+) -> (f64, f64) {
+    // Construct (and warm up) outside the timed window: the chain's
+    // initial full rescore would otherwise dilute the steady-state
+    // steps/sec the delta-vs-full comparison is about.
+    let mut chain = McmcChain::new(&mut scorer, n, 1, seed);
+    chain.set_proposal(proposal);
+    let t = Timer::start();
+    chain.run(iters);
+    let sps = iters as f64 / t.elapsed_secs().max(1e-12);
+    (sps, chain.current_score())
 }
 
 /// Resident megabytes of a score store (per-backend memory column for the

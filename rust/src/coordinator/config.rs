@@ -3,6 +3,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::mcmc::ProposalKind;
+
 /// Which order-scoring engine drives the chain.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
@@ -95,6 +97,13 @@ pub struct RunConfig {
     pub topk: usize,
     /// Master seed.
     pub seed: u64,
+    /// MH proposal move (`--proposal swap|adjacent|mixed`).
+    pub proposal: ProposalKind,
+    /// Incremental delta scoring (`--delta on|off`): wrap per-node
+    /// capable engines in `DeltaScorer` so each MH step rescores only
+    /// the swapped interval. Bit-for-bit identical results; off is for
+    /// ablation benches and debugging.
+    pub delta: bool,
     /// Cell-corruption probability (Fig. 11), 0 = clean.
     pub noise: f64,
     /// Preprocessing threads.
@@ -136,6 +145,8 @@ impl Default for RunConfig {
             store: StoreKind::Dense,
             topk: 5,
             seed: 42,
+            proposal: ProposalKind::Swap,
+            delta: true,
             noise: 0.0,
             threads: default_threads(),
             artifacts_dir: crate::runtime::default_artifacts_dir(),
@@ -155,6 +166,15 @@ impl Default for RunConfig {
 /// Available parallelism with a sane floor.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Parse an `on|off` toggle value.
+fn parse_on_off(text: &str) -> Result<bool> {
+    Ok(match text {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => bail!("expected on|off, got {other:?}"),
+    })
 }
 
 impl RunConfig {
@@ -177,6 +197,8 @@ impl RunConfig {
                 "--store" => cfg.store = StoreKind::parse(next()?)?,
                 "--topk" => cfg.topk = next()?.parse()?,
                 "--seed" => cfg.seed = next()?.parse()?,
+                "--proposal" => cfg.proposal = ProposalKind::parse(next()?)?,
+                "--delta" => cfg.delta = parse_on_off(next()?)?,
                 "--noise" => cfg.noise = next()?.parse()?,
                 "--threads" => cfg.threads = next()?.parse()?,
                 "--artifacts" => cfg.artifacts_dir = next()?.into(),
@@ -266,6 +288,23 @@ mod tests {
         assert!(RunConfig::from_args(&args("--thin 0")).is_err());
         assert!(RunConfig::from_args(&args("--threshold 1.5")).is_err());
         assert!(RunConfig::from_args(&args("--threshold -0.1")).is_err());
+    }
+
+    #[test]
+    fn parses_proposal_and_delta_flags() {
+        let c = RunConfig::from_args(&args("--proposal adjacent --delta off")).unwrap();
+        assert_eq!(c.proposal, ProposalKind::Adjacent);
+        assert!(!c.delta);
+        let c = RunConfig::from_args(&args("--proposal mixed --delta on")).unwrap();
+        assert_eq!(c.proposal, ProposalKind::Mixed);
+        assert!(c.delta);
+        // defaults: uniform swaps, delta on
+        let d = RunConfig::default();
+        assert_eq!(d.proposal, ProposalKind::Swap);
+        assert!(d.delta);
+        // bad values rejected
+        assert!(RunConfig::from_args(&args("--proposal teleport")).is_err());
+        assert!(RunConfig::from_args(&args("--delta maybe")).is_err());
     }
 
     #[test]

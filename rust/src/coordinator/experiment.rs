@@ -15,7 +15,7 @@ use super::workload::Workload;
 use crate::bn::Dag;
 use crate::eval::roc::{auc_from_points, implied_auc, roc_point, RocPoint};
 use crate::eval::shd;
-use crate::mcmc::runner::{run_chains_parallel_traced, LearnResult};
+use crate::mcmc::runner::{run_chains_parallel_spec, ChainSpec, LearnResult};
 use crate::posterior::sampler::{run_posterior_chains, SamplerOptions};
 use crate::posterior::{consensus, diagnostics};
 use crate::priors::InterfaceMatrix;
@@ -129,17 +129,23 @@ pub fn run_learning_on(
         EngineKind::Xla => run_xla_chain(cfg, store.as_dyn(), n, &mut setup_secs)?,
         kind => {
             let store_ref = &store;
-            run_chains_parallel_traced(
+            let mut spec = ChainSpec::new(n, cfg.iters, cfg.topk, cfg.seed);
+            spec.chains = cfg.chains;
+            spec.record_trace = cfg.trace;
+            spec.proposal = cfg.proposal;
+            run_chains_parallel_spec(
                 |_| {
-                    registry::make_engine(kind, store_ref, &workload.data, params, cfg.s)
-                        .expect("validated engine construction")
+                    registry::make_engine(
+                        kind,
+                        store_ref,
+                        &workload.data,
+                        params,
+                        cfg.s,
+                        cfg.delta,
+                    )
+                    .expect("validated engine construction")
                 },
-                n,
-                cfg.iters,
-                cfg.topk,
-                cfg.seed,
-                cfg.chains,
-                cfg.trace,
+                &spec,
             )
         }
     };
@@ -180,14 +186,10 @@ fn run_xla_chain(
     let t = Timer::start();
     let mut scorer = crate::runtime::XlaScorer::new(&cfg.artifacts_dir, store)?;
     *setup_secs = t.elapsed_secs();
-    Ok(crate::mcmc::runner::run_chain_traced(
-        &mut scorer,
-        n,
-        cfg.iters,
-        cfg.topk,
-        cfg.seed,
-        cfg.trace,
-    ))
+    let mut spec = ChainSpec::new(n, cfg.iters, cfg.topk, cfg.seed);
+    spec.record_trace = cfg.trace;
+    spec.proposal = cfg.proposal;
+    Ok(crate::mcmc::runner::run_chain_spec(&mut scorer, &spec))
 }
 
 /// Feature-off stand-in: fail with a pointer at the gate.
@@ -279,21 +281,24 @@ impl PosteriorReport {
 }
 
 /// FNV-1a fingerprint of everything that shapes the workload and the
-/// score table. Baked into posterior checkpoints so `--resume` against
-/// different data or scoring parameters (which would silently mix two
-/// posteriors) is rejected; `--iters`, `--chains`-independent knobs
-/// like `--threshold`, and output paths are deliberately excluded —
-/// those may change across a resume.
+/// score table — plus the proposal move, which shapes the trajectory
+/// itself. Baked into posterior checkpoints so `--resume` against
+/// different data, scoring parameters, or proposal kind (which would
+/// silently mix two posteriors) is rejected; `--iters`,
+/// `--chains`-independent knobs like `--threshold`, output paths, and
+/// `--delta` (bit-for-bit identical either way) are deliberately
+/// excluded — those may change across a resume.
 fn posterior_fingerprint(cfg: &RunConfig) -> u64 {
     let text = format!(
-        "{}|{}|{}|{}|{}|{}|{}",
+        "{}|{}|{}|{}|{}|{}|{}|{}",
         cfg.network,
         cfg.rows,
         cfg.noise.to_bits(),
         cfg.gamma.to_bits(),
         cfg.s,
         cfg.engine.name(),
-        cfg.store.name()
+        cfg.store.name(),
+        cfg.proposal.name()
     );
     let mut hash = 0xcbf2_9ce4_8422_2325u64;
     for byte in text.bytes() {
@@ -341,6 +346,7 @@ pub fn run_posterior_on(
         seed: cfg.seed,
         fingerprint: posterior_fingerprint(cfg),
         chains: cfg.chains,
+        proposal: cfg.proposal,
         burnin: cfg.burnin,
         thin: cfg.thin,
         record_trace: true,
@@ -350,7 +356,7 @@ pub fn run_posterior_on(
     };
     let run = run_posterior_chains(
         |_| {
-            registry::make_engine(cfg.engine, &store, &workload.data, params, cfg.s)
+            registry::make_engine(cfg.engine, &store, &workload.data, params, cfg.s, cfg.delta)
                 .expect("validated engine construction")
         },
         &store,

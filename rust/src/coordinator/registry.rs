@@ -26,7 +26,9 @@ use super::config::{EngineKind, StoreKind};
 use crate::combinatorics::SubsetLayout;
 use crate::data::Dataset;
 use crate::score::{BdeParams, HashScoreStore, ScoreStore, ScoreTable};
-use crate::scorer::{BitVecScorer, OrderScorer, RecomputeScorer, SerialScorer, SumScorer};
+use crate::scorer::{
+    BitVecScorer, DeltaScorer, OrderScorer, RecomputeScorer, SerialScorer, SumScorer,
+};
 
 /// A built score store, concretely typed (see module docs for why this
 /// is an enum and not a `Box<dyn ScoreStore>`).
@@ -140,24 +142,38 @@ pub fn validate_posterior(engine: EngineKind, store: StoreKind, chains: usize) -
 /// the store variant.
 ///
 /// `data`/`params`/`s` feed the recompute ablation (the one engine that
-/// bypasses the store). `EngineKind::Xla` is rejected here — its PJRT
-/// handles are not `Send`, so the experiment driver builds it on the
-/// chain thread itself. `sum` over `hash` is constructible for
-/// ablations; [`validate`] is what rejects it for learning runs.
+/// bypasses the store). When `delta` is set, per-node-capable engines
+/// (serial, sum, bitvec) come back wrapped in [`DeltaScorer`], so the
+/// chain's propose/commit/rollback protocol rescores only the swapped
+/// interval per MH step — bit-for-bit identical results, O(interval)
+/// cost. The recompute ablation is never wrapped (its per-node entry
+/// point is itself a full rescore, so wrapping would only add overhead).
+/// `EngineKind::Xla` is rejected here — its PJRT handles are not
+/// `Send`, so the experiment driver builds it on the chain thread
+/// itself. `sum` over `hash` is constructible for ablations;
+/// [`validate`] is what rejects it for learning runs.
 pub fn make_engine<'a>(
     engine: EngineKind,
     store: &'a StoreHandle,
     data: &'a Dataset,
     params: BdeParams,
     s: usize,
+    delta: bool,
 ) -> Result<Box<dyn OrderScorer + 'a>> {
+    fn wrap<'a, E: OrderScorer + 'a>(engine: E, delta: bool) -> Box<dyn OrderScorer + 'a> {
+        if delta {
+            Box::new(DeltaScorer::new(engine))
+        } else {
+            Box::new(engine)
+        }
+    }
     Ok(match (engine, store) {
-        (EngineKind::Serial, StoreHandle::Dense(t)) => Box::new(SerialScorer::new(t)),
-        (EngineKind::Serial, StoreHandle::Hash(h)) => Box::new(SerialScorer::new(h)),
-        (EngineKind::Sum, StoreHandle::Dense(t)) => Box::new(SumScorer::new(t)),
-        (EngineKind::Sum, StoreHandle::Hash(h)) => Box::new(SumScorer::new(h)),
-        (EngineKind::BitVec, StoreHandle::Dense(t)) => Box::new(BitVecScorer::bounded(t)),
-        (EngineKind::BitVec, StoreHandle::Hash(h)) => Box::new(BitVecScorer::bounded(h)),
+        (EngineKind::Serial, StoreHandle::Dense(t)) => wrap(SerialScorer::new(t), delta),
+        (EngineKind::Serial, StoreHandle::Hash(h)) => wrap(SerialScorer::new(h), delta),
+        (EngineKind::Sum, StoreHandle::Dense(t)) => wrap(SumScorer::new(t), delta),
+        (EngineKind::Sum, StoreHandle::Hash(h)) => wrap(SumScorer::new(h), delta),
+        (EngineKind::BitVec, StoreHandle::Dense(t)) => wrap(BitVecScorer::bounded(t), delta),
+        (EngineKind::BitVec, StoreHandle::Hash(h)) => wrap(BitVecScorer::bounded(h), delta),
         (EngineKind::Recompute, _) => Box::new(RecomputeScorer::new(data, params, s)),
         (EngineKind::Xla, _) => {
             bail!("the xla engine is device-bound — construct it via the experiment driver")
@@ -206,8 +222,8 @@ mod tests {
         let mut a = BestGraph::new(8);
         let mut b = BestGraph::new(8);
         for engine in [EngineKind::Serial, EngineKind::BitVec] {
-            let mut ed = make_engine(engine, &dense, &d, params, 3).unwrap();
-            let mut eh = make_engine(engine, &hash, &d, params, 3).unwrap();
+            let mut ed = make_engine(engine, &dense, &d, params, 3, false).unwrap();
+            let mut eh = make_engine(engine, &hash, &d, params, 3, false).unwrap();
             for _ in 0..5 {
                 let order = Order::random(8, &mut rng);
                 let ta = ed.score_order(&order, &mut a);
@@ -216,6 +232,35 @@ mod tests {
                 assert_eq!(a.parents, b.parents, "engine {engine:?}");
             }
         }
+    }
+
+    /// Delta-wrapped registry engines score identically to the plain
+    /// ones (the wrapper only changes *when* nodes are rescored).
+    #[test]
+    fn delta_wrapping_changes_name_not_scores() {
+        let d = data(8, 150, 305);
+        let params = BdeParams::default();
+        let dense = build_store(StoreKind::Dense, &d, params, 3, 2, None);
+        let mut rng = Pcg32::new(306);
+        let mut a = BestGraph::new(8);
+        let mut b = BestGraph::new(8);
+        for engine in [EngineKind::Serial, EngineKind::Sum, EngineKind::BitVec] {
+            let mut plain = make_engine(engine, &dense, &d, params, 3, false).unwrap();
+            let mut delta = make_engine(engine, &dense, &d, params, 3, true).unwrap();
+            assert!(delta.name().starts_with("delta+"), "{}", delta.name());
+            for _ in 0..3 {
+                let order = Order::random(8, &mut rng);
+                assert_eq!(
+                    plain.score_order(&order, &mut a),
+                    delta.score_order(&order, &mut b),
+                    "engine {engine:?}"
+                );
+                assert_eq!(a.parents, b.parents, "engine {engine:?}");
+            }
+        }
+        // the recompute ablation is never wrapped
+        let rec = make_engine(EngineKind::Recompute, &dense, &d, params, 3, true).unwrap();
+        assert_eq!(rec.name(), "recompute");
     }
 
     #[test]
@@ -244,6 +289,6 @@ mod tests {
         let d = data(5, 60, 304);
         let params = BdeParams::default();
         let store = build_store(StoreKind::Dense, &d, params, 2, 1, None);
-        assert!(make_engine(EngineKind::Xla, &store, &d, params, 2).is_err());
+        assert!(make_engine(EngineKind::Xla, &store, &d, params, 2, true).is_err());
     }
 }

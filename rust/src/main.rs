@@ -60,6 +60,9 @@ fn print_usage() {
            --network <name|random:n:edges[:states]>  (default sachs)\n\
            --rows N --iters N --chains N --engine serial|xla|bitvec|sum|recompute\n\
            --store dense|hash  (score-store backend; hash prunes dominated sets)\n\
+           --proposal swap|adjacent|mixed  (MH move; adjacent = O(1) delta steps)\n\
+           --delta on|off  (incremental interval rescoring, default on; off = full\n\
+                            rescore per step, bit-for-bit identical results)\n\
            --s N --gamma F --topk N --seed N --noise P --threads N --artifacts DIR\n\
            --trace [--trace-out PATH]  (record per-iteration score traces to CSV)\n\
          \n\

@@ -1,15 +1,53 @@
 //! One Metropolis–Hastings chain over the order space (Algorithm 1).
 //!
-//! Each step: propose a swap of two random positions, score the proposed
-//! order with the configured engine, accept with probability
+//! Each step: propose a swap of two positions (see [`ProposalKind`]),
+//! score the proposed order through the engine's incremental
+//! propose/commit/rollback protocol (`OrderScorer::propose_swap` — a
+//! full rescore for engines that don't opt in), accept with probability
 //! `min(1, P(≺_new)/P(≺))` — in log10 score terms,
 //! `ln(u) < (score_new − score_old) · ln(10)` — and, per the paper, offer
-//! the accepted order's best graph to the tracker.
+//! the accepted order's best graph to the tracker. All proposal kinds
+//! are symmetric moves, so no Hastings correction is needed.
 
 use super::best::BestGraphTracker;
 use super::order::Order;
 use crate::scorer::{BestGraph, OrderScorer};
 use crate::util::Pcg32;
+
+/// How [`McmcChain::step`] proposes the next order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProposalKind {
+    /// Swap two uniformly random distinct positions (the paper's move;
+    /// expected rescore interval ~ n/3 for incremental engines).
+    Swap,
+    /// Swap two adjacent positions — interval length 2, the O(1) regime
+    /// for incremental engines (local mixing only).
+    Adjacent,
+    /// Fair per-step mix: adjacent transpositions for cheap local moves,
+    /// uniform swaps for long jumps.
+    Mixed,
+}
+
+impl ProposalKind {
+    /// Parse from CLI text (`--proposal swap|adjacent|mixed`).
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        Ok(match text {
+            "swap" | "uniform" => ProposalKind::Swap,
+            "adjacent" | "adj" => ProposalKind::Adjacent,
+            "mixed" | "mix" => ProposalKind::Mixed,
+            other => anyhow::bail!("unknown proposal {other:?} (swap|adjacent|mixed)"),
+        })
+    }
+
+    /// Proposal name for logs and checkpoint fingerprints.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProposalKind::Swap => "swap",
+            ProposalKind::Adjacent => "adjacent",
+            ProposalKind::Mixed => "mixed",
+        }
+    }
+}
 
 /// Counters exposed for logging / convergence diagnostics.
 #[derive(Debug, Clone, Default)]
@@ -41,6 +79,7 @@ pub struct McmcChain<'s, S: OrderScorer + ?Sized> {
     pub tracker: BestGraphTracker,
     pub stats: ChainStats,
     record_trace: bool,
+    proposal: ProposalKind,
     rng: Pcg32,
 }
 
@@ -61,6 +100,7 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
             tracker,
             stats: ChainStats::default(),
             record_trace: false,
+            proposal: ProposalKind::Swap,
             rng,
         }
     }
@@ -86,6 +126,7 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
             tracker,
             stats,
             record_trace: false,
+            proposal: ProposalKind::Swap,
             rng,
         }
     }
@@ -101,6 +142,13 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
         self.record_trace = on;
     }
 
+    /// Select the proposal move (default [`ProposalKind::Swap`]). Set
+    /// before running — switching mid-chain changes the RNG consumption
+    /// pattern and thus the trajectory.
+    pub fn set_proposal(&mut self, proposal: ProposalKind) {
+        self.proposal = proposal;
+    }
+
     /// The current order.
     pub fn order(&self) -> &Order {
         &self.order
@@ -111,18 +159,51 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
         self.current_score
     }
 
-    /// One MH step; returns `true` if the proposal was accepted.
-    pub fn step(&mut self) -> bool {
-        let n = self.order.n();
-        self.stats.iterations += 1;
-        // Propose: swap two distinct random positions (Section III-C).
+    /// Draw the paper's move: two distinct uniformly random positions.
+    fn draw_swap(&mut self, n: usize) -> (usize, usize) {
         let a = self.rng.gen_range(n);
         let mut b = self.rng.gen_range(n);
         while b == a && n > 1 {
             b = self.rng.gen_range(n);
         }
+        (a, b)
+    }
+
+    /// Draw the next proposal's positions per the configured kind.
+    fn propose_positions(&mut self, n: usize) -> (usize, usize) {
+        match self.proposal {
+            ProposalKind::Swap => self.draw_swap(n),
+            ProposalKind::Adjacent if n < 2 => (0, 0),
+            ProposalKind::Adjacent => {
+                let a = self.rng.gen_range(n - 1);
+                (a, a + 1)
+            }
+            ProposalKind::Mixed if n < 2 => (0, 0),
+            ProposalKind::Mixed => {
+                if self.rng.gen_range(2) == 0 {
+                    let a = self.rng.gen_range(n - 1);
+                    (a, a + 1)
+                } else {
+                    self.draw_swap(n)
+                }
+            }
+        }
+    }
+
+    /// One MH step; returns `true` if the proposal was accepted.
+    ///
+    /// Drives the engine's propose/commit/rollback protocol: the scorer
+    /// sees the already-swapped order plus the swapped interval, so
+    /// incremental engines rescore only `a..=b`; default engines fall
+    /// back to a full rescore and behave exactly as before.
+    pub fn step(&mut self) -> bool {
+        let n = self.order.n();
+        self.stats.iterations += 1;
+        // Propose: swap two positions (Section III-C).
+        let (a, b) = self.propose_positions(n);
         self.order.swap_positions(a, b);
-        let proposed = self.scorer.score_order(&self.order, &mut self.out);
+        let (lo, hi) = (a.min(b), a.max(b));
+        let proposed = self.scorer.propose_swap(&self.order, lo, hi, &mut self.out);
 
         // Scores are log10; MH uses natural log on the uniform draw.
         let log_u = self.rng.gen_f64_open().ln();
@@ -130,10 +211,12 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
         if accept {
             self.current_score = proposed;
             self.stats.accepted += 1;
+            self.scorer.commit_swap(&mut self.out);
             // Paper: on acceptance, compare the order's best graph with
             // the record.
             self.tracker.offer(self.out.total(), &self.out.to_dag());
         } else {
+            self.scorer.rollback_swap();
             self.order.swap_positions(a, b); // undo
         }
         if self.record_trace {
@@ -268,5 +351,61 @@ mod tests {
         let mut chain = McmcChain::new(&mut scorer, 1, 1, 119);
         chain.run(10);
         assert!(chain.current_score().is_finite());
+    }
+
+    /// The delta engine must reproduce the full-rescore chain exactly:
+    /// same accepts, same trace, same tracker entries.
+    #[test]
+    fn delta_chain_is_bit_for_bit_identical_to_full_chain() {
+        use crate::scorer::DeltaScorer;
+        let (_, table) = fixture(8, 3, 250, 130);
+        for proposal in [ProposalKind::Swap, ProposalKind::Adjacent, ProposalKind::Mixed] {
+            let mut full = SerialScorer::new(&table);
+            let mut c_full = McmcChain::new(&mut full, 8, 3, 131);
+            c_full.set_proposal(proposal);
+            c_full.set_record_trace(true);
+            c_full.run(300);
+
+            let mut delta = DeltaScorer::new(SerialScorer::new(&table));
+            let mut c_delta = McmcChain::new(&mut delta, 8, 3, 131);
+            c_delta.set_proposal(proposal);
+            c_delta.set_record_trace(true);
+            c_delta.run(300);
+
+            assert_eq!(c_full.current_score(), c_delta.current_score(), "{proposal:?}");
+            assert_eq!(c_full.order(), c_delta.order(), "{proposal:?}");
+            assert_eq!(c_full.stats.accepted, c_delta.stats.accepted, "{proposal:?}");
+            assert_eq!(c_full.stats.trace, c_delta.stats.trace, "{proposal:?}");
+            assert_eq!(c_full.tracker.entries(), c_delta.tracker.entries(), "{proposal:?}");
+        }
+    }
+
+    /// Adjacent and mixed proposals keep every chain invariant: the
+    /// current score always equals a from-scratch rescore of the order.
+    #[test]
+    fn non_uniform_proposals_preserve_score_invariant() {
+        let (_, table) = fixture(7, 3, 200, 132);
+        for proposal in [ProposalKind::Adjacent, ProposalKind::Mixed] {
+            let mut scorer = SerialScorer::new(&table);
+            let mut chain = McmcChain::new(&mut scorer, 7, 2, 133);
+            chain.set_proposal(proposal);
+            chain.run(150);
+            let order = chain.order().clone();
+            let score = chain.current_score();
+            let mut check = SerialScorer::new(&table);
+            let mut out = BestGraph::new(7);
+            assert!((score - check.score_order(&order, &mut out)).abs() < 1e-9, "{proposal:?}");
+            assert!(chain.stats.accept_rate() > 0.0, "{proposal:?}");
+        }
+    }
+
+    #[test]
+    fn proposal_kind_parse_and_name() {
+        assert_eq!(ProposalKind::parse("swap").unwrap(), ProposalKind::Swap);
+        assert_eq!(ProposalKind::parse("uniform").unwrap(), ProposalKind::Swap);
+        assert_eq!(ProposalKind::parse("adjacent").unwrap(), ProposalKind::Adjacent);
+        assert_eq!(ProposalKind::parse("mix").unwrap(), ProposalKind::Mixed);
+        assert!(ProposalKind::parse("teleport").is_err());
+        assert_eq!(ProposalKind::Adjacent.name(), "adjacent");
     }
 }

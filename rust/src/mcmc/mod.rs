@@ -9,9 +9,10 @@ pub mod order;
 pub mod runner;
 
 pub use best::BestGraphTracker;
-pub use chain::{ChainStats, McmcChain};
+pub use chain::{ChainStats, McmcChain, ProposalKind};
 pub use graphspace::GraphChain;
 pub use order::Order;
 pub use runner::{
-    run_chain, run_chain_traced, run_chains_parallel, run_chains_parallel_traced, LearnResult,
+    run_chain, run_chain_spec, run_chain_traced, run_chains_parallel, run_chains_parallel_spec,
+    run_chains_parallel_traced, ChainSpec, LearnResult,
 };

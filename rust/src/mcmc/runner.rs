@@ -5,10 +5,46 @@
 //! implementation").
 
 use super::best::BestGraphTracker;
-use super::chain::{ChainStats, McmcChain};
+use super::chain::{ChainStats, McmcChain, ProposalKind};
 use crate::bn::Dag;
 use crate::scorer::OrderScorer;
 use crate::util::Timer;
+
+/// Knobs of a chain run, bundled so drivers don't grow endless
+/// positional parameters. The classic `run_chain*` entry points are thin
+/// wrappers over the `*_spec` cores with default proposal/trace settings.
+#[derive(Debug, Clone)]
+pub struct ChainSpec {
+    /// Node count.
+    pub n: usize,
+    /// Iterations per chain.
+    pub iters: u64,
+    /// Best-graph tracker capacity.
+    pub topk: usize,
+    /// Master seed (chain c derives `seed + c · 0x9E37`).
+    pub seed: u64,
+    /// Independent chains (parallel runner only).
+    pub chains: usize,
+    /// Record per-iteration score traces.
+    pub record_trace: bool,
+    /// Proposal move (see [`ProposalKind`]).
+    pub proposal: ProposalKind,
+}
+
+impl ChainSpec {
+    /// Defaults: one chain, no trace, uniform swap proposals.
+    pub fn new(n: usize, iters: u64, topk: usize, seed: u64) -> Self {
+        ChainSpec {
+            n,
+            iters,
+            topk,
+            seed,
+            chains: 1,
+            record_trace: false,
+            proposal: ProposalKind::Swap,
+        }
+    }
+}
 
 /// Outcome of a learning run.
 #[derive(Debug, Clone)]
@@ -61,11 +97,19 @@ pub fn run_chain_traced<S: OrderScorer + ?Sized>(
     seed: u64,
     record_trace: bool,
 ) -> LearnResult {
+    let mut spec = ChainSpec::new(n, iters, topk, seed);
+    spec.record_trace = record_trace;
+    run_chain_spec(scorer, &spec)
+}
+
+/// Run one chain as described by `spec` (`spec.chains` is ignored here).
+pub fn run_chain_spec<S: OrderScorer + ?Sized>(scorer: &mut S, spec: &ChainSpec) -> LearnResult {
     let timer = Timer::start();
-    let mut chain = McmcChain::new(scorer, n, topk, seed);
-    chain.set_record_trace(record_trace);
-    chain.run(iters);
-    let traces = if record_trace { vec![chain.stats.trace.clone()] } else { Vec::new() };
+    let mut chain = McmcChain::new(scorer, spec.n, spec.topk, spec.seed);
+    chain.set_proposal(spec.proposal);
+    chain.set_record_trace(spec.record_trace);
+    chain.run(spec.iters);
+    let traces = if spec.record_trace { vec![chain.stats.trace.clone()] } else { Vec::new() };
     LearnResult {
         best: chain.tracker.entries().to_vec(),
         stats: chain.stats.clone(),
@@ -112,18 +156,36 @@ where
     F: Fn(usize) -> S + Sync,
     S: OrderScorer,
 {
-    assert!(chains >= 1);
+    let mut spec = ChainSpec::new(n, iters, topk, seed);
+    spec.chains = chains;
+    spec.record_trace = record_trace;
+    run_chains_parallel_spec(make_scorer, &spec)
+}
+
+/// Run `spec.chains` independent chains in parallel as described by
+/// `spec`, merging trackers/stats/traces after join.
+pub fn run_chains_parallel_spec<F, S>(make_scorer: F, spec: &ChainSpec) -> LearnResult
+where
+    F: Fn(usize) -> S + Sync,
+    S: OrderScorer,
+{
+    assert!(spec.chains >= 1);
     let timer = Timer::start();
     let results: Vec<(BestGraphTracker, ChainStats)> = std::thread::scope(|scope| {
         let make_scorer = &make_scorer;
-        let handles: Vec<_> = (0..chains)
+        let handles: Vec<_> = (0..spec.chains)
             .map(|c| {
                 scope.spawn(move || {
                     let mut scorer = make_scorer(c);
-                    let mut chain =
-                        McmcChain::new(&mut scorer, n, topk, seed.wrapping_add(c as u64 * 0x9E37));
-                    chain.set_record_trace(record_trace);
-                    chain.run(iters);
+                    let mut chain = McmcChain::new(
+                        &mut scorer,
+                        spec.n,
+                        spec.topk,
+                        spec.seed.wrapping_add(c as u64 * 0x9E37),
+                    );
+                    chain.set_proposal(spec.proposal);
+                    chain.set_record_trace(spec.record_trace);
+                    chain.run(spec.iters);
                     (chain.tracker.clone(), chain.stats.clone())
                 })
             })
@@ -131,14 +193,14 @@ where
         handles.into_iter().map(|h| h.join().expect("chain panicked")).collect()
     });
 
-    let mut merged = BestGraphTracker::new(topk);
+    let mut merged = BestGraphTracker::new(spec.topk);
     let mut stats = ChainStats::default();
     let mut traces = Vec::new();
     for (tracker, s) in &results {
         merged.merge(tracker);
         stats.iterations += s.iterations;
         stats.accepted += s.accepted;
-        if record_trace {
+        if spec.record_trace {
             traces.push(s.trace.clone());
         }
     }
@@ -147,7 +209,7 @@ where
         stats,
         traces,
         sampling_secs: timer.elapsed_secs(),
-        chains,
+        chains: spec.chains,
     }
 }
 
@@ -205,6 +267,30 @@ mod tests {
         // untraced leaves traces empty
         let res = run_chains_parallel(|_| SerialScorer::new(&table), 6, 80, 1, 9, 2);
         assert!(res.traces.is_empty());
+    }
+
+    #[test]
+    fn spec_runner_drives_proposal_kinds_deterministically() {
+        use super::super::chain::ProposalKind;
+        let (_, table) = fixture(7, 3, 150, 128);
+        for proposal in [ProposalKind::Swap, ProposalKind::Adjacent, ProposalKind::Mixed] {
+            let mut spec = ChainSpec::new(7, 120, 2, 129);
+            spec.chains = 2;
+            spec.proposal = proposal;
+            let a = run_chains_parallel_spec(|_| SerialScorer::new(&table), &spec);
+            let b = run_chains_parallel_spec(|_| SerialScorer::new(&table), &spec);
+            assert_eq!(a.best_score(), b.best_score(), "{proposal:?}");
+            assert_eq!(a.stats.accepted, b.stats.accepted, "{proposal:?}");
+            assert_eq!(a.stats.iterations, 240, "{proposal:?}");
+        }
+        // the swap spec reproduces the classic entry point exactly
+        let spec = ChainSpec::new(7, 120, 2, 129);
+        let mut scorer = SerialScorer::new(&table);
+        let via_spec = run_chain_spec(&mut scorer, &spec);
+        let mut scorer = SerialScorer::new(&table);
+        let classic = run_chain(&mut scorer, 7, 120, 2, 129);
+        assert_eq!(via_spec.best_score(), classic.best_score());
+        assert_eq!(via_spec.stats.accepted, classic.stats.accepted);
     }
 
     #[test]

@@ -28,7 +28,13 @@ use crate::bn::Dag;
 use crate::mcmc::ChainStats;
 
 const MAGIC: [u8; 4] = *b"BNPC";
-const VERSION: u32 = 1;
+/// v2: the workload fingerprint now also hashes the proposal kind
+/// (`--proposal`), which shapes the trajectory. The byte layout is
+/// unchanged, but v1 fingerprints were computed over a different field
+/// set — bumping the version makes stale files fail with a clear
+/// "format v1 is not supported" instead of a misleading
+/// fingerprint-mismatch error.
+const VERSION: u32 = 2;
 
 /// One chain's resumable state.
 #[derive(Debug, Clone)]

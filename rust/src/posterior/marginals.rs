@@ -16,6 +16,19 @@
 //! marginals over the chain (after burn-in, with thinning) yields the
 //! order-MCMC edge posterior of Kuipers et al. (arXiv:1803.07859).
 //!
+//! **Incremental recompute.** A node's per-order contribution is a pure
+//! function of (node, predecessor set, store), so the accumulator caches
+//! each node's `(parent, probability)` vector and, on the next kept
+//! order, re-enumerates only the positions inside the changed window
+//! between the previous and current sequences — everything outside a
+//! swap interval keeps its predecessor *set* (the same invariant
+//! `scorer::delta` exploits). Rejected proposals re-emit the unchanged
+//! order, turning the dominant cost of `--posterior` runs from a full
+//! exponential enumeration into cheap cached adds; the accumulated sums
+//! are bitwise identical to a from-scratch pass because the cached
+//! values are exactly what the enumeration would recompute, added in
+//! the same position-then-sorted-parent order.
+//!
 //! Like the sum engine, the computation needs **every** parent-set
 //! mass, so it is only exact over the dense store — the coordinator's
 //! `validate_posterior` rejects the pruned hash backend.
@@ -78,6 +91,13 @@ impl MarginalState {
 /// stream (fed through `McmcChain::run_observed`).
 pub struct MarginalAccumulator {
     state: MarginalState,
+    /// Incremental cache: the sequence of the last accumulated order
+    /// (empty until the first kept sample, and after a resume — the
+    /// cache is scratch, never checkpointed).
+    cached_seq: Vec<usize>,
+    /// `contrib[node]` — the node's `(parent, P(parent → node | ≺))`
+    /// pairs for the cached order, in sorted-parent order.
+    contrib: Vec<Vec<(usize, f64)>>,
     // enumeration scratch, kept across observations
     preds: Vec<usize>,
     comb: Vec<usize>,
@@ -97,6 +117,8 @@ impl MarginalAccumulator {
         let n = state.n;
         MarginalAccumulator {
             state,
+            cached_seq: Vec::new(),
+            contrib: vec![Vec::new(); n],
             preds: Vec::with_capacity(n),
             comb: Vec::new(),
             cand: Vec::new(),
@@ -127,82 +149,126 @@ impl MarginalAccumulator {
         self.state.samples += 1;
     }
 
-    /// The exact per-order marginal pass: per node, one enumeration
-    /// that caches every consistent score while finding the per-node
-    /// max (the stabilizer must be order-consistent — a *global* row
-    /// max could sit so far above every consistent score that all
-    /// weights underflow to a 0/0), then a cheap replay of the cached
-    /// scores to accumulate the total and per-parent masses. The replay
-    /// re-walks the combinations (needed for edge membership anyway)
-    /// but skips the expensive `rank_combination` + store probe.
+    /// The exact per-order marginal pass, incrementally: refresh the
+    /// per-node contribution cache only for positions inside the
+    /// changed window between the previously accumulated order and this
+    /// one (everything outside keeps its predecessor set), then replay
+    /// every node's cached `(parent, probability)` pairs into the sums.
     fn accumulate<S: ScoreStore + ?Sized>(&mut self, order: &Order, store: &S) {
+        let n = store.layout().n();
+        debug_assert_eq!(n, self.state.n, "order/store node count mismatch");
+        let seq = order.seq();
+
+        // Changed window [lo, hi] vs the cached order; an empty range
+        // (lo > hi) means every node's contribution is already cached.
+        let (lo, hi) = if self.cached_seq.len() == n {
+            let mut lo = 0usize;
+            while lo < n && self.cached_seq[lo] == seq[lo] {
+                lo += 1;
+            }
+            if lo == n {
+                (1, 0) // identical order (e.g. a rejected proposal)
+            } else {
+                let mut hi = n - 1;
+                while self.cached_seq[hi] == seq[hi] {
+                    hi -= 1;
+                }
+                (lo, hi)
+            }
+        } else {
+            (0, n - 1)
+        };
+        for p in lo..=hi {
+            self.recompute_position(order, p, store);
+        }
+        self.cached_seq.clear();
+        self.cached_seq.extend_from_slice(seq);
+
+        // Replay in position order, parents in sorted order — the same
+        // add order as a from-scratch pass, so sums stay bitwise equal.
+        for &node in seq.iter().skip(1) {
+            for &(j, v) in &self.contrib[node] {
+                self.state.sums[node * n + j] += v;
+            }
+        }
+    }
+
+    /// Recompute one position's contribution vector: per node, one
+    /// enumeration that caches every consistent score while finding the
+    /// per-node max (the stabilizer must be order-consistent — a
+    /// *global* row max could sit so far above every consistent score
+    /// that all weights underflow to a 0/0), then a cheap replay of the
+    /// cached scores to accumulate the total and per-parent masses. The
+    /// replay re-walks the combinations (needed for edge membership
+    /// anyway) but skips the expensive `rank_combination` + store probe.
+    fn recompute_position<S: ScoreStore + ?Sized>(&mut self, order: &Order, p: usize, store: &S) {
         let layout = store.layout();
         let n = layout.n();
         let s = layout.s();
-        debug_assert_eq!(n, self.state.n, "order/store node count mismatch");
         let ln10 = std::f64::consts::LN_10;
+        let node = order.seq()[p];
+        self.contrib[node].clear();
+        if p == 0 {
+            return; // no predecessors, no edges
+        }
         let empty_idx = layout.block_start(0) as usize;
+        self.preds.clear();
+        self.preds.extend_from_slice(&order.seq()[..p]);
+        self.preds.sort_unstable();
+        let kmax = s.min(p);
 
-        for p in 1..n {
-            let node = order.seq()[p];
-            self.preds.clear();
-            self.preds.extend_from_slice(&order.seq()[..p]);
-            self.preds.sort_unstable();
-            let kmax = s.min(p);
-
-            // Pass 1: cache every consistent score, track the max.
-            let empty_ls = store.get(node, empty_idx) as f64;
-            let mut max_ls = empty_ls;
-            self.ls_buf.clear();
-            for k in 1..=kmax {
-                self.comb.clear();
-                self.comb.extend(0..k);
-                loop {
-                    self.cand.clear();
-                    for &ci in &self.comb {
-                        self.cand.push(self.preds[ci]);
-                    }
-                    let ls = store.get(node, layout.index_of(&self.cand)) as f64;
-                    self.ls_buf.push(ls);
-                    if ls > max_ls {
-                        max_ls = ls;
-                    }
-                    if !next_combination(p, &mut self.comb) {
-                        break;
-                    }
+        // Pass 1: cache every consistent score, track the max.
+        let empty_ls = store.get(node, empty_idx) as f64;
+        let mut max_ls = empty_ls;
+        self.ls_buf.clear();
+        for k in 1..=kmax {
+            self.comb.clear();
+            self.comb.extend(0..k);
+            loop {
+                self.cand.clear();
+                for &ci in &self.comb {
+                    self.cand.push(self.preds[ci]);
+                }
+                let ls = store.get(node, layout.index_of(&self.cand)) as f64;
+                self.ls_buf.push(ls);
+                if ls > max_ls {
+                    max_ls = ls;
+                }
+                if !next_combination(p, &mut self.comb) {
+                    break;
                 }
             }
+        }
 
-            // Pass 2: replay the cached scores in the same enumeration
-            // order; `10^(ls - max)` never overflows.
-            self.edge_mass.clear();
-            self.edge_mass.resize(n, 0.0);
-            let mut total = ((empty_ls - max_ls) * ln10).exp();
-            let mut cached = 0usize;
-            for k in 1..=kmax {
-                self.comb.clear();
-                self.comb.extend(0..k);
-                loop {
-                    self.cand.clear();
-                    for &ci in &self.comb {
-                        self.cand.push(self.preds[ci]);
-                    }
-                    let w = ((self.ls_buf[cached] - max_ls) * ln10).exp();
-                    cached += 1;
-                    total += w;
-                    for &j in &self.cand {
-                        self.edge_mass[j] += w;
-                    }
-                    if !next_combination(p, &mut self.comb) {
-                        break;
-                    }
+        // Pass 2: replay the cached scores in the same enumeration
+        // order; `10^(ls - max)` never overflows.
+        self.edge_mass.clear();
+        self.edge_mass.resize(n, 0.0);
+        let mut total = ((empty_ls - max_ls) * ln10).exp();
+        let mut cached = 0usize;
+        for k in 1..=kmax {
+            self.comb.clear();
+            self.comb.extend(0..k);
+            loop {
+                self.cand.clear();
+                for &ci in &self.comb {
+                    self.cand.push(self.preds[ci]);
+                }
+                let w = ((self.ls_buf[cached] - max_ls) * ln10).exp();
+                cached += 1;
+                total += w;
+                for &j in &self.cand {
+                    self.edge_mass[j] += w;
+                }
+                if !next_combination(p, &mut self.comb) {
+                    break;
                 }
             }
-            debug_assert_eq!(cached, self.ls_buf.len());
+        }
+        debug_assert_eq!(cached, self.ls_buf.len());
 
-            for &j in &self.preds {
-                self.state.sums[node * n + j] += self.edge_mass[j] / total;
-            }
+        for &j in &self.preds {
+            self.contrib[node].push((j, self.edge_mass[j] / total));
         }
     }
 }

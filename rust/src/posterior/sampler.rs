@@ -11,7 +11,7 @@ use std::path::PathBuf;
 use super::checkpoint::{ChainState, RunCheckpoint};
 use super::marginals::{MarginalAccumulator, MarginalState};
 use crate::mcmc::best::BestGraphTracker;
-use crate::mcmc::chain::{ChainStats, McmcChain};
+use crate::mcmc::chain::{ChainStats, McmcChain, ProposalKind};
 use crate::mcmc::runner::LearnResult;
 use crate::mcmc::Order;
 use crate::score::ScoreStore;
@@ -34,10 +34,14 @@ pub struct SamplerOptions {
     /// a resume whose fingerprint differs is rejected (the restored
     /// score and marginal sums would silently mix two posteriors). The
     /// coordinator hashes (network, rows, noise, gamma, s, engine,
-    /// store); direct sampler users may pass 0 consistently.
+    /// store, proposal); direct sampler users may pass 0 consistently.
     pub fingerprint: u64,
     /// Independent chains.
     pub chains: usize,
+    /// Proposal move of every chain. Affects the trajectory, so the
+    /// coordinator folds it into the checkpoint fingerprint — resuming
+    /// under a different proposal is rejected there.
+    pub proposal: ProposalKind,
     /// Orders discarded before marginal accumulation.
     pub burnin: u64,
     /// Keep every `thin`-th post-burn-in order.
@@ -240,6 +244,7 @@ where
             MarginalAccumulator::new(opts.n, opts.burnin, opts.thin),
         ),
     };
+    chain.set_proposal(opts.proposal);
     chain.set_record_trace(opts.record_trace);
     chain.run_observed(seg, |order, _score| acc.observe(order, store));
     let (order, score, rng, tracker, stats) = chain.into_parts();
@@ -279,6 +284,7 @@ mod tests {
             seed: 31,
             fingerprint: 0x51,
             chains,
+            proposal: ProposalKind::Swap,
             burnin: 10,
             thin: 2,
             record_trace: true,

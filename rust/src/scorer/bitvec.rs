@@ -32,56 +32,70 @@ impl<'a, S: ScoreStore + ?Sized> BitVecScorer<'a, S> {
         assert!(n <= 26, "bit-vector enumeration is 2^n — capped at 26 nodes");
         BitVecScorer { store, n, decode: Vec::with_capacity(n) }
     }
+
+    /// Score the node at position `p`: scan all 2^n masks, filter the
+    /// order-consistent ones (the baseline's defining waste), keep the
+    /// argmax. The layout reference is hoisted out of the mask loop —
+    /// `store.layout()` was previously one virtual call *per mask*.
+    fn score_position(&mut self, order: &Order, p: usize, out: &mut BestGraph) -> f64 {
+        let store = self.store;
+        let layout = store.layout();
+        let s = layout.s();
+        let size = 1usize << self.n;
+        let node = order.seq()[p];
+        // Predecessor bitmask.
+        let mut pred_mask = 0usize;
+        for &v in &order.seq()[..p] {
+            pred_mask |= 1 << v;
+        }
+        let mut best = f32::NEG_INFINITY;
+        let mut best_mask = 0usize;
+        // The baseline's defining waste: scan ALL 2^n bit vectors and
+        // filter, instead of enumerating the predecessors' subsets.
+        for mask in 0..size {
+            if mask & !pred_mask != 0 {
+                continue; // not a subset of the predecessors
+            }
+            if mask.count_ones() as usize > s {
+                continue; // outside the bounded hypothesis space
+            }
+            self.decode.clear();
+            let mut m = mask;
+            while m != 0 {
+                self.decode.push(m.trailing_zeros() as usize);
+                m &= m - 1;
+            }
+            let idx = layout.index_of(&self.decode);
+            let ls = store.get(node, idx);
+            if ls > best {
+                best = ls;
+                best_mask = mask;
+            }
+        }
+        out.node_scores[node] = best as f64;
+        out.parents[node].clear();
+        let mut m = best_mask;
+        while m != 0 {
+            out.parents[node].push(m.trailing_zeros() as usize);
+            m &= m - 1;
+        }
+        best as f64
+    }
 }
 
 impl<S: ScoreStore + ?Sized> OrderScorer for BitVecScorer<'_, S> {
     fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
         let n = self.n;
         debug_assert_eq!(order.n(), n);
-        let size = 1usize << n;
-        let s = self.store.layout().s();
         let mut total = 0f64;
         for p in 0..n {
-            let node = order.seq()[p];
-            // Predecessor bitmask.
-            let mut pred_mask = 0usize;
-            for &v in &order.seq()[..p] {
-                pred_mask |= 1 << v;
-            }
-            let mut best = f32::NEG_INFINITY;
-            let mut best_mask = 0usize;
-            // The baseline's defining waste: scan ALL 2^n bit vectors and
-            // filter, instead of enumerating the predecessors' subsets.
-            for mask in 0..size {
-                if mask & !pred_mask != 0 {
-                    continue; // not a subset of the predecessors
-                }
-                if mask.count_ones() as usize > s {
-                    continue; // outside the bounded hypothesis space
-                }
-                self.decode.clear();
-                let mut m = mask;
-                while m != 0 {
-                    self.decode.push(m.trailing_zeros() as usize);
-                    m &= m - 1;
-                }
-                let idx = self.store.layout().index_of(&self.decode);
-                let ls = self.store.get(node, idx);
-                if ls > best {
-                    best = ls;
-                    best_mask = mask;
-                }
-            }
-            out.node_scores[node] = best as f64;
-            out.parents[node].clear();
-            let mut m = best_mask;
-            while m != 0 {
-                out.parents[node].push(m.trailing_zeros() as usize);
-                m &= m - 1;
-            }
-            total += best as f64;
+            total += self.score_position(order, p, out);
         }
         total
+    }
+
+    fn score_node(&mut self, order: &Order, position: usize, out: &mut BestGraph) -> f64 {
+        self.score_position(order, position, out)
     }
 
     fn name(&self) -> &'static str {
@@ -102,40 +116,51 @@ impl<'a> FullBitVecScorer<'a> {
     }
 }
 
+impl FullBitVecScorer<'_> {
+    /// Score the node at position `p` over the exhaustive table.
+    fn score_position(&mut self, order: &Order, p: usize, out: &mut BestGraph) -> f64 {
+        let size = 1usize << self.n;
+        let node = order.seq()[p];
+        let mut pred_mask = 0usize;
+        for &v in &order.seq()[..p] {
+            pred_mask |= 1 << v;
+        }
+        let mut best = f32::NEG_INFINITY;
+        let mut best_mask = 0usize;
+        for mask in 0..size {
+            if mask & !pred_mask != 0 {
+                continue;
+            }
+            let ls = self.table.get(node, mask);
+            if ls > best {
+                best = ls;
+                best_mask = mask;
+            }
+        }
+        out.node_scores[node] = best as f64;
+        out.parents[node].clear();
+        let mut m = best_mask;
+        while m != 0 {
+            out.parents[node].push(m.trailing_zeros() as usize);
+            m &= m - 1;
+        }
+        best as f64
+    }
+}
+
 impl OrderScorer for FullBitVecScorer<'_> {
     fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
         let n = self.n;
         debug_assert_eq!(order.n(), n);
-        let size = 1usize << n;
         let mut total = 0f64;
         for p in 0..n {
-            let node = order.seq()[p];
-            let mut pred_mask = 0usize;
-            for &v in &order.seq()[..p] {
-                pred_mask |= 1 << v;
-            }
-            let mut best = f32::NEG_INFINITY;
-            let mut best_mask = 0usize;
-            for mask in 0..size {
-                if mask & !pred_mask != 0 {
-                    continue;
-                }
-                let ls = self.table.get(node, mask);
-                if ls > best {
-                    best = ls;
-                    best_mask = mask;
-                }
-            }
-            out.node_scores[node] = best as f64;
-            out.parents[node].clear();
-            let mut m = best_mask;
-            while m != 0 {
-                out.parents[node].push(m.trailing_zeros() as usize);
-                m &= m - 1;
-            }
-            total += best as f64;
+            total += self.score_position(order, p, out);
         }
         total
+    }
+
+    fn score_node(&mut self, order: &Order, position: usize, out: &mut BestGraph) -> f64 {
+        self.score_position(order, position, out)
     }
 
     fn name(&self) -> &'static str {

@@ -16,6 +16,10 @@
 //!   score (log-sum-exp), the accuracy baseline the paper argues against.
 //! * [`XlaScorer`] (in `crate::runtime`, behind the `xla` feature) — the
 //!   accelerated engine, the analog of the paper's GPU path.
+//! * [`DeltaScorer`] — an incremental wrapper over any per-node-capable
+//!   engine: caches per-node scores for the current order and rescores
+//!   only the swapped interval per MH proposal (O(interval) instead of
+//!   O(n) enumerations per step, bit-for-bit identical trajectories).
 //!
 //! Store-backed engines are generic over [`crate::score::ScoreStore`], so
 //! every backend (dense table, pruned hash table) drives every engine;
@@ -23,11 +27,13 @@
 //! that pairs a store with an engine.
 
 pub mod bitvec;
+pub mod delta;
 pub mod recompute;
 pub mod serial;
 pub mod sum;
 
 pub use bitvec::{BitVecScorer, FullBitVecScorer};
+pub use delta::DeltaScorer;
 pub use recompute::RecomputeScorer;
 pub use serial::SerialScorer;
 pub use sum::SumScorer;
@@ -64,23 +70,109 @@ impl BestGraph {
     pub fn to_dag(&self) -> Dag {
         Dag::from_parents(self.parents.clone())
     }
+
+    /// Copy every slot of `other` into `self`, reusing the existing
+    /// parent-vector allocations (the commit path of [`DeltaScorer`]
+    /// calls this once per accepted proposal).
+    pub fn copy_from(&mut self, other: &BestGraph) {
+        debug_assert_eq!(self.n(), other.n());
+        self.node_scores.copy_from_slice(&other.node_scores);
+        for (dst, src) in self.parents.iter_mut().zip(&other.parents) {
+            dst.clear();
+            dst.extend_from_slice(src);
+        }
+    }
 }
 
 /// An order-scoring engine (Algorithm 1, lines 3–13).
+///
+/// Beyond the mandatory full [`Self::score_order`], the trait carries the
+/// *incremental* entry points the delta-scoring layer builds on:
+/// [`Self::score_node`] (per-node rescoring) and the
+/// [`Self::propose_swap`] / [`Self::commit_swap`] /
+/// [`Self::rollback_swap`] proposal protocol that
+/// [`crate::mcmc::McmcChain::step`] drives. Every incremental method has
+/// a full-rescore default, so engines that cannot score incrementally
+/// (e.g. the device-bound XLA scorer) keep working unchanged — and keep
+/// producing bit-for-bit the trajectories they produced before the
+/// protocol existed. See `DESIGN.md` §11 for the interval invariant and
+/// the commit/rollback contract.
 pub trait OrderScorer {
     /// Score `order`, filling `out` with the best graph; returns the
     /// order's total score.
     fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64;
+
+    /// Score only the node at `position` of `order`: write that node's
+    /// best parent set and score into `out`'s slots and return the
+    /// node's *contribution to the order total* (for max engines this is
+    /// its best local score; the sum engine returns the node's
+    /// log-sum-exp mass instead).
+    ///
+    /// Engines whose order score decomposes per node should override
+    /// this with an O(node) pass — [`DeltaScorer`] relies on it for
+    /// O(interval) proposals. The default is a correctness fallback that
+    /// scores the whole order into a scratch graph and copies out one
+    /// slot; it is never faster than [`Self::score_order`].
+    fn score_node(&mut self, order: &Order, position: usize, out: &mut BestGraph) -> f64 {
+        let mut scratch = BestGraph::new(order.n());
+        self.score_order(order, &mut scratch);
+        let node = order.seq()[position];
+        out.node_scores[node] = scratch.node_scores[node];
+        out.parents[node].clear();
+        out.parents[node].extend_from_slice(&scratch.parents[node]);
+        scratch.node_scores[node]
+    }
+
+    /// Score the proposal obtained by swapping positions `a <= b` of the
+    /// previously scored order; `order` is *already swapped* when this is
+    /// called. Returns the proposed total and leaves `out` such that
+    /// after [`Self::commit_swap`] it holds the proposed best graph.
+    ///
+    /// The proposal must be resolved by exactly one `commit_swap` /
+    /// `rollback_swap` before the next `propose_swap` or `score_order`.
+    /// Default: a plain full rescore (`out` is complete immediately, and
+    /// commit/rollback are no-ops).
+    fn propose_swap(&mut self, order: &Order, a: usize, b: usize, out: &mut BestGraph) -> f64 {
+        let _ = (a, b);
+        self.score_order(order, out)
+    }
+
+    /// Accept the pending proposal; afterwards `out` (the same buffer
+    /// passed to [`Self::propose_swap`]) holds the proposed order's full
+    /// best graph. Default: no-op (the default `propose_swap` already
+    /// filled `out` completely).
+    fn commit_swap(&mut self, _out: &mut BestGraph) {}
+
+    /// Reject the pending proposal; the caller will swap the order back.
+    /// Default: no-op.
+    fn rollback_swap(&mut self) {}
 
     /// Engine name for logs and benchmark tables.
     fn name(&self) -> &'static str;
 }
 
 // Boxed engines (the registry hands out `Box<dyn OrderScorer>`) drive
-// chains exactly like concrete ones.
+// chains exactly like concrete ones — every method forwards, so a boxed
+// `DeltaScorer` keeps its O(interval) proposal path.
 impl<T: OrderScorer + ?Sized> OrderScorer for Box<T> {
     fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
         (**self).score_order(order, out)
+    }
+
+    fn score_node(&mut self, order: &Order, position: usize, out: &mut BestGraph) -> f64 {
+        (**self).score_node(order, position, out)
+    }
+
+    fn propose_swap(&mut self, order: &Order, a: usize, b: usize, out: &mut BestGraph) -> f64 {
+        (**self).propose_swap(order, a, b, out)
+    }
+
+    fn commit_swap(&mut self, out: &mut BestGraph) {
+        (**self).commit_swap(out)
+    }
+
+    fn rollback_swap(&mut self) {
+        (**self).rollback_swap()
     }
 
     fn name(&self) -> &'static str {

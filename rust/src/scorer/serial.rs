@@ -70,6 +70,10 @@ pub struct SerialScorer<'a, S: ScoreStore + ?Sized = ScoreTable> {
     comb: Vec<usize>,
     /// Scratch: current candidate node ids.
     cand: Vec<usize>,
+    /// Scratch: best parent set of the node being scored. (This was a
+    /// fixed `[usize; 8]` whose `copy_from_slice` panicked for any
+    /// `s > 8` — now it grows with the winning candidate.)
+    best_set: Vec<usize>,
 }
 
 impl<'a, S: ScoreStore + ?Sized> SerialScorer<'a, S> {
@@ -86,6 +90,7 @@ impl<'a, S: ScoreStore + ?Sized> SerialScorer<'a, S> {
             preds: Vec::with_capacity(n),
             comb: Vec::with_capacity(s),
             cand: Vec::with_capacity(s),
+            best_set: Vec::with_capacity(s),
         }
     }
 
@@ -93,61 +98,73 @@ impl<'a, S: ScoreStore + ?Sized> SerialScorer<'a, S> {
     pub fn store(&self) -> &'a S {
         self.store
     }
+
+    /// Score the node at position `p` of `order`: enumerate only the
+    /// parent sets drawn from its `p` predecessors, write the argmax
+    /// into `out`'s slots for that node, and return its best local
+    /// score — the per-node body both [`OrderScorer::score_order`] and
+    /// [`OrderScorer::score_node`] drive.
+    fn score_position(&mut self, order: &Order, p: usize, out: &mut BestGraph) -> f64 {
+        let store = self.store;
+        let layout = store.layout();
+        let s = layout.s();
+        let node = order.seq()[p];
+        // Sorted candidate parents = the p predecessors.
+        self.preds.clear();
+        self.preds.extend_from_slice(&order.seq()[..p]);
+        self.preds.sort_unstable();
+
+        // Empty set is always consistent — the starting best.
+        let empty_idx = self.offsets[0] as usize;
+        let mut best = store.get(node, empty_idx);
+        self.best_set.clear();
+
+        let kmax = s.min(p);
+        for k in 1..=kmax {
+            // Enumerate k-combinations of preds (as indices), mapping
+            // to node ids (already sorted because preds is sorted).
+            self.comb.clear();
+            self.comb.extend(0..k);
+            loop {
+                self.cand.clear();
+                for &ci in &self.comb {
+                    self.cand.push(self.preds[ci]);
+                }
+                let idx = self.offsets[k] + self.ranks.rank(&self.cand);
+                let ls = store.get(node, idx as usize);
+                if ls > best {
+                    best = ls;
+                    self.best_set.clear();
+                    self.best_set.extend_from_slice(&self.cand);
+                }
+                if !next_combination(p, &mut self.comb) {
+                    break;
+                }
+            }
+        }
+
+        out.node_scores[node] = best as f64;
+        out.parents[node].clear();
+        out.parents[node].extend_from_slice(&self.best_set);
+        best as f64
+    }
 }
 
 impl<S: ScoreStore + ?Sized> OrderScorer for SerialScorer<'_, S> {
     fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
-        let store = self.store;
-        let layout = store.layout();
-        let n = layout.n();
-        let s = layout.s();
+        let n = self.store.layout().n();
         debug_assert_eq!(order.n(), n);
         debug_assert_eq!(out.n(), n);
 
         let mut total = 0f64;
         for p in 0..n {
-            let node = order.seq()[p];
-            // Sorted candidate parents = the p predecessors.
-            self.preds.clear();
-            self.preds.extend_from_slice(&order.seq()[..p]);
-            self.preds.sort_unstable();
-
-            // Empty set is always consistent — the starting best.
-            let empty_idx = self.offsets[0] as usize;
-            let mut best = store.get(node, empty_idx);
-            let mut best_set_len = 0usize;
-            let mut best_set = [0usize; 8];
-
-            let kmax = s.min(p);
-            for k in 1..=kmax {
-                // Enumerate k-combinations of preds (as indices), mapping
-                // to node ids (already sorted because preds is sorted).
-                self.comb.clear();
-                self.comb.extend(0..k);
-                loop {
-                    self.cand.clear();
-                    for &ci in &self.comb {
-                        self.cand.push(self.preds[ci]);
-                    }
-                    let idx = self.offsets[k] + self.ranks.rank(&self.cand);
-                    let ls = store.get(node, idx as usize);
-                    if ls > best {
-                        best = ls;
-                        best_set_len = k;
-                        best_set[..k].copy_from_slice(&self.cand);
-                    }
-                    if !next_combination(p, &mut self.comb) {
-                        break;
-                    }
-                }
-            }
-
-            out.node_scores[node] = best as f64;
-            out.parents[node].clear();
-            out.parents[node].extend_from_slice(&best_set[..best_set_len]);
-            total += best as f64;
+            total += self.score_position(order, p, out);
         }
         total
+    }
+
+    fn score_node(&mut self, order: &Order, position: usize, out: &mut BestGraph) -> f64 {
+        self.score_position(order, position, out)
     }
 
     fn name(&self) -> &'static str {
@@ -242,6 +259,57 @@ mod tests {
         scorer.score_order(&Order::from_seq(order_last), &mut out);
         let s_last = out.node_scores[3];
         assert!(s_last >= s_first - 1e-9);
+    }
+
+    /// Regression: the per-node best-set scratch used to be a fixed
+    /// `[usize; 8]` whose `copy_from_slice` panicked whenever the
+    /// winning parent set had more than 8 members. Drive `s = 9`
+    /// through a store that rewards bigger sets, so the argmax of the
+    /// last node is its full 9-predecessor set.
+    #[test]
+    fn argmax_sets_larger_than_eight_are_supported() {
+        use crate::combinatorics::SubsetLayout;
+
+        struct SizeStore {
+            layout: SubsetLayout,
+            sizes: Vec<u8>,
+        }
+        impl ScoreStore for SizeStore {
+            fn layout(&self) -> &SubsetLayout {
+                &self.layout
+            }
+            fn get(&self, _node: usize, idx: usize) -> f32 {
+                self.sizes[idx] as f32
+            }
+            fn fill_row(&self, _node: usize, out: &mut [f32]) {
+                for (i, slot) in out.iter_mut().enumerate() {
+                    *slot = self.sizes[i] as f32;
+                }
+            }
+            fn bytes(&self) -> usize {
+                0
+            }
+            fn stored_entries(&self) -> usize {
+                0
+            }
+            fn name(&self) -> &'static str {
+                "size"
+            }
+        }
+
+        let (n, s) = (10usize, 9usize);
+        let layout = SubsetLayout::new(n, s);
+        let mut sizes = vec![0u8; layout.total()];
+        layout.for_each(|j, subset| sizes[j] = subset.len() as u8);
+        let store = SizeStore { layout, sizes };
+        let mut scorer = SerialScorer::new(&store);
+        let mut out = BestGraph::new(n);
+        let total = scorer.score_order(&Order::identity(n), &mut out);
+        // The last node's best set is all 9 of its predecessors.
+        assert_eq!(out.parents[n - 1], (0..9).collect::<Vec<_>>());
+        assert_eq!(out.node_scores[n - 1], 9.0);
+        // Every node's best score is its predecessor count (capped at s).
+        assert_eq!(total, (0..n).map(|p| p.min(s) as f64).sum::<f64>());
     }
 
     /// The generic engine runs unchanged over a `&dyn ScoreStore`.

@@ -45,51 +45,61 @@ impl<'a, S: ScoreStore + ?Sized> SumScorer<'a, S> {
     }
 }
 
-impl<S: ScoreStore + ?Sized> OrderScorer for SumScorer<'_, S> {
-    fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
-        // The argmax graph: delegate to the serial max engine (this is the
-        // "postprocessing" the sum-based method needs anyway).
-        self.ranks.score_order(order, out);
+impl<S: ScoreStore + ?Sized> SumScorer<'_, S> {
+    /// One node's sum-based contribution: delegate the argmax slot to the
+    /// serial max engine (the "postprocessing" the sum-based method needs
+    /// anyway — its best score is also the log-sum-exp stabilizer), then
+    /// accumulate Σ 10^(ls − max) over the node's consistent parent sets.
+    fn lse_position(&mut self, order: &Order, p: usize, out: &mut BestGraph) -> f64 {
+        let max_ls = self.ranks.score_node(order, p, out);
 
-        // The sum-based order score, log-sum-exp per node in log10 space.
         let store = self.store;
         let layout = store.layout();
-        let n = layout.n();
         let s = layout.s();
         let ln10 = std::f64::consts::LN_10;
-        let mut total = 0f64;
-        for p in 0..n {
-            let node = order.seq()[p];
-            self.preds.clear();
-            self.preds.extend_from_slice(&order.seq()[..p]);
-            self.preds.sort_unstable();
+        let node = order.seq()[p];
+        self.preds.clear();
+        self.preds.extend_from_slice(&order.seq()[..p]);
+        self.preds.sort_unstable();
 
-            // max is known from the serial pass: out.node_scores[node]
-            let max_ls = out.node_scores[node];
-            // Σ 10^(ls - max) over consistent sets
-            let mut acc = 0f64;
-            let empty_idx = self.offsets[0] as usize;
-            acc += 10f64.powf(store.get(node, empty_idx) as f64 - max_ls);
-            let kmax = s.min(p);
-            for k in 1..=kmax {
-                self.comb.clear();
-                self.comb.extend(0..k);
-                loop {
-                    self.cand.clear();
-                    for &ci in &self.comb {
-                        self.cand.push(self.preds[ci]);
-                    }
-                    let idx = layout.index_of(&self.cand);
-                    let ls = store.get(node, idx) as f64;
-                    acc += ((ls - max_ls) * ln10).exp();
-                    if !next_combination(p, &mut self.comb) {
-                        break;
-                    }
+        // Σ 10^(ls - max) over consistent sets
+        let mut acc = 0f64;
+        let empty_idx = self.offsets[0] as usize;
+        acc += 10f64.powf(store.get(node, empty_idx) as f64 - max_ls);
+        let kmax = s.min(p);
+        for k in 1..=kmax {
+            self.comb.clear();
+            self.comb.extend(0..k);
+            loop {
+                self.cand.clear();
+                for &ci in &self.comb {
+                    self.cand.push(self.preds[ci]);
+                }
+                let idx = layout.index_of(&self.cand);
+                let ls = store.get(node, idx) as f64;
+                acc += ((ls - max_ls) * ln10).exp();
+                if !next_combination(p, &mut self.comb) {
+                    break;
                 }
             }
-            total += max_ls + acc.log10();
+        }
+        max_ls + acc.log10()
+    }
+}
+
+impl<S: ScoreStore + ?Sized> OrderScorer for SumScorer<'_, S> {
+    fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
+        // The sum-based order score, log-sum-exp per node in log10 space.
+        let n = self.store.layout().n();
+        let mut total = 0f64;
+        for p in 0..n {
+            total += self.lse_position(order, p, out);
         }
         total
+    }
+
+    fn score_node(&mut self, order: &Order, position: usize, out: &mut BestGraph) -> f64 {
+        self.lse_position(order, position, out)
     }
 
     fn name(&self) -> &'static str {

@@ -1,0 +1,148 @@
+//! Delta-vs-full equivalence: a seeded chain driven by
+//! `DeltaScorer<SerialScorer>` must reproduce the full-rescore chain's
+//! trajectory bit-for-bit — same accepts, same trace, same tracker
+//! entries — across dense and hash stores and across
+//! swap/adjacent/mixed proposals, and the posterior pipeline must
+//! produce identical edge marginals either way.
+
+use bnlearn::bn::sampling::forward_sample;
+use bnlearn::bn::Network;
+use bnlearn::data::Dataset;
+use bnlearn::mcmc::{McmcChain, Order, ProposalKind};
+use bnlearn::posterior::sampler::{run_posterior_chains, SamplerOptions};
+use bnlearn::posterior::MarginalAccumulator;
+use bnlearn::score::{BdeParams, HashScoreStore, ScoreTable};
+use bnlearn::scorer::{DeltaScorer, OrderScorer, SerialScorer, SumScorer};
+use bnlearn::util::Pcg32;
+
+fn workload(n: usize, rows: usize, seed: u64) -> (Dataset, ScoreTable) {
+    let mut rng = Pcg32::new(seed);
+    let dag = bnlearn::bn::random::random_dag(n, 3, n + 2, &mut rng);
+    let net = Network::with_random_cpts(dag, vec![3; n], &mut rng);
+    let data = forward_sample(&net, rows, &mut rng);
+    let table = ScoreTable::build(&data, BdeParams::default(), 3, 2);
+    (data, table)
+}
+
+/// Run one chain to completion and return everything trajectory-shaped.
+fn drive<S: OrderScorer>(
+    mut scorer: S,
+    n: usize,
+    iters: u64,
+    seed: u64,
+    proposal: ProposalKind,
+) -> (f64, Order, u64, Vec<f64>, Vec<(f64, bnlearn::bn::Dag)>) {
+    let mut chain = McmcChain::new(&mut scorer, n, 3, seed);
+    chain.set_proposal(proposal);
+    chain.set_record_trace(true);
+    chain.run(iters);
+    let score = chain.current_score();
+    let order = chain.order().clone();
+    let accepted = chain.stats.accepted;
+    let trace = chain.stats.trace.clone();
+    let entries = chain.tracker.entries().to_vec();
+    (score, order, accepted, trace, entries)
+}
+
+#[test]
+fn delta_chain_matches_full_chain_across_stores_and_proposals() {
+    let n = 10usize;
+    let (data, table) = workload(n, 250, 601);
+    let hash = HashScoreStore::build(&data, BdeParams::default(), 3, 2, None);
+    let proposals = [ProposalKind::Swap, ProposalKind::Adjacent, ProposalKind::Mixed];
+
+    for &proposal in &proposals {
+        // dense store
+        let full = drive(SerialScorer::new(&table), n, 400, 602, proposal);
+        let delta = drive(DeltaScorer::new(SerialScorer::new(&table)), n, 400, 602, proposal);
+        assert_eq!(full.0, delta.0, "dense score, {proposal:?}");
+        assert_eq!(full.1, delta.1, "dense order, {proposal:?}");
+        assert_eq!(full.2, delta.2, "dense accepts, {proposal:?}");
+        assert_eq!(full.3, delta.3, "dense trace, {proposal:?}");
+        assert_eq!(full.4, delta.4, "dense tracker, {proposal:?}");
+
+        // hash store (dominance-pruned, exact for the max scan)
+        let full = drive(SerialScorer::new(&hash), n, 400, 603, proposal);
+        let delta = drive(DeltaScorer::new(SerialScorer::new(&hash)), n, 400, 603, proposal);
+        assert_eq!(full.0, delta.0, "hash score, {proposal:?}");
+        assert_eq!(full.1, delta.1, "hash order, {proposal:?}");
+        assert_eq!(full.2, delta.2, "hash accepts, {proposal:?}");
+        assert_eq!(full.3, delta.3, "hash trace, {proposal:?}");
+        assert_eq!(full.4, delta.4, "hash tracker, {proposal:?}");
+    }
+}
+
+#[test]
+fn delta_sum_engine_chain_matches_full() {
+    let n = 8usize;
+    let (_, table) = workload(n, 200, 611);
+    for proposal in [ProposalKind::Swap, ProposalKind::Adjacent] {
+        let full = drive(SumScorer::new(&table), n, 250, 612, proposal);
+        let delta = drive(DeltaScorer::new(SumScorer::new(&table)), n, 250, 612, proposal);
+        assert_eq!(full.0, delta.0, "{proposal:?}");
+        assert_eq!(full.2, delta.2, "{proposal:?}");
+        assert_eq!(full.3, delta.3, "{proposal:?}");
+    }
+}
+
+#[test]
+fn posterior_marginals_identical_under_delta_scoring() {
+    let (_, table) = workload(7, 250, 621);
+    let opts = |proposal| SamplerOptions {
+        n: 7,
+        iters: 200,
+        topk: 2,
+        seed: 622,
+        fingerprint: 0x7,
+        chains: 2,
+        proposal,
+        burnin: 20,
+        thin: 2,
+        record_trace: true,
+        checkpoint_every: 0,
+        checkpoint_path: None,
+        resume: None,
+    };
+    for proposal in [ProposalKind::Swap, ProposalKind::Adjacent] {
+        let o = opts(proposal);
+        let full = run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).unwrap();
+        let delta =
+            run_posterior_chains(|_| DeltaScorer::new(SerialScorer::new(&table)), &table, &o)
+                .unwrap();
+        assert_eq!(full.result.best_score(), delta.result.best_score(), "{proposal:?}");
+        assert_eq!(full.result.stats.accepted, delta.result.stats.accepted, "{proposal:?}");
+        assert_eq!(full.result.traces, delta.result.traces, "{proposal:?}");
+        assert_eq!(full.marginals.samples, delta.marginals.samples, "{proposal:?}");
+        assert_eq!(full.marginals.sums, delta.marginals.sums, "{proposal:?}");
+    }
+}
+
+/// The accumulator's interval cache is exact: observing a sequence of
+/// related orders through one accumulator equals accumulating each
+/// order from scratch (fresh accumulator per order, merged).
+#[test]
+fn incremental_marginal_accumulation_matches_from_scratch() {
+    let (_, table) = workload(8, 200, 631);
+    let mut rng = Pcg32::new(632);
+    let mut order = Order::random(8, &mut rng);
+    let mut incremental = MarginalAccumulator::new(8, 0, 1);
+    let mut scratch_sums = vec![0.0f64; 64];
+    let mut samples = 0u64;
+    for step in 0..40 {
+        // random walk: swap two positions, sometimes the same order twice
+        if step % 5 != 0 {
+            let a = rng.gen_range(8);
+            let b = rng.gen_range(8);
+            order.swap_positions(a, b);
+        }
+        incremental.observe(&order, &table);
+        let mut fresh = MarginalAccumulator::new(8, 0, 1);
+        fresh.observe(&order, &table);
+        for (acc, v) in scratch_sums.iter_mut().zip(&fresh.state().sums) {
+            *acc += v;
+        }
+        samples += 1;
+    }
+    assert_eq!(incremental.state().samples, samples);
+    assert_eq!(incremental.state().sums, scratch_sums);
+}
