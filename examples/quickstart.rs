@@ -26,7 +26,12 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Preprocessing (Section III-A): every local score, once, into a
     //    pluggable store — swap StoreKind::Hash for the paper's pruned
-    //    hash-table backend (identical learning, smaller table).
+    //    hash-table backend (identical learning, smaller table). Work
+    //    runs as tiles over the (node, parent-set) space through the
+    //    kernel execution layer: `--schedule static|balanced` picks the
+    //    assignment strategy and `--tile N` the tile size (CLI), or pass
+    //    an `exec::ExecConfig` to `build_store_with` here — any choice
+    //    is bit-identical, balanced is simply fastest on skewed rows.
     let t = Timer::start();
     let store = build_store(StoreKind::Dense, &workload.data, BdeParams::default(), 4, 4, None);
     println!("preprocessing: {} x {} local scores into the {} store ({:.2} MB) in {:.2}s",
@@ -40,8 +45,11 @@ fn main() -> anyhow::Result<()> {
     //    `--delta on|off` and `--proposal swap|adjacent|mixed` —
     //    `--proposal adjacent` pairs with delta scoring for the O(1)
     //    per-step regime.
+    //    The final `None` skips the batched-rescore executor; hand in
+    //    `Some(&pool)` (a `exec::PoolExecutor`) to fan full rescores
+    //    of an order across workers — same trajectories, less wall.
     let mut scorer = make_engine(EngineKind::Serial, &store, &workload.data,
-        BdeParams::default(), 4, true)?;
+        BdeParams::default(), 4, true, None)?;
     let result = run_chain(&mut scorer, n, 2000, 3, 7);
     println!("sampling: {} iterations in {:.2}s (accept rate {:.2})",
         result.stats.iterations, result.sampling_secs, result.stats.accept_rate());

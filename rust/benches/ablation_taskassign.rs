@@ -1,0 +1,194 @@
+//! Ablation: the paper's balanced task assignment vs static round-robin
+//! — preprocessing and full-rescore throughput at n ∈ {15, 30, 60} for
+//! `schedule ∈ {static, balanced}` × `threads ∈ {1, 4, 8}`.
+//!
+//! The workload is deliberately **skewed**: nodes at indices ≡ 0 (mod 8)
+//! carry a 12-state variable while the rest are binary, so their score
+//! rows cost several times more to fill (Eq. 4's inner loop is
+//! O(touched · r_i)) — and, adversarially, every expensive row lands on
+//! worker 0 under static round-robin at 4 or 8 threads. That is exactly
+//! the pathology the motivation cites: node-interleaved buckets go
+//! badly skewed once per-node cost is uneven. Row-granular tiles
+//! (`tile = 0`) isolate the *assignment* strategy; the balanced queue
+//! drains the same tiles work-conservingly.
+//!
+//! Every (schedule, threads) build is asserted bit-identical to the
+//! reference — the speedup is free, not approximate.
+//!
+//! Outputs: a markdown table, `results/ablation_taskassign.csv`, and
+//! machine-readable `results/BENCH_parallel.json` with the
+//! `parallel_efficiency` (preprocessing speedup / threads) and
+//! `balanced_vs_static` columns. Quick mode trims to one small case for
+//! the CI `bench-smoke` job.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::quick_mode;
+use bnlearn::bn::sampling::forward_sample;
+use bnlearn::bn::Network;
+use bnlearn::data::Dataset;
+use bnlearn::exec::{ExecConfig, Schedule};
+use bnlearn::mcmc::Order;
+use bnlearn::score::{BdeParams, HashScoreStore, ScoreStore, ScoreTable};
+use bnlearn::scorer::{BestGraph, OrderScorer, SerialScorer};
+use bnlearn::util::csvio::Table;
+use bnlearn::util::{Pcg32, Timer};
+
+/// Skewed mixed-arity workload (see module docs).
+fn skewed_workload(n: usize, rows: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let dag = bnlearn::bn::random::random_dag(n, 3, n + n / 4, &mut rng);
+    let arities: Vec<usize> = (0..n).map(|i| if i % 8 == 0 { 12 } else { 2 }).collect();
+    let net = Network::with_random_cpts(dag, arities, &mut rng);
+    forward_sample(&net, rows, &mut rng)
+}
+
+fn main() -> anyhow::Result<()> {
+    // (n, s, rows, rescores)
+    let (cases, threads_list): (Vec<(usize, usize, usize, usize)>, Vec<usize>) = if quick_mode() {
+        (vec![(12, 3, 150, 4)], vec![1, 4])
+    } else {
+        (vec![(15, 4, 300, 30), (30, 3, 300, 20), (60, 3, 300, 10)], vec![1, 4, 8])
+    };
+    let schedules = [Schedule::Static, Schedule::Balanced];
+    let params = BdeParams::default();
+
+    let mut csv = Table::new(&[
+        "n",
+        "s",
+        "threads",
+        "schedule",
+        "preprocess_secs",
+        "build_imbalance",
+        "parallel_efficiency",
+        "rescore_per_sec",
+        "balanced_vs_static",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    println!("Ablation — balanced task assignment vs static round-robin (skewed workload)\n");
+
+    for &(n, s, rows, rescores) in &cases {
+        let data = skewed_workload(n, rows, 0x7A55 + n as u64);
+        // Single-thread reference rows for the bit-identity assertion:
+        // every (schedule, threads) build below must materialize the
+        // exact same bytes, not just the same entry count.
+        let reference =
+            HashScoreStore::build_with(&data, params, s, &ExecConfig::balanced(1), None);
+        let total = reference.subsets();
+        let reference_rows: Vec<Vec<f32>> = (0..n)
+            .map(|node| {
+                let mut row = vec![0f32; total];
+                reference.fill_row(node, &mut row);
+                row
+            })
+            .collect();
+        let dense = ScoreTable::build(&data, params, s, *threads_list.last().unwrap());
+        let order = Order::random(n, &mut Pcg32::new(0xBEEF));
+
+        // threads=1 baseline per schedule feeds parallel_efficiency
+        // (threads_list always starts at 1).
+        let mut base_secs = [0f64; 2];
+        for &threads in &threads_list {
+            let mut static_secs = 0f64;
+            for (si, &schedule) in schedules.iter().enumerate() {
+                let cfg = ExecConfig::new(threads, schedule, 0);
+
+                // ---- preprocessing (hash-pruned, the skew-sensitive path) ----
+                let timer = Timer::start();
+                let (store, stats) = HashScoreStore::build_stats_with(&data, params, s, &cfg, None);
+                let pre_secs = timer.elapsed_secs();
+                assert_eq!(
+                    store.stored_entries(),
+                    reference.stored_entries(),
+                    "schedule changed the store (n={n}, {schedule:?})"
+                );
+                let mut row = vec![0f32; total];
+                for (node, want) in reference_rows.iter().enumerate() {
+                    store.fill_row(node, &mut row);
+                    assert_eq!(
+                        &row, want,
+                        "schedule changed row {node} bytes (n={n}, {schedule:?})"
+                    );
+                }
+                if threads == 1 {
+                    base_secs[si] = pre_secs;
+                }
+                // the threads=1 rows run first, so base_secs is filled
+                let base = if base_secs[si] > 0.0 { base_secs[si] } else { pre_secs };
+                let efficiency = (base / pre_secs.max(1e-12)) / threads as f64;
+                if schedule == Schedule::Static {
+                    static_secs = pre_secs;
+                }
+                let balanced_vs_static = if schedule == Schedule::Balanced {
+                    static_secs / pre_secs.max(1e-12)
+                } else {
+                    1.0
+                };
+
+                // ---- full-rescore throughput (batched intra-chain path) ----
+                let exec = cfg.executor();
+                let mut out = BestGraph::new(n);
+                let mut scorer = if threads > 1 {
+                    SerialScorer::with_executor(&dense, exec.as_ref())
+                } else {
+                    SerialScorer::new(&dense)
+                };
+                let timer = Timer::start();
+                let mut sink = 0f64;
+                for _ in 0..rescores {
+                    sink += scorer.score_order(&order, &mut out);
+                }
+                let rescore_per_sec = rescores as f64 / timer.elapsed_secs().max(1e-12);
+                std::hint::black_box(sink);
+
+                println!(
+                    "n={n:>2} s={s} threads={threads} {:<8}: preproc {pre_secs:>8.3}s  imbalance {:>5.2}  eff {efficiency:>5.2}  rescore {rescore_per_sec:>8.1}/s  bal/static {balanced_vs_static:>5.2}x",
+                    schedule.name(),
+                    stats.imbalance(),
+                );
+                csv.push_row(vec![
+                    n.to_string(),
+                    s.to_string(),
+                    threads.to_string(),
+                    schedule.name().to_string(),
+                    format!("{pre_secs:.4}"),
+                    format!("{:.3}", stats.imbalance()),
+                    format!("{efficiency:.3}"),
+                    format!("{rescore_per_sec:.1}"),
+                    format!("{balanced_vs_static:.3}"),
+                ]);
+                json_rows.push(format!(
+                    "    {{\"n\": {n}, \"s\": {s}, \"threads\": {threads}, \"schedule\": \"{}\", \
+                     \"preprocess_secs\": {pre_secs:.4}, \"build_imbalance\": {:.3}, \
+                     \"parallel_efficiency\": {efficiency:.3}, \
+                     \"rescore_per_sec\": {rescore_per_sec:.1}, \
+                     \"balanced_vs_static\": {balanced_vs_static:.3}}}",
+                    schedule.name(),
+                    stats.imbalance(),
+                ));
+            }
+        }
+    }
+
+    println!("\n{}", csv.to_markdown());
+    csv.write_csv("results/ablation_taskassign.csv")?;
+    println!("wrote results/ablation_taskassign.csv");
+
+    // Machine-readable perf trajectory (hand-rolled JSON — the offline
+    // crate set has no serde).
+    let json = format!(
+        "{{\n  \"bench\": \"parallel\",\n  \"quick_mode\": {},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        quick_mode(),
+        json_rows.join(",\n")
+    );
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_parallel.json", json)?;
+    println!("wrote results/BENCH_parallel.json");
+    println!(
+        "\nexpected regime: static round-robin strands the stride-aligned hot rows on one \
+         worker (imbalance ~3-4x at 8 threads), balanced drains the same tiles \
+         work-conservingly — >=1.5x faster preprocessing on the skewed n=60 case."
+    );
+    Ok(())
+}

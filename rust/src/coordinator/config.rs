@@ -3,7 +3,9 @@
 
 use anyhow::{bail, Result};
 
+use crate::exec::{ExecConfig, Schedule};
 use crate::mcmc::ProposalKind;
+use crate::util::logging::Level;
 
 /// Which order-scoring engine drives the chain.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,8 +108,17 @@ pub struct RunConfig {
     pub delta: bool,
     /// Cell-corruption probability (Fig. 11), 0 = clean.
     pub noise: f64,
-    /// Preprocessing threads.
+    /// Worker threads for preprocessing and batched rescoring.
     pub threads: usize,
+    /// Tile-assignment schedule (`--schedule static|balanced`): static
+    /// round-robin vs the paper's balanced dynamic assignment.
+    pub schedule: Schedule,
+    /// Score cells per execution tile (`--tile N`; 0 = one tile per
+    /// node row). Results are bit-identical for any value.
+    pub tile: usize,
+    /// Log verbosity (`--log-level debug` adds the per-tile timing
+    /// histogram of every store build).
+    pub log_level: Level,
     /// Artifacts directory for the XLA engine.
     pub artifacts_dir: std::path::PathBuf,
     /// Posterior mode: accumulate edge marginals, diagnostics, consensus
@@ -149,6 +160,9 @@ impl Default for RunConfig {
             delta: true,
             noise: 0.0,
             threads: default_threads(),
+            schedule: Schedule::Balanced,
+            tile: 0,
+            log_level: Level::Info,
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             posterior: false,
             burnin: 0,
@@ -163,8 +177,17 @@ impl Default for RunConfig {
     }
 }
 
-/// Available parallelism with a sane floor.
+/// Available parallelism with a sane floor. The `BNLEARN_THREADS`
+/// environment variable overrides the probe (CI runs the test suite in
+/// a threads matrix through it; any positive integer wins).
 pub fn default_threads() -> usize {
+    if let Ok(text) = std::env::var("BNLEARN_THREADS") {
+        if let Ok(threads) = text.trim().parse::<usize>() {
+            if threads >= 1 {
+                return threads;
+            }
+        }
+    }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
@@ -178,6 +201,12 @@ fn parse_on_off(text: &str) -> Result<bool> {
 }
 
 impl RunConfig {
+    /// The kernel-executor configuration (threads × schedule × tile)
+    /// this run preprocesses — and batch-rescores — with.
+    pub fn exec_config(&self) -> ExecConfig {
+        ExecConfig::new(self.threads, self.schedule, self.tile)
+    }
+
     /// Parse `--key value` pairs (after the subcommand) into a config.
     pub fn from_args(args: &[String]) -> Result<Self> {
         let mut cfg = RunConfig::default();
@@ -201,6 +230,9 @@ impl RunConfig {
                 "--delta" => cfg.delta = parse_on_off(next()?)?,
                 "--noise" => cfg.noise = next()?.parse()?,
                 "--threads" => cfg.threads = next()?.parse()?,
+                "--schedule" => cfg.schedule = Schedule::parse(next()?)?,
+                "--tile" => cfg.tile = next()?.parse()?,
+                "--log-level" => cfg.log_level = Level::parse(next()?)?,
                 "--artifacts" => cfg.artifacts_dir = next()?.into(),
                 // boolean flags take no value
                 "--posterior" => cfg.posterior = true,
@@ -308,6 +340,27 @@ mod tests {
     }
 
     #[test]
+    fn parses_exec_flags() {
+        let c = RunConfig::from_args(&args("--schedule static --tile 4096 --log-level debug"))
+            .unwrap();
+        assert_eq!(c.schedule, Schedule::Static);
+        assert_eq!(c.tile, 4096);
+        assert_eq!(c.log_level, Level::Debug);
+        let e = c.exec_config();
+        assert_eq!(e.schedule, Schedule::Static);
+        assert_eq!(e.tile, 4096);
+        assert_eq!(e.threads, c.threads);
+        // defaults: balanced schedule, row-granular tiles, info logs
+        let d = RunConfig::default();
+        assert_eq!(d.schedule, Schedule::Balanced);
+        assert_eq!(d.tile, 0);
+        assert_eq!(d.log_level, Level::Info);
+        // bad values rejected
+        assert!(RunConfig::from_args(&args("--schedule chaotic")).is_err());
+        assert!(RunConfig::from_args(&args("--log-level loud")).is_err());
+    }
+
+    #[test]
     fn rejects_unknown_flag() {
         assert!(RunConfig::from_args(&args("--bogus 1")).is_err());
     }
@@ -315,6 +368,21 @@ mod tests {
     #[test]
     fn rejects_missing_value() {
         assert!(RunConfig::from_args(&args("--rows")).is_err());
+    }
+
+    #[test]
+    fn env_override_for_default_threads() {
+        let prev = std::env::var("BNLEARN_THREADS").ok();
+        std::env::set_var("BNLEARN_THREADS", "3");
+        assert_eq!(default_threads(), 3);
+        std::env::set_var("BNLEARN_THREADS", "0"); // non-positive: ignored
+        assert!(default_threads() >= 1);
+        std::env::set_var("BNLEARN_THREADS", "lots"); // unparsable: ignored
+        assert!(default_threads() >= 1);
+        match prev {
+            Some(v) => std::env::set_var("BNLEARN_THREADS", v),
+            None => std::env::remove_var("BNLEARN_THREADS"),
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@ use super::registry;
 use super::workload::Workload;
 use crate::bn::Dag;
 use crate::eval::roc::{auc_from_points, implied_auc, roc_point, RocPoint};
+use crate::exec::{ExecConfig, KernelExecutor};
 use crate::eval::shd;
 use crate::mcmc::runner::{run_chains_parallel_spec, ChainSpec, LearnResult};
 use crate::posterior::sampler::{run_posterior_chains, SamplerOptions};
@@ -113,12 +114,12 @@ pub fn run_learning_on(
     // ---- preprocessing (Section III-A) into the configured backend ----
     let timer = Timer::start();
     let ppf = priors.map(|m| m.ppf_matrix());
-    let store = registry::build_store(
+    let store = registry::build_store_with(
         cfg.store,
         &workload.data,
         params,
         cfg.s,
-        cfg.threads,
+        &cfg.exec_config(),
         ppf.as_deref(),
     );
     let preprocess_secs = timer.elapsed_secs();
@@ -129,6 +130,12 @@ pub fn run_learning_on(
         EngineKind::Xla => run_xla_chain(cfg, store.as_dyn(), n, &mut setup_secs)?,
         kind => {
             let store_ref = &store;
+            // Intra-chain batched rescoring composes with the
+            // multi-chain runner by splitting the thread budget: each
+            // chain's engine fans positions across threads/chains
+            // workers, so chains × positions never oversubscribes.
+            let engine_exec = engine_executor(cfg, n);
+            let engine_exec_ref = engine_exec.as_deref();
             let mut spec = ChainSpec::new(n, cfg.iters, cfg.topk, cfg.seed);
             spec.chains = cfg.chains;
             spec.record_trace = cfg.trace;
@@ -142,6 +149,7 @@ pub fn run_learning_on(
                         params,
                         cfg.s,
                         cfg.delta,
+                        engine_exec_ref,
                     )
                     .expect("validated engine construction")
                 },
@@ -175,6 +183,33 @@ pub fn run_learning_on(
     })
 }
 
+/// Crude work model: a full rescore enumerates ~C(n, s+1) candidate
+/// parent sets across the order. Below ~1e5 candidates, the scoped
+/// thread spawns of a per-rescore fan-out cost more than the
+/// enumeration itself — small workloads stay on the classic serial
+/// path (results are bit-identical either way; this is purely a
+/// wall-clock policy).
+fn worth_fanning(n: usize, s: usize) -> bool {
+    let mut cost = 1f64;
+    for j in 0..(s + 1).min(n) {
+        cost *= (n - j) as f64 / (j + 1) as f64;
+    }
+    cost >= 1e5
+}
+
+/// The executor a chain's engine fans batched rescores across: the
+/// thread budget divided by the chain count — or `None` when the share
+/// rounds down to a single worker, or when the workload is too small
+/// for intra-chain parallelism to pay (see [`worth_fanning`]).
+fn engine_executor(cfg: &RunConfig, n: usize) -> Option<Box<dyn KernelExecutor>> {
+    let per_chain = (cfg.threads / cfg.chains.max(1)).max(1);
+    if per_chain > 1 && worth_fanning(n, cfg.s) {
+        Some(ExecConfig::new(per_chain, cfg.schedule, cfg.tile).executor())
+    } else {
+        None
+    }
+}
+
 /// Single-chain accelerated run (the paper's one-GPU protocol).
 #[cfg(feature = "xla")]
 fn run_xla_chain(
@@ -184,7 +219,8 @@ fn run_xla_chain(
     setup_secs: &mut f64,
 ) -> Result<LearnResult> {
     let t = Timer::start();
-    let mut scorer = crate::runtime::XlaScorer::new(&cfg.artifacts_dir, store)?;
+    let exec = cfg.exec_config().executor();
+    let mut scorer = crate::runtime::XlaScorer::new_with(&cfg.artifacts_dir, store, exec.as_ref())?;
     *setup_secs = t.elapsed_secs();
     let mut spec = ChainSpec::new(n, cfg.iters, cfg.topk, cfg.seed);
     spec.record_trace = cfg.trace;
@@ -328,12 +364,12 @@ pub fn run_posterior_on(
     // ---- preprocessing into the (dense) backend ----
     let timer = Timer::start();
     let ppf = priors.map(|m| m.ppf_matrix());
-    let store = registry::build_store(
+    let store = registry::build_store_with(
         cfg.store,
         &workload.data,
         params,
         cfg.s,
-        cfg.threads,
+        &cfg.exec_config(),
         ppf.as_deref(),
     );
     let preprocess_secs = timer.elapsed_secs();
@@ -354,10 +390,20 @@ pub fn run_posterior_on(
         checkpoint_path: Some(cfg.checkpoint_path.clone()),
         resume: cfg.resume.clone(),
     };
+    let engine_exec = engine_executor(cfg, n);
+    let engine_exec_ref = engine_exec.as_deref();
     let run = run_posterior_chains(
         |_| {
-            registry::make_engine(cfg.engine, &store, &workload.data, params, cfg.s, cfg.delta)
-                .expect("validated engine construction")
+            registry::make_engine(
+                cfg.engine,
+                &store,
+                &workload.data,
+                params,
+                cfg.s,
+                cfg.delta,
+                engine_exec_ref,
+            )
+            .expect("validated engine construction")
         },
         &store,
         &opts,
@@ -409,6 +455,23 @@ pub fn run_posterior_on(
 mod tests {
     use super::*;
     use crate::coordinator::StoreKind;
+
+    /// The intra-chain fan-out policy: engines get an executor only
+    /// when the per-chain thread share exceeds 1 *and* the enumeration
+    /// work can amortize per-rescore thread spawns.
+    #[test]
+    fn engine_executor_policy() {
+        assert!(!worth_fanning(8, 4), "asia-sized runs stay serial");
+        assert!(worth_fanning(60, 3), "paper-scale runs fan");
+        let mut cfg = RunConfig { threads: 8, chains: 1, ..RunConfig::default() };
+        assert!(engine_executor(&cfg, 60).is_some());
+        assert!(engine_executor(&cfg, 8).is_none(), "too little work");
+        cfg.chains = 8;
+        assert!(engine_executor(&cfg, 60).is_none(), "budget split across chains");
+        cfg.chains = 2;
+        let exec = engine_executor(&cfg, 60).unwrap();
+        assert_eq!(exec.threads(), 4, "8 threads / 2 chains");
+    }
 
     #[test]
     fn serial_pipeline_runs_and_learns_asia() {

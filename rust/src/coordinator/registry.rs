@@ -25,6 +25,7 @@ use anyhow::{bail, Result};
 use super::config::{EngineKind, StoreKind};
 use crate::combinatorics::SubsetLayout;
 use crate::data::Dataset;
+use crate::exec::{DispatchStats, ExecConfig, KernelExecutor};
 use crate::score::{BdeParams, HashScoreStore, ScoreStore, ScoreTable};
 use crate::scorer::{
     BitVecScorer, DeltaScorer, OrderScorer, RecomputeScorer, SerialScorer, SumScorer,
@@ -78,7 +79,9 @@ impl ScoreStore for StoreHandle {
 /// Preprocess the dataset into the configured score-store backend,
 /// folding optional Eq. (9) pairwise priors (`ppf` is the row-major
 /// `[n × n]` PPF matrix). Priors fold *before* hash pruning — they can
-/// re-rank dominated parent sets.
+/// re-rank dominated parent sets. Classic entry point: balanced
+/// schedule over row-granular tiles; see [`build_store_with`] for the
+/// full `--schedule/--tile` surface.
 pub fn build_store(
     kind: StoreKind,
     data: &Dataset,
@@ -87,15 +90,46 @@ pub fn build_store(
     threads: usize,
     ppf: Option<&[f64]>,
 ) -> StoreHandle {
+    build_store_with(kind, data, params, s, &ExecConfig::balanced(threads), ppf)
+}
+
+/// [`build_store`] under an explicit kernel-executor configuration
+/// (threads × schedule × tile size). Output is bit-identical across
+/// configurations — the execution layer moves work, never values.
+pub fn build_store_with(
+    kind: StoreKind,
+    data: &Dataset,
+    params: BdeParams,
+    s: usize,
+    cfg: &ExecConfig,
+    ppf: Option<&[f64]>,
+) -> StoreHandle {
+    build_store_stats(kind, data, params, s, cfg, ppf).0
+}
+
+/// [`build_store_with`] returning the build's tile dispatch profile
+/// (max/mean tile cost, worker imbalance) for benches and the
+/// `preprocess` subcommand.
+pub fn build_store_stats(
+    kind: StoreKind,
+    data: &Dataset,
+    params: BdeParams,
+    s: usize,
+    cfg: &ExecConfig,
+    ppf: Option<&[f64]>,
+) -> (StoreHandle, DispatchStats) {
     match kind {
         StoreKind::Dense => {
-            let mut table = ScoreTable::build(data, params, s, threads);
+            let (mut table, stats) = ScoreTable::build_stats_with(data, params, s, cfg);
             if let Some(matrix) = ppf {
                 table.add_priors(matrix);
             }
-            StoreHandle::Dense(table)
+            (StoreHandle::Dense(table), stats)
         }
-        StoreKind::Hash => StoreHandle::Hash(HashScoreStore::build(data, params, s, threads, ppf)),
+        StoreKind::Hash => {
+            let (store, stats) = HashScoreStore::build_stats_with(data, params, s, cfg, ppf);
+            (StoreHandle::Hash(store), stats)
+        }
     }
 }
 
@@ -148,6 +182,10 @@ pub fn validate_posterior(engine: EngineKind, store: StoreKind, chains: usize) -
 /// interval per MH step — bit-for-bit identical results, O(interval)
 /// cost. The recompute ablation is never wrapped (its per-node entry
 /// point is itself a full rescore, so wrapping would only add overhead).
+/// When `exec` is given, the serial and bitvec engines fan full/windowed
+/// rescores across it (`score_nodes_batch` — intra-chain parallelism,
+/// bit-identical trajectories); the experiment driver splits the thread
+/// budget across chains before handing one in.
 /// `EngineKind::Xla` is rejected here — its PJRT handles are not
 /// `Send`, so the experiment driver builds it on the chain thread
 /// itself. `sum` over `hash` is constructible for ablations;
@@ -159,6 +197,7 @@ pub fn make_engine<'a>(
     params: BdeParams,
     s: usize,
     delta: bool,
+    exec: Option<&'a dyn KernelExecutor>,
 ) -> Result<Box<dyn OrderScorer + 'a>> {
     fn wrap<'a, E: OrderScorer + 'a>(engine: E, delta: bool) -> Box<dyn OrderScorer + 'a> {
         if delta {
@@ -167,13 +206,31 @@ pub fn make_engine<'a>(
             Box::new(engine)
         }
     }
+    fn serial<'a, S: ScoreStore + ?Sized>(
+        store: &'a S,
+        exec: Option<&'a dyn KernelExecutor>,
+    ) -> SerialScorer<'a, S> {
+        match exec {
+            Some(e) => SerialScorer::with_executor(store, e),
+            None => SerialScorer::new(store),
+        }
+    }
+    fn bitvec<'a, S: ScoreStore + ?Sized>(
+        store: &'a S,
+        exec: Option<&'a dyn KernelExecutor>,
+    ) -> BitVecScorer<'a, S> {
+        match exec {
+            Some(e) => BitVecScorer::bounded_with_executor(store, e),
+            None => BitVecScorer::bounded(store),
+        }
+    }
     Ok(match (engine, store) {
-        (EngineKind::Serial, StoreHandle::Dense(t)) => wrap(SerialScorer::new(t), delta),
-        (EngineKind::Serial, StoreHandle::Hash(h)) => wrap(SerialScorer::new(h), delta),
+        (EngineKind::Serial, StoreHandle::Dense(t)) => wrap(serial(t, exec), delta),
+        (EngineKind::Serial, StoreHandle::Hash(h)) => wrap(serial(h, exec), delta),
         (EngineKind::Sum, StoreHandle::Dense(t)) => wrap(SumScorer::new(t), delta),
         (EngineKind::Sum, StoreHandle::Hash(h)) => wrap(SumScorer::new(h), delta),
-        (EngineKind::BitVec, StoreHandle::Dense(t)) => wrap(BitVecScorer::bounded(t), delta),
-        (EngineKind::BitVec, StoreHandle::Hash(h)) => wrap(BitVecScorer::bounded(h), delta),
+        (EngineKind::BitVec, StoreHandle::Dense(t)) => wrap(bitvec(t, exec), delta),
+        (EngineKind::BitVec, StoreHandle::Hash(h)) => wrap(bitvec(h, exec), delta),
         (EngineKind::Recompute, _) => Box::new(RecomputeScorer::new(data, params, s)),
         (EngineKind::Xla, _) => {
             bail!("the xla engine is device-bound — construct it via the experiment driver")
@@ -222,8 +279,8 @@ mod tests {
         let mut a = BestGraph::new(8);
         let mut b = BestGraph::new(8);
         for engine in [EngineKind::Serial, EngineKind::BitVec] {
-            let mut ed = make_engine(engine, &dense, &d, params, 3, false).unwrap();
-            let mut eh = make_engine(engine, &hash, &d, params, 3, false).unwrap();
+            let mut ed = make_engine(engine, &dense, &d, params, 3, false, None).unwrap();
+            let mut eh = make_engine(engine, &hash, &d, params, 3, false, None).unwrap();
             for _ in 0..5 {
                 let order = Order::random(8, &mut rng);
                 let ta = ed.score_order(&order, &mut a);
@@ -245,8 +302,8 @@ mod tests {
         let mut a = BestGraph::new(8);
         let mut b = BestGraph::new(8);
         for engine in [EngineKind::Serial, EngineKind::Sum, EngineKind::BitVec] {
-            let mut plain = make_engine(engine, &dense, &d, params, 3, false).unwrap();
-            let mut delta = make_engine(engine, &dense, &d, params, 3, true).unwrap();
+            let mut plain = make_engine(engine, &dense, &d, params, 3, false, None).unwrap();
+            let mut delta = make_engine(engine, &dense, &d, params, 3, true, None).unwrap();
             assert!(delta.name().starts_with("delta+"), "{}", delta.name());
             for _ in 0..3 {
                 let order = Order::random(8, &mut rng);
@@ -259,7 +316,7 @@ mod tests {
             }
         }
         // the recompute ablation is never wrapped
-        let rec = make_engine(EngineKind::Recompute, &dense, &d, params, 3, true).unwrap();
+        let rec = make_engine(EngineKind::Recompute, &dense, &d, params, 3, true, None).unwrap();
         assert_eq!(rec.name(), "recompute");
     }
 
@@ -289,6 +346,59 @@ mod tests {
         let d = data(5, 60, 304);
         let params = BdeParams::default();
         let store = build_store(StoreKind::Dense, &d, params, 2, 1, None);
-        assert!(make_engine(EngineKind::Xla, &store, &d, params, 2, true).is_err());
+        assert!(make_engine(EngineKind::Xla, &store, &d, params, 2, true, None).is_err());
+    }
+
+    /// Executor-backed engines score bit-identically to plain ones —
+    /// the fan-out moves work, never values.
+    #[test]
+    fn executor_backed_engines_agree_with_plain() {
+        use crate::exec::{PoolExecutor, Schedule};
+        let d = data(9, 150, 307);
+        let params = BdeParams::default();
+        let store = build_store(StoreKind::Dense, &d, params, 3, 2, None);
+        let mut rng = Pcg32::new(308);
+        let mut a = BestGraph::new(9);
+        let mut b = BestGraph::new(9);
+        for schedule in [Schedule::Static, Schedule::Balanced] {
+            let pool = PoolExecutor::new(4, schedule);
+            for engine in [EngineKind::Serial, EngineKind::BitVec] {
+                for delta in [false, true] {
+                    let mut plain =
+                        make_engine(engine, &store, &d, params, 3, delta, None).unwrap();
+                    let mut fanned =
+                        make_engine(engine, &store, &d, params, 3, delta, Some(&pool)).unwrap();
+                    for _ in 0..3 {
+                        let order = Order::random(9, &mut rng);
+                        assert_eq!(
+                            plain.score_order(&order, &mut a),
+                            fanned.score_order(&order, &mut b),
+                            "engine {engine:?} {schedule:?} delta={delta}"
+                        );
+                        assert_eq!(a.parents, b.parents, "engine {engine:?}");
+                        assert_eq!(a.node_scores, b.node_scores, "engine {engine:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// The store built under any executor configuration is the store
+    /// built by the classic entry point.
+    #[test]
+    fn build_store_with_matches_classic_build() {
+        use crate::exec::Schedule;
+        let d = data(7, 120, 309);
+        let params = BdeParams::default();
+        let reference = build_store(StoreKind::Dense, &d, params, 3, 1, None);
+        let cfg = ExecConfig::new(3, Schedule::Static, 17);
+        let (tiled, stats) = build_store_stats(StoreKind::Dense, &d, params, 3, &cfg, None);
+        let (rt, tt) = match (&reference, &tiled) {
+            (StoreHandle::Dense(a), StoreHandle::Dense(b)) => (a.raw(), b.raw()),
+            _ => unreachable!(),
+        };
+        assert_eq!(rt, tt);
+        assert!(stats.items() > 0);
+        assert!(stats.imbalance() >= 1.0 - 1e-9);
     }
 }

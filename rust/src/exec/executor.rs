@@ -1,0 +1,359 @@
+//! Kernel executors: serial and thread-pool backends dispatching
+//! indexed work items under a static or balanced schedule.
+//!
+//! The contract is deliberately minimal — `kernel(worker, item)` must
+//! tolerate concurrent invocation for *distinct* items, and every item
+//! runs exactly once — so the same executor drives preprocessing tiles,
+//! batched per-position rescores, and row materialization for the
+//! device upload. Timing (`dispatch_timed`) wraps any executor and
+//! yields the per-item/per-worker cost profile the `--log-level debug`
+//! histogram and the `build_imbalance` bench column report.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+use super::Schedule;
+
+/// A work-dispatch backend.
+///
+/// `Sync` is a supertrait so engines can hold `&dyn KernelExecutor`
+/// across the parallel-chain workers.
+pub trait KernelExecutor: Sync {
+    /// Worker count this executor fans work across (1 for serial).
+    fn threads(&self) -> usize;
+
+    /// The assignment schedule in effect.
+    fn schedule(&self) -> Schedule;
+
+    /// Backend name for logs.
+    fn name(&self) -> &'static str;
+
+    /// Run `items` work items exactly once each, possibly
+    /// concurrently. `kernel(worker, item)` is invoked with
+    /// `worker < self.threads()` and `item < items`; it must be safe
+    /// to call concurrently for distinct items.
+    fn dispatch(&self, items: usize, kernel: &(dyn Fn(usize, usize) + Sync));
+
+    /// [`Self::dispatch`] with per-item and per-worker timing — the
+    /// observability hook behind the schedule ablation. The overhead is
+    /// two monotonic-clock reads per item; callers with thousands of
+    /// coarse tiles can afford it unconditionally.
+    fn dispatch_timed(
+        &self,
+        items: usize,
+        kernel: &(dyn Fn(usize, usize) + Sync),
+    ) -> DispatchStats {
+        let worker_nanos: Vec<AtomicU64> =
+            (0..self.threads().max(1)).map(|_| AtomicU64::new(0)).collect();
+        let item_nanos: Vec<AtomicU64> = (0..items).map(|_| AtomicU64::new(0)).collect();
+        {
+            let worker_nanos = &worker_nanos;
+            let item_nanos = &item_nanos;
+            let timed = move |worker: usize, item: usize| {
+                let start = Instant::now();
+                kernel(worker, item);
+                let ns = start.elapsed().as_nanos() as u64;
+                worker_nanos[worker].fetch_add(ns, Ordering::Relaxed);
+                item_nanos[item].store(ns, Ordering::Relaxed);
+            };
+            self.dispatch(items, &timed);
+        }
+        DispatchStats {
+            worker_busy_secs: worker_nanos
+                .iter()
+                .map(|a| a.load(Ordering::Relaxed) as f64 * 1e-9)
+                .collect(),
+            item_secs: item_nanos.iter().map(|a| a.load(Ordering::Relaxed) as f64 * 1e-9).collect(),
+        }
+    }
+}
+
+/// Cost profile of one (or several merged) dispatches.
+#[derive(Debug, Clone, Default)]
+pub struct DispatchStats {
+    /// Accumulated busy seconds per worker slot (idle workers stay 0).
+    pub worker_busy_secs: Vec<f64>,
+    /// Wall seconds of each work item, in item order.
+    pub item_secs: Vec<f64>,
+}
+
+impl DispatchStats {
+    /// Number of timed work items.
+    pub fn items(&self) -> usize {
+        self.item_secs.len()
+    }
+
+    /// Total busy seconds across workers.
+    pub fn total_busy_secs(&self) -> f64 {
+        self.worker_busy_secs.iter().sum()
+    }
+
+    /// Most expensive single item.
+    pub fn max_item_secs(&self) -> f64 {
+        self.item_secs.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Mean item cost.
+    pub fn mean_item_secs(&self) -> f64 {
+        if self.item_secs.is_empty() {
+            0.0
+        } else {
+            self.item_secs.iter().sum::<f64>() / self.item_secs.len() as f64
+        }
+    }
+
+    /// Load-imbalance ratio: max worker busy time over the mean across
+    /// *all* worker slots (idle included). 1.0 = perfectly balanced;
+    /// `threads` = one worker did everything.
+    pub fn imbalance(&self) -> f64 {
+        let workers = self.worker_busy_secs.len();
+        if workers == 0 {
+            return 1.0;
+        }
+        let total: f64 = self.worker_busy_secs.iter().sum();
+        if total <= 0.0 {
+            return 1.0;
+        }
+        let max = self.worker_busy_secs.iter().cloned().fold(0.0, f64::max);
+        max * workers as f64 / total
+    }
+
+    /// Fold another dispatch's samples in (multi-wave builds aggregate
+    /// one stats value across all their dispatches).
+    pub fn merge(&mut self, other: &DispatchStats) {
+        if self.worker_busy_secs.len() < other.worker_busy_secs.len() {
+            self.worker_busy_secs.resize(other.worker_busy_secs.len(), 0.0);
+        }
+        for (mine, theirs) in self.worker_busy_secs.iter_mut().zip(&other.worker_busy_secs) {
+            *mine += theirs;
+        }
+        self.item_secs.extend_from_slice(&other.item_secs);
+    }
+
+    /// Compact cost histogram: `buckets` equal-width bins from 0 to the
+    /// max item cost, rendered as `|`-joined counts.
+    pub fn histogram(&self, buckets: usize) -> String {
+        let max = self.max_item_secs();
+        if self.item_secs.is_empty() || max <= 0.0 || buckets == 0 {
+            return "-".into();
+        }
+        let mut counts = vec![0usize; buckets];
+        for &secs in &self.item_secs {
+            let bin = (((secs / max) * buckets as f64) as usize).min(buckets - 1);
+            counts[bin] += 1;
+        }
+        counts.iter().map(|c| c.to_string()).collect::<Vec<_>>().join("|")
+    }
+
+    /// One log line: tile count, max/mean tile cost, imbalance ratio,
+    /// and the cost histogram.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} tiles: max {:.3}ms mean {:.3}ms imbalance {:.2}x hist[{}]",
+            self.items(),
+            self.max_item_secs() * 1e3,
+            self.mean_item_secs() * 1e3,
+            self.imbalance(),
+            self.histogram(8),
+        )
+    }
+}
+
+/// In-place execution on the calling thread — the `threads = 1` backend
+/// and the zero-dependency default everywhere an executor is optional.
+pub struct SerialExecutor;
+
+impl KernelExecutor for SerialExecutor {
+    fn threads(&self) -> usize {
+        1
+    }
+
+    fn schedule(&self) -> Schedule {
+        Schedule::Static
+    }
+
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn dispatch(&self, items: usize, kernel: &(dyn Fn(usize, usize) + Sync)) {
+        for item in 0..items {
+            kernel(0, item);
+        }
+    }
+}
+
+/// Scoped-thread pool: each `dispatch` spawns up to `threads` scoped
+/// workers (never more than there are items) and joins them before
+/// returning, so kernels may freely borrow stack data. Re-entrant —
+/// concurrent dispatches from independent chains just spawn their own
+/// scoped workers.
+pub struct PoolExecutor {
+    threads: usize,
+    schedule: Schedule,
+}
+
+impl PoolExecutor {
+    /// A pool of `threads` workers under `schedule`.
+    pub fn new(threads: usize, schedule: Schedule) -> Self {
+        PoolExecutor { threads: threads.max(1), schedule }
+    }
+}
+
+impl KernelExecutor for PoolExecutor {
+    fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn schedule(&self) -> Schedule {
+        self.schedule
+    }
+
+    fn name(&self) -> &'static str {
+        "pool"
+    }
+
+    fn dispatch(&self, items: usize, kernel: &(dyn Fn(usize, usize) + Sync)) {
+        let workers = self.threads.min(items);
+        if workers <= 1 {
+            for item in 0..items {
+                kernel(0, item);
+            }
+            return;
+        }
+        match self.schedule {
+            Schedule::Static => {
+                std::thread::scope(|scope| {
+                    for worker in 0..workers {
+                        scope.spawn(move || {
+                            let mut item = worker;
+                            while item < items {
+                                kernel(worker, item);
+                                item += workers;
+                            }
+                        });
+                    }
+                });
+            }
+            Schedule::Balanced => {
+                let next = AtomicUsize::new(0);
+                std::thread::scope(|scope| {
+                    let next = &next;
+                    for worker in 0..workers {
+                        scope.spawn(move || loop {
+                            let item = next.fetch_add(1, Ordering::Relaxed);
+                            if item >= items {
+                                break;
+                            }
+                            kernel(worker, item);
+                        });
+                    }
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn run_counts(exec: &dyn KernelExecutor, items: usize) -> Vec<usize> {
+        let counts: Vec<AtomicUsize> = (0..items).map(|_| AtomicUsize::new(0)).collect();
+        let counts_ref = &counts;
+        exec.dispatch(items, &move |_w, i| {
+            counts_ref[i].fetch_add(1, Ordering::Relaxed);
+        });
+        counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    #[test]
+    fn every_item_runs_exactly_once() {
+        for exec in [
+            Box::new(SerialExecutor) as Box<dyn KernelExecutor>,
+            Box::new(PoolExecutor::new(3, Schedule::Static)),
+            Box::new(PoolExecutor::new(3, Schedule::Balanced)),
+            Box::new(PoolExecutor::new(16, Schedule::Balanced)),
+        ] {
+            for items in [0usize, 1, 2, 7, 64] {
+                let counts = run_counts(exec.as_ref(), items);
+                assert!(counts.iter().all(|&c| c == 1), "{} items={items}", exec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn static_schedule_is_round_robin() {
+        let exec = PoolExecutor::new(4, Schedule::Static);
+        let owner: Vec<AtomicUsize> = (0..13).map(|_| AtomicUsize::new(usize::MAX)).collect();
+        let owner_ref = &owner;
+        exec.dispatch(13, &move |w, i| {
+            owner_ref[i].store(w, Ordering::Relaxed);
+        });
+        for (i, slot) in owner.iter().enumerate() {
+            assert_eq!(slot.load(Ordering::Relaxed), i % 4, "item {i}");
+        }
+    }
+
+    #[test]
+    fn worker_ids_stay_in_range() {
+        for schedule in [Schedule::Static, Schedule::Balanced] {
+            let exec = PoolExecutor::new(8, schedule);
+            let seen = AtomicUsize::new(0);
+            let seen_ref = &seen;
+            exec.dispatch(40, &move |w, _i| {
+                assert!(w < 8);
+                seen_ref.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(seen.load(Ordering::Relaxed), 40);
+        }
+    }
+
+    #[test]
+    fn more_threads_than_items_engages_at_most_items() {
+        // 8 workers, 3 items: worker ids must stay < 3 (no idle spawn).
+        let exec = PoolExecutor::new(8, Schedule::Balanced);
+        exec.dispatch(3, &|w, _i| assert!(w < 3));
+    }
+
+    #[test]
+    fn timed_dispatch_profiles_workers_and_items() {
+        let exec = PoolExecutor::new(2, Schedule::Balanced);
+        let stats = exec.dispatch_timed(6, &|_w, i| {
+            // Unequal synthetic work so the profile is non-degenerate.
+            let spins = (i + 1) * 2000;
+            let mut acc = 0u64;
+            for k in 0..spins {
+                acc = acc.wrapping_add(std::hint::black_box(k as u64));
+            }
+            std::hint::black_box(acc);
+        });
+        assert_eq!(stats.items(), 6);
+        assert_eq!(stats.worker_busy_secs.len(), 2);
+        assert!(stats.max_item_secs() >= stats.mean_item_secs());
+        assert!(stats.imbalance() >= 1.0 - 1e-9);
+        assert!(stats.total_busy_secs() > 0.0);
+        assert!(!stats.summary().is_empty());
+        assert!(stats.histogram(4).contains('|'));
+    }
+
+    #[test]
+    fn stats_merge_accumulates() {
+        let a = DispatchStats { worker_busy_secs: vec![1.0, 2.0], item_secs: vec![0.5, 2.5] };
+        let mut b = DispatchStats { worker_busy_secs: vec![3.0], item_secs: vec![3.0] };
+        b.merge(&a);
+        assert_eq!(b.worker_busy_secs, vec![4.0, 2.0]);
+        assert_eq!(b.items(), 3);
+        assert!((b.imbalance() - 4.0 * 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_benign() {
+        let stats = DispatchStats::default();
+        assert_eq!(stats.items(), 0);
+        assert_eq!(stats.imbalance(), 1.0);
+        assert_eq!(stats.histogram(8), "-");
+        assert_eq!(stats.mean_item_secs(), 0.0);
+    }
+}

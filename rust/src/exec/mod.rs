@@ -1,0 +1,141 @@
+//! The batched kernel execution layer — the CPU mirror of the paper's
+//! GPU task grid.
+//!
+//! The paper's headline speedup rests on a *task-assigning strategy*
+//! that balances local-score work across GPU threads. This module
+//! reproduces that idea host-side: work is expressed as **tiles over
+//! the combinadic-indexed `(node, parent-set)` cell space**
+//! ([`tile::Tile`]), and a [`KernelExecutor`] dispatches the tiles to
+//! workers under one of two schedules:
+//!
+//! * [`Schedule::Static`] — tile `t` always runs on worker
+//!   `t % threads` (round-robin), the fixed assignment a naive grid
+//!   launch would use;
+//! * [`Schedule::Balanced`] — workers pop tiles from a shared atomic
+//!   queue, so a worker stuck on an expensive tile never strands the
+//!   cheap ones behind it (the paper's balanced assignment).
+//!
+//! Because every tile computes a pure function of `(node, subset)` and
+//! writes a disjoint output range, **results are bit-for-bit identical
+//! for any thread count, schedule, or tile size** — scheduling moves
+//! work, never values. `tests/exec_determinism.rs` locks this down for
+//! both score-store backends and for batched order rescoring.
+//!
+//! Consumers:
+//! * `score::{ScoreTable, HashScoreStore}::build_stats_with` — tiled
+//!   preprocessing (sub-node tiles mean `threads > n` no longer
+//!   strands cores);
+//! * the scorer engines' `score_nodes_batch` path — a full rescore of
+//!   an order fans positions across the executor (intra-chain
+//!   parallelism composing with the multi-chain runner);
+//! * the runtime upload's `fill_row` materialization.
+
+pub mod executor;
+pub mod tile;
+
+pub use executor::{DispatchStats, KernelExecutor, PoolExecutor, SerialExecutor};
+pub use tile::{plan_tiles, plan_tiles_for, split_by_tiles, Tile};
+
+use anyhow::{bail, Result};
+
+/// How work items are assigned to workers (`--schedule static|balanced`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Static round-robin: item `i` always runs on worker
+    /// `i % threads`. Zero coordination, but skewed item costs pile up
+    /// on whichever worker the expensive items hash to.
+    Static,
+    /// Balanced dynamic assignment: workers claim the next unclaimed
+    /// item from a shared atomic counter — the work-stealing-style
+    /// queue the paper's task-assigning strategy maps to on a CPU.
+    Balanced,
+}
+
+impl Schedule {
+    /// Parse from CLI text.
+    pub fn parse(text: &str) -> Result<Self> {
+        Ok(match text {
+            "static" | "roundrobin" | "rr" => Schedule::Static,
+            "balanced" | "dynamic" | "steal" => Schedule::Balanced,
+            other => bail!("unknown schedule {other:?} (static|balanced)"),
+        })
+    }
+
+    /// Schedule name for logs and benchmark tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Static => "static",
+            Schedule::Balanced => "balanced",
+        }
+    }
+}
+
+/// CLI-shaped executor configuration (`--threads/--schedule/--tile`),
+/// bundled so the coordinator threads one value through preprocessing,
+/// engines, and the runtime upload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// Worker count (1 = serial execution, no threads spawned).
+    pub threads: usize,
+    /// Tile-assignment schedule.
+    pub schedule: Schedule,
+    /// Score cells per tile; `0` = one tile per node row (the legacy
+    /// node-granular decomposition). Smaller tiles split hot rows
+    /// across workers and let `threads > n` engage every core.
+    pub tile: usize,
+}
+
+impl ExecConfig {
+    /// Explicit configuration.
+    pub fn new(threads: usize, schedule: Schedule, tile: usize) -> Self {
+        ExecConfig { threads, schedule, tile }
+    }
+
+    /// The default used by the classic `build(.., threads)` entry
+    /// points: balanced dispatch over row-granular tiles.
+    pub fn balanced(threads: usize) -> Self {
+        ExecConfig { threads, schedule: Schedule::Balanced, tile: 0 }
+    }
+
+    /// Materialize the configured executor.
+    pub fn executor(&self) -> Box<dyn KernelExecutor> {
+        if self.threads <= 1 {
+            Box::new(SerialExecutor)
+        } else {
+            Box::new(PoolExecutor::new(self.threads, self.schedule))
+        }
+    }
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig::balanced(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_parse_and_name() {
+        assert_eq!(Schedule::parse("static").unwrap(), Schedule::Static);
+        assert_eq!(Schedule::parse("rr").unwrap(), Schedule::Static);
+        assert_eq!(Schedule::parse("balanced").unwrap(), Schedule::Balanced);
+        assert_eq!(Schedule::parse("steal").unwrap(), Schedule::Balanced);
+        assert!(Schedule::parse("chaotic").is_err());
+        assert_eq!(Schedule::Static.name(), "static");
+        assert_eq!(Schedule::Balanced.name(), "balanced");
+    }
+
+    #[test]
+    fn config_picks_the_right_backend() {
+        assert_eq!(ExecConfig::balanced(1).executor().name(), "serial");
+        assert_eq!(ExecConfig::balanced(0).executor().name(), "serial");
+        let pool = ExecConfig::new(4, Schedule::Static, 64).executor();
+        assert_eq!(pool.name(), "pool");
+        assert_eq!(pool.threads(), 4);
+        assert_eq!(pool.schedule(), Schedule::Static);
+        assert_eq!(ExecConfig::default().threads, 1);
+    }
+}

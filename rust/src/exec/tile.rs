@@ -1,0 +1,139 @@
+//! Tiles: the unit of preprocessing work.
+//!
+//! The `[n × S]` score grid is flattened row-major and cut into
+//! row-aligned runs of at most `tile` cells. Tiles never straddle a row
+//! boundary (each tile belongs to exactly one node), so a tile kernel
+//! is "fill cells `[start, end)` of `node`'s row" — the shape both the
+//! dense and hash builds dispatch, and the same decomposition a GPU
+//! grid launch would use over the paper's task space.
+
+/// One contiguous run of score cells in a single node's row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    /// The node whose row this tile covers.
+    pub node: usize,
+    /// First subset (layout) index, inclusive.
+    pub start: usize,
+    /// One-past-last subset index.
+    pub end: usize,
+}
+
+impl Tile {
+    /// Cells covered.
+    pub fn cells(&self) -> usize {
+        self.end - self.start
+    }
+}
+
+/// Cut the `nodes × subsets` grid into tiles of at most `tile` cells
+/// (`tile == 0` = one tile per row, the legacy node-granular split).
+///
+/// Tiles are emitted in flat row-major order and cover every cell
+/// exactly once — builds rely on this to pre-split their output buffer
+/// into per-tile slices by walking the list.
+pub fn plan_tiles(nodes: usize, subsets: usize, tile: usize) -> Vec<Tile> {
+    plan_tiles_for(0..nodes, subsets, tile)
+}
+
+/// [`plan_tiles`] over an explicit node range (the hash build tiles one
+/// wave of rows at a time).
+pub fn plan_tiles_for(nodes: std::ops::Range<usize>, subsets: usize, tile: usize) -> Vec<Tile> {
+    let width = if tile == 0 { subsets.max(1) } else { tile };
+    let mut tiles = Vec::new();
+    for node in nodes {
+        let mut start = 0usize;
+        while start < subsets {
+            let end = (start + width).min(subsets);
+            tiles.push(Tile { node, start, end });
+            start = end;
+        }
+    }
+    tiles
+}
+
+/// Pre-split a flat row-major buffer into one mutable slice per tile.
+///
+/// `tiles` must be the emission order of [`plan_tiles`] /
+/// [`plan_tiles_for`] over exactly the rows `buf` holds — tiles
+/// partition the buffer front to back, which is the one invariant this
+/// module owns (and tests). Wrapping each slice in a `Mutex` lets any
+/// worker claim any tile through a shared reference with no
+/// overlapping writes; each mutex is locked exactly once, so the cost
+/// is an uncontended atomic per tile.
+pub fn split_by_tiles<'a>(
+    mut buf: &'a mut [f32],
+    tiles: &[Tile],
+) -> Vec<std::sync::Mutex<&'a mut [f32]>> {
+    let mut slices = Vec::with_capacity(tiles.len());
+    for t in tiles {
+        let (head, tail) = <[f32]>::split_at_mut(std::mem::take(&mut buf), t.cells());
+        slices.push(std::sync::Mutex::new(head));
+        buf = tail;
+    }
+    debug_assert!(buf.is_empty(), "tiles must cover the buffer exactly");
+    slices
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiles_cover_every_cell_exactly_once() {
+        let shapes = [(4usize, 57usize, 16usize), (1, 10, 3), (6, 57, 0), (3, 8, 100)];
+        for (nodes, subsets, tile) in shapes {
+            let tiles = plan_tiles(nodes, subsets, tile);
+            let mut seen = vec![false; nodes * subsets];
+            let mut flat = 0usize;
+            for t in &tiles {
+                assert!(t.start < t.end && t.end <= subsets, "{t:?}");
+                // Row-major emission order (builds split buffers on it).
+                assert_eq!(t.node * subsets + t.start, flat, "{t:?}");
+                flat += t.cells();
+                for c in t.start..t.end {
+                    let cell = t.node * subsets + c;
+                    assert!(!seen[cell], "cell {cell} covered twice");
+                    seen[cell] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "nodes={nodes} subsets={subsets} tile={tile}");
+        }
+    }
+
+    #[test]
+    fn zero_tile_means_row_granular() {
+        let tiles = plan_tiles(5, 57, 0);
+        assert_eq!(tiles.len(), 5);
+        assert!(tiles.iter().all(|t| t.start == 0 && t.end == 57));
+    }
+
+    #[test]
+    fn small_tiles_beat_the_node_count() {
+        // The threads > n fix: 4 nodes can still feed 8+ workers.
+        let tiles = plan_tiles(4, 11, 2);
+        assert!(tiles.len() >= 8, "{} tiles", tiles.len());
+    }
+
+    #[test]
+    fn row_subrange_planning() {
+        let tiles = plan_tiles_for(3..5, 10, 4);
+        assert_eq!(tiles.len(), 6);
+        assert_eq!(tiles[0], Tile { node: 3, start: 0, end: 4 });
+        assert_eq!(tiles[5], Tile { node: 4, start: 8, end: 10 });
+    }
+
+    #[test]
+    fn split_by_tiles_partitions_the_buffer_in_plan_order() {
+        let (nodes, subsets, tile) = (3usize, 11usize, 4usize);
+        let mut buf: Vec<f32> = (0..nodes * subsets).map(|c| c as f32).collect();
+        let tiles = plan_tiles(nodes, subsets, tile);
+        let slices = split_by_tiles(&mut buf, &tiles);
+        assert_eq!(slices.len(), tiles.len());
+        for (t, slice) in tiles.iter().zip(&slices) {
+            let got = slice.lock().unwrap();
+            let base = (t.node * subsets + t.start) as f32;
+            assert_eq!(got.len(), t.cells());
+            assert!(got.iter().enumerate().all(|(i, &v)| v == base + i as f32), "{t:?}");
+        }
+    }
+}

@@ -6,7 +6,10 @@
 //! Efficient Implementation on GPU"* (2012).
 //!
 //! Layering (see DESIGN.md at the repository root):
-//! * substrates: [`util`], [`combinatorics`], [`bn`], [`data`], [`networks`]
+//! * substrates: [`util`], [`combinatorics`], [`bn`], [`data`], [`networks`],
+//!   and the batched kernel execution layer [`exec`] (tiles over the
+//!   `(node, parent-set)` space, static/balanced schedules — the CPU
+//!   mirror of the paper's GPU task grid)
 //! * scoring: [`score`] (BDe local scores, preprocessing, and the
 //!   pluggable [`score::ScoreStore`] substrate — dense table or pruned
 //!   hash table), [`priors`]
@@ -37,6 +40,7 @@ pub mod combinatorics;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod exec;
 pub mod mcmc;
 pub mod networks;
 pub mod posterior;

@@ -16,7 +16,7 @@ use std::path::Path;
 
 use bnlearn::bn::counting;
 use bnlearn::combinatorics::ParentSetTable;
-use bnlearn::coordinator::{build_store, run_learning, run_posterior, RunConfig, Workload};
+use bnlearn::coordinator::{build_store_stats, run_learning, run_posterior, RunConfig, Workload};
 use bnlearn::priors::ppf;
 use bnlearn::runtime::{default_artifacts_dir, ArtifactManifest};
 use bnlearn::score::{BdeParams, ScoreStore};
@@ -64,6 +64,11 @@ fn print_usage() {
            --delta on|off  (incremental interval rescoring, default on; off = full\n\
                             rescore per step, bit-for-bit identical results)\n\
            --s N --gamma F --topk N --seed N --noise P --threads N --artifacts DIR\n\
+           --schedule static|balanced  (tile assignment: round-robin vs the paper's\n\
+                            balanced dynamic queue, default balanced; bit-identical)\n\
+           --tile N  (score cells per execution tile, 0 = one tile per node row;\n\
+                            small tiles split hot rows and feed threads > n)\n\
+           --log-level error|warn|info|debug  (debug adds per-tile timing histograms)\n\
            --trace [--trace-out PATH]  (record per-iteration score traces to CSV)\n\
          \n\
          posterior flags (learn --posterior; needs --store dense, host engine):\n\
@@ -76,6 +81,7 @@ fn print_usage() {
 
 fn cmd_learn(args: &[String]) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
+    bnlearn::util::logging::set_level(cfg.log_level);
     if cfg.posterior {
         return cmd_posterior(&cfg);
     }
@@ -164,10 +170,12 @@ fn dump_traces(path: &Path, traces: &[Vec<f64>]) -> Result<()> {
 
 fn cmd_preprocess(args: &[String]) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
+    bnlearn::util::logging::set_level(cfg.log_level);
     let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
     let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
     let timer = Timer::start();
-    let store = build_store(cfg.store, &workload.data, params, cfg.s, cfg.threads, None);
+    let (store, stats) =
+        build_store_stats(cfg.store, &workload.data, params, cfg.s, &cfg.exec_config(), None);
     let secs = timer.elapsed_secs();
     let dense_equiv = store.n() * store.subsets() * std::mem::size_of::<f32>();
     println!(
@@ -177,6 +185,14 @@ fn cmd_preprocess(args: &[String]) -> Result<()> {
         store.name(),
         secs,
         cfg.threads
+    );
+    println!(
+        "schedule={} tile={} tiles={} max_tile={:.3}ms build_imbalance={:.2}",
+        cfg.schedule.name(),
+        cfg.tile,
+        stats.items(),
+        stats.max_item_secs() * 1e3,
+        stats.imbalance()
     );
     println!(
         "resident: {:.2} MB, {} stored entries ({:.1}% of the {:.2} MB dense grid)",

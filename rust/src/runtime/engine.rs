@@ -11,8 +11,36 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::artifacts::{ArtifactManifest, ManifestEntry};
 use crate::combinatorics::ParentSetTable;
+use crate::exec::{KernelExecutor, SerialExecutor};
 use crate::score::table::NEG_SENTINEL;
 use crate::score::ScoreStore;
+
+/// Materialize every node row of `store` into one contiguous
+/// `[n, padded]` host buffer via the kernel executor, leaving the
+/// padding columns poisoned — rows are independent `fill_row` calls, so
+/// they fan across workers (pruned hash rows decode concurrently) with
+/// bit-identical output.
+pub(crate) fn materialize_rows(
+    store: &dyn ScoreStore,
+    n: usize,
+    s_total: usize,
+    padded: usize,
+    exec: &dyn KernelExecutor,
+) -> Vec<f32> {
+    let mut ls = vec![NEG_SENTINEL; n * padded];
+    {
+        let slices: Vec<std::sync::Mutex<&mut [f32]>> =
+            ls.chunks_mut(padded).map(std::sync::Mutex::new).collect();
+        let slices_ref = &slices;
+        let kernel = move |_worker: usize, i: usize| {
+            let mut guard = slices_ref[i].lock().expect("row slice poisoned");
+            let row: &mut [f32] = &mut guard;
+            store.fill_row(i, &mut row[..s_total]);
+        };
+        exec.dispatch(n, &kernel);
+    }
+    ls
+}
 
 /// Result of one accelerated scoring call.
 #[derive(Debug, Clone)]
@@ -75,6 +103,18 @@ impl ScoreEngine {
     /// (pruned hash entries become the sentinel, which the device argmax
     /// treats exactly like the host engines do).
     pub fn upload(&mut self, store: &dyn ScoreStore, pst: &ParentSetTable) -> Result<()> {
+        self.upload_with(store, pst, &SerialExecutor)
+    }
+
+    /// [`Self::upload`] with the host-side row materialization fanned
+    /// across `exec` (rows are independent; at n = 60, s = 4 the dense
+    /// render is ~125 MB of hash-row decoding worth parallelizing).
+    pub fn upload_with(
+        &mut self,
+        store: &dyn ScoreStore,
+        pst: &ParentSetTable,
+        exec: &dyn KernelExecutor,
+    ) -> Result<()> {
         let n = self.entry.n;
         let s_total = self.entry.total;
         let padded = self.entry.padded;
@@ -93,10 +133,7 @@ impl ScoreEngine {
 
         // Materialize LS rows host-side into one contiguous [n, padded]
         // buffer (padding columns stay poisoned).
-        let mut ls = vec![NEG_SENTINEL; n * padded];
-        for i in 0..n {
-            store.fill_row(i, &mut ls[i * padded..i * padded + s_total]);
-        }
+        let ls = materialize_rows(store, n, s_total, padded, exec);
         // Pad PST rows with sentinel-only rows.
         let width = pst.width();
         let mut pst_padded = vec![pst.sentinel(); padded * width];

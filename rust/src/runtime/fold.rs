@@ -15,7 +15,6 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::artifacts::{ArtifactManifest, ManifestEntry};
 use crate::combinatorics::ParentSetTable;
 use crate::priors::InterfaceMatrix;
-use crate::score::table::NEG_SENTINEL;
 use crate::score::ScoreStore;
 
 /// A loaded fold_priors executable.
@@ -59,10 +58,13 @@ impl PriorFolder {
         }
 
         // Padded operands (same conventions as ScoreEngine::upload).
-        let mut ls = vec![NEG_SENTINEL; n * padded];
-        for i in 0..n {
-            store.fill_row(i, &mut ls[i * padded..i * padded + s_total]);
-        }
+        let ls = super::engine::materialize_rows(
+            store,
+            n,
+            s_total,
+            padded,
+            &crate::exec::SerialExecutor,
+        );
         let pst = ParentSetTable::build(store.layout());
         let width = pst.width();
         let mut pst_padded = vec![pst.sentinel(); padded * width];

@@ -29,6 +29,17 @@ impl XlaScorer {
         Self::with_variant(artifacts_dir, store, "bn_score_")
     }
 
+    /// [`Self::new`] with the upload's host-side row materialization
+    /// fanned across `exec` (the experiment driver hands in the run's
+    /// configured executor; the device upload itself is unchanged).
+    pub fn new_with(
+        artifacts_dir: impl AsRef<std::path::Path>,
+        store: &dyn ScoreStore,
+        exec: &dyn crate::exec::KernelExecutor,
+    ) -> Result<Self> {
+        Self::with_variant_exec(artifacts_dir, store, "bn_score_", exec)
+    }
+
     /// Same, over the Pallas-lowered parity artifact (kernel-in-HLO
     /// end-to-end; slower on the CPU backend — see aot.py).
     pub fn new_pallas(
@@ -44,10 +55,21 @@ impl XlaScorer {
         store: &dyn ScoreStore,
         stem: &str,
     ) -> Result<Self> {
+        Self::with_variant_exec(artifacts_dir, store, stem, &crate::exec::SerialExecutor)
+    }
+
+    /// Load a named artifact variant, materializing the upload rows
+    /// through `exec`.
+    pub fn with_variant_exec(
+        artifacts_dir: impl AsRef<std::path::Path>,
+        store: &dyn ScoreStore,
+        stem: &str,
+        exec: &dyn crate::exec::KernelExecutor,
+    ) -> Result<Self> {
         let layout = store.layout().clone();
         let mut engine = ScoreEngine::load_variant(artifacts_dir, stem, layout.n(), layout.s())?;
         let pst = ParentSetTable::build(&layout);
-        engine.upload(store, &pst)?;
+        engine.upload_with(store, &pst, exec)?;
         Ok(XlaScorer {
             engine,
             pos: vec![0; layout.n()],

@@ -22,11 +22,12 @@
 //! Sum-over-graphs scoring needs every mass and must use the dense
 //! backend — the coordinator registry enforces that.
 
-use super::bde::{BdeParams, LocalScorer};
-use super::table::{add_priors_to_row, fill_node_row, ScoreTable, NEG_SENTINEL};
+use super::bde::BdeParams;
+use super::table::{add_priors_to_row, fill_tiles, ScoreTable, NEG_SENTINEL};
 use crate::combinatorics::combinadic::{next_combination, rank_combination};
 use crate::combinatorics::SubsetLayout;
 use crate::data::Dataset;
+use crate::exec::{plan_tiles_for, split_by_tiles, DispatchStats, ExecConfig};
 
 /// Backend-agnostic access to the preprocessed local-score table.
 ///
@@ -177,13 +178,8 @@ pub struct HashScoreStore {
 }
 
 impl HashScoreStore {
-    /// Preprocess the dataset into pruned per-node hash rows.
-    ///
-    /// Each worker materializes one node's dense row at a time (peak
-    /// transient memory: one `S`-float row per thread instead of the full
-    /// `[n × S]` table), folds `ppf` priors in if given (priors must fold
-    /// *before* pruning — they can re-rank dominated sets), prunes, and
-    /// keeps the survivors.
+    /// Preprocess the dataset into pruned per-node hash rows with
+    /// balanced tile dispatch (see [`Self::build_with`]).
     pub fn build(
         data: &Dataset,
         params: BdeParams,
@@ -191,6 +187,40 @@ impl HashScoreStore {
         threads: usize,
         ppf: Option<&[f64]>,
     ) -> Self {
+        Self::build_with(data, params, s, &ExecConfig::balanced(threads), ppf)
+    }
+
+    /// Tiled build through the kernel execution layer.
+    ///
+    /// Rows are processed in **waves** of `~2 · threads` nodes so the
+    /// transient dense buffer stays proportional to the thread budget
+    /// (not the whole `[n × S]` grid). Each wave runs two dispatches:
+    /// a cell-parallel tiled fill (sub-node tiles, so `threads > n` no
+    /// longer strands cores), then a node-parallel pass that folds
+    /// `ppf` priors (priors must fold *before* pruning — they can
+    /// re-rank dominated sets), prunes dominated entries, and builds
+    /// the hash rows. Every retained `(key, score)` pair — and the
+    /// probe layout of every hash row — is bit-identical for any
+    /// thread count, schedule, or tile size.
+    pub fn build_with(
+        data: &Dataset,
+        params: BdeParams,
+        s: usize,
+        cfg: &ExecConfig,
+        ppf: Option<&[f64]>,
+    ) -> Self {
+        Self::build_stats_with(data, params, s, cfg, ppf).0
+    }
+
+    /// [`Self::build_with`] returning the dispatch profile aggregated
+    /// over every wave (fill tiles + prune items).
+    pub fn build_stats_with(
+        data: &Dataset,
+        params: BdeParams,
+        s: usize,
+        cfg: &ExecConfig,
+        ppf: Option<&[f64]>,
+    ) -> (Self, DispatchStats) {
         let n = data.cols();
         let layout = SubsetLayout::new(n, s);
         assert!(layout.total() <= u32::MAX as usize, "layout exceeds u32 key space");
@@ -198,44 +228,58 @@ impl HashScoreStore {
             assert_eq!(m.len(), n * n, "PPF matrix must be n×n");
         }
 
-        let threads = threads.max(1).min(n.max(1));
-        let mut buckets: Vec<Vec<usize>> = (0..threads).map(|_| Vec::new()).collect();
-        for i in 0..n {
-            buckets[i % threads].push(i);
-        }
-        let mut rows: Vec<Option<HashRow>> = (0..n).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            let layout = &layout;
-            let handles: Vec<_> = buckets
-                .into_iter()
-                .map(|mine| {
-                    scope.spawn(move || {
-                        let mut scorer = LocalScorer::new(data, params);
-                        let mut row = vec![0f32; layout.total()];
-                        let mut keep: Vec<(u32, f32)> = Vec::new();
-                        let mut done = Vec::with_capacity(mine.len());
-                        for i in mine {
-                            fill_node_row(&mut scorer, layout, i, &mut row);
-                            if let Some(m) = ppf {
-                                add_priors_to_row(layout, i, m, &mut row);
-                            }
-                            prune_dominated(layout, &row, &mut keep);
-                            done.push((i, HashRow::build(&keep)));
-                        }
-                        done
-                    })
-                })
-                .collect();
-            for h in handles {
-                for (i, hr) in h.join().expect("hash-store worker panicked") {
-                    rows[i] = Some(hr);
+        let total = layout.total();
+        let exec = cfg.executor();
+        let wave = exec.threads().saturating_mul(2).clamp(1, n.max(1));
+        let mut buf = vec![0f32; wave * total];
+        let mut rows: Vec<HashRow> = Vec::with_capacity(n);
+        let mut stats = DispatchStats::default();
+
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + wave).min(n);
+            let wn = hi - lo;
+            // Phase A: cell-parallel tiled fill of this wave's rows.
+            {
+                let tiles = plan_tiles_for(lo..hi, total, cfg.tile);
+                let slices = split_by_tiles(&mut buf[..wn * total], &tiles);
+                stats.merge(&fill_tiles(data, params, &layout, exec.as_ref(), &tiles, &slices));
+            }
+            // Phase B: node-parallel prior fold + dominance prune + hash
+            // row construction.
+            {
+                let row_slices: Vec<std::sync::Mutex<&mut [f32]>> =
+                    buf[..wn * total].chunks_mut(total).map(std::sync::Mutex::new).collect();
+                let built: Vec<std::sync::Mutex<Option<HashRow>>> =
+                    (0..wn).map(|_| std::sync::Mutex::new(None)).collect();
+                let layout_ref = &layout;
+                let rows_ref = &row_slices;
+                let built_ref = &built;
+                let kernel = move |_worker: usize, i: usize| {
+                    let node = lo + i;
+                    let mut guard = rows_ref[i].lock().expect("row slice poisoned");
+                    let row: &mut [f32] = &mut guard;
+                    if let Some(m) = ppf {
+                        add_priors_to_row(layout_ref, node, m, row);
+                    }
+                    let mut keep: Vec<(u32, f32)> = Vec::new();
+                    prune_dominated(layout_ref, row, &mut keep);
+                    *built_ref[i].lock().expect("hash slot poisoned") = Some(HashRow::build(&keep));
+                };
+                stats.merge(&exec.dispatch_timed(wn, &kernel));
+                for slot in built {
+                    rows.push(slot.into_inner().expect("hash slot poisoned").expect("row built"));
                 }
             }
-        });
-        HashScoreStore {
-            layout,
-            rows: rows.into_iter().map(|r| r.expect("row built")).collect(),
+            lo = hi;
         }
+        crate::debug!(
+            "hash build [{n} x {total}] via {}/{}: {}",
+            exec.name(),
+            cfg.schedule.name(),
+            stats.summary()
+        );
+        (HashScoreStore { layout, rows }, stats)
     }
 
     /// Fraction of the dense table's entries this store retains.
@@ -469,6 +513,35 @@ mod tests {
                     assert!((h - d).abs() < 1e-5, "i={i} subset={subset:?}: {h} vs {d}");
                 }
             });
+        }
+    }
+
+    /// The hash store is bit-identical — stored entries *and* the probe
+    /// layout of every row — for any (threads, schedule, tile), with and
+    /// without priors folded.
+    #[test]
+    fn tiled_hash_builds_are_bit_identical() {
+        use crate::exec::{ExecConfig, Schedule};
+        let data = small_data(7, 120, 207);
+        let params = BdeParams::default();
+        let n = 7usize;
+        let mut ppf = vec![0f64; n * n];
+        ppf[3 * n + 1] = 2.0;
+        for ppf_opt in [None, Some(ppf.as_slice())] {
+            let reference = HashScoreStore::build(&data, params, 3, 1, ppf_opt);
+            for threads in [2usize, 8] {
+                for schedule in [Schedule::Static, Schedule::Balanced] {
+                    for tile in [0usize, 9, 4096] {
+                        let cfg = ExecConfig::new(threads, schedule, tile);
+                        let tiled = HashScoreStore::build_with(&data, params, 3, &cfg, ppf_opt);
+                        assert_eq!(tiled.stored_entries(), reference.stored_entries());
+                        for (a, b) in reference.rows.iter().zip(&tiled.rows) {
+                            assert_eq!(a.keys, b.keys, "t={threads} {schedule:?} tile={tile}");
+                            assert_eq!(a.vals, b.vals, "t={threads} {schedule:?} tile={tile}");
+                        }
+                    }
+                }
+            }
         }
     }
 

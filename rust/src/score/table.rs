@@ -16,6 +16,7 @@
 use super::bde::{BdeParams, LocalScorer};
 use crate::combinatorics::SubsetLayout;
 use crate::data::Dataset;
+use crate::exec::{plan_tiles, split_by_tiles, DispatchStats, ExecConfig, KernelExecutor, Tile};
 
 /// Sentinel for invalid (node ∈ parents) entries. f32-safe, far below any
 /// real log score, and still far from f32 −inf so sums stay finite.
@@ -31,38 +32,50 @@ pub struct ScoreTable {
 
 impl ScoreTable {
     /// Compute the full table: every node × every subset with `|π| ≤ s`,
-    /// parallelized across `threads` workers (node-interleaved so the
-    /// expensive high-arity nodes spread out).
+    /// parallelized across `threads` workers with balanced tile
+    /// dispatch (see [`Self::build_with`]).
     pub fn build(data: &Dataset, params: BdeParams, s: usize, threads: usize) -> Self {
+        Self::build_with(data, params, s, &ExecConfig::balanced(threads))
+    }
+
+    /// Tiled build through the kernel execution layer: the `[n × S]`
+    /// grid is cut into row-aligned tiles (`cfg.tile` cells each; `0` =
+    /// one tile per row) and dispatched under `cfg.schedule`. Each cell
+    /// is a pure function of `(node, subset)` written exactly once, so
+    /// the table is **bit-identical for any thread count, schedule, or
+    /// tile size** — and sub-row tiles keep every core busy even when
+    /// `threads > n` (the old per-node buckets clamped to `n` workers).
+    pub fn build_with(data: &Dataset, params: BdeParams, s: usize, cfg: &ExecConfig) -> Self {
+        Self::build_stats_with(data, params, s, cfg).0
+    }
+
+    /// [`Self::build_with`] returning the per-tile dispatch profile
+    /// (max/mean tile cost, worker imbalance) for benches and the
+    /// `--log-level debug` histogram.
+    pub fn build_stats_with(
+        data: &Dataset,
+        params: BdeParams,
+        s: usize,
+        cfg: &ExecConfig,
+    ) -> (Self, DispatchStats) {
         let n = data.cols();
         let layout = SubsetLayout::new(n, s);
         let total = layout.total();
         let mut table = vec![0f32; n * total];
 
-        let threads = threads.max(1).min(n.max(1));
-        // Partition the per-node row slices into interleaved buckets so the
-        // expensive high-arity nodes spread across workers.
-        let mut buckets: Vec<Vec<(usize, &mut [f32])>> = (0..threads).map(|_| Vec::new()).collect();
-        for (i, row) in table.chunks_mut(total).enumerate() {
-            buckets[i % threads].push((i, row));
-        }
-        std::thread::scope(|scope| {
-            let layout = &layout;
-            let mut handles = Vec::new();
-            for mine in buckets {
-                let handle = scope.spawn(move || {
-                    let mut scorer = LocalScorer::new(data, params);
-                    for (i, row) in mine {
-                        fill_node_row(&mut scorer, layout, i, row);
-                    }
-                });
-                handles.push(handle);
-            }
-            for h in handles {
-                h.join().expect("score worker panicked");
-            }
-        });
-        ScoreTable { layout, n, data: table }
+        let tiles = plan_tiles(n, total, cfg.tile);
+        let exec = cfg.executor();
+        let stats = {
+            let slices = split_by_tiles(&mut table, &tiles);
+            fill_tiles(data, params, &layout, exec.as_ref(), &tiles, &slices)
+        };
+        crate::debug!(
+            "dense build [{n} x {total}] via {}/{}: {}",
+            exec.name(),
+            cfg.schedule.name(),
+            stats.summary()
+        );
+        (ScoreTable { layout, n, data: table }, stats)
     }
 
     /// Node count.
@@ -140,7 +153,9 @@ pub(crate) fn add_priors_to_row(layout: &SubsetLayout, node: usize, ppf: &[f64],
     });
 }
 
-/// Fill one node's row over the layout.
+/// Dispatch pre-split tile slices across `exec`, filling each tile's
+/// cells `[start, end)` of its node's row — the shared fill kernel of
+/// the dense and hash builds.
 ///
 /// Hot path of preprocessing (millions of local scores at n=60). Instead
 /// of re-encoding parent configurations from scratch per subset
@@ -149,18 +164,39 @@ pub(crate) fn add_priors_to_row(layout: &SubsetLayout, node: usize, ppf: &[f64],
 /// parents — one O(rows) update per tree edge, one O(rows) counting pass
 /// per leaf (≈2 row passes per subset instead of k+1). Lexicographic DFS
 /// order == layout order, so the row index is a running counter; branches
-/// containing the node itself are skipped wholesale with a binomial jump.
-pub(crate) fn fill_node_row(
-    scorer: &mut LocalScorer,
+/// containing the node itself — and branches entirely outside the tile's
+/// window — are skipped wholesale with a binomial jump, so a tile pays
+/// only O(depth · rows) to seek to its first cell. Every cell value is a
+/// pure function of `(node, subset)`, independent of the tile boundaries
+/// that computed it.
+///
+/// Builders (with their lgamma tables and scratch buffers) live in
+/// per-worker lanes, created lazily and reused across all the tiles a
+/// worker claims — builder state never leaks into cell values, so the
+/// reuse is invisible to the output.
+pub(crate) fn fill_tiles(
+    data: &Dataset,
+    params: BdeParams,
     layout: &SubsetLayout,
-    node: usize,
-    row: &mut [f32],
-) {
-    let mut builder = FastRowBuilder::new(scorer.data(), scorer.params(), layout.s());
-    builder.fill(layout, node, row);
+    exec: &dyn KernelExecutor,
+    tiles: &[Tile],
+    slices: &[std::sync::Mutex<&mut [f32]>],
+) -> DispatchStats {
+    debug_assert_eq!(tiles.len(), slices.len());
+    let lanes: Vec<std::sync::Mutex<Option<FastRowBuilder>>> =
+        (0..exec.threads().max(1)).map(|_| std::sync::Mutex::new(None)).collect();
+    let lanes_ref = &lanes;
+    let kernel = move |worker: usize, i: usize| {
+        let t = tiles[i];
+        let mut lane = lanes_ref[worker].lock().expect("builder lane poisoned");
+        let builder = lane.get_or_insert_with(|| FastRowBuilder::new(data, params, layout.s()));
+        let mut guard = slices[i].lock().expect("tile slice poisoned");
+        builder.fill_range(layout, t.node, t.start, t.end, &mut guard);
+    };
+    exec.dispatch_timed(tiles.len(), &kernel)
 }
 
-/// DFS-based row filler (see [`fill_node_row`]).
+/// DFS-based row filler (see [`fill_tiles`]).
 struct FastRowBuilder<'a> {
     data: &'a crate::data::Dataset,
     params: BdeParams,
@@ -210,7 +246,20 @@ impl<'a> FastRowBuilder<'a> {
         }
     }
 
-    fn fill(&mut self, layout: &SubsetLayout, node: usize, row: &mut [f32]) {
+    /// Fill the global-index window `[lo, hi)` of `node`'s row into
+    /// `out` (`out.len() == hi - lo`). Blocks and DFS branches fully
+    /// outside the window are skipped with their binomial leaf counts;
+    /// cells inside are computed exactly as a full-row fill would.
+    fn fill_range(
+        &mut self,
+        layout: &SubsetLayout,
+        node: usize,
+        lo: usize,
+        hi: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), hi - lo);
+        debug_assert!(hi <= layout.total());
         let n = layout.n();
         let s = layout.s();
         let bt = layout.binomials().clone();
@@ -220,21 +269,32 @@ impl<'a> FastRowBuilder<'a> {
             if k > n {
                 continue;
             }
+            if idx >= hi {
+                break;
+            }
             if k == 0 {
-                row[idx] = self.score_leaf(node, 0, 1) as f32;
+                if idx >= lo && idx < hi {
+                    out[idx - lo] = self.score_leaf(node, 0, 1) as f32;
+                }
                 idx += 1;
                 continue;
             }
-            self.dfs(&bt, n, node, k, 1, 0, row, &mut idx);
+            let block = bt.c(n, k) as usize;
+            if idx + block <= lo {
+                idx += block; // whole size block precedes the window
+                continue;
+            }
+            self.dfs_range(&bt, n, node, k, 1, 0, lo, hi, out, &mut idx);
         }
-        debug_assert_eq!(idx, layout.total());
+        debug_assert!(idx >= hi);
     }
 
     /// Choose the parent for `level` (1-based) from `start..`, recursing
-    /// until `level == k`, scoring at leaves. `idx` tracks the layout
-    /// index (lexicographic DFS == layout order within the size block).
+    /// until `level == k`, scoring at leaves inside `[lo, hi)`. `idx`
+    /// tracks the *global* layout index (lexicographic DFS == layout
+    /// order within the size block); writes land at `out[idx - lo]`.
     #[allow(clippy::too_many_arguments)]
-    fn dfs(
+    fn dfs_range(
         &mut self,
         bt: &crate::combinatorics::BinomialTable,
         n: usize,
@@ -242,15 +302,31 @@ impl<'a> FastRowBuilder<'a> {
         k: usize,
         level: usize,
         start: usize,
-        row: &mut [f32],
+        lo: usize,
+        hi: usize,
+        out: &mut [f32],
         idx: &mut usize,
     ) {
         // Candidates at this level: start ..= n - (k - level + 1).
         for cand in start..=(n - (k - level + 1)) {
+            if *idx >= hi {
+                return; // rest of this subtree is past the window
+            }
             let completions = bt.c(n - cand - 1, k - level) as usize;
+            if *idx + completions <= lo {
+                // Entire branch precedes the window — binomial jump, no
+                // code extension needed.
+                *idx += completions;
+                continue;
+            }
             if cand == node {
-                // Every subset under this branch contains `node` — poison.
-                row[*idx..*idx + completions].fill(NEG_SENTINEL);
+                // Every subset under this branch contains `node` —
+                // poison the in-window part.
+                let a = (*idx).max(lo);
+                let b = (*idx + completions).min(hi);
+                if a < b {
+                    out[a - lo..b - lo].fill(NEG_SENTINEL);
+                }
                 *idx += completions;
                 continue;
             }
@@ -276,10 +352,12 @@ impl<'a> FastRowBuilder<'a> {
             self.strides[level + 1] = stride * arity;
 
             if level == k {
-                row[*idx] = self.score_leaf(node, k, level) as f32;
+                // completions == 1 and the guards above put idx in
+                // [lo, hi), so this leaf is in the window.
+                out[*idx - lo] = self.score_leaf(node, k, level) as f32;
                 *idx += 1;
             } else {
-                self.dfs(bt, n, node, k, level + 1, cand + 1, row, idx);
+                self.dfs_range(bt, n, node, k, level + 1, cand + 1, lo, hi, out, idx);
             }
         }
     }
@@ -514,6 +592,47 @@ mod tests {
         let t1 = ScoreTable::build(&data, BdeParams::default(), 3, 1);
         let t4 = ScoreTable::build(&data, BdeParams::default(), 3, 4);
         assert_eq!(t1.raw(), t4.raw());
+    }
+
+    /// Every (threads, schedule, tile) configuration produces the exact
+    /// bytes of the serial build — scheduling moves work, never values.
+    #[test]
+    fn tiled_builds_are_bit_identical() {
+        use crate::exec::{ExecConfig, Schedule};
+        let data = small_data(6, 120, 47);
+        let params = BdeParams::default();
+        let reference = ScoreTable::build(&data, params, 3, 1);
+        for threads in [1usize, 2, 8] {
+            for schedule in [Schedule::Static, Schedule::Balanced] {
+                for tile in [0usize, 1, 7, 64, 10_000] {
+                    let cfg = ExecConfig::new(threads, schedule, tile);
+                    let table = ScoreTable::build_with(&data, params, 3, &cfg);
+                    assert_eq!(
+                        reference.raw(),
+                        table.raw(),
+                        "threads={threads} schedule={schedule:?} tile={tile}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Regression for the old `threads.max(1).min(n)` clamp: with
+    /// sub-row tiles, `threads > n` builds correctly (and the tile plan
+    /// actually has more work items than nodes to hand those cores).
+    #[test]
+    fn more_threads_than_nodes_builds_identically() {
+        use crate::exec::{plan_tiles, ExecConfig, Schedule};
+        let data = small_data(4, 80, 48);
+        let params = BdeParams::default();
+        let reference = ScoreTable::build(&data, params, 3, 1);
+        let cfg = ExecConfig::new(8, Schedule::Balanced, 2);
+        let tiled = ScoreTable::build_with(&data, params, 3, &cfg);
+        assert_eq!(reference.raw(), tiled.raw());
+        assert!(
+            plan_tiles(4, reference.subsets(), 2).len() >= 8,
+            "sub-row tiles must outnumber the 4 rows"
+        );
     }
 
     #[test]

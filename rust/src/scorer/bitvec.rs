@@ -11,7 +11,8 @@
 //!   a [`FullScoreTable`] (the true "all possible parent sets"
 //!   configuration of Table V, feasible only for small n).
 
-use super::{BestGraph, OrderScorer};
+use super::{fan_positions, BestGraph, OrderScorer};
+use crate::exec::KernelExecutor;
 use crate::mcmc::Order;
 use crate::score::table::FullScoreTable;
 use crate::score::{ScoreStore, ScoreTable};
@@ -20,6 +21,8 @@ use crate::score::{ScoreStore, ScoreTable};
 pub struct BitVecScorer<'a, S: ScoreStore + ?Sized = ScoreTable> {
     store: &'a S,
     n: usize,
+    /// Batched-rescore executor (None = always serial).
+    exec: Option<&'a dyn KernelExecutor>,
     /// scratch: node ids of a decoded mask
     decode: Vec<usize>,
 }
@@ -30,7 +33,25 @@ impl<'a, S: ScoreStore + ?Sized> BitVecScorer<'a, S> {
     pub fn bounded(store: &'a S) -> Self {
         let n = store.n();
         assert!(n <= 26, "bit-vector enumeration is 2^n — capped at 26 nodes");
-        BitVecScorer { store, n, decode: Vec::with_capacity(n) }
+        BitVecScorer { store, n, exec: None, decode: Vec::with_capacity(n) }
+    }
+
+    /// Bounded mode with full/windowed rescores fanned across `exec`
+    /// (the per-position 2^n scans are independent, so the baseline
+    /// parallelizes on the same tile abstraction as the GPP engine).
+    pub fn bounded_with_executor(store: &'a S, exec: &'a dyn KernelExecutor) -> Self {
+        let mut engine = Self::bounded(store);
+        engine.exec = Some(exec);
+        engine
+    }
+
+    /// The executor to fan a `span`-position batch across, if one is
+    /// attached and the batch has at least one position per worker.
+    fn batch_exec(&self, span: usize) -> Option<&'a dyn KernelExecutor> {
+        match self.exec {
+            Some(e) if e.threads() > 1 && span >= e.threads() => Some(e),
+            _ => None,
+        }
     }
 
     /// Score the node at position `p`: scan all 2^n masks, filter the
@@ -87,6 +108,19 @@ impl<S: ScoreStore + ?Sized> OrderScorer for BitVecScorer<'_, S> {
     fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
         let n = self.n;
         debug_assert_eq!(order.n(), n);
+        if let Some(exec) = self.batch_exec(n) {
+            let store = self.store;
+            let mut contrib = vec![0f64; n];
+            return fan_positions(
+                exec,
+                || BitVecScorer::bounded(store),
+                order,
+                0,
+                n,
+                out,
+                &mut contrib,
+            );
+        }
         let mut total = 0f64;
         for p in 0..n {
             total += self.score_position(order, p, out);
@@ -96,6 +130,36 @@ impl<S: ScoreStore + ?Sized> OrderScorer for BitVecScorer<'_, S> {
 
     fn score_node(&mut self, order: &Order, position: usize, out: &mut BestGraph) -> f64 {
         self.score_position(order, position, out)
+    }
+
+    fn score_nodes_batch(
+        &mut self,
+        order: &Order,
+        lo: usize,
+        hi: usize,
+        out: &mut BestGraph,
+        contrib: &mut [f64],
+    ) -> f64 {
+        debug_assert_eq!(contrib.len(), hi - lo);
+        if let Some(exec) = self.batch_exec(hi - lo) {
+            let store = self.store;
+            return fan_positions(
+                exec,
+                || BitVecScorer::bounded(store),
+                order,
+                lo,
+                hi,
+                out,
+                contrib,
+            );
+        }
+        let mut total = 0f64;
+        for p in lo..hi {
+            let c = self.score_position(order, p, out);
+            contrib[p - lo] = c;
+            total += c;
+        }
+        total
     }
 
     fn name(&self) -> &'static str {

@@ -90,15 +90,16 @@ impl<S: OrderScorer> DeltaScorer<S> {
 
     /// Full per-node rescore of `order` into the cache; returns the
     /// total summed in position order (the same accumulation order as
-    /// the inner engine's own `score_order`).
+    /// the inner engine's own `score_order`). Routed through the inner
+    /// engine's `score_nodes_batch`, so an executor-backed engine fans
+    /// the rebuild across workers — identical values either way.
     fn rescore_full(&mut self, order: &Order) -> f64 {
         let n = order.n();
         self.ensure_capacity(n);
-        let mut total = 0f64;
-        for p in 0..n {
-            let c = self.inner.score_node(order, p, &mut self.cache);
-            self.contrib[order.seq()[p]] = c;
-            total += c;
+        let mut contrib = vec![0f64; n];
+        let total = self.inner.score_nodes_batch(order, 0, n, &mut self.cache, &mut contrib);
+        for (p, &node) in order.seq().iter().enumerate() {
+            self.contrib[node] = contrib[p];
         }
         self.cached_seq.clear();
         self.cached_seq.extend_from_slice(order.seq());
@@ -143,14 +144,14 @@ impl<S: OrderScorer> OrderScorer for DeltaScorer<S> {
             self.rescore_full(&current);
         }
         // O(interval): rescore only positions a..=b against the proposed
-        // order; everything outside keeps its predecessor set.
+        // order; everything outside keeps its predecessor set. The
+        // batched entry point lets executor-backed engines fan a long
+        // interval (uniform swaps average ~n/3) across workers.
         self.pend_nodes.clear();
+        self.pend_nodes.extend_from_slice(&order.seq()[a..=b]);
         self.pend_contrib.clear();
-        for p in a..=b {
-            let c = self.inner.score_node(order, p, out);
-            self.pend_nodes.push(order.seq()[p]);
-            self.pend_contrib.push(c);
-        }
+        self.pend_contrib.resize(b - a + 1, 0.0);
+        self.inner.score_nodes_batch(order, a, b + 1, out, &mut self.pend_contrib);
         self.pend_range = Some((a, b));
         // Proposed total, summed in position order exactly as a full
         // rescore would — bit-for-bit identical MH decisions.

@@ -39,6 +39,7 @@ pub use serial::SerialScorer;
 pub use sum::SumScorer;
 
 use crate::bn::Dag;
+use crate::exec::KernelExecutor;
 use crate::mcmc::Order;
 
 /// Result of scoring one order: per-node best parent sets + scores.
@@ -147,8 +148,98 @@ pub trait OrderScorer {
     /// Default: no-op.
     fn rollback_swap(&mut self) {}
 
+    /// Score positions `lo..hi` of `order`: write each node's best
+    /// parent set/score into `out`'s slots, each position's
+    /// contribution into `contrib[p - lo]`, and return the
+    /// contributions accumulated **in position order** — bitwise the
+    /// sum a serial rescore over the same window produces.
+    ///
+    /// Engines holding a [`crate::exec::KernelExecutor`] override this
+    /// to fan the positions across workers (each position is a pure
+    /// function of the order and the store, so the fan-out changes
+    /// wall-clock, never values); [`DeltaScorer`] routes its full
+    /// cache rebuilds and interval rescans through it. The default is
+    /// the serial per-position loop.
+    fn score_nodes_batch(
+        &mut self,
+        order: &Order,
+        lo: usize,
+        hi: usize,
+        out: &mut BestGraph,
+        contrib: &mut [f64],
+    ) -> f64 {
+        debug_assert_eq!(contrib.len(), hi - lo);
+        let mut total = 0f64;
+        for p in lo..hi {
+            let c = self.score_node(order, p, out);
+            contrib[p - lo] = c;
+            total += c;
+        }
+        total
+    }
+
     /// Engine name for logs and benchmark tables.
     fn name(&self) -> &'static str;
+}
+
+/// Fan positions `lo..hi` of `order` across `exec`, one engine per
+/// worker lane (engines built by `make` share the caller's store and
+/// are cheap to construct), then merge serially **in position order**
+/// so the accumulated total — and every slot of `out` — is bitwise the
+/// value a serial rescore produces. The shared helper behind the
+/// executor-aware `score_nodes_batch` overrides of [`SerialScorer`]
+/// and [`BitVecScorer`].
+pub(crate) fn fan_positions<E, F>(
+    exec: &dyn KernelExecutor,
+    make: F,
+    order: &Order,
+    lo: usize,
+    hi: usize,
+    out: &mut BestGraph,
+    contrib: &mut [f64],
+) -> f64
+where
+    E: OrderScorer + Send,
+    F: Fn() -> E + Sync,
+{
+    use std::sync::Mutex;
+    debug_assert_eq!(contrib.len(), hi - lo);
+    let n = order.n();
+    // Per-worker engine + scratch graph, created lazily on first claim.
+    let lanes: Vec<Mutex<Option<(E, BestGraph)>>> =
+        (0..exec.threads().max(1)).map(|_| Mutex::new(None)).collect();
+    // Per-position results: (contribution, node score, argmax parents).
+    let slots: Vec<Mutex<(f64, f64, Vec<usize>)>> =
+        (lo..hi).map(|_| Mutex::new((0.0, 0.0, Vec::new()))).collect();
+    {
+        let lanes_ref = &lanes;
+        let slots_ref = &slots;
+        let make_ref = &make;
+        let kernel = move |worker: usize, i: usize| {
+            let p = lo + i;
+            let mut lane = lanes_ref[worker].lock().expect("worker lane poisoned");
+            let (engine, scratch) = lane.get_or_insert_with(|| (make_ref(), BestGraph::new(n)));
+            let c = engine.score_node(order, p, scratch);
+            let node = order.seq()[p];
+            let mut slot = slots_ref[i].lock().expect("position slot poisoned");
+            slot.0 = c;
+            slot.1 = scratch.node_scores[node];
+            slot.2.clear();
+            slot.2.extend_from_slice(&scratch.parents[node]);
+        };
+        exec.dispatch(hi - lo, &kernel);
+    }
+    let mut total = 0f64;
+    for (i, slot) in slots.into_iter().enumerate() {
+        let (c, score, parents) = slot.into_inner().expect("position slot poisoned");
+        let node = order.seq()[lo + i];
+        out.node_scores[node] = score;
+        out.parents[node].clear();
+        out.parents[node].extend_from_slice(&parents);
+        contrib[i] = c;
+        total += c;
+    }
+    total
 }
 
 // Boxed engines (the registry hands out `Box<dyn OrderScorer>`) drive
@@ -173,6 +264,17 @@ impl<T: OrderScorer + ?Sized> OrderScorer for Box<T> {
 
     fn rollback_swap(&mut self) {
         (**self).rollback_swap()
+    }
+
+    fn score_nodes_batch(
+        &mut self,
+        order: &Order,
+        lo: usize,
+        hi: usize,
+        out: &mut BestGraph,
+        contrib: &mut [f64],
+    ) -> f64 {
+        (**self).score_nodes_batch(order, lo, hi, out, contrib)
     }
 
     fn name(&self) -> &'static str {

@@ -13,8 +13,9 @@
 //! O(k) from a prefix-sum table over completion counts (see
 //! `RankPrefix`).
 
-use super::{BestGraph, OrderScorer};
+use super::{fan_positions, BestGraph, OrderScorer};
 use crate::combinatorics::combinadic::next_combination;
+use crate::exec::KernelExecutor;
 use crate::mcmc::Order;
 use crate::score::{ScoreStore, ScoreTable};
 
@@ -59,8 +60,15 @@ impl RankPrefix {
 }
 
 /// Serial table-lookup order scorer — the GPP reference implementation.
+///
+/// With an executor attached ([`Self::with_executor`]), full-order and
+/// windowed rescores fan their positions across the executor's workers
+/// (each position is a pure store lookup scan, so results stay
+/// bit-identical); without one, every path is the classic serial loop.
 pub struct SerialScorer<'a, S: ScoreStore + ?Sized = ScoreTable> {
     store: &'a S,
+    /// Batched-rescore executor (None = always serial).
+    exec: Option<&'a dyn KernelExecutor>,
     ranks: RankPrefix,
     /// Per-size block offsets in the layout.
     offsets: Vec<u64>,
@@ -85,6 +93,7 @@ impl<'a, S: ScoreStore + ?Sized> SerialScorer<'a, S> {
         let offsets: Vec<u64> = (0..=s).map(|k| layout.block_start(k)).collect();
         SerialScorer {
             store,
+            exec: None,
             ranks: RankPrefix::new(n, s),
             offsets,
             preds: Vec::with_capacity(n),
@@ -94,9 +103,27 @@ impl<'a, S: ScoreStore + ?Sized> SerialScorer<'a, S> {
         }
     }
 
+    /// New engine whose full/windowed rescores fan positions across
+    /// `exec` (the batched intra-chain path).
+    pub fn with_executor(store: &'a S, exec: &'a dyn KernelExecutor) -> Self {
+        let mut engine = Self::new(store);
+        engine.exec = Some(exec);
+        engine
+    }
+
     /// The score store in use.
     pub fn store(&self) -> &'a S {
         self.store
+    }
+
+    /// The executor to fan a `span`-position batch across, if one is
+    /// attached and the batch has at least one position per worker
+    /// (smaller batches run serially — identical values either way).
+    fn batch_exec(&self, span: usize) -> Option<&'a dyn KernelExecutor> {
+        match self.exec {
+            Some(e) if e.threads() > 1 && span >= e.threads() => Some(e),
+            _ => None,
+        }
     }
 
     /// Score the node at position `p` of `order`: enumerate only the
@@ -156,6 +183,11 @@ impl<S: ScoreStore + ?Sized> OrderScorer for SerialScorer<'_, S> {
         debug_assert_eq!(order.n(), n);
         debug_assert_eq!(out.n(), n);
 
+        if let Some(exec) = self.batch_exec(n) {
+            let store = self.store;
+            let mut contrib = vec![0f64; n];
+            return fan_positions(exec, || SerialScorer::new(store), order, 0, n, out, &mut contrib);
+        }
         let mut total = 0f64;
         for p in 0..n {
             total += self.score_position(order, p, out);
@@ -165,6 +197,28 @@ impl<S: ScoreStore + ?Sized> OrderScorer for SerialScorer<'_, S> {
 
     fn score_node(&mut self, order: &Order, position: usize, out: &mut BestGraph) -> f64 {
         self.score_position(order, position, out)
+    }
+
+    fn score_nodes_batch(
+        &mut self,
+        order: &Order,
+        lo: usize,
+        hi: usize,
+        out: &mut BestGraph,
+        contrib: &mut [f64],
+    ) -> f64 {
+        debug_assert_eq!(contrib.len(), hi - lo);
+        if let Some(exec) = self.batch_exec(hi - lo) {
+            let store = self.store;
+            return fan_positions(exec, || SerialScorer::new(store), order, lo, hi, out, contrib);
+        }
+        let mut total = 0f64;
+        for p in lo..hi {
+            let c = self.score_position(order, p, out);
+            contrib[p - lo] = c;
+            total += c;
+        }
+        total
     }
 
     fn name(&self) -> &'static str {

@@ -14,6 +14,19 @@ pub enum Level {
     Debug = 3,
 }
 
+impl Level {
+    /// Parse from CLI text (`--log-level error|warn|info|debug`).
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        Ok(match text {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "info" => Level::Info,
+            "debug" | "trace" => Level::Debug,
+            other => anyhow::bail!("unknown log level {other:?} (error|warn|info|debug)"),
+        })
+    }
+}
+
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
 /// Set the global log level.
@@ -83,5 +96,14 @@ mod tests {
     fn log_does_not_panic() {
         log(Level::Info, "test line");
         log(Level::Debug, "debug line");
+    }
+
+    #[test]
+    fn level_parse() {
+        assert_eq!(Level::parse("error").unwrap(), Level::Error);
+        assert_eq!(Level::parse("warning").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("info").unwrap(), Level::Info);
+        assert_eq!(Level::parse("debug").unwrap(), Level::Debug);
+        assert!(Level::parse("loud").is_err());
     }
 }
