@@ -12,8 +12,10 @@ pub mod binomial;
 pub mod combinadic;
 pub mod layout;
 pub mod pst;
+pub mod restricted;
 
 pub use binomial::BinomialTable;
 pub use combinadic::{rank_combination, unrank_combination};
 pub use layout::SubsetLayout;
 pub use pst::ParentSetTable;
+pub use restricted::RestrictedLayout;

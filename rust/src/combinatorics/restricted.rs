@@ -1,0 +1,332 @@
+//! Per-node restricted subset layouts — the combinatorial core of the
+//! candidate-parent restriction subsystem (`crate::restrict`).
+//!
+//! The global [`SubsetLayout`] indexes every subset of `{0..n-1}` with
+//! `|subset| ≤ s`, so each node's score row holds `C(n, ≤s)` cells and
+//! preprocessing cost grows combinatorially with n. A
+//! [`RestrictedLayout`] replaces that with one *local* subset layout per
+//! node, enumerated over the node's candidate-parent **pool**: node `i`
+//! with pool size `k_i` gets a row of `C(k_i, ≤ min(s, k_i))` cells —
+//! the ragged per-node cell space every restricted store build, scorer
+//! fast path, and tile plan indexes through.
+//!
+//! Two index spaces coexist (DESIGN.md §13):
+//! * **global** indices — the full layout's, shared with unrestricted
+//!   stores and the engines' rank arithmetic; subsets outside a node's
+//!   pool have *no* cell and read back as the poison sentinel;
+//! * **cell** indices — a node's local layout index (`0..row_len(i)`),
+//!   with `row_start(i)` offsets flattening the ragged rows front to
+//!   back for tile planning and buffer splits.
+//!
+//! Local layouts inherit the paper's block ordering (largest subsets
+//! first, empty set last) over *pool positions*; pools are sorted by
+//! global node id, so the position order and the global order agree and
+//! a full pool (`k_i = n−1`) enumerates exactly the non-self subsets of
+//! the global layout in the same lexicographic order — the property the
+//! restricted-vs-unrestricted bit-identity tests lock down.
+
+use super::layout::SubsetLayout;
+
+/// Hard bound on `s` for restricted layouts: global↔cell translation
+/// decodes subsets into a stack buffer of this length.
+pub const MAX_S: usize = 16;
+
+/// Sentinel in the flat `pool_pos` inverse map: "not in this pool".
+const NOT_IN_POOL: u32 = u32::MAX;
+
+/// Per-node restricted subset layouts over candidate-parent pools.
+#[derive(Debug, Clone)]
+pub struct RestrictedLayout {
+    /// The full `C(n, ≤s)` layout restricted stores share with the rest
+    /// of the system (global index semantics, `n`/`s` bounds).
+    full: SubsetLayout,
+    /// `pools[i]` — node i's candidate parents, sorted global ids,
+    /// never containing i.
+    pools: Vec<Vec<usize>>,
+    /// Flat `[n × n]` inverse map: `pool_pos[i*n + v]` = position of
+    /// global node `v` in `pools[i]`, or [`NOT_IN_POOL`].
+    pool_pos: Vec<u32>,
+    /// `locals[i]` — the `C(k_i, ≤ min(s, k_i))` layout over pool
+    /// *positions* of node i.
+    locals: Vec<SubsetLayout>,
+    /// Prefix sums of `locals[i].total()`; length n+1.
+    row_offsets: Vec<usize>,
+}
+
+impl RestrictedLayout {
+    /// Build from per-node candidate pools (sorted, self-free, ids < n).
+    pub fn new(n: usize, s: usize, pools: Vec<Vec<usize>>) -> Self {
+        assert_eq!(pools.len(), n, "one pool per node");
+        assert!(s <= MAX_S, "restricted layouts support s <= {MAX_S}, got {s}");
+        let mut pool_pos = vec![NOT_IN_POOL; n * n];
+        let mut locals = Vec::with_capacity(n);
+        let mut row_offsets = Vec::with_capacity(n + 1);
+        let mut acc = 0usize;
+        for (i, pool) in pools.iter().enumerate() {
+            assert!(
+                pool.windows(2).all(|w| w[0] < w[1]),
+                "pool of node {i} must be sorted and duplicate-free"
+            );
+            for (pos, &v) in pool.iter().enumerate() {
+                assert!(v < n, "pool of node {i} names node {v} >= n");
+                assert_ne!(v, i, "pool of node {i} contains the node itself");
+                pool_pos[i * n + v] = pos as u32;
+            }
+            let local = SubsetLayout::new(pool.len(), s);
+            row_offsets.push(acc);
+            acc += local.total();
+            locals.push(local);
+        }
+        row_offsets.push(acc);
+        RestrictedLayout { full: SubsetLayout::new(n, s), pools, pool_pos, locals, row_offsets }
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.full.n()
+    }
+
+    /// Global parent-set size bound (per-node layouts clamp it to the
+    /// pool size).
+    pub fn s(&self) -> usize {
+        self.full.s()
+    }
+
+    /// The full global layout (shared index semantics with unrestricted
+    /// stores).
+    pub fn full(&self) -> &SubsetLayout {
+        &self.full
+    }
+
+    /// Node i's candidate-parent pool (sorted global ids).
+    pub fn pool(&self, node: usize) -> &[usize] {
+        &self.pools[node]
+    }
+
+    /// Position of global node `v` in `node`'s pool, if screened in.
+    #[inline]
+    pub fn pool_position(&self, node: usize, v: usize) -> Option<usize> {
+        let pos = self.pool_pos[node * self.n() + v];
+        if pos == NOT_IN_POOL {
+            None
+        } else {
+            Some(pos as usize)
+        }
+    }
+
+    /// Node i's local layout over pool positions.
+    pub fn local(&self, node: usize) -> &SubsetLayout {
+        &self.locals[node]
+    }
+
+    /// Cells in node i's restricted row (`C(k_i, ≤ min(s, k_i))`).
+    pub fn row_len(&self, node: usize) -> usize {
+        self.row_offsets[node + 1] - self.row_offsets[node]
+    }
+
+    /// First flat cell index of node i's row.
+    pub fn row_start(&self, node: usize) -> usize {
+        self.row_offsets[node]
+    }
+
+    /// Per-node row lengths (the ragged tile planner's input).
+    pub fn row_lens(&self) -> Vec<usize> {
+        (0..self.n()).map(|i| self.row_len(i)).collect()
+    }
+
+    /// Total cells across all restricted rows (`Σ_i C(k_i, ≤s)`).
+    pub fn total_cells(&self) -> usize {
+        *self.row_offsets.last().unwrap()
+    }
+
+    /// Cells the *full* dense grid would hold (`n · C(n, ≤s)`) — the
+    /// denominator of every memory-reduction claim.
+    pub fn full_cells(&self) -> usize {
+        self.n() * self.full.total()
+    }
+
+    /// Largest pool size.
+    pub fn max_pool(&self) -> usize {
+        self.pools.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Mean pool size.
+    pub fn mean_pool(&self) -> f64 {
+        if self.pools.is_empty() {
+            return 0.0;
+        }
+        self.pools.iter().map(Vec::len).sum::<usize>() as f64 / self.pools.len() as f64
+    }
+
+    /// Local (within-row) cell index of a sorted global parent set, or
+    /// `None` if any parent is outside the node's pool.
+    pub fn cell_index_of(&self, node: usize, parents: &[usize]) -> Option<usize> {
+        if parents.len() > self.locals[node].s() {
+            return None;
+        }
+        let mut buf = [0usize; MAX_S];
+        for (slot, &p) in buf.iter_mut().zip(parents) {
+            *slot = self.pool_position(node, p)?;
+        }
+        Some(self.locals[node].index_of(&buf[..parents.len()]))
+    }
+
+    /// Recover the global-id parent set at a node's local cell index;
+    /// writes into `buf` (`buf.len() >= s`) and returns the filled
+    /// prefix, sorted ascending.
+    pub fn subset_of<'a>(&self, node: usize, cell: usize, buf: &'a mut [usize]) -> &'a [usize] {
+        let len = self.locals[node].subset_of(cell, &mut *buf).len();
+        let pool = &self.pools[node];
+        for slot in buf[..len].iter_mut() {
+            *slot = pool[*slot];
+        }
+        &buf[..len]
+    }
+
+    /// Translate a node's local cell index into the full layout's global
+    /// index (pools are sorted, so the decoded set is already sorted).
+    pub fn global_from_cell(&self, node: usize, cell: usize) -> usize {
+        let mut buf = [0usize; MAX_S];
+        let len = self.subset_of(node, cell, &mut buf).len();
+        self.full.index_of(&buf[..len])
+    }
+
+    /// Translate a global layout index into a node's local cell index —
+    /// `None` when the subset reaches outside the node's pool (including
+    /// every subset containing the node itself).
+    pub fn cell_from_global(&self, node: usize, index: usize) -> Option<usize> {
+        let mut buf = [0usize; MAX_S];
+        let len = self.full.subset_of(index, &mut buf).len();
+        for slot in buf[..len].iter_mut() {
+            *slot = self.pool_position(node, *slot)?;
+        }
+        // len ≤ k_i follows from the positions being distinct, and
+        // len ≤ s from the full layout, so the local bound holds.
+        debug_assert!(len <= self.locals[node].s());
+        Some(self.locals[node].index_of(&buf[..len]))
+    }
+
+    /// Visit every `(cell_index, global_id_subset)` of one node's row in
+    /// local layout order.
+    pub fn for_each_row(&self, node: usize, mut f: impl FnMut(usize, &[usize])) {
+        let pool = &self.pools[node];
+        let mut buf = [0usize; MAX_S];
+        self.locals[node].for_each(|cell, positions| {
+            for (slot, &p) in buf.iter_mut().zip(positions) {
+                *slot = pool[p];
+            }
+            f(cell, &buf[..positions.len()]);
+        });
+    }
+
+    /// The unrestricted reference: every node's pool is all other nodes
+    /// (`k_i = n−1`) — the layout the bit-identity tests compare
+    /// against.
+    pub fn full_pools(n: usize, s: usize) -> Self {
+        let pools = (0..n).map(|i| (0..n).filter(|&v| v != i).collect()).collect();
+        RestrictedLayout::new(n, s, pools)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> RestrictedLayout {
+        // 5 nodes; mixed pool sizes including an empty pool.
+        let pools = vec![vec![1, 3], vec![0, 2, 4], vec![], vec![0, 1, 2, 4], vec![3]];
+        RestrictedLayout::new(5, 2, pools)
+    }
+
+    #[test]
+    fn row_shapes_match_local_layouts() {
+        let rl = small();
+        // k=2,s=2 → 4 cells; k=3 → 7; k=0 → 1; k=4 → 11; k=1 → 2.
+        assert_eq!(rl.row_lens(), vec![4, 7, 1, 11, 2]);
+        assert_eq!(rl.total_cells(), 25);
+        assert_eq!(rl.row_start(0), 0);
+        assert_eq!(rl.row_start(3), 12);
+        assert_eq!(rl.full_cells(), 5 * rl.full().total());
+        assert_eq!(rl.max_pool(), 4);
+        assert!((rl.mean_pool() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cell_roundtrip_through_global_space() {
+        let rl = small();
+        let mut buf = [0usize; MAX_S];
+        for node in 0..5 {
+            for cell in 0..rl.row_len(node) {
+                let subset = rl.subset_of(node, cell, &mut buf).to_vec();
+                assert!(subset.windows(2).all(|w| w[0] < w[1]), "sorted global ids");
+                assert!(!subset.contains(&node));
+                assert_eq!(rl.cell_index_of(node, &subset), Some(cell));
+                let g = rl.global_from_cell(node, cell);
+                assert_eq!(rl.cell_from_global(node, g), Some(cell));
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_pool_subsets_have_no_cell() {
+        let rl = small();
+        // node 0's pool is {1, 3}: {2} and {1, 2} are out of pool.
+        assert_eq!(rl.cell_index_of(0, &[2]), None);
+        assert_eq!(rl.cell_index_of(0, &[1, 2]), None);
+        assert!(rl.cell_index_of(0, &[1]).is_some());
+        // self-containing global subsets translate to None.
+        let g = rl.full().index_of(&[0, 1]);
+        assert_eq!(rl.cell_from_global(0, g), None);
+        // empty pool still has the empty-set cell.
+        assert_eq!(rl.cell_index_of(2, &[]), Some(0));
+        assert_eq!(rl.cell_index_of(2, &[0]), None);
+    }
+
+    #[test]
+    fn for_each_row_matches_subset_of() {
+        let rl = small();
+        let mut buf = [0usize; MAX_S];
+        for node in 0..5 {
+            let mut count = 0usize;
+            rl.for_each_row(node, |cell, subset| {
+                assert_eq!(rl.subset_of(node, cell, &mut buf), subset);
+                count += 1;
+            });
+            assert_eq!(count, rl.row_len(node));
+        }
+    }
+
+    #[test]
+    fn full_pools_cover_every_non_self_subset() {
+        let (n, s) = (6usize, 3usize);
+        let rl = RestrictedLayout::full_pools(n, s);
+        let full = rl.full().clone();
+        for node in 0..n {
+            assert_eq!(rl.pool(node).len(), n - 1);
+            let mut cells = 0usize;
+            full.for_each(|g, subset| {
+                let cell = rl.cell_from_global(node, g);
+                if subset.contains(&node) {
+                    assert_eq!(cell, None, "self subsets have no cell");
+                } else {
+                    assert!(cell.is_some(), "node={node} subset={subset:?}");
+                    assert_eq!(rl.global_from_cell(node, cell.unwrap()), g);
+                    cells += 1;
+                }
+            });
+            assert_eq!(cells, rl.row_len(node));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "contains the node itself")]
+    fn self_in_pool_rejected() {
+        RestrictedLayout::new(3, 2, vec![vec![0], vec![0], vec![1]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted")]
+    fn unsorted_pool_rejected() {
+        RestrictedLayout::new(3, 2, vec![vec![2, 1], vec![0], vec![1]]);
+    }
+}

@@ -5,6 +5,7 @@ use anyhow::{bail, Result};
 
 use crate::exec::{ExecConfig, Schedule};
 use crate::mcmc::ProposalKind;
+use crate::restrict::RestrictKind;
 use crate::util::logging::Level;
 
 /// Which order-scoring engine drives the chain.
@@ -108,6 +109,15 @@ pub struct RunConfig {
     pub delta: bool,
     /// Cell-corruption probability (Fig. 11), 0 = clean.
     pub noise: f64,
+    /// Candidate-parent restriction (`--restrict none|mi:<k>`): `mi:<k>`
+    /// screens each node down to its top-k G²-associated candidates
+    /// (plus prior-encouraged parents) before preprocessing, shrinking
+    /// stores from `C(n, ≤s)` to `C(k, ≤s)` per node. `none` (default)
+    /// is bit-for-bit the unrestricted pipeline.
+    pub restrict: RestrictKind,
+    /// Significance level of the screening independence tests
+    /// (`--restrict-alpha`): pairs with `p > alpha` never enter a pool.
+    pub restrict_alpha: f64,
     /// Worker threads for preprocessing and batched rescoring.
     pub threads: usize,
     /// Tile-assignment schedule (`--schedule static|balanced`): static
@@ -159,6 +169,8 @@ impl Default for RunConfig {
             proposal: ProposalKind::Swap,
             delta: true,
             noise: 0.0,
+            restrict: RestrictKind::None,
+            restrict_alpha: 0.05,
             threads: default_threads(),
             schedule: Schedule::Balanced,
             tile: 0,
@@ -229,6 +241,8 @@ impl RunConfig {
                 "--proposal" => cfg.proposal = ProposalKind::parse(next()?)?,
                 "--delta" => cfg.delta = parse_on_off(next()?)?,
                 "--noise" => cfg.noise = next()?.parse()?,
+                "--restrict" => cfg.restrict = RestrictKind::parse(next()?)?,
+                "--restrict-alpha" => cfg.restrict_alpha = next()?.parse()?,
                 "--threads" => cfg.threads = next()?.parse()?,
                 "--schedule" => cfg.schedule = Schedule::parse(next()?)?,
                 "--tile" => cfg.tile = next()?.parse()?,
@@ -255,6 +269,16 @@ impl RunConfig {
         }
         if !(0.0..=1.0).contains(&cfg.threshold) {
             bail!("--threshold must be in [0, 1], got {}", cfg.threshold);
+        }
+        if cfg.restrict_alpha <= 0.0 || cfg.restrict_alpha > 1.0 {
+            bail!("--restrict-alpha must be in (0, 1], got {}", cfg.restrict_alpha);
+        }
+        if !cfg.restrict.is_none() && cfg.s > crate::combinatorics::restricted::MAX_S {
+            bail!(
+                "--restrict supports s <= {}, got --s {}",
+                crate::combinatorics::restricted::MAX_S,
+                cfg.s
+            );
         }
         Ok(cfg)
     }
@@ -358,6 +382,26 @@ mod tests {
         // bad values rejected
         assert!(RunConfig::from_args(&args("--schedule chaotic")).is_err());
         assert!(RunConfig::from_args(&args("--log-level loud")).is_err());
+    }
+
+    #[test]
+    fn parses_restrict_flags() {
+        let c = RunConfig::from_args(&args("--restrict mi:8 --restrict-alpha 0.01")).unwrap();
+        assert_eq!(c.restrict, RestrictKind::Mi { k: 8 });
+        assert_eq!(c.restrict_alpha, 0.01);
+        // defaults: no restriction, alpha 0.05
+        let d = RunConfig::default();
+        assert_eq!(d.restrict, RestrictKind::None);
+        assert_eq!(d.restrict_alpha, 0.05);
+        // bad values rejected
+        assert!(RunConfig::from_args(&args("--restrict topk:3")).is_err());
+        assert!(RunConfig::from_args(&args("--restrict mi:0")).is_err());
+        assert!(RunConfig::from_args(&args("--restrict-alpha 0")).is_err());
+        assert!(RunConfig::from_args(&args("--restrict-alpha 1.5")).is_err());
+        // restricted layouts cap s (clean CLI error, not a library panic)
+        assert!(RunConfig::from_args(&args("--restrict mi:8 --s 17")).is_err());
+        assert!(RunConfig::from_args(&args("--s 17")).is_ok());
+        assert!(RunConfig::from_args(&args("--restrict mi:8 --s 16")).is_ok());
     }
 
     #[test]

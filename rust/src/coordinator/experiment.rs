@@ -45,6 +45,12 @@ pub struct LearnReport {
     pub store_bytes: usize,
     /// Entries the store holds explicitly.
     pub store_entries: usize,
+    /// Candidate-parent restriction applied (`"none"` for the classic
+    /// unrestricted pipeline).
+    pub restrict: String,
+    /// Mean candidate-pool size under restriction (None when
+    /// unrestricted).
+    pub pool_mean: Option<f64>,
     /// Gelman–Rubin PSRF over the chain traces (needs `--trace` and
     /// at least two chains).
     pub psrf: Option<f64>,
@@ -70,13 +76,18 @@ impl LearnReport {
             (None, Some(e)) => format!(" ESS={e:.1}"),
             _ => String::new(),
         };
+        let restrict = match self.pool_mean {
+            Some(mean) => format!(" restrict={}(pool≈{mean:.1})", self.restrict),
+            None => String::new(),
+        };
         format!(
-            "net={} n={} engine={} store={}({:.1}MB) iters={} chains={} | score={} TPR={:.3} FPR={:.4} SHD={} | preproc={:.2}s setup={:.2}s sample={:.2}s ({:.3}ms/iter) accept={:.2}{}",
+            "net={} n={} engine={} store={}({:.1}MB){} iters={} chains={} | score={} TPR={:.3} FPR={:.4} SHD={} | preproc={:.2}s setup={:.2}s sample={:.2}s ({:.3}ms/iter) accept={:.2}{}",
             self.config.network,
             n,
             self.config.engine.name(),
             self.store_name,
             self.store_bytes as f64 / (1024.0 * 1024.0),
+            restrict,
             self.config.iters,
             self.config.chains,
             score,
@@ -108,20 +119,55 @@ pub fn run_learning_on(
     priors: Option<&InterfaceMatrix>,
 ) -> Result<LearnReport> {
     registry::validate(cfg.engine, cfg.store, cfg.chains)?;
+    registry::validate_restricted(cfg.engine, cfg.restrict)?;
     let n = workload.n();
     let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
 
-    // ---- preprocessing (Section III-A) into the configured backend ----
+    // ---- preprocessing (Section III-A) into the configured backend,
+    // optionally behind the candidate-parent screen (`--restrict`) ----
     let timer = Timer::start();
     let ppf = priors.map(|m| m.ppf_matrix());
-    let store = registry::build_store_with(
-        cfg.store,
-        &workload.data,
-        params,
-        cfg.s,
-        &cfg.exec_config(),
-        ppf.as_deref(),
-    );
+    let exec_cfg = cfg.exec_config();
+    let restriction = {
+        let exec = exec_cfg.executor();
+        crate::restrict::build_restriction(
+            &workload.data,
+            cfg.s,
+            cfg.restrict,
+            cfg.restrict_alpha,
+            priors,
+            exec.as_ref(),
+        )
+    };
+    let store = match &restriction {
+        Some(rl) => {
+            crate::info!(
+                "restriction {}: mean pool {:.1}, max {}, {} of {} cells",
+                cfg.restrict.name(),
+                rl.mean_pool(),
+                rl.max_pool(),
+                rl.total_cells(),
+                rl.full_cells()
+            );
+            registry::build_store_restricted(
+                cfg.store,
+                &workload.data,
+                params,
+                rl,
+                &exec_cfg,
+                ppf.as_deref(),
+            )
+            .0
+        }
+        None => registry::build_store_with(
+            cfg.store,
+            &workload.data,
+            params,
+            cfg.s,
+            &exec_cfg,
+            ppf.as_deref(),
+        ),
+    };
     let preprocess_secs = timer.elapsed_secs();
 
     // ---- engine setup + sampling ----
@@ -134,7 +180,7 @@ pub fn run_learning_on(
             // multi-chain runner by splitting the thread budget: each
             // chain's engine fans positions across threads/chains
             // workers, so chains × positions never oversubscribes.
-            let engine_exec = engine_executor(cfg, n);
+            let engine_exec = engine_executor(cfg, n, restriction.as_deref());
             let engine_exec_ref = engine_exec.as_deref();
             let mut spec = ChainSpec::new(n, cfg.iters, cfg.topk, cfg.seed);
             spec.chains = cfg.chains;
@@ -178,6 +224,8 @@ pub fn run_learning_on(
         store_name: store.name(),
         store_bytes: store.bytes(),
         store_entries: store.stored_entries(),
+        restrict: cfg.restrict.name(),
+        pool_mean: restriction.as_ref().map(|rl| rl.mean_pool()),
         psrf,
         ess,
     })
@@ -201,9 +249,23 @@ fn worth_fanning(n: usize, s: usize) -> bool {
 /// thread budget divided by the chain count — or `None` when the share
 /// rounds down to a single worker, or when the workload is too small
 /// for intra-chain parallelism to pay (see [`worth_fanning`]).
-fn engine_executor(cfg: &RunConfig, n: usize) -> Option<Box<dyn KernelExecutor>> {
+///
+/// Under a restriction the cost model switches to the *restricted*
+/// enumeration size: a full rescore scans at most `total_cells()`
+/// candidates (`Σ_i C(k_i, ≤s)`), so an n = 64 pooled run with a few
+/// thousand cells stays serial instead of paying per-rescore thread
+/// spawns for `C(n, s+1)`-sized work it no longer does.
+fn engine_executor(
+    cfg: &RunConfig,
+    n: usize,
+    restriction: Option<&crate::combinatorics::RestrictedLayout>,
+) -> Option<Box<dyn KernelExecutor>> {
     let per_chain = (cfg.threads / cfg.chains.max(1)).max(1);
-    if per_chain > 1 && worth_fanning(n, cfg.s) {
+    let worth = match restriction {
+        Some(rl) => rl.total_cells() as f64 >= 1e5,
+        None => worth_fanning(n, cfg.s),
+    };
+    if per_chain > 1 && worth {
         Some(ExecConfig::new(per_chain, cfg.schedule, cfg.tile).executor())
     } else {
         None
@@ -358,6 +420,13 @@ pub fn run_posterior_on(
     priors: Option<&InterfaceMatrix>,
 ) -> Result<PosteriorReport> {
     registry::validate_posterior(cfg.engine, cfg.store, cfg.chains)?;
+    if !cfg.restrict.is_none() {
+        anyhow::bail!(
+            "--posterior sums every parent-set mass, but --restrict {} prunes out-of-pool \
+             sets — use --restrict none",
+            cfg.restrict.name()
+        );
+    }
     let n = workload.n();
     let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
 
@@ -390,7 +459,7 @@ pub fn run_posterior_on(
         checkpoint_path: Some(cfg.checkpoint_path.clone()),
         resume: cfg.resume.clone(),
     };
-    let engine_exec = engine_executor(cfg, n);
+    let engine_exec = engine_executor(cfg, n, None);
     let engine_exec_ref = engine_exec.as_deref();
     let run = run_posterior_chains(
         |_| {
@@ -464,13 +533,20 @@ mod tests {
         assert!(!worth_fanning(8, 4), "asia-sized runs stay serial");
         assert!(worth_fanning(60, 3), "paper-scale runs fan");
         let mut cfg = RunConfig { threads: 8, chains: 1, ..RunConfig::default() };
-        assert!(engine_executor(&cfg, 60).is_some());
-        assert!(engine_executor(&cfg, 8).is_none(), "too little work");
+        assert!(engine_executor(&cfg, 60, None).is_some());
+        assert!(engine_executor(&cfg, 8, None).is_none(), "too little work");
         cfg.chains = 8;
-        assert!(engine_executor(&cfg, 60).is_none(), "budget split across chains");
+        assert!(engine_executor(&cfg, 60, None).is_none(), "budget split across chains");
         cfg.chains = 2;
-        let exec = engine_executor(&cfg, 60).unwrap();
+        let exec = engine_executor(&cfg, 60, None).unwrap();
         assert_eq!(exec.threads(), 4, "8 threads / 2 chains");
+        // Restricted runs use the pooled enumeration size, not C(n, s+1):
+        // a 64-node layout with small pools stays serial...
+        let small = crate::combinatorics::RestrictedLayout::full_pools(12, 2);
+        assert!(engine_executor(&cfg, 60, Some(&small)).is_none(), "few cells, no fan");
+        // ...while a full-pool restriction at scale still fans.
+        let big = crate::combinatorics::RestrictedLayout::full_pools(40, 4);
+        assert!(engine_executor(&cfg, 40, Some(&big)).is_some(), "1e5+ cells fan");
     }
 
     #[test]
@@ -569,6 +645,57 @@ mod tests {
         );
         assert_eq!(hash.store_name, "hash");
         assert!(hash.store_entries < dense.store_entries);
+    }
+
+    /// A screened run completes end-to-end, reports its pools, and
+    /// stores dramatically fewer entries than the full grid.
+    #[test]
+    fn restricted_learning_runs_and_reports() {
+        use crate::restrict::RestrictKind;
+        let cfg = RunConfig {
+            network: "random:14:18".into(),
+            rows: 250,
+            iters: 200,
+            seed: 13,
+            restrict: RestrictKind::Mi { k: 4 },
+            ..RunConfig::default()
+        };
+        let report = run_learning(&cfg, None).unwrap();
+        assert_eq!(report.restrict, "mi:4");
+        // the symmetric OR rule bounds the mean pool by 2k, not k
+        assert!(report.pool_mean.unwrap() <= 8.0 + 1e-9);
+        assert!(report.summary().contains("restrict=mi:4"), "{}", report.summary());
+        let full_entries = 14 * crate::combinatorics::SubsetLayout::new(14, cfg.s).total();
+        assert!(
+            report.store_entries * 2 < full_entries,
+            "{} vs {full_entries}",
+            report.store_entries
+        );
+        assert!(report.result.best_dag().is_some());
+        // unrestricted reports carry no pool stats
+        let plain = RunConfig { restrict: RestrictKind::None, ..cfg };
+        let report = run_learning(&plain, None).unwrap();
+        assert!(report.pool_mean.is_none());
+        assert!(!report.summary().contains("restrict="));
+    }
+
+    #[test]
+    fn restrict_rejects_sum_recompute_and_posterior() {
+        use crate::restrict::RestrictKind;
+        let base = RunConfig {
+            network: "asia".into(),
+            rows: 100,
+            iters: 20,
+            restrict: RestrictKind::Mi { k: 3 },
+            ..RunConfig::default()
+        };
+        let cfg = RunConfig { engine: EngineKind::Sum, ..base.clone() };
+        let msg = format!("{:#}", run_learning(&cfg, None).unwrap_err());
+        assert!(msg.contains("restrict none"), "{msg}");
+        let cfg = RunConfig { engine: EngineKind::Recompute, ..base.clone() };
+        assert!(run_learning(&cfg, None).is_err());
+        let msg = format!("{:#}", run_posterior(&base, None).unwrap_err());
+        assert!(msg.contains("restrict"), "{msg}");
     }
 
     #[test]

@@ -11,5 +11,8 @@ pub use config::{EngineKind, RunConfig, StoreKind};
 pub use experiment::{
     run_learning, run_learning_on, run_posterior, run_posterior_on, LearnReport, PosteriorReport,
 };
-pub use registry::{build_store, build_store_stats, build_store_with, make_engine, StoreHandle};
+pub use registry::{
+    build_store, build_store_restricted, build_store_stats, build_store_with, make_engine,
+    StoreHandle,
+};
 pub use workload::Workload;

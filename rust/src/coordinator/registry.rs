@@ -23,9 +23,10 @@
 use anyhow::{bail, Result};
 
 use super::config::{EngineKind, StoreKind};
-use crate::combinatorics::SubsetLayout;
+use crate::combinatorics::{RestrictedLayout, SubsetLayout};
 use crate::data::Dataset;
 use crate::exec::{DispatchStats, ExecConfig, KernelExecutor};
+use crate::restrict::RestrictKind;
 use crate::score::{BdeParams, HashScoreStore, ScoreStore, ScoreTable};
 use crate::scorer::{
     BitVecScorer, DeltaScorer, OrderScorer, RecomputeScorer, SerialScorer, SumScorer,
@@ -57,6 +58,14 @@ impl ScoreStore for StoreHandle {
 
     fn get(&self, node: usize, idx: usize) -> f32 {
         self.as_dyn().get(node, idx)
+    }
+
+    fn restriction(&self) -> Option<&RestrictedLayout> {
+        self.as_dyn().restriction()
+    }
+
+    fn get_cell(&self, node: usize, cell: usize) -> f32 {
+        self.as_dyn().get_cell(node, cell)
     }
 
     fn fill_row(&self, node: usize, out: &mut [f32]) {
@@ -130,6 +139,62 @@ pub fn build_store_stats(
             let (store, stats) = HashScoreStore::build_stats_with(data, params, s, cfg, ppf);
             (StoreHandle::Hash(store), stats)
         }
+    }
+}
+
+/// [`build_store_stats`] over a candidate-parent restriction: both
+/// backends build only the `C(k_i, ≤s)` cells of each node's pool
+/// (ragged tile dispatch), with priors folded before any pruning.
+pub fn build_store_restricted(
+    kind: StoreKind,
+    data: &Dataset,
+    params: BdeParams,
+    rl: &std::sync::Arc<RestrictedLayout>,
+    cfg: &ExecConfig,
+    ppf: Option<&[f64]>,
+) -> (StoreHandle, DispatchStats) {
+    match kind {
+        StoreKind::Dense => {
+            let (mut table, stats) = ScoreTable::build_restricted_stats_with(data, params, rl, cfg);
+            if let Some(matrix) = ppf {
+                table.add_priors(matrix);
+            }
+            (StoreHandle::Dense(table), stats)
+        }
+        StoreKind::Hash => {
+            let (store, stats) =
+                HashScoreStore::build_restricted_stats_with(data, params, rl, cfg, ppf);
+            (StoreHandle::Hash(store), stats)
+        }
+    }
+}
+
+/// Extra rules for `--restrict` runs, on top of [`validate`]:
+/// * `sum` needs every parent-set mass — restriction prunes every
+///   out-of-pool set, silently changing the score;
+/// * `recompute` bypasses the score store entirely, so a restriction
+///   would be silently ignored;
+/// * `xla` uploads the full dense grid and has no restricted artifact
+///   shape.
+pub fn validate_restricted(engine: EngineKind, restrict: RestrictKind) -> Result<()> {
+    if restrict.is_none() {
+        return Ok(());
+    }
+    match engine {
+        EngineKind::Sum => bail!(
+            "engine 'sum' needs every parent-set mass, but --restrict {} prunes out-of-pool \
+             sets — use --restrict none",
+            restrict.name()
+        ),
+        EngineKind::Recompute => bail!(
+            "engine 'recompute' bypasses the score store, so --restrict {} would be silently \
+             ignored — use --restrict none",
+            restrict.name()
+        ),
+        EngineKind::Xla => bail!(
+            "the accelerated engine uploads the full dense grid — use --restrict none"
+        ),
+        EngineKind::Serial | EngineKind::BitVec => Ok(()),
     }
 }
 
@@ -318,6 +383,82 @@ mod tests {
         // the recompute ablation is never wrapped
         let rec = make_engine(EngineKind::Recompute, &dense, &d, params, 3, true, None).unwrap();
         assert_eq!(rec.name(), "recompute");
+    }
+
+    /// Restricted registry builds: both backends honour the pools, and
+    /// engines constructed over them agree with each other.
+    #[test]
+    fn registry_builds_restricted_backends() {
+        use crate::combinatorics::RestrictedLayout;
+        let d = data(8, 180, 310);
+        let params = BdeParams::default();
+        let cfg = ExecConfig::balanced(2);
+        let exec = cfg.executor();
+        let rl = crate::restrict::build_restriction(
+            &d,
+            3,
+            RestrictKind::Mi { k: 3 },
+            1.0,
+            None,
+            exec.as_ref(),
+        )
+        .unwrap();
+        // symmetric-OR pools: mean stays near k even if single pools exceed it
+        assert!(rl.mean_pool() <= 6.0, "mean pool {}", rl.mean_pool());
+        assert!(rl.max_pool() < 8);
+        let (dense, _) = build_store_restricted(StoreKind::Dense, &d, params, &rl, &cfg, None);
+        let (hash, _) = build_store_restricted(StoreKind::Hash, &d, params, &rl, &cfg, None);
+        assert!(dense.restriction().is_some());
+        assert!(hash.restriction().is_some());
+        // Restricted stores hold far fewer entries than the full grid.
+        assert!(dense.stored_entries() < dense.n() * dense.subsets());
+        assert!(hash.stored_entries() <= dense.stored_entries());
+        // Serial engines over both restricted backends agree.
+        let mut rng = Pcg32::new(311);
+        let mut a = BestGraph::new(8);
+        let mut b = BestGraph::new(8);
+        let mut ed = make_engine(EngineKind::Serial, &dense, &d, params, 3, false, None).unwrap();
+        let mut eh = make_engine(EngineKind::Serial, &hash, &d, params, 3, false, None).unwrap();
+        for _ in 0..5 {
+            let order = Order::random(8, &mut rng);
+            assert_eq!(ed.score_order(&order, &mut a), eh.score_order(&order, &mut b));
+            assert_eq!(a.parents, b.parents);
+            // every argmax parent sits inside its node's pool
+            for (i, ps) in a.parents.iter().enumerate() {
+                assert!(ps.iter().all(|&m| rl.pool(i).contains(&m)), "node {i}: {ps:?}");
+            }
+        }
+        // a sanity full-pool restriction reproduces the unrestricted store
+        let full = std::sync::Arc::new(RestrictedLayout::full_pools(8, 3));
+        let (rdense, _) = build_store_restricted(StoreKind::Dense, &d, params, &full, &cfg, None);
+        let plain = build_store(StoreKind::Dense, &d, params, 3, 2, None);
+        let mut er = make_engine(EngineKind::Serial, &rdense, &d, params, 3, false, None).unwrap();
+        let mut ep = make_engine(EngineKind::Serial, &plain, &d, params, 3, false, None).unwrap();
+        for _ in 0..5 {
+            let order = Order::random(8, &mut rng);
+            assert_eq!(er.score_order(&order, &mut a), ep.score_order(&order, &mut b));
+            assert_eq!(a.parents, b.parents);
+        }
+    }
+
+    #[test]
+    fn validate_restricted_gates_engines() {
+        let mi = RestrictKind::Mi { k: 8 };
+        assert!(validate_restricted(EngineKind::Serial, mi).is_ok());
+        assert!(validate_restricted(EngineKind::BitVec, mi).is_ok());
+        assert!(validate_restricted(EngineKind::Sum, mi).is_err());
+        assert!(validate_restricted(EngineKind::Recompute, mi).is_err());
+        assert!(validate_restricted(EngineKind::Xla, mi).is_err());
+        // `none` gates nothing
+        for engine in [
+            EngineKind::Serial,
+            EngineKind::BitVec,
+            EngineKind::Sum,
+            EngineKind::Recompute,
+            EngineKind::Xla,
+        ] {
+            assert!(validate_restricted(engine, RestrictKind::None).is_ok());
+        }
     }
 
     #[test]

@@ -58,7 +58,9 @@ pub fn auc_from_points(points: &[RocPoint]) -> f64 {
     let mut pts: Vec<(f64, f64)> = points.iter().map(|p| (p.fpr, p.tpr)).collect();
     pts.push((0.0, 0.0));
     pts.push((1.0, 1.0));
-    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // NaN-safe total order (a NaN point sorts to the end instead of
+    // panicking mid-benchmark).
+    pts.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
     let mut auc = 0f64;
     for w in pts.windows(2) {
         let (x0, y0) = w[0];

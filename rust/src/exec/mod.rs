@@ -34,7 +34,9 @@ pub mod executor;
 pub mod tile;
 
 pub use executor::{DispatchStats, KernelExecutor, PoolExecutor, SerialExecutor};
-pub use tile::{plan_tiles, plan_tiles_for, split_by_tiles, Tile};
+pub use tile::{
+    plan_ragged_tiles, plan_ragged_tiles_for, plan_tiles, plan_tiles_for, split_by_tiles, Tile,
+};
 
 use anyhow::{bail, Result};
 

@@ -51,6 +51,38 @@ pub fn plan_tiles_for(nodes: std::ops::Range<usize>, subsets: usize, tile: usize
     tiles
 }
 
+/// [`plan_tiles`] over a **ragged** per-node cell space: row `node` has
+/// `row_lens[node]` cells (the restricted layouts' `C(k_i, ≤s)` rows).
+/// Tiles are emitted in flat row-major order over the concatenated
+/// rows and cover every cell exactly once, so [`split_by_tiles`] on the
+/// concatenated buffer works unchanged. `tile == 0` = one tile per row;
+/// zero-length rows emit no tile.
+pub fn plan_ragged_tiles(row_lens: &[usize], tile: usize) -> Vec<Tile> {
+    plan_ragged_tiles_for(0..row_lens.len(), row_lens, tile)
+}
+
+/// [`plan_ragged_tiles`] over an explicit node range (`row_lens` stays
+/// indexed by absolute node id — the hash build tiles one wave of rows
+/// at a time).
+pub fn plan_ragged_tiles_for(
+    nodes: std::ops::Range<usize>,
+    row_lens: &[usize],
+    tile: usize,
+) -> Vec<Tile> {
+    let mut tiles = Vec::new();
+    for node in nodes {
+        let len = row_lens[node];
+        let width = if tile == 0 { len.max(1) } else { tile };
+        let mut start = 0usize;
+        while start < len {
+            let end = (start + width).min(len);
+            tiles.push(Tile { node, start, end });
+            start = end;
+        }
+    }
+    tiles
+}
+
 /// Pre-split a flat row-major buffer into one mutable slice per tile.
 ///
 /// `tiles` must be the emission order of [`plan_tiles`] /
@@ -120,6 +152,50 @@ mod tests {
         assert_eq!(tiles.len(), 6);
         assert_eq!(tiles[0], Tile { node: 3, start: 0, end: 4 });
         assert_eq!(tiles[5], Tile { node: 4, start: 8, end: 10 });
+    }
+
+    #[test]
+    fn ragged_tiles_cover_every_cell_exactly_once() {
+        let row_lens = [4usize, 0, 11, 1, 7];
+        for tile in [0usize, 1, 3, 100] {
+            let tiles = plan_ragged_tiles(&row_lens, tile);
+            let mut covered = vec![0usize; row_lens.len()];
+            let mut expect_start = vec![0usize; row_lens.len()];
+            for t in &tiles {
+                assert!(t.start < t.end && t.end <= row_lens[t.node], "{t:?}");
+                assert_eq!(t.start, expect_start[t.node], "gap/overlap at {t:?}");
+                expect_start[t.node] = t.end;
+                covered[t.node] += t.cells();
+            }
+            assert_eq!(covered, row_lens.to_vec(), "tile={tile}");
+            // Row-major emission: node ids never decrease.
+            assert!(tiles.windows(2).all(|w| w[0].node <= w[1].node));
+        }
+    }
+
+    #[test]
+    fn ragged_split_partitions_concatenated_rows() {
+        let row_lens = [3usize, 5, 2];
+        let tiles = plan_ragged_tiles(&row_lens, 2);
+        let mut buf: Vec<f32> = (0..10).map(|c| c as f32).collect();
+        let slices = split_by_tiles(&mut buf, &tiles);
+        let mut flat = 0usize;
+        for (t, slice) in tiles.iter().zip(&slices) {
+            let got = slice.lock().unwrap();
+            assert_eq!(got.len(), t.cells());
+            assert!(got.iter().enumerate().all(|(i, &v)| v == (flat + i) as f32), "{t:?}");
+            flat += t.cells();
+        }
+        assert_eq!(flat, 10);
+    }
+
+    #[test]
+    fn ragged_subrange_planning() {
+        let row_lens = [3usize, 5, 2, 4];
+        let tiles = plan_ragged_tiles_for(1..3, &row_lens, 0);
+        assert_eq!(tiles.len(), 2);
+        assert_eq!(tiles[0], Tile { node: 1, start: 0, end: 5 });
+        assert_eq!(tiles[1], Tile { node: 2, start: 0, end: 2 });
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //!   mirror of the paper's GPU task grid)
 //! * scoring: [`score`] (BDe local scores, preprocessing, and the
 //!   pluggable [`score::ScoreStore`] substrate — dense table or pruned
-//!   hash table), [`priors`]
+//!   hash table), [`priors`], and the candidate-parent restriction
+//!   subsystem [`restrict`] (pairwise G² screening into per-node
+//!   [`combinatorics::RestrictedLayout`] pools — `--restrict mi:<k>`,
+//!   the 60+-node scaling route)
 //! * the learner: [`mcmc`] (Metropolis–Hastings over orders) driving a
 //!   pluggable [`scorer`] engine — serial ("GPP"), baselines, or the
 //!   AOT-compiled XLA executable loaded by [`runtime`] (behind the
@@ -45,6 +48,7 @@ pub mod mcmc;
 pub mod networks;
 pub mod posterior;
 pub mod priors;
+pub mod restrict;
 pub mod runtime;
 pub mod score;
 pub mod scorer;

@@ -16,7 +16,9 @@ use std::path::Path;
 
 use bnlearn::bn::counting;
 use bnlearn::combinatorics::ParentSetTable;
-use bnlearn::coordinator::{build_store_stats, run_learning, run_posterior, RunConfig, Workload};
+use bnlearn::coordinator::{
+    build_store_restricted, build_store_stats, run_learning, run_posterior, RunConfig, Workload,
+};
 use bnlearn::priors::ppf;
 use bnlearn::runtime::{default_artifacts_dir, ArtifactManifest};
 use bnlearn::score::{BdeParams, ScoreStore};
@@ -64,6 +66,10 @@ fn print_usage() {
            --delta on|off  (incremental interval rescoring, default on; off = full\n\
                             rescore per step, bit-for-bit identical results)\n\
            --s N --gamma F --topk N --seed N --noise P --threads N --artifacts DIR\n\
+           --restrict none|mi:<k>  (candidate-parent screening: per-node top-k G²\n\
+                            pools shrink stores from C(n,s) to C(k,s); none = default,\n\
+                            bit-identical to the unscreened pipeline)\n\
+           --restrict-alpha P  (screening test significance level, default 0.05)\n\
            --schedule static|balanced  (tile assignment: round-robin vs the paper's\n\
                             balanced dynamic queue, default balanced; bit-identical)\n\
            --tile N  (score cells per execution tile, 0 = one tile per node row;\n\
@@ -121,7 +127,7 @@ fn cmd_posterior(cfg: &RunConfig) -> Result<()> {
             }
         }
     }
-    edges.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    edges.sort_by(|a, b| b.0.total_cmp(&a.0));
     println!("\nedge posteriors (P >= 0.01, top {}):", (2 * n).min(edges.len()));
     for (p, from, to) in edges.iter().take(2 * n) {
         println!("  P={p:.3}  {from} -> {to}");
@@ -174,8 +180,32 @@ fn cmd_preprocess(args: &[String]) -> Result<()> {
     let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
     let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
     let timer = Timer::start();
-    let (store, stats) =
-        build_store_stats(cfg.store, &workload.data, params, cfg.s, &cfg.exec_config(), None);
+    let exec_cfg = cfg.exec_config();
+    let restriction = {
+        let exec = exec_cfg.executor();
+        bnlearn::restrict::build_restriction(
+            &workload.data,
+            cfg.s,
+            cfg.restrict,
+            cfg.restrict_alpha,
+            None,
+            exec.as_ref(),
+        )
+    };
+    let (store, stats) = match &restriction {
+        Some(rl) => {
+            println!(
+                "screen {}: mean pool {:.1}, max pool {}, {} of {} dense cells",
+                cfg.restrict.name(),
+                rl.mean_pool(),
+                rl.max_pool(),
+                rl.total_cells(),
+                rl.full_cells()
+            );
+            build_store_restricted(cfg.store, &workload.data, params, rl, &exec_cfg, None)
+        }
+        None => build_store_stats(cfg.store, &workload.data, params, cfg.s, &exec_cfg, None),
+    };
     let secs = timer.elapsed_secs();
     let dense_equiv = store.n() * store.subsets() * std::mem::size_of::<f32>();
     println!(

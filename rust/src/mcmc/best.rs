@@ -19,28 +19,44 @@ impl BestGraphTracker {
     }
 
     /// Offer a scored graph; returns `true` if it entered the top-k.
+    ///
+    /// Inserts in place at the score's slot (binary search over the
+    /// descending list) — the old implementation re-sorted the whole
+    /// top-k on every hit, and its `partial_cmp(..).unwrap()` panicked
+    /// on NaN scores instead of ordering them.
     pub fn offer(&mut self, score: f64, graph: &Dag) -> bool {
+        if score.is_nan() {
+            return false; // a NaN score can never be a "best" graph
+        }
         if let Some(pos) = self.entries.iter().position(|(_, g)| g == graph) {
             // Same structure seen before — keep the better score.
             if score > self.entries[pos].0 {
-                self.entries[pos].0 = score;
-                self.entries.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                let (_, dag) = self.entries.remove(pos);
+                let at = self.insertion_point(score);
+                self.entries.insert(at, (score, dag));
                 return true;
             }
             return false;
         }
         if self.entries.len() < self.capacity {
-            self.entries.push((score, graph.clone()));
-            self.entries.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            let at = self.insertion_point(score);
+            self.entries.insert(at, (score, graph.clone()));
             return true;
         }
         if score > self.entries.last().unwrap().0 {
             self.entries.pop();
-            self.entries.push((score, graph.clone()));
-            self.entries.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            let at = self.insertion_point(score);
+            self.entries.insert(at, (score, graph.clone()));
             return true;
         }
         false
+    }
+
+    /// First index whose score falls strictly below `score` in the
+    /// descending entry list (NaN-safe total order; equal scores keep
+    /// earlier entries first).
+    fn insertion_point(&self, score: f64) -> usize {
+        self.entries.partition_point(|(s, _)| s.total_cmp(&score).is_ge())
     }
 
     /// Best (score, graph), if any was offered.
@@ -128,5 +144,38 @@ mod tests {
     fn empty_tracker() {
         let t = BestGraphTracker::new(1);
         assert!(t.best().is_none());
+    }
+
+    /// A NaN score must not panic the tracker (the old
+    /// `partial_cmp(..).unwrap()` sort did) and must never enter the
+    /// top-k.
+    #[test]
+    fn nan_scores_do_not_panic_or_win() {
+        let mut t = BestGraphTracker::new(2);
+        assert!(!t.offer(f64::NAN, &g(&[(0, 1)])));
+        t.offer(-5.0, &g(&[(1, 2)]));
+        t.offer(-7.0, &g(&[(2, 3)]));
+        assert!(!t.offer(f64::NAN, &g(&[(0, 2)])));
+        assert!(!t.offer(f64::NAN, &g(&[(1, 2)]))); // known structure, NaN rescore
+        assert_eq!(t.best().unwrap().0, -5.0);
+        assert_eq!(t.entries().len(), 2);
+    }
+
+    /// The in-place insert keeps the list identical to what a full
+    /// re-sort produced, across a randomized offer stream.
+    #[test]
+    fn insertion_matches_sorted_order() {
+        let mut t = BestGraphTracker::new(4);
+        let mut state = 0x9E37u64;
+        for i in 0..200u64 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let score = -((state >> 40) as f64) / 1e3;
+            let from = (i % 3) as usize;
+            let to = 3usize.min(from + 1 + (state % 2) as usize);
+            t.offer(score, &g(&[(from, to)]));
+            let scores: Vec<f64> = t.entries().iter().map(|(s, _)| *s).collect();
+            assert!(scores.windows(2).all(|w| w[0] >= w[1]), "unsorted: {scores:?}");
+        }
+        assert!(t.entries().len() <= 4);
     }
 }

@@ -11,6 +11,7 @@ pub mod alarm;
 pub mod asia;
 pub mod child;
 pub mod sachs;
+pub mod tiled;
 
 use crate::bn::{Dag, Network};
 use crate::util::Pcg32;
@@ -41,13 +42,14 @@ pub fn by_name(name: &str) -> Option<NamedStructure> {
         "sachs" | "stn" => Some(sachs::sachs()),
         "asia" => Some(asia::asia()),
         "child" => Some(child::child()),
+        "tiled64" => Some(tiled::tiled64()),
         _ => None,
     }
 }
 
 /// All repository network names.
 pub fn names() -> &'static [&'static str] {
-    &["alarm", "sachs", "asia", "child"]
+    &["alarm", "sachs", "asia", "child", "tiled64"]
 }
 
 #[cfg(test)]

@@ -94,7 +94,7 @@ fn dfs(
 /// empty-graph and full anchors come from `auc_from_points`).
 pub fn default_thresholds(probs: &[f64]) -> Vec<f64> {
     let mut ts: Vec<f64> = probs.iter().copied().filter(|p| *p > 0.0).collect();
-    ts.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    ts.sort_by(|a, b| b.total_cmp(a)); // NaN-safe descending order
     ts.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
     ts
 }

@@ -61,6 +61,13 @@ impl InterfaceMatrix {
         self.r.iter().map(|&r| ppf(r)).collect()
     }
 
+    /// Parents the interface marks as *encouraged* for `to` (R > 0.5) —
+    /// the set candidate-parent screening must never drop
+    /// (`crate::restrict`'s prior-override rule). Sorted ascending.
+    pub fn confident_parents(&self, to: usize) -> Vec<usize> {
+        (0..self.n).filter(|&m| m != to && self.r[to * self.n + m] > 0.5).collect()
+    }
+
     /// The paper's ROC protocol (Section VI, Figs. 9–10): given the truth
     /// and the graph learned *without* priors, assign interface value
     /// `hit` to every mistakenly-removed true edge and `miss` to every

@@ -1,0 +1,133 @@
+//! Candidate-parent restriction: constraint-based pre-screening that
+//! caps each node's parent candidates before any score preprocessing.
+//!
+//! Every store backend enumerates `C(n, ≤s)` parent sets per node, so
+//! memory and preprocessing grow combinatorially with n — the wall
+//! between the paper's 37-node runs and its ">60 nodes" claim. The
+//! standard route past it (Scutari's bnlearn, arXiv:1406.7648; the
+//! restricted search spaces of minimal-I-MAP MCMC, arXiv:1803.05554) is
+//! a cheap pairwise **association screen**: a G² independence test per
+//! node pair, keeping only each node's top-k associated partners as its
+//! candidate pool. The pools feed a
+//! [`crate::combinatorics::RestrictedLayout`], shrinking every store,
+//! scorer, and tile plan from `C(n, ≤s)` to `C(k, ≤s)` per node.
+//!
+//! Two hard rules (DESIGN.md §13):
+//! * **priors override the screen** — any parent the
+//!   [`crate::priors::InterfaceMatrix`] marks encouraged (R > 0.5)
+//!   joins the pool regardless of its test statistic; a user's edge
+//!   belief must never be silently screened out;
+//! * **`RestrictKind::None` is the identity** — no screen runs, stores
+//!   build unrestricted, and every trajectory is bit-for-bit what it
+//!   was before this subsystem existed.
+
+pub mod screen;
+
+pub use screen::{candidate_pools, pairwise_screen, PairScreen};
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::combinatorics::RestrictedLayout;
+use crate::data::Dataset;
+use crate::exec::KernelExecutor;
+use crate::priors::InterfaceMatrix;
+
+/// Which candidate-parent restriction to apply (`--restrict none|mi:<k>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RestrictKind {
+    /// No restriction — the unrestricted (bit-identical) default.
+    None,
+    /// Mutual-information/G² screening with top-`k` candidate pools.
+    Mi {
+        /// Pool size bound (priors can push individual pools past it).
+        k: usize,
+    },
+}
+
+impl RestrictKind {
+    /// The default pool size of `--restrict mi` style presets and the
+    /// benchmark recall tests.
+    pub const DEFAULT_K: usize = 8;
+
+    /// Parse from CLI text (`none` or `mi:<k>`).
+    pub fn parse(text: &str) -> Result<Self> {
+        if text == "none" {
+            return Ok(RestrictKind::None);
+        }
+        if let Some(rest) = text.strip_prefix("mi:") {
+            let k: usize = rest
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad pool size in --restrict {text:?}"))?;
+            if k == 0 {
+                bail!("--restrict mi:<k> needs k >= 1");
+            }
+            return Ok(RestrictKind::Mi { k });
+        }
+        bail!("unknown restriction {text:?} (none|mi:<k>)")
+    }
+
+    /// Kind name for logs and reports.
+    pub fn name(&self) -> String {
+        match self {
+            RestrictKind::None => "none".into(),
+            RestrictKind::Mi { k } => format!("mi:{k}"),
+        }
+    }
+
+    /// True for the unrestricted identity.
+    pub fn is_none(&self) -> bool {
+        matches!(self, RestrictKind::None)
+    }
+}
+
+/// Run the configured screening pass and build the restricted layout —
+/// `None` for [`RestrictKind::None`] (callers then take the classic
+/// unrestricted build paths, untouched). The pairwise tests dispatch
+/// across `exec`, so screening parallelizes under `--schedule` like
+/// every other preprocessing stage.
+pub fn build_restriction(
+    data: &Dataset,
+    s: usize,
+    kind: RestrictKind,
+    alpha: f64,
+    priors: Option<&InterfaceMatrix>,
+    exec: &dyn KernelExecutor,
+) -> Option<Arc<RestrictedLayout>> {
+    match kind {
+        RestrictKind::None => None,
+        RestrictKind::Mi { k } => {
+            let screen = pairwise_screen(data, exec);
+            let pools = candidate_pools(&screen, k, alpha, priors);
+            Some(Arc::new(RestrictedLayout::new(data.cols(), s, pools)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name() {
+        assert_eq!(RestrictKind::parse("none").unwrap(), RestrictKind::None);
+        assert_eq!(RestrictKind::parse("mi:8").unwrap(), RestrictKind::Mi { k: 8 });
+        assert_eq!(RestrictKind::parse("mi:1").unwrap(), RestrictKind::Mi { k: 1 });
+        assert!(RestrictKind::parse("mi:0").is_err());
+        assert!(RestrictKind::parse("mi:lots").is_err());
+        assert!(RestrictKind::parse("topk:3").is_err());
+        assert_eq!(RestrictKind::None.name(), "none");
+        assert_eq!(RestrictKind::Mi { k: 8 }.name(), "mi:8");
+        assert!(RestrictKind::None.is_none());
+        assert!(!RestrictKind::Mi { k: 2 }.is_none());
+    }
+
+    #[test]
+    fn none_builds_no_restriction() {
+        let data = crate::data::Dataset::from_columns(vec![vec![0, 1], vec![1, 0]], vec![2, 2]);
+        let exec = crate::exec::ExecConfig::balanced(1).executor();
+        assert!(build_restriction(&data, 2, RestrictKind::None, 0.05, None, exec.as_ref())
+            .is_none());
+    }
+}

@@ -1,0 +1,326 @@
+//! The pairwise-association screening pass: a G² (log-likelihood-ratio
+//! mutual-information) independence test per unordered node pair,
+//! dispatched through the kernel execution layer.
+//!
+//! `G² = 2 · Σ_cells O · ln(O·N / (R·C))` over the pair's contingency
+//! table equals `2N · MI(i, j)` in nats, and is asymptotically χ² with
+//! `(r_i − 1)(r_j − 1)` degrees of freedom under independence — the
+//! same statistic bnlearn's constraint-based screens use. Each pair's
+//! test is a pure function of the two data columns, so the fan-out over
+//! workers is schedule-invariant: identical statistics for any
+//! `--threads`/`--schedule`/`--tile`.
+
+use crate::data::Dataset;
+use crate::exec::KernelExecutor;
+use crate::priors::InterfaceMatrix;
+use crate::score::lgamma::lgamma;
+
+/// Symmetric pairwise test results over all `n(n−1)/2` node pairs.
+pub struct PairScreen {
+    n: usize,
+    /// Row-major `[n × n]` G² statistics (diagonal 0).
+    pub g2: Vec<f64>,
+    /// Row-major `[n × n]` independence-test p-values (diagonal 1).
+    pub p: Vec<f64>,
+}
+
+impl PairScreen {
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+/// Run the G² screen over every unordered pair, fanned across `exec`.
+pub fn pairwise_screen(data: &Dataset, exec: &dyn KernelExecutor) -> PairScreen {
+    let n = data.cols();
+    let pairs: Vec<(usize, usize)> =
+        (0..n).flat_map(|i| ((i + 1)..n).map(move |j| (i, j))).collect();
+    let slots: Vec<std::sync::Mutex<(f64, f64)>> =
+        pairs.iter().map(|_| std::sync::Mutex::new((0.0, 1.0))).collect();
+    {
+        let pairs_ref = &pairs;
+        let slots_ref = &slots;
+        let kernel = move |_worker: usize, t: usize| {
+            let (i, j) = pairs_ref[t];
+            *slots_ref[t].lock().expect("pair slot poisoned") = g2_pair(data, i, j);
+        };
+        exec.dispatch(pairs.len(), &kernel);
+    }
+    let mut g2 = vec![0f64; n * n];
+    let mut p = vec![1f64; n * n];
+    for (t, slot) in slots.into_iter().enumerate() {
+        let (i, j) = pairs[t];
+        let (g, pv) = slot.into_inner().expect("pair slot poisoned");
+        g2[i * n + j] = g;
+        g2[j * n + i] = g;
+        p[i * n + j] = pv;
+        p[j * n + i] = pv;
+    }
+    PairScreen { n, g2, p }
+}
+
+/// G² statistic and p-value of one pair's independence test.
+fn g2_pair(data: &Dataset, i: usize, j: usize) -> (f64, f64) {
+    let (ri, rj) = (data.arity(i), data.arity(j));
+    let (ci, cj) = (data.column(i), data.column(j));
+    let rows = ci.len();
+    if rows == 0 {
+        return (0.0, 1.0);
+    }
+    let mut counts = vec![0u32; ri * rj];
+    for (&a, &b) in ci.iter().zip(cj) {
+        counts[a as usize * rj + b as usize] += 1;
+    }
+    let mut row_tot = vec![0u64; ri];
+    let mut col_tot = vec![0u64; rj];
+    for a in 0..ri {
+        for b in 0..rj {
+            let o = counts[a * rj + b] as u64;
+            row_tot[a] += o;
+            col_tot[b] += o;
+        }
+    }
+    let total = rows as f64;
+    let mut g2 = 0f64;
+    for a in 0..ri {
+        for b in 0..rj {
+            let o = counts[a * rj + b] as f64;
+            if o > 0.0 {
+                let e = row_tot[a] as f64 * col_tot[b] as f64 / total;
+                g2 += o * (o / e).ln();
+            }
+        }
+    }
+    g2 *= 2.0;
+    let df = ((ri - 1) * (rj - 1)).max(1) as f64;
+    (g2, chi2_sf(g2, df))
+}
+
+/// Build the per-node candidate pools from a screen.
+///
+/// Per node: the top-`k` partners by G² (descending; ties break on the
+/// smaller id for determinism) among those whose independence test
+/// rejects at level `alpha` (`p ≤ alpha`) — then the **symmetric OR
+/// rule**: a pair enters *both* pools when either endpoint ranks it
+/// top-k (dependence is symmetric, and the one-sided rule drops true
+/// parents whose children have stronger partners — the standard
+/// MMPC/ARACNE-style union). Finally every parent the prior interface
+/// marks encouraged (R > 0.5) joins its child's pool — **priors are
+/// never screened out**. Pools come back sorted by global id, ready for
+/// [`crate::combinatorics::RestrictedLayout::new`]; mean pool size
+/// stays ≈ k (the OR rule adds back roughly as many entries as it
+/// mirrors), but individual pools may exceed it.
+pub fn candidate_pools(
+    screen: &PairScreen,
+    k: usize,
+    alpha: f64,
+    priors: Option<&InterfaceMatrix>,
+) -> Vec<Vec<usize>> {
+    let n = screen.n();
+    let top: Vec<Vec<usize>> = (0..n)
+        .map(|i| {
+            let mut cands: Vec<usize> =
+                (0..n).filter(|&j| j != i && screen.p[i * n + j] <= alpha).collect();
+            cands.sort_by(|&a, &b| {
+                screen.g2[i * n + b].total_cmp(&screen.g2[i * n + a]).then(a.cmp(&b))
+            });
+            cands.truncate(k);
+            cands
+        })
+        .collect();
+    let mut pools: Vec<Vec<usize>> = top.clone();
+    for (i, ranked) in top.iter().enumerate() {
+        for &j in ranked {
+            if !pools[j].contains(&i) {
+                pools[j].push(i);
+            }
+        }
+    }
+    for (i, pool) in pools.iter_mut().enumerate() {
+        if let Some(m) = priors {
+            for from in m.confident_parents(i) {
+                if !pool.contains(&from) {
+                    pool.push(from);
+                }
+            }
+        }
+        pool.sort_unstable();
+    }
+    pools
+}
+
+/// Survival function of the χ² distribution: `P(X ≥ x)` at `df` degrees
+/// of freedom — the regularized upper incomplete gamma `Q(df/2, x/2)`,
+/// via the standard series / continued-fraction split (Numerical
+/// Recipes §6.2; the offline crate set has no `statrs`).
+pub fn chi2_sf(x: f64, df: f64) -> f64 {
+    if x <= 0.0 {
+        return 1.0;
+    }
+    let (a, half) = (0.5 * df, 0.5 * x);
+    if half < a + 1.0 {
+        1.0 - gamma_p_series(a, half)
+    } else {
+        gamma_q_cf(a, half)
+    }
+}
+
+/// Lower regularized gamma `P(a, x)` by series expansion (`x < a + 1`).
+fn gamma_p_series(a: f64, x: f64) -> f64 {
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..300 {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * 1e-14 {
+            break;
+        }
+    }
+    (sum * (-x + a * x.ln() - lgamma(a)).exp()).clamp(0.0, 1.0)
+}
+
+/// Upper regularized gamma `Q(a, x)` by Lentz's continued fraction
+/// (`x ≥ a + 1`).
+fn gamma_q_cf(a: f64, x: f64) -> f64 {
+    const TINY: f64 = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / TINY;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..300 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < TINY {
+            d = TINY;
+        }
+        c = b + an / c;
+        if c.abs() < TINY {
+            c = TINY;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-14 {
+            break;
+        }
+    }
+    ((-x + a * x.ln() - lgamma(a)).exp() * h).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::sampling::forward_sample;
+    use crate::bn::{Dag, Network};
+    use crate::exec::{ExecConfig, Schedule};
+    use crate::util::Pcg32;
+
+    fn exec1() -> Box<dyn KernelExecutor> {
+        ExecConfig::balanced(1).executor()
+    }
+
+    #[test]
+    fn chi2_sf_known_values() {
+        // df=1: P(X ≥ 3.841) ≈ 0.05; df=4: P(X ≥ 9.488) ≈ 0.05.
+        assert!((chi2_sf(3.841, 1.0) - 0.05).abs() < 1e-3);
+        assert!((chi2_sf(9.488, 4.0) - 0.05).abs() < 1e-3);
+        // Edges: sf(0) = 1; huge statistic → ~0; monotone decreasing.
+        assert_eq!(chi2_sf(0.0, 3.0), 1.0);
+        assert!(chi2_sf(500.0, 3.0) < 1e-12);
+        let mut prev = 1.0;
+        for k in 1..40 {
+            let v = chi2_sf(k as f64 * 0.5, 2.0);
+            assert!(v <= prev + 1e-12, "not monotone at {k}");
+            prev = v;
+        }
+    }
+
+    /// A chained network: adjacent pairs are strongly dependent,
+    /// distant pairs much less so — the screen must rank true
+    /// neighbours above strangers and be schedule-invariant.
+    #[test]
+    fn screen_ranks_dependent_pairs_first() {
+        let n = 6usize;
+        let edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        let mut rng = Pcg32::new(61);
+        let net = Network::with_random_cpts(Dag::from_edges(n, &edges), vec![3; n], &mut rng);
+        let data = forward_sample(&net, 1500, &mut rng);
+        let screen = pairwise_screen(&data, exec1().as_ref());
+        // direct edges beat the chain's endpoints pair
+        for i in 0..n - 1 {
+            assert!(
+                screen.g2[i * n + i + 1] > screen.g2[n - 1],
+                "edge ({i},{}) weaker than (0,{})",
+                i + 1,
+                n - 1
+            );
+            assert!(screen.p[i * n + i + 1] < 0.01, "edge ({i},{}) not significant", i + 1);
+        }
+        // symmetric, empty diagonal
+        for i in 0..n {
+            assert_eq!(screen.g2[i * n + i], 0.0);
+            for j in 0..n {
+                assert_eq!(screen.g2[i * n + j], screen.g2[j * n + i]);
+            }
+        }
+        // schedule-invariance: identical statistics under a pool executor
+        let pool = ExecConfig::new(4, Schedule::Static, 0).executor();
+        let screen2 = pairwise_screen(&data, pool.as_ref());
+        assert_eq!(screen.g2, screen2.g2);
+        assert_eq!(screen.p, screen2.p);
+    }
+
+    #[test]
+    fn pools_are_topk_sorted_and_self_free() {
+        let n = 7usize;
+        let mut rng = Pcg32::new(62);
+        let dag = crate::bn::random::random_dag(n, 3, n + 3, &mut rng);
+        let net = Network::with_random_cpts(dag, vec![3; n], &mut rng);
+        let data = forward_sample(&net, 800, &mut rng);
+        let screen = pairwise_screen(&data, exec1().as_ref());
+        for k in [1usize, 3, n - 1] {
+            let pools = candidate_pools(&screen, k, 1.0, None);
+            assert_eq!(pools.len(), n);
+            let mean: f64 =
+                pools.iter().map(Vec::len).sum::<usize>() as f64 / pools.len() as f64;
+            assert!(mean <= 2.0 * k as f64, "mean pool {mean} too large for k={k}");
+            for (i, pool) in pools.iter().enumerate() {
+                assert!(pool.windows(2).all(|w| w[0] < w[1]));
+                assert!(!pool.contains(&i));
+            }
+            // the symmetric OR rule: membership is mutual
+            for (i, pool) in pools.iter().enumerate() {
+                for &j in pool {
+                    assert!(pools[j].contains(&i), "{i} lists {j} but not vice versa");
+                }
+            }
+        }
+        // alpha = 1.0 with k = n−1 keeps everyone
+        let pools = candidate_pools(&screen, n - 1, 1.0, None);
+        assert!(pools.iter().all(|p| p.len() == n - 1));
+    }
+
+    /// Prior-encouraged parents survive even a screen that rejects
+    /// everything (alpha = 0 admits no tested pair).
+    #[test]
+    fn priors_are_never_screened_out() {
+        let data = {
+            let mut rng = Pcg32::new(63);
+            let net = Network::with_random_cpts(Dag::empty(5), vec![2; 5], &mut rng);
+            forward_sample(&net, 300, &mut rng)
+        };
+        let screen = pairwise_screen(&data, exec1().as_ref());
+        let mut m = InterfaceMatrix::unbiased(5);
+        m.set(2, 4, 0.9); // user believes 4 → 2
+        m.set(2, 0, 0.51); // weakly encouraged 0 → 2
+        m.set(3, 1, 0.3); // discouraged — must NOT force 1 into 3's pool
+        let pools = candidate_pools(&screen, 2, 0.0, Some(&m));
+        assert!(pools[2].contains(&4));
+        assert!(pools[2].contains(&0));
+        assert!(!pools[3].contains(&1));
+    }
+}

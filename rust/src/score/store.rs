@@ -22,12 +22,17 @@
 //! Sum-over-graphs scoring needs every mass and must use the dense
 //! backend — the coordinator registry enforces that.
 
+use std::sync::Arc;
+
 use super::bde::BdeParams;
-use super::table::{add_priors_to_row, fill_tiles, ScoreTable, NEG_SENTINEL};
+use super::table::{
+    add_priors_to_restricted_row, add_priors_to_row, fill_tiles, fill_tiles_restricted,
+    ScoreTable, NEG_SENTINEL,
+};
 use crate::combinatorics::combinadic::{next_combination, rank_combination};
-use crate::combinatorics::SubsetLayout;
+use crate::combinatorics::{RestrictedLayout, SubsetLayout};
 use crate::data::Dataset;
-use crate::exec::{plan_tiles_for, split_by_tiles, DispatchStats, ExecConfig};
+use crate::exec::{plan_ragged_tiles_for, plan_tiles_for, split_by_tiles, DispatchStats, ExecConfig};
 
 /// Backend-agnostic access to the preprocessed local-score table.
 ///
@@ -38,8 +43,24 @@ pub trait ScoreStore: Sync {
     fn layout(&self) -> &SubsetLayout;
 
     /// Score of `node` with the subset at global layout index `idx`;
-    /// [`NEG_SENTINEL`] for poisoned or pruned entries.
+    /// [`NEG_SENTINEL`] for poisoned or pruned entries (restricted
+    /// stores: also for every subset outside the node's candidate pool).
     fn get(&self, node: usize, idx: usize) -> f32;
+
+    /// The candidate-parent restriction this store was built over, if
+    /// any. Pool-aware engines use it to enumerate only in-pool
+    /// candidates and read through [`Self::get_cell`].
+    fn restriction(&self) -> Option<&RestrictedLayout> {
+        None
+    }
+
+    /// Direct read in the store's **cell** space. For unrestricted
+    /// stores the cell space is the global layout (this default); a
+    /// restricted store indexes node `node`'s ragged row directly with
+    /// `cell < restriction().row_len(node)`.
+    fn get_cell(&self, node: usize, cell: usize) -> f32 {
+        self.get(node, cell)
+    }
 
     /// Materialize `node`'s dense row into `out` (`out.len() == subsets()`),
     /// writing [`NEG_SENTINEL`] for entries the backend does not hold —
@@ -80,8 +101,28 @@ impl ScoreStore for ScoreTable {
         ScoreTable::get(self, node, idx)
     }
 
+    fn restriction(&self) -> Option<&RestrictedLayout> {
+        ScoreTable::restriction(self)
+    }
+
+    fn get_cell(&self, node: usize, cell: usize) -> f32 {
+        ScoreTable::get_cell(self, node, cell)
+    }
+
     fn fill_row(&self, node: usize, out: &mut [f32]) {
-        out.copy_from_slice(self.row(node));
+        match ScoreTable::restriction(self) {
+            None => out.copy_from_slice(self.row(node)),
+            Some(rl) => {
+                // Dense-materialize the ragged row into global index
+                // space, sentinel for everything outside the pool.
+                assert_eq!(out.len(), self.subsets());
+                out.fill(NEG_SENTINEL);
+                let row = self.row(node);
+                for (cell, &v) in row.iter().enumerate() {
+                    out[rl.global_from_cell(node, cell)] = v;
+                }
+            }
+        }
     }
 
     fn bytes(&self) -> usize {
@@ -89,7 +130,7 @@ impl ScoreStore for ScoreTable {
     }
 
     fn stored_entries(&self) -> usize {
-        self.n() * self.subsets()
+        self.cells()
     }
 
     fn name(&self) -> &'static str {
@@ -172,9 +213,16 @@ impl HashRow {
 /// Hash-table/sparse score store: per node, only the scores not dominated
 /// by a proper-subset score are kept; everything else reads back as
 /// [`NEG_SENTINEL`].
+///
+/// Keys live in the store's *cell* space: the global layout index when
+/// unrestricted, the node's restricted-row cell index when built over a
+/// [`RestrictedLayout`] (so the pool-aware fast path probes directly and
+/// only `get(global)` pays a translation).
 pub struct HashScoreStore {
     layout: SubsetLayout,
     rows: Vec<HashRow>,
+    /// The candidate-parent restriction this store was built over.
+    restrict: Option<Arc<RestrictedLayout>>,
 }
 
 impl HashScoreStore {
@@ -279,7 +327,105 @@ impl HashScoreStore {
             cfg.schedule.name(),
             stats.summary()
         );
-        (HashScoreStore { layout, rows }, stats)
+        (HashScoreStore { layout, rows, restrict: None }, stats)
+    }
+
+    /// Restricted build: fill each node's ragged pool row (tiled, same
+    /// wave structure as [`Self::build_stats_with`]), fold priors, then
+    /// dominance-prune **within the pool subset space** — the candidate
+    /// pools are closed under taking subsets, so the level DP of
+    /// [`prune_dominated`] runs verbatim over each node's local layout.
+    /// Retained keys are restricted-row cell indices.
+    pub fn build_restricted_with(
+        data: &Dataset,
+        params: BdeParams,
+        rl: &Arc<RestrictedLayout>,
+        cfg: &ExecConfig,
+        ppf: Option<&[f64]>,
+    ) -> Self {
+        Self::build_restricted_stats_with(data, params, rl, cfg, ppf).0
+    }
+
+    /// [`Self::build_restricted_with`] returning the aggregated dispatch
+    /// profile.
+    pub fn build_restricted_stats_with(
+        data: &Dataset,
+        params: BdeParams,
+        rl: &Arc<RestrictedLayout>,
+        cfg: &ExecConfig,
+        ppf: Option<&[f64]>,
+    ) -> (Self, DispatchStats) {
+        let n = data.cols();
+        assert_eq!(rl.n(), n, "restriction and dataset disagree on n");
+        if let Some(m) = ppf {
+            assert_eq!(m.len(), n * n, "PPF matrix must be n×n");
+        }
+        let row_lens = rl.row_lens();
+        assert!(row_lens.iter().all(|&l| l <= u32::MAX as usize), "row exceeds u32 key space");
+
+        let exec = cfg.executor();
+        let wave = exec.threads().saturating_mul(2).clamp(1, n.max(1));
+        let mut rows: Vec<HashRow> = Vec::with_capacity(n);
+        let mut stats = DispatchStats::default();
+
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + wave).min(n);
+            let wn = hi - lo;
+            let wave_cells: usize = row_lens[lo..hi].iter().sum();
+            let mut buf = vec![0f32; wave_cells];
+            // Phase A: cell-parallel ragged-tiled fill of this wave.
+            {
+                let tiles = plan_ragged_tiles_for(lo..hi, &row_lens, cfg.tile);
+                let slices = split_by_tiles(&mut buf, &tiles);
+                stats.merge(&fill_tiles_restricted(
+                    data,
+                    params,
+                    rl,
+                    exec.as_ref(),
+                    &tiles,
+                    &slices,
+                ));
+            }
+            // Phase B: node-parallel prior fold + in-pool dominance
+            // prune + hash row construction. `tile == 0` plans exactly
+            // one tile per row, so the tested tile splitter doubles as
+            // the ragged per-row split.
+            {
+                let row_tiles = plan_ragged_tiles_for(lo..hi, &row_lens, 0);
+                debug_assert_eq!(row_tiles.len(), wn);
+                let row_slices = split_by_tiles(&mut buf, &row_tiles);
+                let built: Vec<std::sync::Mutex<Option<HashRow>>> =
+                    (0..wn).map(|_| std::sync::Mutex::new(None)).collect();
+                let rl_ref = &**rl;
+                let rows_ref = &row_slices;
+                let built_ref = &built;
+                let kernel = move |_worker: usize, i: usize| {
+                    let node = lo + i;
+                    let mut guard = rows_ref[i].lock().expect("row slice poisoned");
+                    let row: &mut [f32] = &mut guard;
+                    if let Some(m) = ppf {
+                        add_priors_to_restricted_row(rl_ref, node, m, row);
+                    }
+                    let mut keep: Vec<(u32, f32)> = Vec::new();
+                    prune_dominated(rl_ref.local(node), row, &mut keep);
+                    *built_ref[i].lock().expect("hash slot poisoned") = Some(HashRow::build(&keep));
+                };
+                stats.merge(&exec.dispatch_timed(wn, &kernel));
+                for slot in built {
+                    rows.push(slot.into_inner().expect("hash slot poisoned").expect("row built"));
+                }
+            }
+            lo = hi;
+        }
+        crate::debug!(
+            "restricted hash build [{n} rows, {} cells] via {}/{}: {}",
+            rl.total_cells(),
+            exec.name(),
+            cfg.schedule.name(),
+            stats.summary()
+        );
+        (HashScoreStore { layout: rl.full().clone(), rows, restrict: Some(rl.clone()) }, stats)
     }
 
     /// Fraction of the dense table's entries this store retains.
@@ -299,16 +445,41 @@ impl ScoreStore for HashScoreStore {
 
     fn get(&self, node: usize, idx: usize) -> f32 {
         debug_assert!(idx < self.layout.total());
-        self.rows[node].get(idx as u32).unwrap_or(NEG_SENTINEL)
+        match &self.restrict {
+            None => self.rows[node].get(idx as u32).unwrap_or(NEG_SENTINEL),
+            Some(rl) => match rl.cell_from_global(node, idx) {
+                Some(cell) => self.rows[node].get(cell as u32).unwrap_or(NEG_SENTINEL),
+                None => NEG_SENTINEL,
+            },
+        }
+    }
+
+    fn restriction(&self) -> Option<&RestrictedLayout> {
+        self.restrict.as_deref()
+    }
+
+    fn get_cell(&self, node: usize, cell: usize) -> f32 {
+        self.rows[node].get(cell as u32).unwrap_or(NEG_SENTINEL)
     }
 
     fn fill_row(&self, node: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.layout.total());
         out.fill(NEG_SENTINEL);
         let row = &self.rows[node];
-        for (slot, &k) in row.keys.iter().enumerate() {
-            if k != EMPTY_KEY {
-                out[k as usize] = row.vals[slot];
+        match &self.restrict {
+            None => {
+                for (slot, &k) in row.keys.iter().enumerate() {
+                    if k != EMPTY_KEY {
+                        out[k as usize] = row.vals[slot];
+                    }
+                }
+            }
+            Some(rl) => {
+                for (slot, &k) in row.keys.iter().enumerate() {
+                    if k != EMPTY_KEY {
+                        out[rl.global_from_cell(node, k as usize)] = row.vals[slot];
+                    }
+                }
             }
         }
     }
@@ -543,6 +714,73 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Restricted hash rows: values agree with the restricted dense
+    /// table wherever retained, pruning is dominance-only within the
+    /// pool space, and a full-pool restriction reads back exactly like
+    /// the unrestricted hash store through the global `get`.
+    #[test]
+    fn restricted_hash_matches_restricted_dense_and_unrestricted() {
+        let data = small_data(8, 140, 208);
+        let params = BdeParams::default();
+        let pools: Vec<Vec<usize>> = (0..8usize)
+            .map(|i| {
+                let mut p = vec![(i + 1) % 8, (i + 2) % 8, (i + 5) % 8];
+                p.sort_unstable();
+                p
+            })
+            .collect();
+        let rl = Arc::new(RestrictedLayout::new(8, 3, pools));
+        let cfg = ExecConfig::balanced(2);
+        let dense = ScoreTable::build_restricted_with(&data, params, &rl, &cfg);
+        let hash = HashScoreStore::build_restricted_with(&data, params, &rl, &cfg, None);
+        assert!(hash.restriction().is_some());
+        assert!(hash.stored_entries() <= dense.cells());
+        let layout = ScoreStore::layout(&hash).clone();
+        for i in 0..8usize {
+            layout.for_each(|idx, subset| {
+                let d = ScoreStore::get(&dense, i, idx);
+                let h = ScoreStore::get(&hash, i, idx);
+                if h > NEG_SENTINEL {
+                    assert_eq!(h, d, "i={i} subset={subset:?}");
+                }
+            });
+            // The empty set survives pruning in every row.
+            let empty_cell = rl.local(i).block_start(0) as usize;
+            assert!(ScoreStore::get_cell(&hash, i, empty_cell) > NEG_SENTINEL);
+        }
+        // Tiled restricted hash builds are bit-identical to the serial one.
+        let tiled = HashScoreStore::build_restricted_with(
+            &data,
+            params,
+            &rl,
+            &ExecConfig::new(4, crate::exec::Schedule::Static, 7),
+            None,
+        );
+        let serial_cfg = ExecConfig::balanced(1);
+        let reference =
+            HashScoreStore::build_restricted_with(&data, params, &rl, &serial_cfg, None);
+        for (a, b) in reference.rows.iter().zip(&tiled.rows) {
+            assert_eq!(a.keys, b.keys);
+            assert_eq!(a.vals, b.vals);
+        }
+        // Full pools reproduce the unrestricted hash store's reads.
+        let rl_full = Arc::new(RestrictedLayout::full_pools(8, 3));
+        let full = HashScoreStore::build_restricted_with(
+            &data,
+            params,
+            &rl_full,
+            &ExecConfig::balanced(1),
+            None,
+        );
+        let plain = HashScoreStore::build(&data, params, 3, 1, None);
+        assert_eq!(full.stored_entries(), plain.stored_entries());
+        layout.for_each(|idx, _| {
+            for i in 0..8usize {
+                assert_eq!(ScoreStore::get(&full, i, idx), ScoreStore::get(&plain, i, idx));
+            }
+        });
     }
 
     #[test]

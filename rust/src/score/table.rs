@@ -13,21 +13,31 @@
 //! sets per node, feasible only for small n (the paper hit the same wall —
 //! its Table V stops at 20 nodes, and its 37-node runs never use it).
 
+use std::sync::Arc;
+
 use super::bde::{BdeParams, LocalScorer};
-use crate::combinatorics::SubsetLayout;
+use crate::combinatorics::{RestrictedLayout, SubsetLayout};
 use crate::data::Dataset;
-use crate::exec::{plan_tiles, split_by_tiles, DispatchStats, ExecConfig, KernelExecutor, Tile};
+use crate::exec::{
+    plan_ragged_tiles, plan_tiles, split_by_tiles, DispatchStats, ExecConfig, KernelExecutor, Tile,
+};
 
 /// Sentinel for invalid (node ∈ parents) entries. f32-safe, far below any
 /// real log score, and still far from f32 −inf so sums stay finite.
 pub const NEG_SENTINEL: f32 = -1.0e30;
 
-/// Dense `[n × S]` local-score table over a bounded subset layout.
+/// Dense local-score table over a bounded subset layout: `[n × S]` when
+/// unrestricted, ragged `Σ_i C(k_i, ≤s)` rows when built over a
+/// [`RestrictedLayout`] (candidate-parent pools).
 pub struct ScoreTable {
     layout: SubsetLayout,
     n: usize,
-    /// Row-major: `data[i * S + j] = ls(i, subset_j)`.
+    /// Unrestricted: row-major `data[i * S + j] = ls(i, subset_j)`.
+    /// Restricted: concatenated ragged rows in restricted-cell order.
     data: Vec<f32>,
+    /// The candidate-parent restriction this table was built over, if
+    /// any. `None` keeps every accessor on the classic dense path.
+    restrict: Option<Arc<RestrictedLayout>>,
 }
 
 impl ScoreTable {
@@ -75,7 +85,52 @@ impl ScoreTable {
             cfg.schedule.name(),
             stats.summary()
         );
-        (ScoreTable { layout, n, data: table }, stats)
+        (ScoreTable { layout, n, data: table, restrict: None }, stats)
+    }
+
+    /// Restricted build: compute only the cells of each node's
+    /// candidate-pool subset space (`C(k_i, ≤s)` per node instead of
+    /// `C(n, ≤s)`), tiled over the ragged per-node rows. Cells are pure
+    /// functions of `(node, global subset)`, so a full-pool restriction
+    /// (`k_i = n−1`) reproduces the unrestricted table's values bit for
+    /// bit on every non-self subset.
+    pub fn build_restricted_with(
+        data: &Dataset,
+        params: BdeParams,
+        rl: &Arc<RestrictedLayout>,
+        cfg: &ExecConfig,
+    ) -> Self {
+        Self::build_restricted_stats_with(data, params, rl, cfg).0
+    }
+
+    /// [`Self::build_restricted_with`] returning the ragged-tile
+    /// dispatch profile.
+    pub fn build_restricted_stats_with(
+        data: &Dataset,
+        params: BdeParams,
+        rl: &Arc<RestrictedLayout>,
+        cfg: &ExecConfig,
+    ) -> (Self, DispatchStats) {
+        let n = data.cols();
+        assert_eq!(rl.n(), n, "restriction and dataset disagree on n");
+        let cells = rl.total_cells();
+        let mut table = vec![0f32; cells];
+        let tiles = plan_ragged_tiles(&rl.row_lens(), cfg.tile);
+        let exec = cfg.executor();
+        let stats = {
+            let slices = split_by_tiles(&mut table, &tiles);
+            fill_tiles_restricted(data, params, rl, exec.as_ref(), &tiles, &slices)
+        };
+        crate::debug!(
+            "restricted dense build [{n} rows, {cells} cells] via {}/{}: {}",
+            exec.name(),
+            cfg.schedule.name(),
+            stats.summary()
+        );
+        (
+            ScoreTable { layout: rl.full().clone(), n, data: table, restrict: Some(rl.clone()) },
+            stats,
+        )
     }
 
     /// Node count.
@@ -93,16 +148,56 @@ impl ScoreTable {
         self.layout.total()
     }
 
-    /// Score of `node` with the subset at layout index `idx`.
+    /// Score of `node` with the subset at **global** layout index `idx`.
+    /// Restricted tables translate the index into the node's pool space;
+    /// out-of-pool subsets read back as [`NEG_SENTINEL`] (they were
+    /// screened out of the hypothesis space).
     #[inline]
     pub fn get(&self, node: usize, idx: usize) -> f32 {
-        self.data[node * self.layout.total() + idx]
+        match &self.restrict {
+            None => self.data[node * self.layout.total() + idx],
+            Some(rl) => match rl.cell_from_global(node, idx) {
+                Some(cell) => self.data[rl.row_start(node) + cell],
+                None => NEG_SENTINEL,
+            },
+        }
     }
 
-    /// Score row of one node.
+    /// Direct read in the store's cell space: for unrestricted tables
+    /// the cell space *is* the global layout; restricted tables index
+    /// their ragged rows directly (the pool-aware engines' fast path).
+    #[inline]
+    pub fn get_cell(&self, node: usize, cell: usize) -> f32 {
+        match &self.restrict {
+            None => self.data[node * self.layout.total() + cell],
+            Some(rl) => self.data[rl.row_start(node) + cell],
+        }
+    }
+
+    /// Score row of one node (restricted tables: the ragged pool row in
+    /// restricted-cell order).
     pub fn row(&self, node: usize) -> &[f32] {
-        let s = self.layout.total();
-        &self.data[node * s..(node + 1) * s]
+        match &self.restrict {
+            None => {
+                let s = self.layout.total();
+                &self.data[node * s..(node + 1) * s]
+            }
+            Some(rl) => {
+                let start = rl.row_start(node);
+                &self.data[start..start + rl.row_len(node)]
+            }
+        }
+    }
+
+    /// The candidate-parent restriction this table was built over.
+    pub fn restriction(&self) -> Option<&RestrictedLayout> {
+        self.restrict.as_deref()
+    }
+
+    /// Cells the table stores explicitly (`n · S` unrestricted,
+    /// `Σ_i C(k_i, ≤s)` restricted).
+    pub fn cells(&self) -> usize {
+        self.data.len()
     }
 
     /// Whole `[n × S]` buffer (row-major) — uploaded to the device once.
@@ -121,6 +216,14 @@ impl ScoreTable {
     pub fn add_priors(&mut self, ppf: &[f64]) {
         let n = self.n;
         assert_eq!(ppf.len(), n * n, "PPF matrix must be n×n");
+        if let Some(rl) = self.restrict.clone() {
+            for i in 0..n {
+                let start = rl.row_start(i);
+                let row = &mut self.data[start..start + rl.row_len(i)];
+                add_priors_to_restricted_row(&rl, i, ppf, row);
+            }
+            return;
+        }
         let total = self.layout.total();
         let layout = self.layout.clone();
         for i in 0..n {
@@ -151,6 +254,55 @@ pub(crate) fn add_priors_to_row(layout: &SubsetLayout, node: usize, ppf: &[f64],
         }
         row[j] += add as f32;
     });
+}
+
+/// The Eq. (9) prior fold over one node's **restricted** row:
+/// `row[cell] += Σ_{m ∈ subset(cell)} PPF(node, m)` with subsets decoded
+/// through the node's candidate pool. Shared by the restricted dense and
+/// hash builds (priors fold before pruning there too).
+pub(crate) fn add_priors_to_restricted_row(
+    rl: &RestrictedLayout,
+    node: usize,
+    ppf: &[f64],
+    row: &mut [f32],
+) {
+    let n = rl.n();
+    rl.for_each_row(node, |cell, subset| {
+        if row[cell] <= NEG_SENTINEL {
+            return; // keep poisoned entries poisoned
+        }
+        let mut add = 0f64;
+        for &m in subset {
+            add += ppf[node * n + m];
+        }
+        row[cell] += add as f32;
+    });
+}
+
+/// [`fill_tiles`] over a restricted layout's ragged rows: each tile
+/// fills cells `[start, end)` of one node's *pool* subset space. Same
+/// per-worker builder lanes, same purity contract — a cell's value
+/// depends only on `(node, global subset)`, never on tile boundaries.
+pub(crate) fn fill_tiles_restricted(
+    data: &Dataset,
+    params: BdeParams,
+    rl: &RestrictedLayout,
+    exec: &dyn KernelExecutor,
+    tiles: &[Tile],
+    slices: &[std::sync::Mutex<&mut [f32]>],
+) -> DispatchStats {
+    debug_assert_eq!(tiles.len(), slices.len());
+    let lanes: Vec<std::sync::Mutex<Option<FastRowBuilder>>> =
+        (0..exec.threads().max(1)).map(|_| std::sync::Mutex::new(None)).collect();
+    let lanes_ref = &lanes;
+    let kernel = move |worker: usize, i: usize| {
+        let t = tiles[i];
+        let mut lane = lanes_ref[worker].lock().expect("builder lane poisoned");
+        let builder = lane.get_or_insert_with(|| FastRowBuilder::new(data, params, rl.s()));
+        let mut guard = slices[i].lock().expect("tile slice poisoned");
+        builder.fill_pool_range(rl, t.node, t.start, t.end, &mut guard);
+    };
+    exec.dispatch_timed(tiles.len(), &kernel)
 }
 
 /// Dispatch pre-split tile slices across `exec`, filling each tile's
@@ -262,7 +414,7 @@ impl<'a> FastRowBuilder<'a> {
         debug_assert!(hi <= layout.total());
         let n = layout.n();
         let s = layout.s();
-        let bt = layout.binomials().clone();
+        let bt = layout.binomials();
         let mut idx = 0usize;
         for d in 0..=s {
             let k = s - d;
@@ -284,7 +436,7 @@ impl<'a> FastRowBuilder<'a> {
                 idx += block; // whole size block precedes the window
                 continue;
             }
-            self.dfs_range(&bt, n, node, k, 1, 0, lo, hi, out, &mut idx);
+            self.dfs_range(bt, n, node, k, 1, 0, lo, hi, out, &mut idx);
         }
         debug_assert!(idx >= hi);
     }
@@ -358,6 +510,111 @@ impl<'a> FastRowBuilder<'a> {
                 *idx += 1;
             } else {
                 self.dfs_range(bt, n, node, k, level + 1, cand + 1, lo, hi, out, idx);
+            }
+        }
+    }
+
+    /// Restricted-row variant of [`Self::fill_range`]: fill the
+    /// local-cell window `[lo, hi)` of `node`'s **pool** subset space
+    /// into `out`. The DFS runs over pool *positions* (universe size
+    /// `k_i`), mapping each chosen position to its global node id for
+    /// column/arity access — so with a full pool the code-extension
+    /// sequence (and every resulting f32) matches the unrestricted fill
+    /// exactly. Pools never contain the node itself, so no poison
+    /// branch is needed.
+    fn fill_pool_range(
+        &mut self,
+        rl: &RestrictedLayout,
+        node: usize,
+        lo: usize,
+        hi: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), hi - lo);
+        let local = rl.local(node);
+        debug_assert!(hi <= local.total());
+        let pool = rl.pool(node);
+        let k_universe = pool.len();
+        let s = local.s();
+        let bt = local.binomials();
+        let mut idx = 0usize;
+        for d in 0..=s {
+            let k = s - d;
+            if idx >= hi {
+                break;
+            }
+            if k == 0 {
+                if idx >= lo && idx < hi {
+                    out[idx - lo] = self.score_leaf(node, 0, 1) as f32;
+                }
+                idx += 1;
+                continue;
+            }
+            let block = bt.c(k_universe, k) as usize;
+            if idx + block <= lo {
+                idx += block; // whole size block precedes the window
+                continue;
+            }
+            self.dfs_pool_range(bt, pool, node, k, 1, 0, lo, hi, out, &mut idx);
+        }
+        debug_assert!(idx >= hi);
+    }
+
+    /// Pool-position DFS body of [`Self::fill_pool_range`] — the
+    /// [`Self::dfs_range`] recursion with the universe swapped from
+    /// `{0..n-1}` to the candidate pool (positions `0..k_i`, global ids
+    /// via `pool[pos]`).
+    #[allow(clippy::too_many_arguments)]
+    fn dfs_pool_range(
+        &mut self,
+        bt: &crate::combinatorics::BinomialTable,
+        pool: &[usize],
+        node: usize,
+        k: usize,
+        level: usize,
+        start: usize,
+        lo: usize,
+        hi: usize,
+        out: &mut [f32],
+        idx: &mut usize,
+    ) {
+        let k_universe = pool.len();
+        for cand in start..=(k_universe - (k - level + 1)) {
+            if *idx >= hi {
+                return; // rest of this subtree is past the window
+            }
+            let completions = bt.c(k_universe - cand - 1, k - level) as usize;
+            if *idx + completions <= lo {
+                *idx += completions;
+                continue;
+            }
+            let gid = pool[cand];
+            debug_assert_ne!(gid, node, "pools never contain the node");
+            let arity = self.data.arity(gid) as u32;
+            let stride = self.strides[level];
+            {
+                let (prev, cur) = {
+                    let (a, b) = self.codes.split_at_mut(level);
+                    (&a[level - 1], &mut b[0])
+                };
+                let col = self.data.column(gid);
+                if stride == 1 {
+                    for ((c, &p), &v) in cur.iter_mut().zip(prev.iter()).zip(col) {
+                        *c = p + v as u32;
+                    }
+                } else {
+                    for ((c, &p), &v) in cur.iter_mut().zip(prev.iter()).zip(col) {
+                        *c = p + v as u32 * stride;
+                    }
+                }
+            }
+            self.strides[level + 1] = stride * arity;
+
+            if level == k {
+                out[*idx - lo] = self.score_leaf(node, k, level) as f32;
+                *idx += 1;
+            } else {
+                self.dfs_pool_range(bt, pool, node, k, level + 1, cand + 1, lo, hi, out, idx);
             }
         }
     }
@@ -633,6 +890,105 @@ mod tests {
             plan_tiles(4, reference.subsets(), 2).len() >= 8,
             "sub-row tiles must outnumber the 4 rows"
         );
+    }
+
+    /// A full-pool restriction (`k_i = n−1`) reproduces the
+    /// unrestricted table bit for bit on every non-self subset, and
+    /// reads the sentinel for self-containing (out-of-pool) subsets.
+    #[test]
+    fn restricted_full_pools_match_unrestricted_bitwise() {
+        use crate::combinatorics::RestrictedLayout;
+        let data = small_data(7, 130, 49);
+        let params = BdeParams::default();
+        let dense = ScoreTable::build(&data, params, 3, 2);
+        let rl = std::sync::Arc::new(RestrictedLayout::full_pools(7, 3));
+        let restricted =
+            ScoreTable::build_restricted_with(&data, params, &rl, &ExecConfig::balanced(2));
+        assert!(restricted.cells() < dense.cells());
+        let layout = dense.layout().clone();
+        for i in 0..7usize {
+            layout.for_each(|idx, subset| {
+                let want = dense.get(i, idx);
+                let got = restricted.get(i, idx);
+                if subset.contains(&i) {
+                    assert_eq!(want, NEG_SENTINEL);
+                    assert_eq!(got, NEG_SENTINEL);
+                } else {
+                    assert_eq!(got, want, "i={i} subset={subset:?}");
+                }
+            });
+        }
+    }
+
+    /// Restricted builds are bit-identical for any threads × schedule ×
+    /// tile, and subsets outside the pools read the sentinel.
+    #[test]
+    fn restricted_tiled_builds_are_bit_identical() {
+        use crate::combinatorics::RestrictedLayout;
+        use crate::exec::Schedule;
+        let data = small_data(8, 110, 50);
+        let params = BdeParams::default();
+        // Narrow pools: node i may only draw parents from {(i+1)%8, (i+3)%8}.
+        let pools: Vec<Vec<usize>> = (0..8usize)
+            .map(|i| {
+                let mut p = vec![(i + 1) % 8, (i + 3) % 8];
+                p.sort_unstable();
+                p
+            })
+            .collect();
+        let rl = std::sync::Arc::new(RestrictedLayout::new(8, 3, pools));
+        let reference =
+            ScoreTable::build_restricted_with(&data, params, &rl, &ExecConfig::balanced(1));
+        for threads in [2usize, 8] {
+            for schedule in [Schedule::Static, Schedule::Balanced] {
+                for tile in [0usize, 1, 3, 100] {
+                    let cfg = ExecConfig::new(threads, schedule, tile);
+                    let tiled = ScoreTable::build_restricted_with(&data, params, &rl, &cfg);
+                    assert_eq!(
+                        reference.raw(),
+                        tiled.raw(),
+                        "threads={threads} schedule={schedule:?} tile={tile}"
+                    );
+                }
+            }
+        }
+        // Out-of-pool subsets (node 0's pool is {1, 3}) read the sentinel.
+        assert_eq!(reference.score_of(0, &[2]), NEG_SENTINEL);
+        assert!(reference.score_of(0, &[1, 3]) > NEG_SENTINEL);
+        // In-pool cells agree with a direct scorer.
+        let mut scorer = LocalScorer::new(&data, params);
+        assert!(
+            (reference.score_of(0, &[1, 3]) - scorer.score(0, &[1, 3]) as f32).abs() < 1e-5
+        );
+    }
+
+    /// Restricted prior folding shifts exactly the in-pool subsets that
+    /// contain the favored parent.
+    #[test]
+    fn restricted_priors_shift_pool_subsets() {
+        use crate::combinatorics::RestrictedLayout;
+        let data = small_data(5, 80, 51);
+        let params = BdeParams::default();
+        let rl = std::sync::Arc::new(RestrictedLayout::full_pools(5, 2));
+        let mut table =
+            ScoreTable::build_restricted_with(&data, params, &rl, &ExecConfig::balanced(1));
+        let before = table.raw().to_vec();
+        let n = 5usize;
+        let mut ppf = vec![0f64; n * n];
+        ppf[2 * n] = 3.5; // edge 0 → 2 favored
+        table.add_priors(&ppf);
+        let mut buf = [0usize; crate::combinatorics::restricted::MAX_S];
+        for i in 0..n {
+            for cell in 0..rl.row_len(i) {
+                let subset = rl.subset_of(i, cell, &mut buf).to_vec();
+                let delta = table.get_cell(i, cell) - before[rl.row_start(i) + cell];
+                if i == 2 && subset.contains(&0) {
+                    assert!((delta - 3.5).abs() < 1e-5, "i={i} {subset:?}");
+                } else {
+                    assert_eq!(delta, 0.0, "i={i} {subset:?}");
+                }
+            }
+        }
     }
 
     #[test]

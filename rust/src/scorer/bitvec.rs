@@ -18,6 +18,12 @@ use crate::score::table::FullScoreTable;
 use crate::score::{ScoreStore, ScoreTable};
 
 /// Bit-vector enumerate-and-filter order scorer over a bounded store.
+///
+/// Over a restricted store the engine stays correct without a special
+/// path: every candidate mask reads through the global `get`, and
+/// out-of-pool subsets come back as the poison sentinel — never the
+/// argmax (the empty set is always in-pool). It keeps paying the full
+/// 2^n enumeration either way; that *is* the baseline's defining waste.
 pub struct BitVecScorer<'a, S: ScoreStore + ?Sized = ScoreTable> {
     store: &'a S,
     n: usize,

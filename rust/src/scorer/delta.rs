@@ -38,7 +38,10 @@ use crate::mcmc::Order;
 /// of `score_node` contributions (serial, bitvec, sum — not the
 /// recompute ablation, whose default `score_node` is itself a full
 /// rescore, and not the device engine). The coordinator registry wraps
-/// eligible engines when `--delta on` (the default).
+/// eligible engines when `--delta on` (the default). Restriction
+/// composes transparently: the wrapper only decides *which* positions
+/// to rescore, so a pool-aware inner engine keeps its `C(k, ≤s)` fast
+/// path and the O(interval) proposal cost multiplies with it.
 pub struct DeltaScorer<S: OrderScorer> {
     inner: S,
     /// Best graph of the cached (committed) order.

@@ -65,6 +65,14 @@ impl RankPrefix {
 /// windowed rescores fan their positions across the executor's workers
 /// (each position is a pure store lookup scan, so results stay
 /// bit-identical); without one, every path is the classic serial loop.
+///
+/// Over a **restricted** store (candidate-parent pools), the engine
+/// switches to the pool-aware fast path: each node enumerates only the
+/// subsets of `predecessors ∩ pool` — `C(|pool ∩ preds|, ≤s)` candidates
+/// instead of `C(p, ≤s)` — with rank arithmetic in the node's local
+/// layout and direct cell reads. With full pools this enumerates exactly
+/// the unrestricted candidates in the same order, so outputs (and thus
+/// chain trajectories) are bit-for-bit identical.
 pub struct SerialScorer<'a, S: ScoreStore + ?Sized = ScoreTable> {
     store: &'a S,
     /// Batched-rescore executor (None = always serial).
@@ -72,6 +80,8 @@ pub struct SerialScorer<'a, S: ScoreStore + ?Sized = ScoreTable> {
     ranks: RankPrefix,
     /// Per-size block offsets in the layout.
     offsets: Vec<u64>,
+    /// Pool-aware scoring state (Some iff the store is restricted).
+    restricted: Option<RestrictedState>,
     /// Scratch: sorted predecessors.
     preds: Vec<usize>,
     /// Scratch: current combination (indices into `preds`).
@@ -84,6 +94,18 @@ pub struct SerialScorer<'a, S: ScoreStore + ?Sized = ScoreTable> {
     best_set: Vec<usize>,
 }
 
+/// Per-node rank machinery over the candidate pools of a restricted
+/// store.
+struct RestrictedState {
+    /// `ranks[i]` — combinadic rank prefix over node i's pool universe.
+    ranks: Vec<RankPrefix>,
+    /// `offsets[i][k]` — first cell of the size-k block in node i's
+    /// local layout.
+    offsets: Vec<Vec<u64>>,
+    /// Scratch: pool positions of the in-pool predecessors.
+    rpreds: Vec<usize>,
+}
+
 impl<'a, S: ScoreStore + ?Sized> SerialScorer<'a, S> {
     /// New engine over a preprocessed score store.
     pub fn new(store: &'a S) -> Self {
@@ -91,11 +113,22 @@ impl<'a, S: ScoreStore + ?Sized> SerialScorer<'a, S> {
         let (n, s) = (layout.n(), layout.s());
         // offsets[k] = first index of the size-k block.
         let offsets: Vec<u64> = (0..=s).map(|k| layout.block_start(k)).collect();
+        let restricted = store.restriction().map(|rl| {
+            let mut ranks = Vec::with_capacity(n);
+            let mut local_offsets = Vec::with_capacity(n);
+            for i in 0..n {
+                let local = rl.local(i);
+                ranks.push(RankPrefix::new(local.n(), local.s()));
+                local_offsets.push((0..=local.s()).map(|k| local.block_start(k)).collect());
+            }
+            RestrictedState { ranks, offsets: local_offsets, rpreds: Vec::with_capacity(n) }
+        });
         SerialScorer {
             store,
             exec: None,
             ranks: RankPrefix::new(n, s),
             offsets,
+            restricted,
             preds: Vec::with_capacity(n),
             comb: Vec::with_capacity(s),
             cand: Vec::with_capacity(s),
@@ -132,6 +165,9 @@ impl<'a, S: ScoreStore + ?Sized> SerialScorer<'a, S> {
     /// score — the per-node body both [`OrderScorer::score_order`] and
     /// [`OrderScorer::score_node`] drive.
     fn score_position(&mut self, order: &Order, p: usize, out: &mut BestGraph) -> f64 {
+        if self.restricted.is_some() {
+            return self.score_position_restricted(order, p, out);
+        }
         let store = self.store;
         let layout = store.layout();
         let s = layout.s();
@@ -165,6 +201,70 @@ impl<'a, S: ScoreStore + ?Sized> SerialScorer<'a, S> {
                     self.best_set.extend_from_slice(&self.cand);
                 }
                 if !next_combination(p, &mut self.comb) {
+                    break;
+                }
+            }
+        }
+
+        out.node_scores[node] = best as f64;
+        out.parents[node].clear();
+        out.parents[node].extend_from_slice(&self.best_set);
+        best as f64
+    }
+
+    /// Pool-aware body of [`Self::score_position`] for restricted
+    /// stores: candidates are combinations of the node's in-pool
+    /// predecessors (as pool positions), ranked in the node's local
+    /// layout and read through the store's direct cell path.
+    fn score_position_restricted(&mut self, order: &Order, p: usize, out: &mut BestGraph) -> f64 {
+        let store = self.store;
+        let rl = store.restriction().expect("restricted state without a restricted store");
+        let node = order.seq()[p];
+        self.preds.clear();
+        self.preds.extend_from_slice(&order.seq()[..p]);
+        self.preds.sort_unstable();
+
+        let st = self.restricted.as_mut().expect("restricted state");
+        let pool = rl.pool(node);
+        // Sorted pool positions of the predecessors that survived
+        // screening (two-pointer walk: both lists are sorted).
+        st.rpreds.clear();
+        let mut pi = 0usize;
+        for &v in &self.preds {
+            while pi < pool.len() && pool[pi] < v {
+                pi += 1;
+            }
+            if pi < pool.len() && pool[pi] == v {
+                st.rpreds.push(pi);
+                pi += 1;
+            }
+        }
+
+        let local = rl.local(node);
+        let empty_cell = local.block_start(0) as usize;
+        let mut best = store.get_cell(node, empty_cell);
+        self.best_set.clear();
+
+        let rp = st.rpreds.len();
+        let kmax = local.s().min(rp);
+        for k in 1..=kmax {
+            self.comb.clear();
+            self.comb.extend(0..k);
+            loop {
+                self.cand.clear();
+                for &ci in &self.comb {
+                    self.cand.push(st.rpreds[ci]);
+                }
+                let cell = st.offsets[node][k] + st.ranks[node].rank(&self.cand);
+                let ls = store.get_cell(node, cell as usize);
+                if ls > best {
+                    best = ls;
+                    self.best_set.clear();
+                    for &pos in &self.cand {
+                        self.best_set.push(pool[pos]);
+                    }
+                }
+                if !next_combination(rp, &mut self.comb) {
                     break;
                 }
             }

@@ -10,8 +10,10 @@
 //!
 //! Generic over [`ScoreStore`] like the max engines — but note the sum
 //! needs *every* parent-set mass, so running it over the pruned hash
-//! backend changes the score. The coordinator registry rejects that
-//! combination; constructing it directly is allowed for ablations.
+//! backend changes the score, and a candidate-parent restriction
+//! (`--restrict`) excludes every out-of-pool mass the same way. The
+//! coordinator registry rejects both combinations; constructing them
+//! directly is allowed for ablations.
 
 use super::{BestGraph, OrderScorer};
 use crate::combinatorics::combinadic::next_combination;

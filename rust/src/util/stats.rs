@@ -18,13 +18,16 @@ pub fn stddev(xs: &[f64]) -> f64 {
     var.sqrt()
 }
 
-/// Median (interpolated for even length; 0.0 for empty).
+/// Median over the finite values (interpolated for even length; 0.0 for
+/// empty). NaNs are dropped rather than counted — the old
+/// `partial_cmp(..).unwrap()` sort panicked on them, and keeping them
+/// would silently shift the midpoint toward the top of the range.
 pub fn median(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -89,6 +92,15 @@ mod tests {
         let xs = [0.1f64, 0.2, 0.3];
         let naive = xs.iter().map(|x| x.exp()).sum::<f64>().ln();
         assert!((logsumexp(&xs) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_tolerates_nan() {
+        // NaNs are dropped — no panic (the old partial_cmp unwrap did),
+        // and the midpoint is the median of the finite values.
+        assert_eq!(median(&[3.0, f64::NAN, 1.0, 2.0, f64::NAN]), 2.0);
+        assert_eq!(median(&[2.0, f64::NAN, 1.0]), 1.5);
+        assert_eq!(median(&[f64::NAN]), 0.0);
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! Candidate-parent restriction: restricted-vs-unrestricted agreement,
+//! screening recall, and the 60+-node end-to-end scale run.
+//!
+//! The two contracts under test (DESIGN.md §13):
+//! * **full pools are the identity** — with `k_i = n−1` every store,
+//!   scorer, and chain trajectory is bit-for-bit what the unrestricted
+//!   pipeline produces;
+//! * **screening keeps the truth reachable** — on ALARM, the default-k
+//!   G² screen retains ≥95% of true edges' parents in-pool (averaged
+//!   over independently sampled datasets).
+
+use std::sync::Arc;
+
+use bnlearn::combinatorics::RestrictedLayout;
+use bnlearn::coordinator::{run_learning, RunConfig, Workload};
+use bnlearn::exec::ExecConfig;
+use bnlearn::mcmc::run_chain_traced;
+use bnlearn::restrict::{build_restriction, RestrictKind};
+use bnlearn::score::{BdeParams, HashScoreStore, ScoreStore, ScoreTable};
+use bnlearn::scorer::{DeltaScorer, SerialScorer};
+
+/// With full candidate pools (`k = n−1`) the restricted pipeline must
+/// reproduce the unrestricted chains bit for bit: identical per-step
+/// score traces, identical best graphs — across both store backends and
+/// with delta scoring on and off.
+#[test]
+fn full_pool_chains_are_bit_identical_to_unrestricted() {
+    let (n, s, iters) = (10usize, 3usize, 400u64);
+    let w = Workload::build("random:10:13", 220, 0.0, 17).unwrap();
+    let params = BdeParams::default();
+    let cfg = ExecConfig::balanced(2);
+    let rl = Arc::new(RestrictedLayout::full_pools(n, s));
+
+    let dense = ScoreTable::build(&w.data, params, s, 2);
+    let dense_r = ScoreTable::build_restricted_with(&w.data, params, &rl, &cfg);
+    let hash = HashScoreStore::build(&w.data, params, s, 2, None);
+    let hash_r = HashScoreStore::build_restricted_with(&w.data, params, &rl, &cfg, None);
+
+    let stores: Vec<(&dyn ScoreStore, &dyn ScoreStore, &str)> =
+        vec![(&dense, &dense_r, "dense"), (&hash, &hash_r, "hash")];
+    for (plain, restricted, label) in stores {
+        for delta in [false, true] {
+            let run = |store: &dyn ScoreStore| {
+                if delta {
+                    let mut scorer = DeltaScorer::new(SerialScorer::new(store));
+                    run_chain_traced(&mut scorer, n, iters, 3, 71, true)
+                } else {
+                    let mut scorer = SerialScorer::new(store);
+                    run_chain_traced(&mut scorer, n, iters, 3, 71, true)
+                }
+            };
+            let a = run(plain);
+            let b = run(restricted);
+            // bit-for-bit: every per-iteration score, every best graph
+            assert_eq!(a.traces, b.traces, "trace diverged ({label}, delta={delta})");
+            assert_eq!(
+                a.stats.accepted, b.stats.accepted,
+                "acceptance diverged ({label}, delta={delta})"
+            );
+            let scores_a: Vec<f64> = a.best.iter().map(|(sc, _)| *sc).collect();
+            let scores_b: Vec<f64> = b.best.iter().map(|(sc, _)| *sc).collect();
+            assert_eq!(scores_a, scores_b, "top-k scores diverged ({label}, delta={delta})");
+            for ((_, da), (_, db)) in a.best.iter().zip(&b.best) {
+                assert_eq!(da.edges(), db.edges(), "graphs diverged ({label}, delta={delta})");
+            }
+        }
+    }
+}
+
+/// Screening recall on ALARM at the default pool size: averaged over
+/// independently sampled datasets, at least 95% of true edges keep
+/// their parent in the child's candidate pool. (A handful of ALARM
+/// parents are nearly marginally independent of their child under
+/// synthesized CPTs — no pairwise screen can see those — so the bound
+/// is on the mean, not each draw.)
+#[test]
+fn alarm_screening_recall_at_default_k() {
+    let exec = ExecConfig::balanced(4).executor();
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for seed in [3u64, 11, 29, 47, 83] {
+        let w = Workload::build("alarm", 8000, 0.0, seed).unwrap();
+        let rl = build_restriction(
+            &w.data,
+            4,
+            RestrictKind::Mi { k: RestrictKind::DEFAULT_K },
+            0.05,
+            None,
+            exec.as_ref(),
+        )
+        .unwrap();
+        for &(from, to) in w.truth_dag().edges().iter() {
+            total += 1;
+            if rl.pool(to).contains(&from) {
+                hits += 1;
+            }
+        }
+    }
+    let recall = hits as f64 / total as f64;
+    assert!(recall >= 0.95, "screening recall {recall:.3} ({hits}/{total}) below 0.95");
+}
+
+/// The headline scale run: `--restrict mi:8` completes screening +
+/// preprocessing + a 2-chain learn on the 64-node tiled network at
+/// s = 3, with the restricted store at least 10× smaller than the full
+/// dense grid — the regime the unrestricted pipeline cannot reach
+/// without the combinatorial `C(64, ≤3)` blowup.
+#[test]
+fn tiled64_restricted_learn_end_to_end() {
+    let cfg = RunConfig {
+        network: "tiled64".into(),
+        rows: 400,
+        iters: 250,
+        chains: 2,
+        s: 3,
+        seed: 23,
+        restrict: RestrictKind::Mi { k: 8 },
+        ..RunConfig::default()
+    };
+    let report = run_learning(&cfg, None).unwrap();
+    assert_eq!(report.restrict, "mi:8");
+
+    // ≥10× store-memory reduction vs the full dense [64 × C(64, ≤3)] grid.
+    let full_bytes =
+        64 * bnlearn::combinatorics::SubsetLayout::new(64, 3).total() * std::mem::size_of::<f32>();
+    assert!(
+        report.store_bytes * 10 <= full_bytes,
+        "restricted store {}B not 10x below dense {}B",
+        report.store_bytes,
+        full_bytes
+    );
+
+    // The run actually learned signal: a meaningful share of the 100+
+    // true edges recovered with few false positives.
+    assert!(report.result.best_dag().is_some());
+    assert!(report.roc.tpr > 0.25, "TPR {}", report.roc.tpr);
+    assert!(report.roc.fpr < 0.08, "FPR {}", report.roc.fpr);
+
+    // Screening keeps most of the layered truth in-pool at this scale.
+    let w = Workload::build(&cfg.network, cfg.rows, 0.0, cfg.seed).unwrap();
+    let exec = ExecConfig::balanced(2).executor();
+    let rl = build_restriction(&w.data, 3, cfg.restrict, 0.05, None, exec.as_ref()).unwrap();
+    let (mut hits, mut total) = (0usize, 0usize);
+    for &(from, to) in w.truth_dag().edges().iter() {
+        total += 1;
+        if rl.pool(to).contains(&from) {
+            hits += 1;
+        }
+    }
+    assert!(
+        hits as f64 >= 0.8 * total as f64,
+        "tiled64 pool recall {hits}/{total} below 0.8"
+    );
+}
+
+/// Restriction honours priors end to end: a prior-encouraged edge whose
+/// parent the screen would drop still ends up scoreable (in-pool).
+#[test]
+fn prior_encouraged_edges_stay_scoreable_under_restriction() {
+    use bnlearn::priors::InterfaceMatrix;
+    let w = Workload::build("random:12:14", 200, 0.0, 31).unwrap();
+    let exec = ExecConfig::balanced(1).executor();
+    let mut m = InterfaceMatrix::unbiased(12);
+    m.set(5, 9, 0.95); // user is confident in 9 → 5
+    // k=1 pools are as hostile to weak edges as screening gets.
+    let kind = RestrictKind::Mi { k: 1 };
+    let rl = build_restriction(&w.data, 3, kind, 0.05, Some(&m), exec.as_ref()).unwrap();
+    assert!(rl.pool(5).contains(&9), "prior-encouraged parent screened out");
+}
