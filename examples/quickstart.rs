@@ -32,6 +32,10 @@ fn main() -> anyhow::Result<()> {
     //    assignment strategy and `--tile N` the tile size (CLI), or pass
     //    an `exec::ExecConfig` to `build_store_with` here — any choice
     //    is bit-identical, balanced is simply fastest on skewed rows.
+    //    N_ijk counting inside each tile defaults to the prefix-cached
+    //    engine (`--counting prefix`, row-chunked automatically on big
+    //    datasets); `--counting naive` is the per-cell re-encoding
+    //    reference — same store bytes either way (DESIGN.md §14).
     let t = Timer::start();
     let store = build_store(StoreKind::Dense, &workload.data, BdeParams::default(), 4, 4, None);
     println!("preprocessing: {} x {} local scores into the {} store ({:.2} MB) in {:.2}s",

@@ -6,6 +6,7 @@ use anyhow::{bail, Result};
 use crate::exec::{ExecConfig, Schedule};
 use crate::mcmc::ProposalKind;
 use crate::restrict::RestrictKind;
+use crate::score::{CountingConfig, CountingMode};
 use crate::util::logging::Level;
 
 /// Which order-scoring engine drives the chain.
@@ -126,6 +127,13 @@ pub struct RunConfig {
     /// Score cells per execution tile (`--tile N`; 0 = one tile per
     /// node row). Results are bit-identical for any value.
     pub tile: usize,
+    /// Counting engine for store builds (`--counting naive|prefix`):
+    /// prefix-cached incremental codes (default) vs the naive per-cell
+    /// re-encode reference. Bit-identical stores either way.
+    pub counting: CountingMode,
+    /// Row-chunk size of the chunked counting path (`--chunk-rows N`;
+    /// 0 = auto-engage on large datasets). Prefix mode only.
+    pub chunk_rows: usize,
     /// Log verbosity (`--log-level debug` adds the per-tile timing
     /// histogram of every store build).
     pub log_level: Level,
@@ -174,6 +182,8 @@ impl Default for RunConfig {
             threads: default_threads(),
             schedule: Schedule::Balanced,
             tile: 0,
+            counting: CountingMode::Prefix,
+            chunk_rows: 0,
             log_level: Level::Info,
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             posterior: false,
@@ -219,6 +229,11 @@ impl RunConfig {
         ExecConfig::new(self.threads, self.schedule, self.tile)
     }
 
+    /// The counting-engine configuration store builds run with.
+    pub fn counting_config(&self) -> CountingConfig {
+        CountingConfig { mode: self.counting, chunk_rows: self.chunk_rows }
+    }
+
     /// Parse `--key value` pairs (after the subcommand) into a config.
     pub fn from_args(args: &[String]) -> Result<Self> {
         let mut cfg = RunConfig::default();
@@ -246,6 +261,8 @@ impl RunConfig {
                 "--threads" => cfg.threads = next()?.parse()?,
                 "--schedule" => cfg.schedule = Schedule::parse(next()?)?,
                 "--tile" => cfg.tile = next()?.parse()?,
+                "--counting" => cfg.counting = CountingMode::parse(next()?)?,
+                "--chunk-rows" => cfg.chunk_rows = next()?.parse()?,
                 "--log-level" => cfg.log_level = Level::parse(next()?)?,
                 "--artifacts" => cfg.artifacts_dir = next()?.into(),
                 // boolean flags take no value
@@ -402,6 +419,24 @@ mod tests {
         assert!(RunConfig::from_args(&args("--restrict mi:8 --s 17")).is_err());
         assert!(RunConfig::from_args(&args("--s 17")).is_ok());
         assert!(RunConfig::from_args(&args("--restrict mi:8 --s 16")).is_ok());
+    }
+
+    #[test]
+    fn parses_counting_flags() {
+        let c = RunConfig::from_args(&args("--counting naive --chunk-rows 4096")).unwrap();
+        assert_eq!(c.counting, CountingMode::Naive);
+        assert_eq!(c.chunk_rows, 4096);
+        let cc = c.counting_config();
+        assert_eq!(cc.mode, CountingMode::Naive);
+        assert_eq!(cc.chunk_rows, 4096);
+        // defaults: prefix engine, auto chunking
+        let d = RunConfig::default();
+        assert_eq!(d.counting, CountingMode::Prefix);
+        assert_eq!(d.chunk_rows, 0);
+        assert_eq!(d.counting_config(), CountingConfig::prefix());
+        // bad values rejected
+        assert!(RunConfig::from_args(&args("--counting magic")).is_err());
+        assert!(RunConfig::from_args(&args("--chunk-rows lots")).is_err());
     }
 
     #[test]

@@ -156,17 +156,22 @@ pub fn run_learning_on(
                 rl,
                 &exec_cfg,
                 ppf.as_deref(),
+                &cfg.counting_config(),
             )
             .0
         }
-        None => registry::build_store_with(
-            cfg.store,
-            &workload.data,
-            params,
-            cfg.s,
-            &exec_cfg,
-            ppf.as_deref(),
-        ),
+        None => {
+            registry::build_store_stats(
+                cfg.store,
+                &workload.data,
+                params,
+                cfg.s,
+                &exec_cfg,
+                ppf.as_deref(),
+                &cfg.counting_config(),
+            )
+            .0
+        }
     };
     let preprocess_secs = timer.elapsed_secs();
 
@@ -433,14 +438,16 @@ pub fn run_posterior_on(
     // ---- preprocessing into the (dense) backend ----
     let timer = Timer::start();
     let ppf = priors.map(|m| m.ppf_matrix());
-    let store = registry::build_store_with(
+    let store = registry::build_store_stats(
         cfg.store,
         &workload.data,
         params,
         cfg.s,
         &cfg.exec_config(),
         ppf.as_deref(),
-    );
+        &cfg.counting_config(),
+    )
+    .0;
     let preprocess_secs = timer.elapsed_secs();
 
     // ---- checkpointed multi-chain posterior sampling ----

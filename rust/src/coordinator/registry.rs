@@ -27,7 +27,7 @@ use crate::combinatorics::{RestrictedLayout, SubsetLayout};
 use crate::data::Dataset;
 use crate::exec::{DispatchStats, ExecConfig, KernelExecutor};
 use crate::restrict::RestrictKind;
-use crate::score::{BdeParams, HashScoreStore, ScoreStore, ScoreTable};
+use crate::score::{BdeParams, CountingConfig, HashScoreStore, ScoreStore, ScoreTable};
 use crate::scorer::{
     BitVecScorer, DeltaScorer, OrderScorer, RecomputeScorer, SerialScorer, SumScorer,
 };
@@ -113,12 +113,14 @@ pub fn build_store_with(
     cfg: &ExecConfig,
     ppf: Option<&[f64]>,
 ) -> StoreHandle {
-    build_store_stats(kind, data, params, s, cfg, ppf).0
+    build_store_stats(kind, data, params, s, cfg, ppf, &CountingConfig::default()).0
 }
 
 /// [`build_store_with`] returning the build's tile dispatch profile
 /// (max/mean tile cost, worker imbalance) for benches and the
-/// `preprocess` subcommand.
+/// `preprocess` subcommand, under an explicit counting-engine
+/// configuration (`--counting` / `--chunk-rows`). Counting engines are
+/// bit-identical; they only change how fast N_ijk histograms build.
 pub fn build_store_stats(
     kind: StoreKind,
     data: &Dataset,
@@ -126,17 +128,19 @@ pub fn build_store_stats(
     s: usize,
     cfg: &ExecConfig,
     ppf: Option<&[f64]>,
+    counting: &CountingConfig,
 ) -> (StoreHandle, DispatchStats) {
     match kind {
         StoreKind::Dense => {
-            let (mut table, stats) = ScoreTable::build_stats_with(data, params, s, cfg);
+            let (mut table, stats) = ScoreTable::build_counted_with(data, params, s, cfg, counting);
             if let Some(matrix) = ppf {
                 table.add_priors(matrix);
             }
             (StoreHandle::Dense(table), stats)
         }
         StoreKind::Hash => {
-            let (store, stats) = HashScoreStore::build_stats_with(data, params, s, cfg, ppf);
+            let (store, stats) =
+                HashScoreStore::build_counted_with(data, params, s, cfg, ppf, counting);
             (StoreHandle::Hash(store), stats)
         }
     }
@@ -152,10 +156,12 @@ pub fn build_store_restricted(
     rl: &std::sync::Arc<RestrictedLayout>,
     cfg: &ExecConfig,
     ppf: Option<&[f64]>,
+    counting: &CountingConfig,
 ) -> (StoreHandle, DispatchStats) {
     match kind {
         StoreKind::Dense => {
-            let (mut table, stats) = ScoreTable::build_restricted_stats_with(data, params, rl, cfg);
+            let (mut table, stats) =
+                ScoreTable::build_restricted_counted_with(data, params, rl, cfg, counting);
             if let Some(matrix) = ppf {
                 table.add_priors(matrix);
             }
@@ -163,7 +169,7 @@ pub fn build_store_restricted(
         }
         StoreKind::Hash => {
             let (store, stats) =
-                HashScoreStore::build_restricted_stats_with(data, params, rl, cfg, ppf);
+                HashScoreStore::build_restricted_counted_with(data, params, rl, cfg, ppf, counting);
             (StoreHandle::Hash(store), stats)
         }
     }
@@ -406,8 +412,11 @@ mod tests {
         // symmetric-OR pools: mean stays near k even if single pools exceed it
         assert!(rl.mean_pool() <= 6.0, "mean pool {}", rl.mean_pool());
         assert!(rl.max_pool() < 8);
-        let (dense, _) = build_store_restricted(StoreKind::Dense, &d, params, &rl, &cfg, None);
-        let (hash, _) = build_store_restricted(StoreKind::Hash, &d, params, &rl, &cfg, None);
+        let counting = CountingConfig::default();
+        let (dense, _) =
+            build_store_restricted(StoreKind::Dense, &d, params, &rl, &cfg, None, &counting);
+        let (hash, _) =
+            build_store_restricted(StoreKind::Hash, &d, params, &rl, &cfg, None, &counting);
         assert!(dense.restriction().is_some());
         assert!(hash.restriction().is_some());
         // Restricted stores hold far fewer entries than the full grid.
@@ -430,7 +439,8 @@ mod tests {
         }
         // a sanity full-pool restriction reproduces the unrestricted store
         let full = std::sync::Arc::new(RestrictedLayout::full_pools(8, 3));
-        let (rdense, _) = build_store_restricted(StoreKind::Dense, &d, params, &full, &cfg, None);
+        let (rdense, _) =
+            build_store_restricted(StoreKind::Dense, &d, params, &full, &cfg, None, &counting);
         let plain = build_store(StoreKind::Dense, &d, params, 3, 2, None);
         let mut er = make_engine(EngineKind::Serial, &rdense, &d, params, 3, false, None).unwrap();
         let mut ep = make_engine(EngineKind::Serial, &plain, &d, params, 3, false, None).unwrap();
@@ -533,7 +543,9 @@ mod tests {
         let params = BdeParams::default();
         let reference = build_store(StoreKind::Dense, &d, params, 3, 1, None);
         let cfg = ExecConfig::new(3, Schedule::Static, 17);
-        let (tiled, stats) = build_store_stats(StoreKind::Dense, &d, params, 3, &cfg, None);
+        let counting = CountingConfig::default();
+        let (tiled, stats) =
+            build_store_stats(StoreKind::Dense, &d, params, 3, &cfg, None, &counting);
         let (rt, tt) = match (&reference, &tiled) {
             (StoreHandle::Dense(a), StoreHandle::Dense(b)) => (a.raw(), b.raw()),
             _ => unreachable!(),

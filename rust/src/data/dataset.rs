@@ -72,6 +72,17 @@ impl Dataset {
         self.columns[col][row]
     }
 
+    /// Row-chunk ranges of at most `chunk_rows` rows each, covering
+    /// `0..rows` in order (the last chunk may be short). The chunked
+    /// counting path fans these across the executor. `chunk_rows == 0`
+    /// yields a single whole-range chunk; an empty dataset yields none.
+    pub fn chunks(&self, chunk_rows: usize) -> impl Iterator<Item = std::ops::Range<usize>> + '_ {
+        let rows = self.rows;
+        let step = if chunk_rows == 0 { rows.max(1) } else { chunk_rows };
+        let count = (rows + step - 1) / step;
+        (0..count).map(move |i| i * step..((i + 1) * step).min(rows))
+    }
+
     /// Serialize as CSV (header `X0,X1,…`, one observation per line).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
@@ -182,5 +193,25 @@ mod tests {
         fs::write(&path, "X0,X1\n0,1\n0\n").unwrap();
         assert!(Dataset::load_csv(&path, None).is_err());
         let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn chunks_cover_rows_in_order() {
+        let d = Dataset::from_columns(vec![vec![0; 10]], vec![1]);
+        let got: Vec<_> = d.chunks(4).collect();
+        assert_eq!(got, vec![0..4, 4..8, 8..10]);
+        // Exact division: no short tail.
+        assert_eq!(d.chunks(5).collect::<Vec<_>>(), vec![0..5, 5..10]);
+        // Oversized chunk: one range.
+        assert_eq!(d.chunks(100).collect::<Vec<_>>(), vec![0..10]);
+        // Zero means "whole dataset".
+        assert_eq!(d.chunks(0).collect::<Vec<_>>(), vec![0..10]);
+    }
+
+    #[test]
+    fn chunks_of_empty_dataset_are_empty() {
+        let d = Dataset::from_columns(vec![], vec![]);
+        assert_eq!(d.chunks(8).count(), 0);
+        assert_eq!(d.chunks(0).count(), 0);
     }
 }

@@ -74,6 +74,11 @@ fn print_usage() {
                             balanced dynamic queue, default balanced; bit-identical)\n\
            --tile N  (score cells per execution tile, 0 = one tile per node row;\n\
                             small tiles split hot rows and feed threads > n)\n\
+           --counting naive|prefix  (N_ijk counting engine: prefix-cached DFS\n\
+                            codes, default prefix; naive = per-cell re-encode\n\
+                            reference — bit-identical stores either way)\n\
+           --chunk-rows N  (row-chunk size of the chunked counting path, 0 =\n\
+                            auto-engage on large datasets; prefix mode only)\n\
            --log-level error|warn|info|debug  (debug adds per-tile timing histograms)\n\
            --trace [--trace-out PATH]  (record per-iteration score traces to CSV)\n\
          \n\
@@ -202,9 +207,25 @@ fn cmd_preprocess(args: &[String]) -> Result<()> {
                 rl.total_cells(),
                 rl.full_cells()
             );
-            build_store_restricted(cfg.store, &workload.data, params, rl, &exec_cfg, None)
+            build_store_restricted(
+                cfg.store,
+                &workload.data,
+                params,
+                rl,
+                &exec_cfg,
+                None,
+                &cfg.counting_config(),
+            )
         }
-        None => build_store_stats(cfg.store, &workload.data, params, cfg.s, &exec_cfg, None),
+        None => build_store_stats(
+            cfg.store,
+            &workload.data,
+            params,
+            cfg.s,
+            &exec_cfg,
+            None,
+            &cfg.counting_config(),
+        ),
     };
     let secs = timer.elapsed_secs();
     let dense_equiv = store.n() * store.subsets() * std::mem::size_of::<f32>();
@@ -217,9 +238,11 @@ fn cmd_preprocess(args: &[String]) -> Result<()> {
         cfg.threads
     );
     println!(
-        "schedule={} tile={} tiles={} max_tile={:.3}ms build_imbalance={:.2}",
+        "schedule={} tile={} counting={} chunk_rows={} tiles={} max_tile={:.3}ms build_imbalance={:.2}",
         cfg.schedule.name(),
         cfg.tile,
+        cfg.counting.name(),
+        cfg.chunk_rows,
         stats.items(),
         stats.max_item_secs() * 1e3,
         stats.imbalance()

@@ -10,6 +10,11 @@
 //! BDe score (`logΓ(α)−logΓ(α+0) = 0`), so skipping them is both the
 //! correctness-preserving and the fast thing to do — with N observations
 //! at most N configurations are touched regardless of `r_i = Π arities`.
+//!
+//! Configurations are always emitted in ascending code order — the
+//! canonical emission order shared with the prefix-cached counter
+//! ([`crate::score::prefix::PrefixCounter`]), which is what makes the
+//! `--counting naive|prefix` toggle bit-identical.
 
 use std::collections::HashMap;
 
@@ -26,9 +31,21 @@ pub struct CountsWorkspace {
     touched: Vec<u32>,
     /// Per-row parent config codes (reused across nodes for a fixed π).
     codes: Vec<u32>,
+    /// First-touch generation stamps, one per config slot of `dense`
+    /// (slot = code, not cell). A config is "new this round" iff its
+    /// stamp differs from `epoch` — an O(1) probe replacing the old
+    /// O(arity) scan of the dense row.
+    stamp: Vec<u32>,
+    /// Current counting generation for `stamp`.
+    epoch: u32,
     /// Sparse fallback for huge config spaces (`q·r` beyond the dense
     /// limit): at most `rows` configs can be observed regardless of q.
     sparse: HashMap<u32, Vec<u32>>,
+    /// Wide-code row encodings for parent spaces beyond u32 (the
+    /// exhaustive Table V mode can reach q ≈ 255^19).
+    codes_wide: Vec<u128>,
+    /// Sparse counts keyed by wide codes.
+    sparse_wide: HashMap<u128, Vec<u32>>,
 }
 
 /// Maximum `q_i · r_i` the dense buffer will grow to; beyond this the
@@ -36,7 +53,7 @@ pub struct CountsWorkspace {
 /// the dense path covers everything the bounded learner does; the
 /// exhaustive "all parent sets" mode (up to 19 parents in Table V) goes
 /// sparse.
-const DENSE_LIMIT: usize = 1 << 22;
+pub(crate) const DENSE_LIMIT: usize = 1 << 22;
 
 impl CountsWorkspace {
     /// Fresh workspace.
@@ -45,15 +62,19 @@ impl CountsWorkspace {
             dense: Vec::new(),
             touched: Vec::new(),
             codes: Vec::new(),
+            stamp: Vec::new(),
+            epoch: 0,
             sparse: HashMap::new(),
+            codes_wide: Vec::new(),
+            sparse_wide: HashMap::new(),
         }
     }
 
     /// Count `N_ijk` for `(node, parents)` over `data`.
     ///
-    /// Calls `f(n_ik, counts_j)` once per *observed* parent configuration,
-    /// where `counts_j` is the dense per-state histogram (`N_ijk` over j)
-    /// and `n_ik = Σ_j N_ijk`.
+    /// Calls `f(n_ik, counts_j)` once per *observed* parent configuration
+    /// in ascending code order, where `counts_j` is the dense per-state
+    /// histogram (`N_ijk` over j) and `n_ik = Σ_j N_ijk`.
     pub fn for_each_config(
         &mut self,
         data: &Dataset,
@@ -63,20 +84,45 @@ impl CountsWorkspace {
     ) {
         let rows = data.rows();
         let arity = data.arity(node);
-        // joint parent-config count (checked: codes must fit u32)
+        // Joint parent-config count. Codes beyond u32 degrade to the
+        // wide (u128) sparse path instead of panicking — exhaustive
+        // high-arity parent sets stay scoreable.
         let q_wide: u128 =
             parents.iter().map(|&m| data.arity(m) as u128).product::<u128>().max(1);
-        assert!(q_wide <= u32::MAX as u128, "parent config space exceeds u32 codes");
+        if q_wide > u32::MAX as u128 {
+            self.for_each_config_wide(data, node, parents, f);
+            return;
+        }
         let q = q_wide as usize;
         let cells = q.saturating_mul(arity);
 
-        // Encode parent configs per row (mixed radix, first parent fastest).
-        self.codes.clear();
-        self.codes.resize(rows, 0);
+        // Encode parent configs per row (mixed radix, first parent
+        // fastest). The first parent *assigns* codes, so no zero-fill is
+        // needed when the buffer already has the right length; with no
+        // parents we skip the codes pass entirely below.
+        if parents.is_empty() {
+            // Single config: count the node column directly.
+            let node_col = data.column(node);
+            if self.dense.len() < arity {
+                self.dense.resize(arity, 0);
+            }
+            let counts = &mut self.dense[..arity];
+            counts.iter_mut().for_each(|c| *c = 0);
+            for &v in node_col {
+                counts[v as usize] += 1;
+            }
+            let n_ik: u32 = counts.iter().sum();
+            f(n_ik, counts);
+            self.dense[..arity].iter_mut().for_each(|c| *c = 0);
+            return;
+        }
+        if self.codes.len() != rows {
+            self.codes.resize(rows, 0);
+        }
         let mut stride = 1u32;
-        for &m in parents {
+        for (pi, &m) in parents.iter().enumerate() {
             let col = data.column(m);
-            if stride == 1 {
+            if pi == 0 {
                 for (code, &v) in self.codes.iter_mut().zip(col) {
                     *code = v as u32;
                 }
@@ -90,16 +136,27 @@ impl CountsWorkspace {
 
         let node_col = data.column(node);
         if cells <= DENSE_LIMIT {
-            // Dense path: grow the buffer lazily; it is kept zeroed
-            // between calls via the touched list.
+            // Dense path: grow the buffers lazily; `dense` is kept
+            // zeroed between calls via the touched list, `stamp` via the
+            // epoch counter.
             if self.dense.len() < cells {
                 self.dense.resize(cells, 0);
             }
+            if self.stamp.len() < q {
+                self.stamp.resize(q, 0);
+            }
+            self.epoch = self.epoch.wrapping_add(1);
+            if self.epoch == u32::MAX {
+                self.stamp.iter_mut().for_each(|s| *s = 0);
+                self.epoch = 1;
+            }
+            let epoch = self.epoch;
             self.touched.clear();
             for (r, &code) in self.codes.iter().enumerate() {
-                let base = code as usize * arity;
-                let cell = base + node_col[r] as usize;
-                if self.dense[base..base + arity].iter().all(|&c| c == 0) {
+                let slot = code as usize;
+                let cell = slot * arity + node_col[r] as usize;
+                if self.stamp[slot] != epoch {
+                    self.stamp[slot] = epoch;
                     self.touched.push(code);
                 }
                 self.dense[cell] += 1;
@@ -136,11 +193,145 @@ impl CountsWorkspace {
             }
         }
     }
+
+    /// Wide-code sparse counting for parent spaces whose mixed-radix
+    /// codes exceed u32 (q up to 255^19 ≈ 2^152 fits u128 comfortably
+    /// for ≤ 19 parents of arity ≤ 255). Emission is ascending-code,
+    /// matching the narrow paths.
+    fn for_each_config_wide(
+        &mut self,
+        data: &Dataset,
+        node: usize,
+        parents: &[usize],
+        mut f: impl FnMut(u32, &[u32]),
+    ) {
+        let rows = data.rows();
+        let arity = data.arity(node);
+        if self.codes_wide.len() != rows {
+            self.codes_wide.resize(rows, 0);
+        }
+        let mut stride = 1u128;
+        for (pi, &m) in parents.iter().enumerate() {
+            let col = data.column(m);
+            if pi == 0 {
+                for (code, &v) in self.codes_wide.iter_mut().zip(col) {
+                    *code = v as u128;
+                }
+            } else {
+                for (code, &v) in self.codes_wide.iter_mut().zip(col) {
+                    *code += v as u128 * stride;
+                }
+            }
+            stride *= data.arity(m) as u128;
+        }
+        let node_col = data.column(node);
+        self.sparse_wide.clear();
+        for (r, &code) in self.codes_wide.iter().enumerate() {
+            let counts =
+                self.sparse_wide.entry(code).or_insert_with(|| vec![0u32; arity]);
+            counts[node_col[r] as usize] += 1;
+        }
+        let mut keys: Vec<u128> = self.sparse_wide.keys().copied().collect();
+        keys.sort_unstable();
+        for code in keys {
+            let counts = &self.sparse_wide[&code];
+            let n_ik: u32 = counts.iter().sum();
+            f(n_ik, counts);
+        }
+    }
 }
 
 impl Default for CountsWorkspace {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Which counting engine drives score-table builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CountingMode {
+    /// Reference path: re-encode parent configs from scratch per cell
+    /// via [`CountsWorkspace`]. Never chunks.
+    Naive,
+    /// Prefix-cached path: config codes are refined incrementally along
+    /// the subset DFS; eligible for chunked row-scale counting.
+    Prefix,
+}
+
+impl CountingMode {
+    /// Parse a `--counting` flag value.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "naive" => Ok(CountingMode::Naive),
+            "prefix" => Ok(CountingMode::Prefix),
+            other => anyhow::bail!("unknown counting mode '{other}' (naive|prefix)"),
+        }
+    }
+
+    /// Canonical flag-value name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CountingMode::Naive => "naive",
+            CountingMode::Prefix => "prefix",
+        }
+    }
+}
+
+/// Row-chunk size used when chunking engages automatically
+/// (`chunk_rows == 0`).
+pub(crate) const AUTO_CHUNK_ROWS: usize = 1 << 15;
+
+/// Minimum dataset size before automatic chunking engages; below this the
+/// whole-column walk is already cache-resident and chunk bookkeeping is
+/// pure overhead.
+pub(crate) const AUTO_MIN_ROWS: usize = 1 << 18;
+
+/// Counting-engine configuration threaded from the CLI down into the
+/// table builders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CountingConfig {
+    /// Engine selection (default [`CountingMode::Prefix`]).
+    pub mode: CountingMode,
+    /// Row-chunk size for the chunked counting path; `0` = auto
+    /// (engage at [`AUTO_MIN_ROWS`] rows with [`AUTO_CHUNK_ROWS`]-row
+    /// chunks). Ignored in naive mode.
+    pub chunk_rows: usize,
+}
+
+impl CountingConfig {
+    /// The reference configuration: naive counting, never chunked.
+    pub fn naive() -> Self {
+        CountingConfig { mode: CountingMode::Naive, chunk_rows: 0 }
+    }
+
+    /// The default configuration: prefix counting, auto chunking.
+    pub fn prefix() -> Self {
+        CountingConfig { mode: CountingMode::Prefix, chunk_rows: 0 }
+    }
+
+    /// Chunk size to use for a dataset of `rows` rows, or `None` to count
+    /// whole columns. Naive mode never chunks (it is the reference path).
+    pub fn chunk_for(&self, rows: usize) -> Option<usize> {
+        if self.mode != CountingMode::Prefix {
+            return None;
+        }
+        if self.chunk_rows == 0 {
+            if rows >= AUTO_MIN_ROWS {
+                Some(AUTO_CHUNK_ROWS)
+            } else {
+                None
+            }
+        } else if rows > self.chunk_rows {
+            Some(self.chunk_rows)
+        } else {
+            None
+        }
+    }
+}
+
+impl Default for CountingConfig {
+    fn default() -> Self {
+        Self::prefix()
     }
 }
 
@@ -228,5 +419,77 @@ mod tests {
                 assert_eq!(total as usize, d.rows());
             }
         }
+    }
+
+    #[test]
+    fn reuse_across_different_row_counts() {
+        // The codes buffer must resize correctly when the workspace is
+        // reused against a dataset with a different row count.
+        let small = dataset();
+        let big = Dataset::from_columns(
+            vec![
+                vec![0, 1, 0, 1, 0, 1, 0, 1, 1, 0],
+                vec![0, 0, 1, 1, 2, 2, 0, 1, 2, 0],
+            ],
+            vec![2, 3],
+        );
+        let mut ws = CountsWorkspace::new();
+        let mut a = Vec::new();
+        ws.for_each_config(&big, 0, &[1], |n, c| a.push((n, c.to_vec())));
+        let mut b = Vec::new();
+        ws.for_each_config(&small, 0, &[1], |n, c| b.push((n, c.to_vec())));
+        let mut a2 = Vec::new();
+        ws.for_each_config(&big, 0, &[1], |n, c| a2.push((n, c.to_vec())));
+        assert_eq!(a, a2);
+        let total: u32 = b.iter().map(|(n, _)| n).sum();
+        assert_eq!(total as usize, small.rows());
+    }
+
+    #[test]
+    fn wide_codes_fall_back_gracefully() {
+        // 5 parents of arity 200 → q = 3.2e11 > u32::MAX: must not panic,
+        // and totals must still cover every row.
+        let rows = 64usize;
+        let mut cols: Vec<Vec<u8>> = Vec::new();
+        let mut state = 0x9e3779b9u64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u8
+        };
+        for _ in 0..6 {
+            cols.push((0..rows).map(|_| next() % 200).collect());
+        }
+        let d = Dataset::from_columns(cols, vec![200; 6]);
+        let mut ws = CountsWorkspace::new();
+        let mut total = 0u32;
+        let mut configs = 0usize;
+        ws.for_each_config(&d, 0, &[1, 2, 3, 4, 5], |n, c| {
+            assert_eq!(n, c.iter().sum::<u32>());
+            total += n;
+            configs += 1;
+        });
+        assert_eq!(total as usize, rows);
+        assert!(configs <= rows);
+    }
+
+    #[test]
+    fn counting_mode_parse_roundtrip() {
+        assert_eq!(CountingMode::parse("naive").unwrap(), CountingMode::Naive);
+        assert_eq!(CountingMode::parse("prefix").unwrap(), CountingMode::Prefix);
+        assert!(CountingMode::parse("magic").is_err());
+        assert_eq!(CountingMode::Naive.name(), "naive");
+        assert_eq!(CountingMode::Prefix.name(), "prefix");
+    }
+
+    #[test]
+    fn chunk_for_policy() {
+        let naive = CountingConfig::naive();
+        assert_eq!(naive.chunk_for(10_000_000), None);
+        let auto = CountingConfig::prefix();
+        assert_eq!(auto.chunk_for(1000), None);
+        assert_eq!(auto.chunk_for(AUTO_MIN_ROWS), Some(AUTO_CHUNK_ROWS));
+        let explicit = CountingConfig { mode: CountingMode::Prefix, chunk_rows: 500 };
+        assert_eq!(explicit.chunk_for(400), None);
+        assert_eq!(explicit.chunk_for(501), Some(500));
     }
 }

@@ -5,10 +5,13 @@
 pub mod bde;
 pub mod counts;
 pub mod lgamma;
+pub mod prefix;
 pub mod store;
 pub mod table;
 
 pub use bde::{BdeParams, LocalScorer};
+pub use counts::{CountingConfig, CountingMode, CountsWorkspace};
 pub use lgamma::{lgamma, log10_gamma};
+pub use prefix::PrefixCounter;
 pub use store::{HashScoreStore, ScoreStore};
 pub use table::{ScoreTable, NEG_SENTINEL};

@@ -1,0 +1,314 @@
+//! Prefix-cached parent-config counting.
+//!
+//! The subset DFS in `FastRowBuilder` visits parent sets in nested order:
+//! descending from π to π∪{m} adds exactly one parent. [`PrefixCounter`]
+//! exploits that by keeping a *stack* of per-row config-code vectors, one
+//! per DFS depth, so the codes for π∪{m} are refined from the codes for π
+//! with a single column scan and one radix multiply instead of re-encoding
+//! the whole mixed-radix product from scratch (the naive
+//! [`crate::score::counts::CountsWorkspace`] path).
+//!
+//! Invariants (the "prefix-stack contract", DESIGN.md §14):
+//!
+//! - `codes[0]` is always all-zero over the current window (the empty
+//!   parent set has the single config 0).
+//! - After a successful `push_level(d, col, arity)`, `codes[d + 1][r] =
+//!   codes[d][r] + col[lo + r] · strides[d]` and `strides[d + 1] =
+//!   strides[d] · arity` — i.e. level `d + 1` holds the mixed-radix codes
+//!   (first parent fastest) of the DFS path's first `d + 1` parents.
+//! - Codes at depths below a failed push are *stale*; `overflow_from`
+//!   records the shallowest invalid depth and `q_at` refuses to vouch for
+//!   it. Re-pushing at or above that depth (as the DFS backtracks)
+//!   revalidates the stack.
+//! - Emission order from `count_window` is ascending config code — the
+//!   same canonical order as `CountsWorkspace`, which is what makes
+//!   `--counting naive` and `--counting prefix` bit-identical.
+
+/// Stack of per-row parent-config codes aligned with the subset DFS.
+#[derive(Debug)]
+pub struct PrefixCounter {
+    /// `codes[d]` = per-row codes for the first `d` parents of the
+    /// current DFS path, over rows `lo..hi`.
+    codes: Vec<Vec<u32>>,
+    /// `strides[d]` = Π of the first `d` parent arities (= q at depth d).
+    strides: Vec<u32>,
+    /// Current row window (codes vectors have length `hi - lo`).
+    lo: usize,
+    hi: usize,
+    /// Shallowest depth whose codes could not be computed (u32 overflow).
+    overflow_from: Option<usize>,
+    /// Dense per-(config,state) counts for leaf emission.
+    dense: Vec<u32>,
+    /// Configs touched by the current leaf (for sorted emission and
+    /// O(touched) clearing).
+    touched: Vec<u32>,
+    /// First-touch generation stamps, one per config slot.
+    stamp: Vec<u32>,
+    /// Current generation for `stamp`.
+    epoch: u32,
+}
+
+impl PrefixCounter {
+    /// Counter able to hold DFS paths up to `s` parents deep. Starts with
+    /// an empty row window — call [`set_window`](Self::set_window) before
+    /// pushing levels.
+    pub fn new(s: usize) -> Self {
+        PrefixCounter {
+            codes: vec![Vec::new(); s + 1],
+            strides: vec![1; s + 1],
+            lo: 0,
+            hi: 0,
+            overflow_from: None,
+            dense: Vec::new(),
+            touched: Vec::new(),
+            stamp: Vec::new(),
+            epoch: 0,
+        }
+    }
+
+    /// Point the counter at rows `lo..hi`. No-op when the window is
+    /// unchanged; otherwise invalidates all pushed levels (level 0 is
+    /// re-zeroed, deeper levels are resized but left stale — they are
+    /// fully overwritten by subsequent pushes).
+    pub fn set_window(&mut self, lo: usize, hi: usize) {
+        debug_assert!(lo <= hi);
+        if self.lo == lo && self.hi == hi && !self.codes[0].is_empty() == (hi > lo) {
+            return;
+        }
+        self.lo = lo;
+        self.hi = hi;
+        let wlen = hi - lo;
+        self.codes[0].clear();
+        self.codes[0].resize(wlen, 0);
+        for level in self.codes.iter_mut().skip(1) {
+            level.resize(wlen, 0);
+        }
+        self.overflow_from = None;
+    }
+
+    /// Current row window as `(lo, hi)`.
+    pub fn window(&self) -> (usize, usize) {
+        (self.lo, self.hi)
+    }
+
+    /// Refine codes from depth `level` to depth `level + 1` by adding one
+    /// parent with the given full data column and arity. Returns `false`
+    /// (leaving depth `level + 1` flagged invalid) if the refined codes
+    /// would overflow u32 or if depth `level` is itself invalid; callers
+    /// then fall back to naive counting at affected leaves.
+    pub fn push_level(&mut self, level: usize, col: &[u8], arity: usize) -> bool {
+        let depth = level + 1;
+        debug_assert!(depth < self.codes.len());
+        if let Some(f) = self.overflow_from {
+            if f <= level {
+                // Source codes are stale; deeper levels stay invalid.
+                return false;
+            }
+        }
+        let stride = self.strides[level];
+        let wide = stride as u64 * arity as u64;
+        if wide > u32::MAX as u64 {
+            self.overflow_from = Some(depth);
+            return false;
+        }
+        let window = &col[self.lo..self.hi];
+        // Split-borrow the source and destination levels.
+        let (lower, upper) = self.codes.split_at_mut(depth);
+        let src = &lower[level];
+        let dst = &mut upper[0];
+        if stride == 1 {
+            // Depth 1 from the all-zero base: assign directly.
+            for (d, &v) in dst.iter_mut().zip(window) {
+                *d = v as u32;
+            }
+        } else {
+            for ((d, &s), &v) in dst.iter_mut().zip(src).zip(window) {
+                *d = s + v as u32 * stride;
+            }
+        }
+        self.strides[depth] = wide as u32;
+        if let Some(f) = self.overflow_from {
+            if f >= depth {
+                self.overflow_from = None;
+            }
+        }
+        true
+    }
+
+    /// Joint parent-config count `q` at depth `k`, or `None` if that
+    /// depth's codes are invalid (u32 overflow somewhere at or above it).
+    pub fn q_at(&self, k: usize) -> Option<usize> {
+        if k == 0 {
+            return Some(1);
+        }
+        if let Some(f) = self.overflow_from {
+            if f <= k {
+                return None;
+            }
+        }
+        Some(self.strides[k] as usize)
+    }
+
+    /// Count `N_ijk` over the current window using depth-`k` codes and
+    /// emit `(n_ik, counts_j)` per observed config in ascending code
+    /// order — the same contract as `CountsWorkspace::for_each_config`.
+    ///
+    /// Caller must ensure `q_at(k)` is `Some(q)` with `q · r_i` within
+    /// the dense limit; larger leaves take the naive fallback.
+    pub fn count_window(
+        &mut self,
+        k: usize,
+        node_col: &[u8],
+        r_i: usize,
+        mut emit: impl FnMut(u32, &[u32]),
+    ) {
+        let q = self.strides[k] as usize;
+        let cells = q * r_i;
+        if self.dense.len() < cells {
+            self.dense.resize(cells, 0);
+        }
+        if self.stamp.len() < q {
+            self.stamp.resize(q, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == u32::MAX {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
+        }
+        let epoch = self.epoch;
+        self.touched.clear();
+        let window = &node_col[self.lo..self.hi];
+        for (&code, &v) in self.codes[k].iter().zip(window) {
+            let slot = code as usize;
+            if self.stamp[slot] != epoch {
+                self.stamp[slot] = epoch;
+                self.touched.push(code);
+            }
+            self.dense[slot * r_i + v as usize] += 1;
+        }
+        self.touched.sort_unstable();
+        for &code in &self.touched {
+            let base = code as usize * r_i;
+            let counts = &self.dense[base..base + r_i];
+            let n_ik: u32 = counts.iter().sum();
+            emit(n_ik, counts);
+        }
+        for &code in &self.touched {
+            let base = code as usize * r_i;
+            self.dense[base..base + r_i].iter_mut().for_each(|c| *c = 0);
+        }
+    }
+
+    /// Accumulate window counts into an external histogram laid out as
+    /// `hist[code · r_i + state]` (length `q · r_i`). Used by the chunked
+    /// path: u32 adds commute, so merging per-chunk partials in any order
+    /// yields bit-identical totals.
+    pub fn accumulate_window(&self, k: usize, node_col: &[u8], r_i: usize, hist: &mut [u32]) {
+        let window = &node_col[self.lo..self.hi];
+        for (&code, &v) in self.codes[k].iter().zip(window) {
+            hist[code as usize * r_i + v as usize] += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_match_mixed_radix() {
+        // Two parents: arities 3 then 2, first parent fastest.
+        let p0: Vec<u8> = vec![0, 1, 2, 0, 1, 2];
+        let p1: Vec<u8> = vec![0, 0, 0, 1, 1, 1];
+        let mut pc = PrefixCounter::new(2);
+        pc.set_window(0, 6);
+        assert!(pc.push_level(0, &p0, 3));
+        assert!(pc.push_level(1, &p1, 2));
+        assert_eq!(pc.q_at(2), Some(6));
+        // code = p0 + 3*p1
+        let expected: Vec<u32> = p0
+            .iter()
+            .zip(&p1)
+            .map(|(&a, &b)| a as u32 + 3 * b as u32)
+            .collect();
+        assert_eq!(pc.codes[2], expected);
+    }
+
+    #[test]
+    fn windowed_codes_are_offset() {
+        let p0: Vec<u8> = vec![9, 9, 0, 1, 2, 9];
+        let mut pc = PrefixCounter::new(1);
+        pc.set_window(2, 5);
+        assert!(pc.push_level(0, &p0, 10));
+        assert_eq!(pc.codes[1], vec![0, 1, 2]);
+        // Re-setting the same window is a no-op; a new window re-zeroes
+        // the base level.
+        pc.set_window(2, 5);
+        assert_eq!(pc.codes[1], vec![0, 1, 2]);
+        pc.set_window(0, 2);
+        assert_eq!(pc.codes[0], vec![0, 0]);
+    }
+
+    #[test]
+    fn overflow_flags_and_recovers() {
+        let col: Vec<u8> = vec![0; 4];
+        let big: Vec<u8> = vec![1; 4];
+        let mut pc = PrefixCounter::new(3);
+        pc.set_window(0, 4);
+        assert!(pc.push_level(0, &col, 1 << 20));
+        // 2^20 · 2^20 overflows u32 → depth 2 invalid.
+        assert!(!pc.push_level(1, &big, 1 << 20));
+        assert_eq!(pc.q_at(1), Some(1 << 20));
+        assert_eq!(pc.q_at(2), None);
+        assert_eq!(pc.q_at(3), None);
+        // Deeper pushes while invalid also fail.
+        assert!(!pc.push_level(2, &col, 2));
+        // Backtrack: re-push depth 2 with a small arity → recovered.
+        assert!(pc.push_level(1, &big, 2));
+        assert_eq!(pc.q_at(2), Some(1 << 21));
+        assert!(pc.push_level(2, &col, 2));
+        assert_eq!(pc.q_at(3), Some(1 << 22));
+    }
+
+    #[test]
+    fn count_window_sorted_emission() {
+        let p0: Vec<u8> = vec![2, 0, 2, 1, 0, 2];
+        let node: Vec<u8> = vec![0, 1, 1, 0, 0, 1];
+        let mut pc = PrefixCounter::new(1);
+        pc.set_window(0, 6);
+        assert!(pc.push_level(0, &p0, 3));
+        let mut seen = Vec::new();
+        pc.count_window(1, &node, 2, |n, c| seen.push((n, c.to_vec())));
+        // code 0: rows 1,4 → node [1,0] → [1,1]; code 1: row 3 → [1,0];
+        // code 2: rows 0,2,5 → [1,2]
+        assert_eq!(
+            seen,
+            vec![(2, vec![1, 1]), (1, vec![1, 0]), (3, vec![1, 2])]
+        );
+        // Reuse is clean.
+        let mut again = Vec::new();
+        pc.count_window(1, &node, 2, |n, c| again.push((n, c.to_vec())));
+        assert_eq!(seen, again);
+    }
+
+    #[test]
+    fn accumulate_matches_count() {
+        let p0: Vec<u8> = vec![2, 0, 2, 1, 0, 2, 1, 1];
+        let node: Vec<u8> = vec![0, 1, 1, 0, 0, 1, 1, 0];
+        let mut pc = PrefixCounter::new(1);
+        // Whole-window count.
+        pc.set_window(0, 8);
+        assert!(pc.push_level(0, &p0, 3));
+        let mut whole = vec![0u32; 3 * 2];
+        pc.accumulate_window(1, &node, 2, &mut whole);
+        // Two chunks merged.
+        let mut merged = vec![0u32; 3 * 2];
+        for (lo, hi) in [(0, 5), (5, 8)] {
+            pc.set_window(lo, hi);
+            assert!(pc.push_level(0, &p0, 3));
+            pc.accumulate_window(1, &node, 2, &mut merged);
+        }
+        assert_eq!(whole, merged);
+        assert_eq!(whole.iter().sum::<u32>(), 8);
+    }
+}

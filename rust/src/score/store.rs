@@ -25,8 +25,9 @@
 use std::sync::Arc;
 
 use super::bde::BdeParams;
+use super::counts::CountingConfig;
 use super::table::{
-    add_priors_to_restricted_row, add_priors_to_row, fill_tiles, fill_tiles_restricted,
+    add_priors_to_restricted_row, add_priors_to_row, fill_tiles, fill_tiles_chunked, Grid,
     ScoreTable, NEG_SENTINEL,
 };
 use crate::combinatorics::combinadic::{next_combination, rank_combination};
@@ -269,6 +270,21 @@ impl HashScoreStore {
         cfg: &ExecConfig,
         ppf: Option<&[f64]>,
     ) -> (Self, DispatchStats) {
+        Self::build_counted_with(data, params, s, cfg, ppf, &CountingConfig::default())
+    }
+
+    /// [`Self::build_stats_with`] with an explicit counting-engine
+    /// selection (naive vs prefix, chunked row counting) — see
+    /// [`ScoreTable::build_counted_with`]. Bit-identical output for any
+    /// mode/chunking.
+    pub fn build_counted_with(
+        data: &Dataset,
+        params: BdeParams,
+        s: usize,
+        cfg: &ExecConfig,
+        ppf: Option<&[f64]>,
+        counting: &CountingConfig,
+    ) -> (Self, DispatchStats) {
         let n = data.cols();
         let layout = SubsetLayout::new(n, s);
         assert!(layout.total() <= u32::MAX as usize, "layout exceeds u32 key space");
@@ -291,7 +307,28 @@ impl HashScoreStore {
             {
                 let tiles = plan_tiles_for(lo..hi, total, cfg.tile);
                 let slices = split_by_tiles(&mut buf[..wn * total], &tiles);
-                stats.merge(&fill_tiles(data, params, &layout, exec.as_ref(), &tiles, &slices));
+                let grid = Grid::Full(&layout);
+                stats.merge(&match counting.chunk_for(data.rows()) {
+                    Some(chunk) => fill_tiles_chunked(
+                        data,
+                        params,
+                        &grid,
+                        exec.as_ref(),
+                        &tiles,
+                        &slices,
+                        counting.mode,
+                        chunk,
+                    ),
+                    None => fill_tiles(
+                        data,
+                        params,
+                        &grid,
+                        exec.as_ref(),
+                        &tiles,
+                        &slices,
+                        counting.mode,
+                    ),
+                });
             }
             // Phase B: node-parallel prior fold + dominance prune + hash
             // row construction.
@@ -355,6 +392,19 @@ impl HashScoreStore {
         cfg: &ExecConfig,
         ppf: Option<&[f64]>,
     ) -> (Self, DispatchStats) {
+        Self::build_restricted_counted_with(data, params, rl, cfg, ppf, &CountingConfig::default())
+    }
+
+    /// [`Self::build_restricted_stats_with`] with an explicit
+    /// counting-engine selection (see [`Self::build_counted_with`]).
+    pub fn build_restricted_counted_with(
+        data: &Dataset,
+        params: BdeParams,
+        rl: &Arc<RestrictedLayout>,
+        cfg: &ExecConfig,
+        ppf: Option<&[f64]>,
+        counting: &CountingConfig,
+    ) -> (Self, DispatchStats) {
         let n = data.cols();
         assert_eq!(rl.n(), n, "restriction and dataset disagree on n");
         if let Some(m) = ppf {
@@ -378,14 +428,28 @@ impl HashScoreStore {
             {
                 let tiles = plan_ragged_tiles_for(lo..hi, &row_lens, cfg.tile);
                 let slices = split_by_tiles(&mut buf, &tiles);
-                stats.merge(&fill_tiles_restricted(
-                    data,
-                    params,
-                    rl,
-                    exec.as_ref(),
-                    &tiles,
-                    &slices,
-                ));
+                let grid = Grid::Restricted(rl.as_ref());
+                stats.merge(&match counting.chunk_for(data.rows()) {
+                    Some(chunk) => fill_tiles_chunked(
+                        data,
+                        params,
+                        &grid,
+                        exec.as_ref(),
+                        &tiles,
+                        &slices,
+                        counting.mode,
+                        chunk,
+                    ),
+                    None => fill_tiles(
+                        data,
+                        params,
+                        &grid,
+                        exec.as_ref(),
+                        &tiles,
+                        &slices,
+                        counting.mode,
+                    ),
+                });
             }
             // Phase B: node-parallel prior fold + in-pool dominance
             // prune + hash row construction. `tile == 0` plans exactly

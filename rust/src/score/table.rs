@@ -8,6 +8,15 @@
 //! the consistency test also rejects them — but the sentinel makes misuse
 //! loud).
 //!
+//! Counting engine (DESIGN.md §14): the subset DFS shares a
+//! [`PrefixCounter`] so descending from π to π∪{m} refines parent-config
+//! codes incrementally. `--counting naive` swaps in the reference
+//! [`CountsWorkspace`] path (full re-encode per cell) — both emit configs
+//! in ascending code order and fold scores through the same math, so the
+//! stores are bit-identical. For large row counts the prefix engine
+//! switches to a chunked mode: row-chunks × tiles fan across the
+//! executor, accumulating partial histograms that merge commutatively.
+//!
 //! `FullScoreTable` is the "all possible parent sets" variant used by the
 //! Table V study: bitmask-indexed, exhaustive over all `2^(n-1)` parent
 //! sets per node, feasible only for small n (the paper hit the same wall —
@@ -16,7 +25,10 @@
 use std::sync::Arc;
 
 use super::bde::{BdeParams, LocalScorer};
-use crate::combinatorics::{RestrictedLayout, SubsetLayout};
+use super::counts::{CountingConfig, CountingMode, CountsWorkspace, DENSE_LIMIT};
+use super::lgamma::log10_gamma;
+use super::prefix::PrefixCounter;
+use crate::combinatorics::{BinomialTable, RestrictedLayout, SubsetLayout};
 use crate::data::Dataset;
 use crate::exec::{
     plan_ragged_tiles, plan_tiles, split_by_tiles, DispatchStats, ExecConfig, KernelExecutor, Tile,
@@ -68,6 +80,20 @@ impl ScoreTable {
         s: usize,
         cfg: &ExecConfig,
     ) -> (Self, DispatchStats) {
+        Self::build_counted_with(data, params, s, cfg, &CountingConfig::default())
+    }
+
+    /// [`Self::build_stats_with`] with an explicit counting-engine
+    /// selection: `counting.mode` picks prefix-cached vs naive
+    /// re-encoding (bit-identical outputs), `counting.chunk_rows`
+    /// controls the row-chunked path for large datasets.
+    pub fn build_counted_with(
+        data: &Dataset,
+        params: BdeParams,
+        s: usize,
+        cfg: &ExecConfig,
+        counting: &CountingConfig,
+    ) -> (Self, DispatchStats) {
         let n = data.cols();
         let layout = SubsetLayout::new(n, s);
         let total = layout.total();
@@ -76,13 +102,29 @@ impl ScoreTable {
         let tiles = plan_tiles(n, total, cfg.tile);
         let exec = cfg.executor();
         let stats = {
+            let grid = Grid::Full(&layout);
             let slices = split_by_tiles(&mut table, &tiles);
-            fill_tiles(data, params, &layout, exec.as_ref(), &tiles, &slices)
+            match counting.chunk_for(data.rows()) {
+                Some(chunk) => fill_tiles_chunked(
+                    data,
+                    params,
+                    &grid,
+                    exec.as_ref(),
+                    &tiles,
+                    &slices,
+                    counting.mode,
+                    chunk,
+                ),
+                None => {
+                    fill_tiles(data, params, &grid, exec.as_ref(), &tiles, &slices, counting.mode)
+                }
+            }
         };
         crate::debug!(
-            "dense build [{n} x {total}] via {}/{}: {}",
+            "dense build [{n} x {total}] via {}/{} ({} counting): {}",
             exec.name(),
             cfg.schedule.name(),
+            counting.mode.name(),
             stats.summary()
         );
         (ScoreTable { layout, n, data: table, restrict: None }, stats)
@@ -111,6 +153,18 @@ impl ScoreTable {
         rl: &Arc<RestrictedLayout>,
         cfg: &ExecConfig,
     ) -> (Self, DispatchStats) {
+        Self::build_restricted_counted_with(data, params, rl, cfg, &CountingConfig::default())
+    }
+
+    /// [`Self::build_restricted_stats_with`] with an explicit
+    /// counting-engine selection (see [`Self::build_counted_with`]).
+    pub fn build_restricted_counted_with(
+        data: &Dataset,
+        params: BdeParams,
+        rl: &Arc<RestrictedLayout>,
+        cfg: &ExecConfig,
+        counting: &CountingConfig,
+    ) -> (Self, DispatchStats) {
         let n = data.cols();
         assert_eq!(rl.n(), n, "restriction and dataset disagree on n");
         let cells = rl.total_cells();
@@ -118,13 +172,29 @@ impl ScoreTable {
         let tiles = plan_ragged_tiles(&rl.row_lens(), cfg.tile);
         let exec = cfg.executor();
         let stats = {
+            let grid = Grid::Restricted(rl.as_ref());
             let slices = split_by_tiles(&mut table, &tiles);
-            fill_tiles_restricted(data, params, rl, exec.as_ref(), &tiles, &slices)
+            match counting.chunk_for(data.rows()) {
+                Some(chunk) => fill_tiles_chunked(
+                    data,
+                    params,
+                    &grid,
+                    exec.as_ref(),
+                    &tiles,
+                    &slices,
+                    counting.mode,
+                    chunk,
+                ),
+                None => {
+                    fill_tiles(data, params, &grid, exec.as_ref(), &tiles, &slices, counting.mode)
+                }
+            }
         };
         crate::debug!(
-            "restricted dense build [{n} rows, {cells} cells] via {}/{}: {}",
+            "restricted dense build [{n} rows, {cells} cells] via {}/{} ({} counting): {}",
             exec.name(),
             cfg.schedule.name(),
+            counting.mode.name(),
             stats.summary()
         );
         (
@@ -279,48 +349,167 @@ pub(crate) fn add_priors_to_restricted_row(
     });
 }
 
-/// [`fill_tiles`] over a restricted layout's ragged rows: each tile
-/// fills cells `[start, end)` of one node's *pool* subset space. Same
-/// per-worker builder lanes, same purity contract — a cell's value
-/// depends only on `(node, global subset)`, never on tile boundaries.
-pub(crate) fn fill_tiles_restricted(
+/// The subset grid a tile lives in: either the shared dense layout
+/// (universe = all n nodes, self-subsets poisoned) or a node's
+/// candidate-pool layout (universe = the pool, never contains the node).
+/// Unifies the previously duplicated dense/pool DFS fillers.
+pub(crate) enum Grid<'g> {
+    Full(&'g SubsetLayout),
+    Restricted(&'g RestrictedLayout),
+}
+
+impl<'g> Grid<'g> {
+    /// Max DFS depth any node's row can need (builder sizing).
+    fn s_build(&self) -> usize {
+        match self {
+            Grid::Full(layout) => layout.s(),
+            Grid::Restricted(rl) => rl.s(),
+        }
+    }
+
+    /// The subset layout governing `node`'s row (dense: the shared
+    /// layout; restricted: the node's pool-local layout with its
+    /// pool-clamped `s`).
+    fn node_layout(&self, node: usize) -> &'g SubsetLayout {
+        match self {
+            Grid::Full(layout) => layout,
+            Grid::Restricted(rl) => rl.local(node),
+        }
+    }
+
+    /// The DFS candidate universe for `node`'s row.
+    fn uni(&self, node: usize) -> Uni<'g> {
+        match self {
+            Grid::Full(layout) => Uni::Full { n: layout.n(), node },
+            Grid::Restricted(rl) => Uni::Pool { pool: rl.pool(node) },
+        }
+    }
+
+    /// Decode the subset (global node ids) at row-local index `idx`.
+    fn subset_of<'b>(&self, node: usize, idx: usize, buf: &'b mut [usize]) -> &'b [usize] {
+        match self {
+            Grid::Full(layout) => layout.subset_of(idx, buf),
+            Grid::Restricted(rl) => rl.subset_of(node, idx, buf),
+        }
+    }
+}
+
+/// DFS candidate universe: positions map to global node ids, and dense
+/// universes contain the node itself (those branches are poisoned).
+enum Uni<'g> {
+    Full { n: usize, node: usize },
+    Pool { pool: &'g [usize] },
+}
+
+impl Uni<'_> {
+    #[inline]
+    fn size(&self) -> usize {
+        match self {
+            Uni::Full { n, .. } => *n,
+            Uni::Pool { pool } => pool.len(),
+        }
+    }
+
+    #[inline]
+    fn gid(&self, pos: usize) -> usize {
+        match self {
+            Uni::Full { .. } => pos,
+            Uni::Pool { pool } => pool[pos],
+        }
+    }
+
+    #[inline]
+    fn is_node(&self, pos: usize) -> bool {
+        match self {
+            Uni::Full { node, .. } => pos == *node,
+            Uni::Pool { .. } => false,
+        }
+    }
+}
+
+/// What the DFS does at each leaf: score it into the tile slice, or
+/// accumulate its chunk-window counts into a partial histogram (the
+/// chunked path's phase 1).
+enum Sink<'o> {
+    Score { out: &'o mut [f32] },
+    Accumulate { hist: &'o mut [u32], leaves: &'o [LeafPlan] },
+}
+
+/// Per-leaf layout of a tile's histogram bank (chunked path).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct LeafPlan {
+    /// Cell offset of this leaf's `q · r_i` histogram in the bank.
+    off: u64,
+    /// Joint parent-config count; `0` marks a poisoned (self-parent)
+    /// leaf with no histogram.
+    q: u32,
+    /// Parent-set size.
+    k: u8,
+}
+
+/// Histogram-bank layout for one tile of the chunked path.
+pub(crate) struct WindowPlan {
+    leaves: Vec<LeafPlan>,
+    cells: u64,
+}
+
+/// Per-tile histogram-bank ceiling for the chunked path; tiles whose
+/// leaf histograms would exceed this fall back to the classic
+/// whole-column fill (zeroing/merging a huge bank per chunk would cost
+/// more than it saves).
+const CHUNK_TILE_CELLS: u64 = 1 << 20;
+
+/// Lay out the histogram bank for `node`'s row-local cells `[lo, hi)`,
+/// or `None` if any leaf is too wide for dense counting (`q` beyond u32
+/// or `q · r_i` beyond the dense limit) or the bank would exceed
+/// [`CHUNK_TILE_CELLS`] — those tiles take the classic path instead.
+pub(crate) fn plan_window(
     data: &Dataset,
-    params: BdeParams,
-    rl: &RestrictedLayout,
-    exec: &dyn KernelExecutor,
-    tiles: &[Tile],
-    slices: &[std::sync::Mutex<&mut [f32]>],
-) -> DispatchStats {
-    debug_assert_eq!(tiles.len(), slices.len());
-    let lanes: Vec<std::sync::Mutex<Option<FastRowBuilder>>> =
-        (0..exec.threads().max(1)).map(|_| std::sync::Mutex::new(None)).collect();
-    let lanes_ref = &lanes;
-    let kernel = move |worker: usize, i: usize| {
-        let t = tiles[i];
-        let mut lane = lanes_ref[worker].lock().expect("builder lane poisoned");
-        let builder = lane.get_or_insert_with(|| FastRowBuilder::new(data, params, rl.s()));
-        let mut guard = slices[i].lock().expect("tile slice poisoned");
-        builder.fill_pool_range(rl, t.node, t.start, t.end, &mut guard);
-    };
-    exec.dispatch_timed(tiles.len(), &kernel)
+    grid: &Grid,
+    node: usize,
+    lo: usize,
+    hi: usize,
+) -> Option<WindowPlan> {
+    let r_i = data.arity(node);
+    let mut buf = vec![0usize; grid.s_build() + 1];
+    let mut leaves = Vec::with_capacity(hi - lo);
+    let mut cells = 0u64;
+    for idx in lo..hi {
+        let subset = grid.subset_of(node, idx, &mut buf);
+        if matches!(grid, Grid::Full(_)) && subset.contains(&node) {
+            leaves.push(LeafPlan { off: 0, q: 0, k: 0 });
+            continue;
+        }
+        let q: u128 =
+            subset.iter().map(|&m| data.arity(m) as u128).product::<u128>().max(1);
+        if q > u32::MAX as u128 || q * r_i as u128 > DENSE_LIMIT as u128 {
+            return None;
+        }
+        leaves.push(LeafPlan { off: cells, q: q as u32, k: subset.len() as u8 });
+        cells += q as u64 * r_i as u64;
+        if cells > CHUNK_TILE_CELLS {
+            return None;
+        }
+    }
+    Some(WindowPlan { leaves, cells })
 }
 
 /// Dispatch pre-split tile slices across `exec`, filling each tile's
 /// cells `[start, end)` of its node's row — the shared fill kernel of
-/// the dense and hash builds.
+/// the dense and hash builds, over either grid flavor.
 ///
 /// Hot path of preprocessing (millions of local scores at n=60). Instead
 /// of re-encoding parent configurations from scratch per subset
 /// (O(k·rows) each), subsets are enumerated as a lexicographic DFS where
-/// each tree level maintains the partial mixed-radix codes of its chosen
-/// parents — one O(rows) update per tree edge, one O(rows) counting pass
-/// per leaf (≈2 row passes per subset instead of k+1). Lexicographic DFS
-/// order == layout order, so the row index is a running counter; branches
-/// containing the node itself — and branches entirely outside the tile's
-/// window — are skipped wholesale with a binomial jump, so a tile pays
-/// only O(depth · rows) to seek to its first cell. Every cell value is a
-/// pure function of `(node, subset)`, independent of the tile boundaries
-/// that computed it.
+/// the [`PrefixCounter`] maintains the partial mixed-radix codes of each
+/// tree level — one O(rows) update per tree edge, one O(rows) counting
+/// pass per leaf (≈2 row passes per subset instead of k+1). Lexicographic
+/// DFS order == layout order, so the row index is a running counter;
+/// branches containing the node itself — and branches entirely outside
+/// the tile's window — are skipped wholesale with a binomial jump, so a
+/// tile pays only O(depth · rows) to seek to its first cell. Every cell
+/// value is a pure function of `(node, subset)`, independent of the tile
+/// boundaries that computed it.
 ///
 /// Builders (with their lgamma tables and scratch buffers) live in
 /// per-worker lanes, created lazily and reused across all the tiles a
@@ -329,40 +518,192 @@ pub(crate) fn fill_tiles_restricted(
 pub(crate) fn fill_tiles(
     data: &Dataset,
     params: BdeParams,
-    layout: &SubsetLayout,
+    grid: &Grid,
     exec: &dyn KernelExecutor,
     tiles: &[Tile],
     slices: &[std::sync::Mutex<&mut [f32]>],
+    mode: CountingMode,
 ) -> DispatchStats {
     debug_assert_eq!(tiles.len(), slices.len());
+    let s_build = grid.s_build();
     let lanes: Vec<std::sync::Mutex<Option<FastRowBuilder>>> =
         (0..exec.threads().max(1)).map(|_| std::sync::Mutex::new(None)).collect();
     let lanes_ref = &lanes;
     let kernel = move |worker: usize, i: usize| {
         let t = tiles[i];
         let mut lane = lanes_ref[worker].lock().expect("builder lane poisoned");
-        let builder = lane.get_or_insert_with(|| FastRowBuilder::new(data, params, layout.s()));
+        let builder =
+            lane.get_or_insert_with(|| FastRowBuilder::new(data, params, s_build, mode));
         let mut guard = slices[i].lock().expect("tile slice poisoned");
-        builder.fill_range(layout, t.node, t.start, t.end, &mut guard);
+        builder.fill_grid_range(grid, t.node, t.start, t.end, &mut guard);
     };
     exec.dispatch_timed(tiles.len(), &kernel)
+}
+
+/// Row-chunked fill for large datasets: phase 1 fans `tiles × chunks`
+/// tasks across the executor, each DFS-walking its tile over one row
+/// chunk (via [`Dataset::chunks`]) and accumulating a *private* partial
+/// histogram that merges into the tile's bank under a short lock; phase 2
+/// scores each tile from its merged bank. u32 histogram adds commute, so
+/// the merged counts — and therefore every emitted score — are
+/// bit-identical to the unchunked prefix path and the naive path for any
+/// chunk size, thread count, or schedule. Tiles the planner declines
+/// (oversized banks, sparse-path leaves) fall back to the classic fill in
+/// phase 2.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fill_tiles_chunked(
+    data: &Dataset,
+    params: BdeParams,
+    grid: &Grid,
+    exec: &dyn KernelExecutor,
+    tiles: &[Tile],
+    slices: &[std::sync::Mutex<&mut [f32]>],
+    mode: CountingMode,
+    chunk_rows: usize,
+) -> DispatchStats {
+    debug_assert_eq!(tiles.len(), slices.len());
+    debug_assert_eq!(mode, CountingMode::Prefix, "only the prefix engine chunks");
+    let chunks: Vec<std::ops::Range<usize>> = data.chunks(chunk_rows).collect();
+    let n_chunks = chunks.len().max(1);
+    let plans: Vec<Option<WindowPlan>> =
+        tiles.iter().map(|t| plan_window(data, grid, t.node, t.start, t.end)).collect();
+    let banks: Vec<std::sync::Mutex<Vec<u32>>> = plans
+        .iter()
+        .map(|p| {
+            let bank = p.as_ref().map(|p| vec![0u32; p.cells as usize]).unwrap_or_default();
+            std::sync::Mutex::new(bank)
+        })
+        .collect();
+    let s_build = grid.s_build();
+    let lanes: Vec<std::sync::Mutex<Option<FastRowBuilder>>> =
+        (0..exec.threads().max(1)).map(|_| std::sync::Mutex::new(None)).collect();
+    let lanes_ref = &lanes;
+    let plans_ref = &plans;
+    let banks_ref = &banks;
+    let chunks_ref = &chunks;
+
+    // Phase 1: partial-histogram accumulation over (tile × chunk) tasks.
+    let accumulate = move |worker: usize, task: usize| {
+        let ti = task / n_chunks;
+        let plan = match &plans_ref[ti] {
+            Some(p) => p,
+            None => return, // classic fallback handles this tile in phase 2
+        };
+        let chunk = chunks_ref[task % n_chunks].clone();
+        let t = tiles[ti];
+        let mut lane = lanes_ref[worker].lock().expect("builder lane poisoned");
+        let builder =
+            lane.get_or_insert_with(|| FastRowBuilder::new(data, params, s_build, mode));
+        builder.accumulate_chunk(grid, t.node, t.start, t.end, plan, chunk.start, chunk.end);
+        let cells = plan.cells as usize;
+        let mut bank = banks_ref[ti].lock().expect("histogram bank poisoned");
+        for (b, &h) in bank.iter_mut().zip(&builder.hist[..cells]) {
+            *b += h;
+        }
+    };
+    let mut stats = exec.dispatch_timed(tiles.len() * n_chunks, &accumulate);
+
+    // Phase 2: score each tile from its merged bank.
+    let score = move |worker: usize, ti: usize| {
+        let t = tiles[ti];
+        let mut lane = lanes_ref[worker].lock().expect("builder lane poisoned");
+        let builder =
+            lane.get_or_insert_with(|| FastRowBuilder::new(data, params, s_build, mode));
+        let mut guard = slices[ti].lock().expect("tile slice poisoned");
+        match &plans_ref[ti] {
+            Some(plan) => {
+                let bank = banks_ref[ti].lock().expect("histogram bank poisoned");
+                builder.score_window_from_hist(t.node, plan, &bank, &mut guard);
+            }
+            None => builder.fill_grid_range(grid, t.node, t.start, t.end, &mut guard),
+        }
+    };
+    stats.merge(&exec.dispatch_timed(tiles.len(), &score));
+    stats
+}
+
+/// Per-leaf Dirichlet-prior constants of Eq. (4), fixed by `(prior, r_i,
+/// q_i)`. Computed once per leaf so the per-config fold is identical
+/// across the naive, prefix, and chunked paths.
+struct LeafMath {
+    k2: bool,
+    alpha_ik: f64,
+    alpha_ijk: f64,
+    lg_alpha_ik: f64,
+    lg_alpha_ijk: f64,
+}
+
+fn leaf_math(params: &BdeParams, r_i: usize, q_f64: f64) -> LeafMath {
+    match params.prior {
+        crate::score::bde::DirichletPrior::K2 => LeafMath {
+            k2: true,
+            alpha_ik: 0.0,
+            alpha_ijk: 0.0,
+            lg_alpha_ik: 0.0,
+            lg_alpha_ijk: 0.0,
+        },
+        crate::score::bde::DirichletPrior::BDeu { ess } => {
+            let alpha_ijk = ess / (q_f64 * r_i as f64);
+            let alpha_ik = ess / q_f64;
+            LeafMath {
+                k2: false,
+                alpha_ik,
+                alpha_ijk,
+                lg_alpha_ik: log10_gamma(alpha_ik),
+                lg_alpha_ijk: log10_gamma(alpha_ijk),
+            }
+        }
+    }
+}
+
+/// Fold one observed parent configuration into the Eq. (4) accumulator.
+/// This is the *single* scoring kernel shared by every counting path —
+/// identical op order is what keeps `--counting naive|prefix` and the
+/// chunked mode bit-identical.
+#[inline]
+fn fold_config(
+    lg_int: &[f64],
+    r_i: usize,
+    math: &LeafMath,
+    n_ik: u32,
+    counts: &[u32],
+    acc: &mut f64,
+) {
+    if math.k2 {
+        // Integer fast path: α_ijk = 1, α_ik = r_i — every lgamma
+        // argument is an integer, served from the lg_int table.
+        *acc += lg_int[r_i] - lg_int[r_i + n_ik as usize];
+        for &c in counts {
+            // log10 Γ(c+1) − log10 Γ(1); Γ(1) term is 0.
+            *acc += lg_int[c as usize + 1];
+        }
+    } else {
+        *acc += math.lg_alpha_ik - log10_gamma(math.alpha_ik + n_ik as f64);
+        for &c in counts {
+            if c > 0 {
+                *acc += log10_gamma(c as f64 + math.alpha_ijk) - math.lg_alpha_ijk;
+            }
+        }
+    }
 }
 
 /// DFS-based row filler (see [`fill_tiles`]).
 struct FastRowBuilder<'a> {
     data: &'a crate::data::Dataset,
     params: BdeParams,
-    /// `codes[level][row]` — mixed-radix parent config after `level`
-    /// chosen parents (level 0 = all zeros).
-    codes: Vec<Vec<u32>>,
-    /// Radix stride entering each level (product of chosen arities).
-    strides: Vec<u32>,
-    dense: Vec<u32>,
-    touched: Vec<u32>,
-    /// First-touch detection per config without rescanning count cells:
-    /// `stamp[code] == epoch` ⇔ config already seen this leaf.
-    stamp: Vec<u32>,
-    epoch: u32,
+    /// Engine selection: prefix-cached codes vs naive per-leaf re-encode.
+    mode: CountingMode,
+    /// Prefix-cached config codes aligned with the DFS stack.
+    pc: PrefixCounter,
+    /// Global ids of the DFS path's chosen parents (the naive path and
+    /// the wide/sparse fallbacks re-encode from this).
+    chosen: Vec<usize>,
+    /// Reference counting path (naive mode; sparse/wide fallback in
+    /// prefix mode).
+    ws: CountsWorkspace,
+    /// Private partial histogram for the chunked path (merged into the
+    /// tile bank after each chunk task).
+    hist: Vec<u32>,
     log10_gamma: f64,
     /// `lg_int[m] = log10 Γ(m)` for integer m — with the K2 prior every
     /// lgamma argument in Eq. (4) is an integer bounded by rows + max
@@ -372,7 +713,12 @@ struct FastRowBuilder<'a> {
 }
 
 impl<'a> FastRowBuilder<'a> {
-    fn new(data: &'a crate::data::Dataset, params: BdeParams, s: usize) -> Self {
+    fn new(
+        data: &'a crate::data::Dataset,
+        params: BdeParams,
+        s: usize,
+        mode: CountingMode,
+    ) -> Self {
         let rows = data.rows();
         let r_max = (0..data.cols()).map(|i| data.arity(i)).max().unwrap_or(2);
         let lg_max = rows + r_max + 2;
@@ -387,347 +733,291 @@ impl<'a> FastRowBuilder<'a> {
         FastRowBuilder {
             data,
             params,
-            codes: vec![vec![0u32; rows]; s + 1],
-            strides: vec![1; s + 2],
-            dense: Vec::new(),
-            touched: Vec::with_capacity(rows.min(4096)),
-            stamp: Vec::new(),
-            epoch: 0,
+            mode,
+            pc: PrefixCounter::new(s),
+            chosen: Vec::with_capacity(s + 1),
+            ws: CountsWorkspace::new(),
+            hist: Vec::new(),
             log10_gamma: params.gamma.log10(),
             lg_int,
         }
     }
 
-    /// Fill the global-index window `[lo, hi)` of `node`'s row into
-    /// `out` (`out.len() == hi - lo`). Blocks and DFS branches fully
-    /// outside the window are skipped with their binomial leaf counts;
-    /// cells inside are computed exactly as a full-row fill would.
-    fn fill_range(
+    /// Fill the row-local index window `[lo, hi)` of `node`'s row into
+    /// `out` (`out.len() == hi - lo`) over whole columns. Blocks and DFS
+    /// branches fully outside the window are skipped with their binomial
+    /// leaf counts; cells inside are computed exactly as a full-row fill
+    /// would.
+    pub(crate) fn fill_grid_range(
         &mut self,
-        layout: &SubsetLayout,
+        grid: &Grid,
         node: usize,
         lo: usize,
         hi: usize,
         out: &mut [f32],
     ) {
         debug_assert_eq!(out.len(), hi - lo);
-        debug_assert!(hi <= layout.total());
-        let n = layout.n();
+        self.pc.set_window(0, self.data.rows());
+        self.chosen.clear();
+        let mut sink = Sink::Score { out };
+        self.walk(grid, node, lo, hi, &mut sink);
+    }
+
+    /// Chunked phase 1: accumulate `node`'s cells `[lo, hi)` over data
+    /// rows `[clo, chi)` into the private `hist` partial (zeroed here;
+    /// caller merges it into the tile bank).
+    fn accumulate_chunk(
+        &mut self,
+        grid: &Grid,
+        node: usize,
+        lo: usize,
+        hi: usize,
+        plan: &WindowPlan,
+        clo: usize,
+        chi: usize,
+    ) {
+        debug_assert_eq!(self.mode, CountingMode::Prefix);
+        let cells = plan.cells as usize;
+        if self.hist.len() < cells {
+            self.hist.resize(cells, 0);
+        }
+        self.hist[..cells].iter_mut().for_each(|c| *c = 0);
+        self.pc.set_window(clo, chi);
+        self.chosen.clear();
+        let mut hist = std::mem::take(&mut self.hist);
+        {
+            let mut sink = Sink::Accumulate { hist: &mut hist[..cells], leaves: &plan.leaves };
+            self.walk(grid, node, lo, hi, &mut sink);
+        }
+        self.hist = hist;
+    }
+
+    /// Chunked phase 2: score every leaf of the plan from the merged
+    /// histogram bank. The per-config scan runs in ascending code order
+    /// skipping unobserved configs — exactly the emission order of the
+    /// unchunked counting paths, so the f64 fold is bit-identical.
+    fn score_window_from_hist(
+        &mut self,
+        node: usize,
+        plan: &WindowPlan,
+        hist: &[u32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), plan.leaves.len());
+        let r_i = self.data.arity(node);
+        for (j, lp) in plan.leaves.iter().enumerate() {
+            if lp.q == 0 {
+                out[j] = NEG_SENTINEL;
+                continue;
+            }
+            let q = lp.q as usize;
+            let math = leaf_math(&self.params, r_i, q as f64);
+            let mut acc = lp.k as f64 * self.log10_gamma;
+            let base = lp.off as usize;
+            for code in 0..q {
+                let counts = &hist[base + code * r_i..base + (code + 1) * r_i];
+                let n_ik: u32 = counts.iter().sum();
+                if n_ik == 0 {
+                    continue;
+                }
+                fold_config(&self.lg_int, r_i, &math, n_ik, counts, &mut acc);
+            }
+            out[j] = acc as f32;
+        }
+    }
+
+    /// Size-block loop shared by both grid flavors: sizes run s, s−1, …,
+    /// 0 (layout order), with whole blocks outside `[lo, hi)` skipped by
+    /// their binomial counts.
+    fn walk(&mut self, grid: &Grid, node: usize, lo: usize, hi: usize, sink: &mut Sink) {
+        let layout = grid.node_layout(node);
+        let uni = grid.uni(node);
         let s = layout.s();
         let bt = layout.binomials();
+        let size = uni.size();
         let mut idx = 0usize;
         for d in 0..=s {
             let k = s - d;
-            if k > n {
+            if k > size {
                 continue;
             }
             if idx >= hi {
                 break;
             }
             if k == 0 {
-                if idx >= lo && idx < hi {
-                    out[idx - lo] = self.score_leaf(node, 0, 1) as f32;
+                if idx >= lo {
+                    self.leaf(node, 0, lo, sink, &mut idx);
+                } else {
+                    idx += 1;
                 }
-                idx += 1;
                 continue;
             }
-            let block = bt.c(n, k) as usize;
+            let block = bt.c(size, k) as usize;
             if idx + block <= lo {
                 idx += block; // whole size block precedes the window
                 continue;
             }
-            self.dfs_range(bt, n, node, k, 1, 0, lo, hi, out, &mut idx);
+            self.dfs(bt, &uni, node, k, 1, 0, lo, hi, sink, &mut idx);
         }
         debug_assert!(idx >= hi);
     }
 
     /// Choose the parent for `level` (1-based) from `start..`, recursing
-    /// until `level == k`, scoring at leaves inside `[lo, hi)`. `idx`
-    /// tracks the *global* layout index (lexicographic DFS == layout
-    /// order within the size block); writes land at `out[idx - lo]`.
+    /// until `level == k`, acting at leaves inside `[lo, hi)`. `idx`
+    /// tracks the row-local layout index (lexicographic DFS == layout
+    /// order within the size block).
     #[allow(clippy::too_many_arguments)]
-    fn dfs_range(
+    fn dfs(
         &mut self,
-        bt: &crate::combinatorics::BinomialTable,
-        n: usize,
+        bt: &BinomialTable,
+        uni: &Uni,
         node: usize,
         k: usize,
         level: usize,
         start: usize,
         lo: usize,
         hi: usize,
-        out: &mut [f32],
+        sink: &mut Sink,
         idx: &mut usize,
     ) {
-        // Candidates at this level: start ..= n - (k - level + 1).
-        for cand in start..=(n - (k - level + 1)) {
+        let size = uni.size();
+        // Candidates at this level: start ..= size - (k - level + 1).
+        for cand in start..=(size - (k - level + 1)) {
             if *idx >= hi {
                 return; // rest of this subtree is past the window
             }
-            let completions = bt.c(n - cand - 1, k - level) as usize;
+            let completions = bt.c(size - cand - 1, k - level) as usize;
             if *idx + completions <= lo {
                 // Entire branch precedes the window — binomial jump, no
                 // code extension needed.
                 *idx += completions;
                 continue;
             }
-            if cand == node {
+            if uni.is_node(cand) {
                 // Every subset under this branch contains `node` —
-                // poison the in-window part.
+                // poison the in-window part (histogram plans mark these
+                // leaves q = 0; the accumulator just jumps them).
                 let a = (*idx).max(lo);
                 let b = (*idx + completions).min(hi);
                 if a < b {
-                    out[a - lo..b - lo].fill(NEG_SENTINEL);
+                    if let Sink::Score { out } = sink {
+                        out[a - lo..b - lo].fill(NEG_SENTINEL);
+                    }
                 }
                 *idx += completions;
                 continue;
             }
-            // Extend codes: codes[level] = codes[level-1] + value * stride.
-            let arity = self.data.arity(cand) as u32;
-            let stride = self.strides[level];
-            {
-                let (prev, cur) = {
-                    let (a, b) = self.codes.split_at_mut(level);
-                    (&a[level - 1], &mut b[0])
-                };
-                let col = self.data.column(cand);
-                if stride == 1 {
-                    for ((c, &p), &v) in cur.iter_mut().zip(prev.iter()).zip(col) {
-                        *c = p + v as u32;
-                    }
-                } else {
-                    for ((c, &p), &v) in cur.iter_mut().zip(prev.iter()).zip(col) {
-                        *c = p + v as u32 * stride;
-                    }
-                }
+            let gid = uni.gid(cand);
+            let arity = self.data.arity(gid);
+            if self.mode == CountingMode::Prefix {
+                // A failed push (u32 overflow) flags the depth; affected
+                // leaves detect it via their arity product and take the
+                // naive fallback.
+                self.pc.push_level(level - 1, self.data.column(gid), arity);
             }
-            self.strides[level + 1] = stride * arity;
-
+            self.chosen.push(gid);
             if level == k {
                 // completions == 1 and the guards above put idx in
                 // [lo, hi), so this leaf is in the window.
-                out[*idx - lo] = self.score_leaf(node, k, level) as f32;
-                *idx += 1;
+                self.leaf(node, k, lo, sink, idx);
             } else {
-                self.dfs_range(bt, n, node, k, level + 1, cand + 1, lo, hi, out, idx);
+                self.dfs(bt, uni, node, k, level + 1, cand + 1, lo, hi, sink, idx);
             }
+            self.chosen.pop();
         }
     }
 
-    /// Restricted-row variant of [`Self::fill_range`]: fill the
-    /// local-cell window `[lo, hi)` of `node`'s **pool** subset space
-    /// into `out`. The DFS runs over pool *positions* (universe size
-    /// `k_i`), mapping each chosen position to its global node id for
-    /// column/arity access — so with a full pool the code-extension
-    /// sequence (and every resulting f32) matches the unrestricted fill
-    /// exactly. Pools never contain the node itself, so no poison
-    /// branch is needed.
-    fn fill_pool_range(
-        &mut self,
-        rl: &RestrictedLayout,
-        node: usize,
-        lo: usize,
-        hi: usize,
-        out: &mut [f32],
-    ) {
-        debug_assert_eq!(out.len(), hi - lo);
-        let local = rl.local(node);
-        debug_assert!(hi <= local.total());
-        let pool = rl.pool(node);
-        let k_universe = pool.len();
-        let s = local.s();
-        let bt = local.binomials();
-        let mut idx = 0usize;
-        for d in 0..=s {
-            let k = s - d;
-            if idx >= hi {
-                break;
+    /// Act on the leaf at `*idx` (guaranteed in-window): score it or
+    /// accumulate its chunk counts. Advances `idx`.
+    fn leaf(&mut self, node: usize, k: usize, lo: usize, sink: &mut Sink, idx: &mut usize) {
+        match sink {
+            Sink::Score { out } => {
+                out[*idx - lo] = self.score_leaf(node, k) as f32;
             }
-            if k == 0 {
-                if idx >= lo && idx < hi {
-                    out[idx - lo] = self.score_leaf(node, 0, 1) as f32;
-                }
-                idx += 1;
-                continue;
+            Sink::Accumulate { hist, leaves } => {
+                let lp = &leaves[*idx - lo];
+                debug_assert!(lp.q > 0, "accumulate reached a poisoned leaf");
+                let r_i = self.data.arity(node);
+                let base = lp.off as usize;
+                let cells = lp.q as usize * r_i;
+                self.pc.accumulate_window(
+                    k,
+                    self.data.column(node),
+                    r_i,
+                    &mut hist[base..base + cells],
+                );
             }
-            let block = bt.c(k_universe, k) as usize;
-            if idx + block <= lo {
-                idx += block; // whole size block precedes the window
-                continue;
-            }
-            self.dfs_pool_range(bt, pool, node, k, 1, 0, lo, hi, out, &mut idx);
         }
-        debug_assert!(idx >= hi);
+        *idx += 1;
     }
 
-    /// Pool-position DFS body of [`Self::fill_pool_range`] — the
-    /// [`Self::dfs_range`] recursion with the universe swapped from
-    /// `{0..n-1}` to the candidate pool (positions `0..k_i`, global ids
-    /// via `pool[pos]`).
-    #[allow(clippy::too_many_arguments)]
-    fn dfs_pool_range(
+    /// Exhaustive bitmask mode: score **all** subsets of
+    /// `{0..n-1} \ {node}` (up to n−1 parents) into `row[bitmask]`.
+    /// Caller pre-poisons the row.
+    fn fill_masks(&mut self, n: usize, node: usize, row: &mut [f32]) {
+        self.pc.set_window(0, self.data.rows());
+        self.chosen.clear();
+        row[0] = self.score_leaf(node, 0) as f32;
+        self.dfs_masks(n, node, 1, 0, 0, row);
+    }
+
+    /// DFS body of [`Self::fill_masks`]: every DFS node *is* a subset —
+    /// score it, then extend.
+    fn dfs_masks(
         &mut self,
-        bt: &crate::combinatorics::BinomialTable,
-        pool: &[usize],
+        n: usize,
         node: usize,
-        k: usize,
         level: usize,
         start: usize,
-        lo: usize,
-        hi: usize,
-        out: &mut [f32],
-        idx: &mut usize,
+        mask: usize,
+        row: &mut [f32],
     ) {
-        let k_universe = pool.len();
-        for cand in start..=(k_universe - (k - level + 1)) {
-            if *idx >= hi {
-                return; // rest of this subtree is past the window
-            }
-            let completions = bt.c(k_universe - cand - 1, k - level) as usize;
-            if *idx + completions <= lo {
-                *idx += completions;
-                continue;
-            }
-            let gid = pool[cand];
-            debug_assert_ne!(gid, node, "pools never contain the node");
-            let arity = self.data.arity(gid) as u32;
-            let stride = self.strides[level];
-            {
-                let (prev, cur) = {
-                    let (a, b) = self.codes.split_at_mut(level);
-                    (&a[level - 1], &mut b[0])
-                };
-                let col = self.data.column(gid);
-                if stride == 1 {
-                    for ((c, &p), &v) in cur.iter_mut().zip(prev.iter()).zip(col) {
-                        *c = p + v as u32;
-                    }
-                } else {
-                    for ((c, &p), &v) in cur.iter_mut().zip(prev.iter()).zip(col) {
-                        *c = p + v as u32 * stride;
-                    }
-                }
-            }
-            self.strides[level + 1] = stride * arity;
-
-            if level == k {
-                out[*idx - lo] = self.score_leaf(node, k, level) as f32;
-                *idx += 1;
-            } else {
-                self.dfs_pool_range(bt, pool, node, k, level + 1, cand + 1, lo, hi, out, idx);
-            }
-        }
-    }
-
-    /// DFS over **all** subsets of `{0..n-1} \ {node}` (exhaustive mode,
-    /// up to n-1 parents), writing Eq. (4) into `row[bitmask]`. Shares the
-    /// per-level code buffers exactly like the bounded DFS. Caller
-    /// pre-poisons the row.
-    fn dfs_masks(&mut self, n: usize, node: usize, level: usize, start: usize, mask: usize, row: &mut [f32]) {
         for cand in start..n {
             if cand == node {
                 continue;
             }
-            let arity = self.data.arity(cand) as u32;
-            let stride = self.strides[level];
-            {
-                let (prev, cur) = {
-                    let (a, b) = self.codes.split_at_mut(level);
-                    (&a[level - 1], &mut b[0])
-                };
-                let col = self.data.column(cand);
-                if stride == 1 {
-                    for ((c, &p), &v) in cur.iter_mut().zip(prev.iter()).zip(col) {
-                        *c = p + v as u32;
-                    }
-                } else {
-                    for ((c, &p), &v) in cur.iter_mut().zip(prev.iter()).zip(col) {
-                        *c = p + v as u32 * stride;
-                    }
-                }
+            let arity = self.data.arity(cand);
+            if self.mode == CountingMode::Prefix {
+                self.pc.push_level(level - 1, self.data.column(cand), arity);
             }
-            self.strides[level + 1] = stride * arity;
+            self.chosen.push(cand);
             let new_mask = mask | (1 << cand);
-            // This DFS node *is* the subset — score it, then extend.
-            // score_leaf reads codes[k]/strides[k+1] with k = level.
-            row[new_mask] = self.score_leaf(node, level, level) as f32;
+            row[new_mask] = self.score_leaf(node, level) as f32;
             self.dfs_masks(n, node, level + 1, cand + 1, new_mask, row);
+            self.chosen.pop();
         }
     }
 
-    /// Equation (4) at a leaf: counts from `codes[k]`, K2/BDeu math.
-    fn score_leaf(&mut self, node: usize, k: usize, _level: usize) -> f64 {
-        let r_i = self.data.arity(node);
-        // At a leaf, `dfs` has set strides[k+1] = Π chosen arities = q_i.
-        let q_i = if k == 0 { 1 } else { self.strides[k + 1] as usize };
-        let (alpha_ijk, alpha_ik) = match self.params.prior {
-            crate::score::bde::DirichletPrior::K2 => (1.0f64, r_i as f64),
-            crate::score::bde::DirichletPrior::BDeu { ess } => {
-                let a = ess / (q_i as f64 * r_i as f64);
-                (a, ess / q_i as f64)
-            }
-        };
-        let cells = q_i * r_i;
-        if self.dense.len() < cells {
-            self.dense.resize(cells, 0);
-        }
-        if self.stamp.len() < q_i {
-            self.stamp.resize(q_i, u32::MAX);
-        }
-        self.touched.clear();
-        self.epoch = self.epoch.wrapping_add(1);
-        let epoch = self.epoch;
-
-        let node_col = self.data.column(node);
-        let codes = &self.codes[k];
-        for (row_i, &code) in codes.iter().enumerate() {
-            let c = code as usize;
-            if self.stamp[c] != epoch {
-                self.stamp[c] = epoch;
-                self.touched.push(code);
-            }
-            self.dense[c * r_i + node_col[row_i] as usize] += 1;
-        }
-
-        let mut acc = k as f64 * self.log10_gamma;
-        let k2 = matches!(self.params.prior, crate::score::bde::DirichletPrior::K2);
-        if k2 {
-            // Integer fast path: α_ijk = 1, α_ik = r_i.
-            let lg_r = self.lg_int[r_i];
-            for &code in &self.touched {
-                let base = code as usize * r_i;
-                let counts = &self.dense[base..base + r_i];
-                let n_ik: u32 = counts.iter().sum();
-                acc += lg_r - self.lg_int[r_i + n_ik as usize];
-                for &c in counts {
-                    // log10 Γ(c+1) − log10 Γ(1); Γ(1) term is 0.
-                    acc += self.lg_int[c as usize + 1];
-                }
-            }
+    /// Equation (4) at a leaf: counts over the chosen parent set, folded
+    /// through [`fold_config`]. Prefix mode counts from the cached
+    /// depth-`k` codes; naive mode — and prefix leaves that outgrew the
+    /// dense/u32 envelope — re-encode through the reference
+    /// [`CountsWorkspace`] (both engines share the sparse path, keeping
+    /// them bit-identical there too).
+    fn score_leaf(&mut self, node: usize, k: usize) -> f64 {
+        let FastRowBuilder { data, params, mode, pc, ws, chosen, lg_int, log10_gamma, .. } = self;
+        let data: &Dataset = data;
+        let lg_int: &[f64] = lg_int;
+        let r_i = data.arity(node);
+        let q_wide: u128 =
+            chosen.iter().map(|&m| data.arity(m) as u128).product::<u128>().max(1);
+        let math = leaf_math(params, r_i, q_wide as f64);
+        let mut acc = k as f64 * *log10_gamma;
+        let dense_ok = q_wide <= u32::MAX as u128
+            && (q_wide as u64).saturating_mul(r_i as u64) <= DENSE_LIMIT as u64;
+        if *mode == CountingMode::Prefix && dense_ok {
+            debug_assert_eq!(pc.q_at(k), Some(q_wide as usize));
+            pc.count_window(k, data.column(node), r_i, |n_ik, counts| {
+                fold_config(lg_int, r_i, &math, n_ik, counts, &mut acc)
+            });
         } else {
-            let lg_alpha_ik = crate::score::lgamma::log10_gamma(alpha_ik);
-            let lg_alpha_ijk = crate::score::lgamma::log10_gamma(alpha_ijk);
-            for &code in &self.touched {
-                let base = code as usize * r_i;
-                let counts = &self.dense[base..base + r_i];
-                let n_ik: u32 = counts.iter().sum();
-                acc += lg_alpha_ik - crate::score::lgamma::log10_gamma(alpha_ik + n_ik as f64);
-                for &c in counts {
-                    if c > 0 {
-                        acc += crate::score::lgamma::log10_gamma(c as f64 + alpha_ijk)
-                            - lg_alpha_ijk;
-                    }
-                }
-            }
-        }
-        for &code in &self.touched {
-            let base = code as usize * r_i;
-            self.dense[base..base + r_i].iter_mut().for_each(|c| *c = 0);
+            ws.for_each_config(data, node, chosen, |n_ik, counts| {
+                fold_config(lg_int, r_i, &math, n_ik, counts, &mut acc)
+            });
         }
         acc
     }
 }
-
 
 /// Exhaustive bitmask-indexed table: `ls(i, π)` for **every** subset π of
 /// the other nodes (the paper's "all possible parent sets" configuration).
@@ -765,11 +1055,15 @@ impl FullScoreTable {
             for mine in buckets {
                 scope.spawn(move || {
                     if dense_ok {
-                        let mut builder = FastRowBuilder::new(data, params, n.saturating_sub(1));
+                        let mut builder = FastRowBuilder::new(
+                            data,
+                            params,
+                            n.saturating_sub(1),
+                            CountingMode::Prefix,
+                        );
                         for (i, row) in mine {
                             row.fill(NEG_SENTINEL);
-                            row[0] = builder.score_leaf(i, 0, 0) as f32;
-                            builder.dfs_masks(n, i, 1, 0, 0, row);
+                            builder.fill_masks(n, i, row);
                         }
                     } else {
                         let mut scorer = LocalScorer::new(data, params);
@@ -872,6 +1166,67 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The counting-engine toggle never changes a byte: naive re-encode,
+    /// unchunked prefix, and chunked prefix (several chunk sizes) all
+    /// emit identical stores, dense and restricted.
+    #[test]
+    fn counting_modes_are_bit_identical() {
+        use crate::combinatorics::RestrictedLayout;
+        let data = small_data(6, 130, 52);
+        let params = BdeParams::default();
+        let cfg = ExecConfig::balanced(3);
+        let naive =
+            ScoreTable::build_counted_with(&data, params, 3, &cfg, &CountingConfig::naive()).0;
+        let prefix =
+            ScoreTable::build_counted_with(&data, params, 3, &cfg, &CountingConfig::prefix()).0;
+        assert_eq!(naive.raw(), prefix.raw());
+        for chunk_rows in [16usize, 64, 129] {
+            let chunked = CountingConfig { mode: CountingMode::Prefix, chunk_rows };
+            let table = ScoreTable::build_counted_with(&data, params, 3, &cfg, &chunked).0;
+            assert_eq!(naive.raw(), table.raw(), "chunk_rows={chunk_rows}");
+        }
+        let rl = std::sync::Arc::new(RestrictedLayout::full_pools(6, 3));
+        let rnaive = ScoreTable::build_restricted_counted_with(
+            &data,
+            params,
+            &rl,
+            &cfg,
+            &CountingConfig::naive(),
+        )
+        .0;
+        let rprefix = ScoreTable::build_restricted_counted_with(
+            &data,
+            params,
+            &rl,
+            &cfg,
+            &CountingConfig::prefix(),
+        )
+        .0;
+        assert_eq!(rnaive.raw(), rprefix.raw());
+        let chunked = CountingConfig { mode: CountingMode::Prefix, chunk_rows: 32 };
+        let rchunked =
+            ScoreTable::build_restricted_counted_with(&data, params, &rl, &cfg, &chunked).0;
+        assert_eq!(rnaive.raw(), rchunked.raw());
+    }
+
+    /// Counting modes also agree under the BDeu prior (non-integer
+    /// lgamma path) — the shared fold covers both priors.
+    #[test]
+    fn counting_modes_agree_under_bdeu() {
+        use crate::score::bde::DirichletPrior;
+        let data = small_data(5, 90, 53);
+        let params = BdeParams { prior: DirichletPrior::BDeu { ess: 2.0 }, ..BdeParams::default() };
+        let cfg = ExecConfig::balanced(2);
+        let naive =
+            ScoreTable::build_counted_with(&data, params, 3, &cfg, &CountingConfig::naive()).0;
+        let prefix =
+            ScoreTable::build_counted_with(&data, params, 3, &cfg, &CountingConfig::prefix()).0;
+        assert_eq!(naive.raw(), prefix.raw());
+        let chunked = CountingConfig { mode: CountingMode::Prefix, chunk_rows: 17 };
+        let table = ScoreTable::build_counted_with(&data, params, 3, &cfg, &chunked).0;
+        assert_eq!(naive.raw(), table.raw());
     }
 
     /// Regression for the old `threads.max(1).min(n)` clamp: with

@@ -1,0 +1,332 @@
+//! The counting-engine contract, end to end: `--counting naive` and
+//! `--counting prefix` (chunked or not) are bit-for-bit interchangeable.
+//!
+//! Three layers of evidence:
+//!   1. counts — `PrefixCounter` and `CountsWorkspace` agree with a
+//!      BTreeMap oracle on every (n_ik, N_ijk) emission, in order, across
+//!      random datasets including sparse and wide-code shapes;
+//!   2. stores — dense, hash, and restricted builds produce identical
+//!      bytes/rows for every mode × chunking combination;
+//!   3. trajectories — full learning runs are identical under either
+//!      engine, and the auto-chunked path survives a 10^6-row workload.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use bnlearn::bn::sampling::forward_sample;
+use bnlearn::bn::Network;
+use bnlearn::combinatorics::RestrictedLayout;
+use bnlearn::coordinator::{run_learning, RunConfig};
+use bnlearn::data::Dataset;
+use bnlearn::exec::{ExecConfig, Schedule};
+use bnlearn::score::{
+    BdeParams, CountingConfig, CountingMode, CountsWorkspace, HashScoreStore, PrefixCounter,
+    ScoreStore, ScoreTable,
+};
+use bnlearn::util::Pcg32;
+
+/// Random dataset with explicit per-column arities — uniform cells, so
+/// every config shows up and sparse paths still see collisions.
+fn random_data(arities: &[usize], rows: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let columns = arities
+        .iter()
+        .map(|&r| (0..rows).map(|_| rng.gen_range(r) as u8).collect())
+        .collect();
+    Dataset::from_columns(columns, arities.to_vec())
+}
+
+/// Mixed-arity forward-sampled workload (same shape as the exec tests).
+fn workload(n: usize, rows: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let dag = bnlearn::bn::random::random_dag(n, 3, n + 2, &mut rng);
+    let arities: Vec<usize> = (0..n).map(|i| if i % 4 == 0 { 4 } else { 2 }).collect();
+    let net = Network::with_random_cpts(dag, arities, &mut rng);
+    forward_sample(&net, rows, &mut rng)
+}
+
+/// Ground-truth counts over `lo..hi`: mixed-radix code (first parent
+/// fastest, u128 so wide shapes are exact) → per-state histogram, in
+/// ascending code order — the canonical emission contract.
+fn oracle(
+    data: &Dataset,
+    node: usize,
+    parents: &[usize],
+    lo: usize,
+    hi: usize,
+) -> Vec<(u32, Vec<u32>)> {
+    let r_i = data.arity(node);
+    let mut map: BTreeMap<u128, Vec<u32>> = BTreeMap::new();
+    for row in lo..hi {
+        let mut code: u128 = 0;
+        let mut stride: u128 = 1;
+        for &p in parents {
+            code += data.value(row, p) as u128 * stride;
+            stride *= data.arity(p) as u128;
+        }
+        let counts = map.entry(code).or_insert_with(|| vec![0u32; r_i]);
+        counts[data.value(row, node) as usize] += 1;
+    }
+    map.into_values().map(|c| (c.iter().sum(), c)).collect()
+}
+
+fn collect_naive(
+    ws: &mut CountsWorkspace,
+    data: &Dataset,
+    node: usize,
+    parents: &[usize],
+) -> Vec<(u32, Vec<u32>)> {
+    let mut out = Vec::new();
+    ws.for_each_config(data, node, parents, |n_ik, counts| {
+        out.push((n_ik, counts.to_vec()));
+    });
+    out
+}
+
+/// Naive counting matches the oracle on dense, sparse (cells beyond the
+/// dense limit), and wide (q beyond u32) shapes — same values, same
+/// ascending order.
+#[test]
+fn naive_counts_match_oracle_across_shapes() {
+    let shapes: &[(&[usize], usize, u64)] = &[
+        (&[2, 3, 2, 4, 2, 3], 500, 11),       // small dense
+        (&[5, 7, 3, 2, 6], 257, 12),          // mixed arity, odd row count
+        (&[200, 200, 200, 4, 3], 300, 13),    // 3 parents of 200 -> sparse
+        (&[200, 200, 200, 200, 200, 3], 120, 14), // 5 parents of 200 -> wide codes
+    ];
+    let mut ws = CountsWorkspace::new();
+    for &(arities, rows, seed) in shapes {
+        let data = random_data(arities, rows, seed);
+        let n = data.cols();
+        let mut rng = Pcg32::new(seed ^ 0xabcd);
+        for node in 0..n {
+            // k = n-1 takes every other column as a parent: on the
+            // high-arity shapes that pushes q past u32 into the wide path.
+            for k in 0..n {
+                let mut parents: Vec<usize> =
+                    (0..n).filter(|&c| c != node).collect();
+                rng.shuffle(&mut parents);
+                parents.truncate(k);
+                let got = collect_naive(&mut ws, &data, node, &parents);
+                let want = oracle(&data, node, &parents, 0, rows);
+                assert_eq!(got, want, "arities {arities:?} node {node} parents {parents:?}");
+            }
+        }
+    }
+}
+
+/// The prefix stack agrees with naive counting (and thus the oracle) at
+/// every depth of random DFS-style parent paths, over full and partial
+/// row windows.
+#[test]
+fn prefix_counts_match_naive_at_every_depth() {
+    let data = random_data(&[2, 3, 4, 2, 5, 3, 2], 700, 21);
+    let n = data.cols();
+    let s = 4;
+    let mut ws = CountsWorkspace::new();
+    let mut pc = PrefixCounter::new(s);
+    let mut rng = Pcg32::new(22);
+    for (lo, hi) in [(0usize, 700usize), (0, 123), (300, 700), (64, 65), (50, 50)] {
+        pc.set_window(lo, hi);
+        for trial in 0..20u64 {
+            let mut path: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut path);
+            let node = path[s]; // any column off the parent path
+            let path = &path[..s];
+            for (level, &p) in path.iter().enumerate() {
+                assert!(
+                    pc.push_level(level, data.column(p), data.arity(p)),
+                    "small-arity push must not overflow"
+                );
+                let k = level + 1;
+                let parents = &path[..k];
+                let q = pc.q_at(k).expect("valid depth");
+                assert_eq!(
+                    q,
+                    parents.iter().map(|&m| data.arity(m)).product::<usize>(),
+                    "q at depth {k}"
+                );
+                let mut got = Vec::new();
+                pc.count_window(k, data.column(node), data.arity(node), |n_ik, counts| {
+                    got.push((n_ik, counts.to_vec()));
+                });
+                let want = oracle(&data, node, parents, lo, hi);
+                assert_eq!(got, want, "window {lo}..{hi} trial {trial} depth {k}");
+                // The chunked accumulate path sums to the same histogram.
+                let r_i = data.arity(node);
+                let mut hist = vec![0u32; q * r_i];
+                pc.accumulate_window(k, data.column(node), r_i, &mut hist);
+                let flat: Vec<(u32, Vec<u32>)> = (0..q)
+                    .map(|c| hist[c * r_i..(c + 1) * r_i].to_vec())
+                    .filter(|counts| counts.iter().any(|&x| x > 0))
+                    .map(|counts| (counts.iter().sum(), counts))
+                    .collect();
+                assert_eq!(flat, want, "accumulate window {lo}..{hi} depth {k}");
+            }
+        }
+    }
+    // Unchanged naive path still agrees after interleaving with prefix.
+    let got = collect_naive(&mut ws, &data, 0, &[3, 1]);
+    assert_eq!(got, oracle(&data, 0, &[3, 1], 0, 700));
+}
+
+/// A high-arity push overflows, flags the stack, and recovers when the
+/// DFS backtracks and re-pushes a narrow column at the same level.
+#[test]
+fn prefix_overflow_recovers_on_backtrack() {
+    let rows = 64usize;
+    let wide_arity = 100_000usize; // 100k^2 * 2 > u32::MAX at depth 3
+    let data = Dataset::from_columns(
+        vec![
+            (0..rows).map(|r| (r % 250) as u8).collect(),
+            (0..rows).map(|r| ((r * 7) % 250) as u8).collect(),
+            (0..rows).map(|r| (r % 2) as u8).collect(),
+            (0..rows).map(|r| (r % 3) as u8).collect(),
+        ],
+        vec![wide_arity, wide_arity, 2, 3],
+    );
+    let mut pc = PrefixCounter::new(3);
+    pc.set_window(0, rows);
+    assert!(pc.push_level(0, data.column(0), wide_arity));
+    assert!(!pc.push_level(1, data.column(1), wide_arity), "must overflow");
+    assert!(pc.q_at(2).is_none(), "overflowed depth is invalid");
+    assert!(pc.q_at(1).is_some(), "shallower depth stays valid");
+    assert!(!pc.push_level(2, data.column(2), 2), "deeper push from stale codes fails");
+    // Backtrack: re-push level 1 with the narrow column.
+    assert!(pc.push_level(1, data.column(2), 2), "backtrack revalidates");
+    let q = pc.q_at(2).expect("revalidated");
+    assert_eq!(q, wide_arity * 2);
+    let mut got = Vec::new();
+    pc.count_window(2, data.column(3), 3, |n_ik, counts| {
+        got.push((n_ik, counts.to_vec()));
+    });
+    assert_eq!(got, oracle(&data, 3, &[0, 2], 0, rows));
+}
+
+fn cfg_chunk(mode: CountingMode, chunk_rows: usize) -> CountingConfig {
+    CountingConfig { mode, chunk_rows }
+}
+
+/// Dense stores: naive, prefix, and every chunking of prefix produce the
+/// same bytes, full and restricted.
+#[test]
+fn dense_store_bytes_identical_across_counting_modes() {
+    let data = workload(9, 400, 31);
+    let params = BdeParams::default();
+    let exec = ExecConfig::new(4, Schedule::Balanced, 64);
+    let (reference, _) =
+        ScoreTable::build_counted_with(&data, params, 3, &exec, &CountingConfig::naive());
+    for counting in [
+        CountingConfig::prefix(),
+        cfg_chunk(CountingMode::Prefix, 16),
+        cfg_chunk(CountingMode::Prefix, 129),
+        cfg_chunk(CountingMode::Prefix, 399), // rows > c by exactly one
+        cfg_chunk(CountingMode::Naive, 64),   // naive never chunks
+    ] {
+        let (table, _) = ScoreTable::build_counted_with(&data, params, 3, &exec, &counting);
+        assert_eq!(reference.raw(), table.raw(), "{counting:?}");
+    }
+
+    let rl = Arc::new(RestrictedLayout::full_pools(9, 3));
+    let naive = CountingConfig::naive();
+    let (r_ref, _) = ScoreTable::build_restricted_counted_with(&data, params, &rl, &exec, &naive);
+    for counting in [CountingConfig::prefix(), cfg_chunk(CountingMode::Prefix, 57)] {
+        let (table, _) =
+            ScoreTable::build_restricted_counted_with(&data, params, &rl, &exec, &counting);
+        assert_eq!(r_ref.raw(), table.raw(), "restricted {counting:?}");
+    }
+}
+
+/// Hash stores: same stored entries and same materialized rows for every
+/// mode × chunking, full and restricted (with genuinely pruned pools).
+#[test]
+fn hash_store_rows_identical_across_counting_modes() {
+    let data = workload(8, 350, 32);
+    let params = BdeParams::default();
+    let exec = ExecConfig::new(4, Schedule::Balanced, 0);
+    let n = data.cols();
+    let naive = CountingConfig::naive();
+    let reference = HashScoreStore::build_counted_with(&data, params, 3, &exec, None, &naive).0;
+    let total = reference.subsets();
+    let (mut want, mut got) = (vec![0f32; total], vec![0f32; total]);
+    for counting in [CountingConfig::prefix(), cfg_chunk(CountingMode::Prefix, 100)] {
+        let store =
+            HashScoreStore::build_counted_with(&data, params, 3, &exec, None, &counting).0;
+        assert_eq!(store.stored_entries(), reference.stored_entries(), "{counting:?}");
+        for node in 0..n {
+            reference.fill_row(node, &mut want);
+            store.fill_row(node, &mut got);
+            assert_eq!(want, got, "node {node} {counting:?}");
+        }
+    }
+
+    let pools: Vec<Vec<usize>> =
+        (0..n).map(|i| (0..n).filter(|&c| c != i).take(4).collect()).collect();
+    let rl = Arc::new(RestrictedLayout::new(n, 3, pools));
+    let r_ref = HashScoreStore::build_restricted_counted_with(
+        &data, params, &rl, &exec, None, &CountingConfig::naive(),
+    )
+    .0;
+    let r_total = r_ref.subsets();
+    let (mut want, mut got) = (vec![0f32; r_total], vec![0f32; r_total]);
+    for counting in [CountingConfig::prefix(), cfg_chunk(CountingMode::Prefix, 77)] {
+        let store = HashScoreStore::build_restricted_counted_with(
+            &data, params, &rl, &exec, None, &counting,
+        )
+        .0;
+        assert_eq!(store.stored_entries(), r_ref.stored_entries(), "restricted {counting:?}");
+        for node in 0..n {
+            r_ref.fill_row(node, &mut want);
+            store.fill_row(node, &mut got);
+            assert_eq!(want, got, "restricted node {node} {counting:?}");
+        }
+    }
+}
+
+/// Fixed-seed 10^6-row smoke: the auto-engaged chunked path (rows well
+/// past `AUTO_MIN_ROWS`) reproduces the unchunked naive build exactly,
+/// end to end through the executor.
+#[test]
+fn million_row_auto_chunked_build_matches_naive() {
+    let data = workload(5, 1_000_000, 33);
+    assert_eq!(data.rows(), 1_000_000);
+    let params = BdeParams::default();
+    let exec = ExecConfig::new(4, Schedule::Balanced, 0);
+    let auto = CountingConfig::prefix();
+    assert!(auto.chunk_for(data.rows()).is_some(), "auto-chunk must engage at 10^6 rows");
+    let (chunked, _) = ScoreTable::build_counted_with(&data, params, 2, &exec, &auto);
+    let (naive, _) =
+        ScoreTable::build_counted_with(&data, params, 2, &exec, &CountingConfig::naive());
+    assert_eq!(chunked.raw(), naive.raw());
+}
+
+/// Full learning trajectories — store, chain, best graphs — are
+/// identical under either counting engine.
+#[test]
+fn learning_trajectories_identical_across_counting_modes() {
+    let base = RunConfig {
+        network: "sachs".into(),
+        rows: 250,
+        iters: 200,
+        chains: 2,
+        s: 2,
+        seed: 77,
+        threads: 2,
+        ..RunConfig::default()
+    };
+    let mut naive_cfg = base.clone();
+    naive_cfg.counting = CountingMode::Naive;
+    let mut prefix_cfg = base.clone();
+    prefix_cfg.counting = CountingMode::Prefix;
+    prefix_cfg.chunk_rows = 64; // force the chunked path through the run
+    let a = run_learning(&naive_cfg, None).expect("naive run");
+    let b = run_learning(&prefix_cfg, None).expect("prefix run");
+    let scores = |r: &bnlearn::coordinator::LearnReport| -> Vec<f64> {
+        r.result.best.iter().map(|(s, _)| *s).collect()
+    };
+    assert_eq!(scores(&a), scores(&b), "best-graph scores diverged");
+    let edges = |r: &bnlearn::coordinator::LearnReport| -> Vec<Vec<(usize, usize)>> {
+        r.result.best.iter().map(|(_, d)| d.edges()).collect()
+    };
+    assert_eq!(edges(&a), edges(&b), "best-graph structures diverged");
+}
