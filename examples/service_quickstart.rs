@@ -1,0 +1,81 @@
+//! Quickstart for the structure-learning service daemon.
+//!
+//!     cargo run --release --example service_quickstart
+//!
+//! Starts a daemon in-process on a loopback port, then drives it the
+//! way an external client would — over TCP with the JSON-lines
+//! protocol (DESIGN.md §15): submit two jobs that share a score-store
+//! fingerprint, stream one job's progress events, and read both
+//! terminal reports plus the cache telemetry proving the second job
+//! skipped its preprocessing phase.
+//!
+//! In production the daemon runs standalone (`bnlearn serve --addr
+//! 127.0.0.1:4615`) and any JSON-lines-speaking process connects; the
+//! in-process start here just keeps the example self-contained.
+
+use bnlearn::service::{start, Client, Json, ServeConfig};
+use bnlearn::util::logging::Level;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A daemon: two workers, loopback, no journal for the demo.
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        jobs: 2,
+        state_dir: None,
+        log_level: Level::Warn,
+        ..ServeConfig::default()
+    };
+    let daemon = start(cfg)?;
+    println!("daemon listening on {}", daemon.local_addr());
+
+    // 2. Submit two runs over the same dataset and score configuration.
+    //    Different iteration budgets, same store fingerprint — the
+    //    second job will reuse the first one's built store.
+    let mut client = Client::connect(daemon.local_addr())?;
+    let argv = |iters: &str| -> Vec<String> {
+        ["--network", "alarm", "--rows", "2000", "--seed", "7", "--iters", iters]
+            .map(String::from)
+            .to_vec()
+    };
+    let short = client.submit(&argv("500"))?;
+    let long = client.submit(&argv("2000"))?;
+    println!("submitted jobs {short} and {long}");
+
+    // 3. Stream the long job's event log (long-polling `events`): phase
+    //    changes, the cache verdict, progress counters, the end marker.
+    for event in client.wait(long)? {
+        let ty = event.get("type").and_then(Json::as_str).unwrap_or("?");
+        match ty {
+            "progress" => {
+                let iters = event.get("iterations").and_then(Json::as_u64).unwrap_or(0);
+                let acc = event.get("accepted").and_then(Json::as_u64).unwrap_or(0);
+                println!("  [{long}] progress: {iters} iterations, {acc} accepted");
+            }
+            _ => println!("  [{long}] {event}"),
+        }
+    }
+
+    // 4. Both reports carry scores in exact IEEE-754 bits — identical
+    //    to what the one-shot CLI would print for the same flags.
+    for job in [short, long] {
+        client.wait(job)?;
+        let report = client.report(job)?;
+        println!(
+            "job {job}: score {} (bits {}) cache_hit={} preprocess {:.2}s sampling {:.2}s",
+            report.get("best_score").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            report.get("best_score_bits").and_then(Json::as_str).unwrap_or("?"),
+            report.get("cache_hit").and_then(Json::as_bool).unwrap_or(false),
+            report.get("preprocess_secs").and_then(Json::as_f64).unwrap_or(0.0),
+            report.get("sampling_secs").and_then(Json::as_f64).unwrap_or(0.0),
+        );
+    }
+
+    // 5. Telemetry: one store built, one build skipped.
+    let stats = client.stats()?;
+    println!("cache stats: {}", stats.get("cache").unwrap_or(&Json::Null));
+
+    client.shutdown()?;
+    daemon.join();
+    println!("daemon stopped");
+    Ok(())
+}

@@ -121,6 +121,11 @@ pub struct RunConfig {
     pub restrict_alpha: f64,
     /// Worker threads for preprocessing and batched rescoring.
     pub threads: usize,
+    /// Route executors through the process-wide shared worker budget
+    /// (see `exec::install_shared`). Service-internal: the daemon sets
+    /// this on every job so concurrent jobs share one pool; there is no
+    /// CLI flag, and with no shared executor installed it is inert.
+    pub shared_exec: bool,
     /// Tile-assignment schedule (`--schedule static|balanced`): static
     /// round-robin vs the paper's balanced dynamic assignment.
     pub schedule: Schedule,
@@ -180,6 +185,7 @@ impl Default for RunConfig {
             restrict: RestrictKind::None,
             restrict_alpha: 0.05,
             threads: default_threads(),
+            shared_exec: false,
             schedule: Schedule::Balanced,
             tile: 0,
             counting: CountingMode::Prefix,
@@ -226,7 +232,9 @@ impl RunConfig {
     /// The kernel-executor configuration (threads × schedule × tile)
     /// this run preprocesses — and batch-rescores — with.
     pub fn exec_config(&self) -> ExecConfig {
-        ExecConfig::new(self.threads, self.schedule, self.tile)
+        let mut cfg = ExecConfig::new(self.threads, self.schedule, self.tile);
+        cfg.shared = self.shared_exec;
+        cfg
     }
 
     /// The counting-engine configuration store builds run with.

@@ -7,16 +7,20 @@
 //! table type (the device-bound XLA engine is the one exception, built
 //! on the chain thread because PJRT handles are not `Send`).
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
 use super::config::{EngineKind, RunConfig};
-use super::registry;
+use super::fingerprint;
+use super::registry::{self, StoreHandle};
 use super::workload::Workload;
 use crate::bn::Dag;
 use crate::eval::roc::{auc_from_points, implied_auc, roc_point, RocPoint};
 use crate::exec::{ExecConfig, KernelExecutor};
 use crate::eval::shd;
 use crate::mcmc::runner::{run_chains_parallel_spec, ChainSpec, LearnResult};
+use crate::mcmc::ChainControl;
 use crate::posterior::sampler::{run_posterior_chains, SamplerOptions};
 use crate::posterior::{consensus, diagnostics};
 use crate::priors::InterfaceMatrix;
@@ -107,8 +111,22 @@ impl LearnReport {
 /// Run the full pipeline described by `cfg`, with optional pairwise
 /// priors (Eq. 9) folded into the score store.
 pub fn run_learning(cfg: &RunConfig, priors: Option<&InterfaceMatrix>) -> Result<LearnReport> {
+    run_learning_controlled(cfg, priors, None)
+}
+
+/// [`run_learning`] with a cooperative [`ChainControl`] attached: the
+/// one-shot CLI's Ctrl-C handler and the service daemon cancel through
+/// it and read live progress counters off it.
+pub fn run_learning_controlled(
+    cfg: &RunConfig,
+    priors: Option<&InterfaceMatrix>,
+    control: Option<Arc<ChainControl>>,
+) -> Result<LearnReport> {
     let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
-    run_learning_on(cfg, &workload, priors)
+    registry::validate(cfg.engine, cfg.store, cfg.chains)?;
+    registry::validate_restricted(cfg.engine, cfg.restrict)?;
+    let (store, preprocess_secs) = build_run_store(cfg, &workload, priors);
+    run_learning_with_store(cfg, &workload, &store, preprocess_secs, control)
 }
 
 /// Same, over an already-built workload (ROC protocols reuse one dataset
@@ -120,11 +138,23 @@ pub fn run_learning_on(
 ) -> Result<LearnReport> {
     registry::validate(cfg.engine, cfg.store, cfg.chains)?;
     registry::validate_restricted(cfg.engine, cfg.restrict)?;
-    let n = workload.n();
-    let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
+    let (store, preprocess_secs) = build_run_store(cfg, workload, priors);
+    run_learning_with_store(cfg, workload, &store, preprocess_secs, None)
+}
 
-    // ---- preprocessing (Section III-A) into the configured backend,
-    // optionally behind the candidate-parent screen (`--restrict`) ----
+/// Preprocessing (Section III-A): the candidate-parent screen
+/// (`--restrict`) plus the score-store build into the configured
+/// backend, returning the store with its build wall-clock.
+///
+/// This is the exact phase the service daemon's store cache elides: a
+/// hit on [`fingerprint::store_fingerprint`] hands a second job the
+/// same immutable store without re-entering this function.
+pub fn build_run_store(
+    cfg: &RunConfig,
+    workload: &Workload,
+    priors: Option<&InterfaceMatrix>,
+) -> (StoreHandle, f64) {
+    let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
     let timer = Timer::start();
     let ppf = priors.map(|m| m.ppf_matrix());
     let exec_cfg = cfg.exec_config();
@@ -173,24 +203,43 @@ pub fn run_learning_on(
             .0
         }
     };
-    let preprocess_secs = timer.elapsed_secs();
+    (store, timer.elapsed_secs())
+}
+
+/// The engine-setup + sampling half of [`run_learning_on`], over an
+/// already-built (possibly cache-shared) store. Trajectories depend
+/// only on `cfg` and the store contents — never on who built or cached
+/// the store — so a cache-hit service job stays bit-identical to the
+/// same config through the one-shot CLI.
+pub fn run_learning_with_store(
+    cfg: &RunConfig,
+    workload: &Workload,
+    store: &StoreHandle,
+    preprocess_secs: f64,
+    control: Option<Arc<ChainControl>>,
+) -> Result<LearnReport> {
+    registry::validate(cfg.engine, cfg.store, cfg.chains)?;
+    registry::validate_restricted(cfg.engine, cfg.restrict)?;
+    let n = workload.n();
+    let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
 
     // ---- engine setup + sampling ----
     let mut setup_secs = 0.0;
     let result = match cfg.engine {
-        EngineKind::Xla => run_xla_chain(cfg, store.as_dyn(), n, &mut setup_secs)?,
+        EngineKind::Xla => run_xla_chain(cfg, store.as_dyn(), n, &mut setup_secs, control)?,
         kind => {
-            let store_ref = &store;
+            let store_ref = store;
             // Intra-chain batched rescoring composes with the
             // multi-chain runner by splitting the thread budget: each
             // chain's engine fans positions across threads/chains
             // workers, so chains × positions never oversubscribes.
-            let engine_exec = engine_executor(cfg, n, restriction.as_deref());
+            let engine_exec = engine_executor(cfg, n, store.restriction());
             let engine_exec_ref = engine_exec.as_deref();
             let mut spec = ChainSpec::new(n, cfg.iters, cfg.topk, cfg.seed);
             spec.chains = cfg.chains;
             spec.record_trace = cfg.trace;
             spec.proposal = cfg.proposal;
+            spec.control = control;
             run_chains_parallel_spec(
                 |_| {
                     registry::make_engine(
@@ -230,7 +279,7 @@ pub fn run_learning_on(
         store_bytes: store.bytes(),
         store_entries: store.stored_entries(),
         restrict: cfg.restrict.name(),
-        pool_mean: restriction.as_ref().map(|rl| rl.mean_pool()),
+        pool_mean: store.restriction().map(|rl| rl.mean_pool()),
         psrf,
         ess,
     })
@@ -271,7 +320,9 @@ fn engine_executor(
         None => worth_fanning(n, cfg.s),
     };
     if per_chain > 1 && worth {
-        Some(ExecConfig::new(per_chain, cfg.schedule, cfg.tile).executor())
+        let mut exec_cfg = ExecConfig::new(per_chain, cfg.schedule, cfg.tile);
+        exec_cfg.shared = cfg.shared_exec;
+        Some(exec_cfg.executor())
     } else {
         None
     }
@@ -284,6 +335,7 @@ fn run_xla_chain(
     store: &dyn ScoreStore,
     n: usize,
     setup_secs: &mut f64,
+    control: Option<Arc<ChainControl>>,
 ) -> Result<LearnResult> {
     let t = Timer::start();
     let exec = cfg.exec_config().executor();
@@ -292,6 +344,7 @@ fn run_xla_chain(
     let mut spec = ChainSpec::new(n, cfg.iters, cfg.topk, cfg.seed);
     spec.record_trace = cfg.trace;
     spec.proposal = cfg.proposal;
+    spec.control = control;
     Ok(crate::mcmc::runner::run_chain_spec(&mut scorer, &spec))
 }
 
@@ -302,6 +355,7 @@ fn run_xla_chain(
     _store: &dyn ScoreStore,
     _n: usize,
     _setup_secs: &mut f64,
+    _control: Option<Arc<ChainControl>>,
 ) -> Result<LearnResult> {
     anyhow::bail!(
         "engine 'xla' needs the artifacts runtime, which is compiled out — rebuild with \
@@ -383,47 +437,10 @@ impl PosteriorReport {
     }
 }
 
-/// FNV-1a fingerprint of everything that shapes the workload and the
-/// score table — plus the proposal move, which shapes the trajectory
-/// itself. Baked into posterior checkpoints so `--resume` against
-/// different data, scoring parameters, or proposal kind (which would
-/// silently mix two posteriors) is rejected; `--iters`,
-/// `--chains`-independent knobs like `--threshold`, output paths, and
-/// `--delta` (bit-for-bit identical either way) are deliberately
-/// excluded — those may change across a resume.
-fn posterior_fingerprint(cfg: &RunConfig) -> u64 {
-    let text = format!(
-        "{}|{}|{}|{}|{}|{}|{}|{}",
-        cfg.network,
-        cfg.rows,
-        cfg.noise.to_bits(),
-        cfg.gamma.to_bits(),
-        cfg.s,
-        cfg.engine.name(),
-        cfg.store.name(),
-        cfg.proposal.name()
-    );
-    let mut hash = 0xcbf2_9ce4_8422_2325u64;
-    for byte in text.bytes() {
-        hash ^= byte as u64;
-        hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
-    }
-    hash
-}
-
-/// Run the posterior pipeline described by `cfg` (requires
-/// `cfg.posterior`-style flags; the `--posterior` CLI mode lands here).
-pub fn run_posterior(cfg: &RunConfig, priors: Option<&InterfaceMatrix>) -> Result<PosteriorReport> {
-    let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
-    run_posterior_on(cfg, &workload, priors)
-}
-
-/// Same, over an already-built workload.
-pub fn run_posterior_on(
-    cfg: &RunConfig,
-    workload: &Workload,
-    priors: Option<&InterfaceMatrix>,
-) -> Result<PosteriorReport> {
+/// The posterior preconditions shared by every entry point: the
+/// registry's engine × store × chains rules plus the no-restriction
+/// rule (posterior mass sums every parent set; pools prune some out).
+fn validate_posterior_cfg(cfg: &RunConfig) -> Result<()> {
     registry::validate_posterior(cfg.engine, cfg.store, cfg.chains)?;
     if !cfg.restrict.is_none() {
         anyhow::bail!(
@@ -432,23 +449,53 @@ pub fn run_posterior_on(
             cfg.restrict.name()
         );
     }
+    Ok(())
+}
+
+/// Run the posterior pipeline described by `cfg` (requires
+/// `cfg.posterior`-style flags; the `--posterior` CLI mode lands here).
+pub fn run_posterior(cfg: &RunConfig, priors: Option<&InterfaceMatrix>) -> Result<PosteriorReport> {
+    run_posterior_controlled(cfg, priors, None)
+}
+
+/// [`run_posterior`] with a cooperative [`ChainControl`] attached.
+/// Cancellation lands on a checkpoint-segment boundary, so an
+/// interrupted run leaves a final checkpoint a later `--resume`
+/// continues bit-identically (see `posterior::sampler`).
+pub fn run_posterior_controlled(
+    cfg: &RunConfig,
+    priors: Option<&InterfaceMatrix>,
+    control: Option<Arc<ChainControl>>,
+) -> Result<PosteriorReport> {
+    let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
+    validate_posterior_cfg(cfg)?;
+    let (store, preprocess_secs) = build_run_store(cfg, &workload, priors);
+    run_posterior_with_store(cfg, &workload, &store, preprocess_secs, control)
+}
+
+/// Same, over an already-built workload.
+pub fn run_posterior_on(
+    cfg: &RunConfig,
+    workload: &Workload,
+    priors: Option<&InterfaceMatrix>,
+) -> Result<PosteriorReport> {
+    validate_posterior_cfg(cfg)?;
+    let (store, preprocess_secs) = build_run_store(cfg, workload, priors);
+    run_posterior_with_store(cfg, workload, &store, preprocess_secs, None)
+}
+
+/// The sampling + posterior-products half of [`run_posterior_on`],
+/// over an already-built (possibly cache-shared) store.
+pub fn run_posterior_with_store(
+    cfg: &RunConfig,
+    workload: &Workload,
+    store: &StoreHandle,
+    preprocess_secs: f64,
+    control: Option<Arc<ChainControl>>,
+) -> Result<PosteriorReport> {
+    validate_posterior_cfg(cfg)?;
     let n = workload.n();
     let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
-
-    // ---- preprocessing into the (dense) backend ----
-    let timer = Timer::start();
-    let ppf = priors.map(|m| m.ppf_matrix());
-    let store = registry::build_store_stats(
-        cfg.store,
-        &workload.data,
-        params,
-        cfg.s,
-        &cfg.exec_config(),
-        ppf.as_deref(),
-        &cfg.counting_config(),
-    )
-    .0;
-    let preprocess_secs = timer.elapsed_secs();
 
     // ---- checkpointed multi-chain posterior sampling ----
     let opts = SamplerOptions {
@@ -456,7 +503,7 @@ pub fn run_posterior_on(
         iters: cfg.iters,
         topk: cfg.topk,
         seed: cfg.seed,
-        fingerprint: posterior_fingerprint(cfg),
+        fingerprint: fingerprint::posterior_fingerprint(cfg),
         chains: cfg.chains,
         proposal: cfg.proposal,
         burnin: cfg.burnin,
@@ -465,6 +512,7 @@ pub fn run_posterior_on(
         checkpoint_every: cfg.checkpoint_every,
         checkpoint_path: Some(cfg.checkpoint_path.clone()),
         resume: cfg.resume.clone(),
+        control,
     };
     let engine_exec = engine_executor(cfg, n, None);
     let engine_exec_ref = engine_exec.as_deref();
@@ -472,7 +520,7 @@ pub fn run_posterior_on(
         |_| {
             registry::make_engine(
                 cfg.engine,
-                &store,
+                store,
                 &workload.data,
                 params,
                 cfg.s,
@@ -481,7 +529,7 @@ pub fn run_posterior_on(
             )
             .expect("validated engine construction")
         },
-        &store,
+        store,
         &opts,
     )?;
 

@@ -1,0 +1,140 @@
+//! Workload fingerprints: FNV-1a hashes over the configuration axes
+//! that shape a run's dataset, score store, and trajectory.
+//!
+//! Two consumers, two field sets:
+//!
+//! * [`store_fingerprint`] identifies the *score store* a config would
+//!   build — the service daemon's cache key. It hashes the dataset
+//!   identity (network, rows, noise, and the **seed**, which drives
+//!   both random-network wiring and forward sampling), the score
+//!   parameters (gamma, max parents), the store backend, and every
+//!   knob that changes which cells get built: restriction kind and
+//!   alpha, counting mode, and the chunk-rows override. Engine,
+//!   proposal, delta, and iteration counts are deliberately excluded —
+//!   they consume a store, they don't shape it.
+//! * [`posterior_fingerprint`] identifies a posterior *trajectory* —
+//!   baked into `BNPC` checkpoints so `--resume` against different
+//!   data, scoring parameters, or proposal kind (which would silently
+//!   mix two posteriors) is rejected. It covers the store fields plus
+//!   the engine and proposal names; the seed is excluded because the
+//!   checkpoint header validates it separately with a clearer error.
+//!
+//! Historically the posterior fingerprint lived in
+//! `coordinator::experiment` and hashed neither the restriction nor
+//! the counting configuration, so two configs producing *different*
+//! stores could collide on one fingerprint — a latent wart the shared
+//! store cache would have promoted into a correctness bug. Extending
+//! the field set changed every fingerprint value, which is why the
+//! checkpoint format version was bumped (see `posterior::checkpoint`).
+
+use super::config::RunConfig;
+
+/// FNV-1a over a byte string — the repo's standard cheap fingerprint
+/// hash (shared with the checkpoint and cache subsystems).
+pub fn fnv1a(text: &str) -> u64 {
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for byte in text.bytes() {
+        hash ^= byte as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    hash
+}
+
+/// The store-shaping fields shared by both fingerprints: dataset
+/// identity (minus seed), score parameters, store backend, and the
+/// restriction/counting knobs that decide which cells get built and
+/// how. Float fields hash their bit patterns, never a rounded print.
+fn store_fields(cfg: &RunConfig) -> String {
+    format!(
+        "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+        cfg.network,
+        cfg.rows,
+        cfg.noise.to_bits(),
+        cfg.gamma.to_bits(),
+        cfg.s,
+        cfg.store.name(),
+        cfg.restrict.name(),
+        cfg.restrict_alpha.to_bits(),
+        cfg.counting.name(),
+        cfg.chunk_rows
+    )
+}
+
+/// Cache key of the score store `cfg` would build (see module docs):
+/// two configs share a key exactly when they would build bit-identical
+/// stores over the same sampled dataset.
+pub fn store_fingerprint(cfg: &RunConfig) -> u64 {
+    fnv1a(&format!("store|{}|seed:{}", store_fields(cfg), cfg.seed))
+}
+
+/// Checkpoint identity of a posterior trajectory (see module docs).
+/// `--iters`, chain-independent knobs like `--threshold`, output
+/// paths, and `--delta` (bit-for-bit identical either way) are
+/// deliberately excluded — those may change across a resume.
+pub fn posterior_fingerprint(cfg: &RunConfig) -> u64 {
+    fnv1a(&format!("{}|{}|{}", store_fields(cfg), cfg.engine.name(), cfg.proposal.name()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::EngineKind;
+    use crate::mcmc::ProposalKind;
+    use crate::restrict::RestrictKind;
+    use crate::score::CountingMode;
+
+    fn base() -> RunConfig {
+        RunConfig { network: "asia".into(), rows: 400, ..RunConfig::default() }
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a("a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    /// Every store-shaping knob must move the store fingerprint — the
+    /// original wart was restrict/counting/chunk-rows colliding.
+    #[test]
+    fn store_fingerprint_separates_store_shaping_knobs() {
+        let plain = store_fingerprint(&base());
+        let restricted = RunConfig { restrict: RestrictKind::Mi { k: 4 }, ..base() };
+        assert_ne!(plain, store_fingerprint(&restricted));
+        let alpha = RunConfig { restrict_alpha: 0.01, ..restricted.clone() };
+        assert_ne!(store_fingerprint(&restricted), store_fingerprint(&alpha));
+        let naive = RunConfig { counting: CountingMode::Naive, ..base() };
+        assert_ne!(plain, store_fingerprint(&naive));
+        let chunked = RunConfig { chunk_rows: 64, ..base() };
+        assert_ne!(plain, store_fingerprint(&chunked));
+        let reseeded = RunConfig { seed: 99, ..base() };
+        assert_ne!(plain, store_fingerprint(&reseeded), "seed changes the sampled dataset");
+    }
+
+    /// Knobs that consume a store without shaping it must NOT move the
+    /// cache key — that sharing is the whole point of the store cache.
+    #[test]
+    fn store_fingerprint_ignores_consumers() {
+        let plain = store_fingerprint(&base());
+        let engine = RunConfig { engine: EngineKind::BitVec, ..base() };
+        assert_eq!(plain, store_fingerprint(&engine));
+        let iters = RunConfig { iters: 123_456, chains: 7, ..base() };
+        assert_eq!(plain, store_fingerprint(&iters));
+        let proposal = RunConfig { proposal: ProposalKind::Adjacent, ..base() };
+        assert_eq!(plain, store_fingerprint(&proposal));
+    }
+
+    #[test]
+    fn posterior_fingerprint_tracks_trajectory_shape() {
+        let plain = posterior_fingerprint(&base());
+        let engine = RunConfig { engine: EngineKind::BitVec, ..base() };
+        assert_ne!(plain, posterior_fingerprint(&engine));
+        let proposal = RunConfig { proposal: ProposalKind::Adjacent, ..base() };
+        assert_ne!(plain, posterior_fingerprint(&proposal));
+        let naive = RunConfig { counting: CountingMode::Naive, ..base() };
+        assert_ne!(plain, posterior_fingerprint(&naive), "counting config now fingerprinted");
+        // The seed is validated separately by the checkpoint header.
+        let reseeded = RunConfig { seed: 99, ..base() };
+        assert_eq!(plain, posterior_fingerprint(&reseeded));
+    }
+}

@@ -4,13 +4,17 @@
 
 pub mod config;
 pub mod experiment;
+pub mod fingerprint;
 pub mod registry;
 pub mod workload;
 
 pub use config::{EngineKind, RunConfig, StoreKind};
 pub use experiment::{
-    run_learning, run_learning_on, run_posterior, run_posterior_on, LearnReport, PosteriorReport,
+    build_run_store, run_learning, run_learning_controlled, run_learning_on,
+    run_learning_with_store, run_posterior, run_posterior_controlled, run_posterior_on,
+    run_posterior_with_store, LearnReport, PosteriorReport,
 };
+pub use fingerprint::{posterior_fingerprint, store_fingerprint};
 pub use registry::{
     build_store, build_store_restricted, build_store_stats, build_store_with, make_engine,
     StoreHandle,

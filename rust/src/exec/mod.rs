@@ -31,9 +31,11 @@
 //! * the runtime upload's `fill_row` materialization.
 
 pub mod executor;
+pub mod shared;
 pub mod tile;
 
 pub use executor::{DispatchStats, KernelExecutor, PoolExecutor, SerialExecutor};
+pub use shared::{install_shared, SharedExecutor};
 pub use tile::{
     plan_ragged_tiles, plan_ragged_tiles_for, plan_tiles, plan_tiles_for, split_by_tiles, Tile,
 };
@@ -85,22 +87,35 @@ pub struct ExecConfig {
     /// node-granular decomposition). Smaller tiles split hot rows
     /// across workers and let `threads > n` engage every core.
     pub tile: usize,
+    /// Route [`Self::executor`] through the process-wide
+    /// [`SharedExecutor`] when one is installed (see
+    /// [`install_shared`]) — the service daemon sets this on every job
+    /// so concurrent jobs draw from one worker budget instead of each
+    /// spawning a full-size pool. With no shared executor installed the
+    /// flag is inert, and it never changes results — only where the
+    /// work runs.
+    pub shared: bool,
 }
 
 impl ExecConfig {
     /// Explicit configuration.
     pub fn new(threads: usize, schedule: Schedule, tile: usize) -> Self {
-        ExecConfig { threads, schedule, tile }
+        ExecConfig { threads, schedule, tile, shared: false }
     }
 
     /// The default used by the classic `build(.., threads)` entry
     /// points: balanced dispatch over row-granular tiles.
     pub fn balanced(threads: usize) -> Self {
-        ExecConfig { threads, schedule: Schedule::Balanced, tile: 0 }
+        ExecConfig { threads, schedule: Schedule::Balanced, tile: 0, shared: false }
     }
 
     /// Materialize the configured executor.
     pub fn executor(&self) -> Box<dyn KernelExecutor> {
+        if self.shared && self.threads > 1 {
+            if let Some(pool) = shared::shared() {
+                return Box::new(shared::SharedHandle(pool));
+            }
+        }
         if self.threads <= 1 {
             Box::new(SerialExecutor)
         } else {

@@ -1,0 +1,182 @@
+//! The process-wide shared executor: one worker budget that every
+//! concurrent job's dispatches draw permits from.
+//!
+//! The service daemon multiplexes several learn/posterior jobs onto
+//! one machine. If each job materialized its own `PoolExecutor` at the
+//! full `--threads` budget, J concurrent jobs would oversubscribe the
+//! host J-fold. [`SharedExecutor`] fixes the global budget once: each
+//! `dispatch` *non-blockingly* acquires up to `budget` permits, runs
+//! the items on a pool of exactly the permits it got, and releases
+//! them. A dispatch that finds zero free permits degrades to inline
+//! serial execution on the calling thread — never blocking, so permit
+//! acquisition can't deadlock and cooperative cancellation stays
+//! responsive.
+//!
+//! Bit-identity is untouched by any of this: executors move work, not
+//! values (the module contract locked by `tests/exec_determinism.rs`),
+//! so a job that runs serial under contention produces the same bytes
+//! it would alone on a 64-thread pool.
+
+use std::sync::{Mutex, OnceLock};
+
+use super::executor::{KernelExecutor, PoolExecutor, SerialExecutor};
+use super::Schedule;
+
+/// A fixed permit budget fronting [`PoolExecutor`] dispatches.
+#[derive(Debug)]
+pub struct SharedExecutor {
+    budget: usize,
+    schedule: Schedule,
+    available: Mutex<usize>,
+}
+
+impl SharedExecutor {
+    /// A shared executor with `budget` total worker permits (clamped to
+    /// at least 1) dispatching under `schedule`.
+    pub fn new(budget: usize, schedule: Schedule) -> Self {
+        let budget = budget.max(1);
+        SharedExecutor { budget, schedule, available: Mutex::new(budget) }
+    }
+
+    /// Permits currently unclaimed (telemetry; instantly stale).
+    pub fn available(&self) -> usize {
+        *self.available.lock().expect("shared-executor permit lock poisoned")
+    }
+
+    /// Claim up to `want` permits without blocking; returns how many
+    /// were actually claimed (possibly 0).
+    fn acquire(&self, want: usize) -> usize {
+        let mut free = self.available.lock().expect("shared-executor permit lock poisoned");
+        let got = want.min(*free);
+        *free -= got;
+        got
+    }
+
+    fn release(&self, got: usize) {
+        let mut free = self.available.lock().expect("shared-executor permit lock poisoned");
+        *free += got;
+    }
+}
+
+impl KernelExecutor for SharedExecutor {
+    fn threads(&self) -> usize {
+        self.budget
+    }
+
+    fn schedule(&self) -> Schedule {
+        self.schedule
+    }
+
+    fn name(&self) -> &'static str {
+        "shared"
+    }
+
+    fn dispatch(&self, items: usize, kernel: &(dyn Fn(usize, usize) + Sync)) {
+        // `worker < threads()` holds for the inner pool: it indexes
+        // workers `0..got` and `got <= budget`.
+        let got = self.acquire(self.budget.min(items.max(1)));
+        if got <= 1 {
+            SerialExecutor.dispatch(items, kernel);
+        } else {
+            PoolExecutor::new(got, self.schedule).dispatch(items, kernel);
+        }
+        self.release(got);
+    }
+}
+
+static SHARED: OnceLock<SharedExecutor> = OnceLock::new();
+
+/// Install the process-wide shared executor. The first call wins and
+/// fixes the budget for the process lifetime (the daemon calls this
+/// once at startup, before accepting jobs); later calls return the
+/// already-installed handle unchanged.
+pub fn install_shared(budget: usize, schedule: Schedule) -> &'static SharedExecutor {
+    SHARED.get_or_init(|| SharedExecutor::new(budget, schedule))
+}
+
+/// The installed shared executor, if [`install_shared`] has run.
+pub fn shared() -> Option<&'static SharedExecutor> {
+    SHARED.get()
+}
+
+/// `Box`-able view of the installed executor, letting
+/// `ExecConfig::executor()` hand out the global instance through the
+/// same `Box<dyn KernelExecutor>` shape as the owned backends.
+#[derive(Debug, Clone, Copy)]
+pub struct SharedHandle(pub &'static SharedExecutor);
+
+impl KernelExecutor for SharedHandle {
+    fn threads(&self) -> usize {
+        self.0.threads()
+    }
+
+    fn schedule(&self) -> Schedule {
+        self.0.schedule()
+    }
+
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn dispatch(&self, items: usize, kernel: &(dyn Fn(usize, usize) + Sync)) {
+        self.0.dispatch(items, kernel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let exec = SharedExecutor::new(4, Schedule::Balanced);
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        exec.dispatch(100, &|_, item| {
+            hits[item].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(exec.available(), 4, "permits restored after dispatch");
+        assert_eq!(exec.threads(), 4);
+        assert_eq!(exec.name(), "shared");
+    }
+
+    #[test]
+    fn contended_dispatch_degrades_to_serial_not_deadlock() {
+        let exec = SharedExecutor::new(2, Schedule::Balanced);
+        let inner_done = AtomicUsize::new(0);
+        // The outer dispatch holds both permits, so the nested dispatch
+        // from inside a kernel finds none free and must run inline —
+        // blocking there would deadlock this very test.
+        exec.dispatch(2, &|_, _| {
+            exec.dispatch(10, &|_, item| {
+                assert!(item < 10);
+                inner_done.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(inner_done.load(Ordering::Relaxed), 20);
+        assert_eq!(exec.available(), 2);
+    }
+
+    #[test]
+    fn zero_budget_clamps_to_one() {
+        let exec = SharedExecutor::new(0, Schedule::Static);
+        let count = AtomicUsize::new(0);
+        exec.dispatch(5, &|_, _| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 5);
+        assert_eq!(exec.threads(), 1);
+    }
+
+    #[test]
+    fn install_is_first_wins() {
+        let a = install_shared(3, Schedule::Balanced);
+        let b = install_shared(7, Schedule::Static);
+        assert_eq!(a.threads(), b.threads(), "second install is a no-op");
+        assert!(shared().is_some());
+        let handle = SharedHandle(a);
+        assert_eq!(handle.name(), "shared");
+        assert_eq!(handle.threads(), a.threads());
+    }
+}

@@ -26,7 +26,10 @@
 //! * evaluation: [`eval`] (ROC / SHD), experiment drivers in `examples/`
 //!   and `benches/`, orchestrated through [`coordinator`] — whose
 //!   [`coordinator::registry`] is the single place engines and stores
-//!   are paired (`--engine … --store dense|hash`).
+//!   are paired (`--engine … --store dense|hash`)
+//! * the service layer: [`service`] (the `serve` subcommand's daemon —
+//!   JSON-lines TCP protocol, async job queue, shared score-store
+//!   cache, streaming progress, cooperative cancellation).
 
 // Carried codebase idioms clippy dislikes but that read better here
 // (index-parallel loops over node/subset grids, paper-shaped argument
@@ -52,4 +55,5 @@ pub mod restrict;
 pub mod runtime;
 pub mod score;
 pub mod scorer;
+pub mod service;
 pub mod util;

@@ -3,25 +3,33 @@
 //! Subcommands:
 //!   learn       run the full learning pipeline on a network spec
 //!   preprocess  time the score-table preprocessing stage only
+//!   serve       run the structure-learning service daemon
 //!   tables      print paper artifacts: --table1, --ppf, --pst-mem
 //!   info        show artifact manifest + environment
 //!
 //! Examples:
 //!   bnlearn learn --network alarm --rows 1000 --iters 5000 --engine xla
 //!   bnlearn learn --network random:20:25 --iters 10000 --noise 0.05
+//!   bnlearn serve --addr 127.0.0.1:4615 --jobs 2
 //!   bnlearn tables --table1
 
 use anyhow::{bail, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 use bnlearn::bn::counting;
 use bnlearn::combinatorics::ParentSetTable;
 use bnlearn::coordinator::{
-    build_store_restricted, build_store_stats, run_learning, run_posterior, RunConfig, Workload,
+    build_store_restricted, build_store_stats, run_learning_controlled, run_posterior_controlled,
+    EngineKind, RunConfig, StoreKind, Workload,
 };
+use bnlearn::exec::Schedule;
+use bnlearn::mcmc::{ChainControl, ProposalKind};
 use bnlearn::priors::ppf;
+use bnlearn::restrict::RestrictKind;
 use bnlearn::runtime::{default_artifacts_dir, ArtifactManifest};
-use bnlearn::score::{BdeParams, ScoreStore};
+use bnlearn::score::{BdeParams, CountingMode, ScoreStore};
+use bnlearn::service::ServeConfig;
 use bnlearn::util::csvio::Table;
 use bnlearn::util::Timer;
 
@@ -42,6 +50,7 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "learn" => cmd_learn(rest),
         "preprocess" => cmd_preprocess(rest),
+        "serve" => cmd_serve(rest),
         "tables" => cmd_tables(rest),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -56,7 +65,7 @@ fn print_usage() {
     println!(
         "bnlearn — order-space MCMC Bayesian network structure learning\n\
          \n\
-         usage: bnlearn <learn|preprocess|tables|info> [flags]\n\
+         usage: bnlearn <learn|preprocess|serve|tables|info> [flags]\n\
          \n\
          learn flags:\n\
            --network <name|random:n:edges[:states]>  (default sachs)\n\
@@ -85,18 +94,31 @@ fn print_usage() {
          posterior flags (learn --posterior; needs --store dense, host engine):\n\
            --posterior --burnin N --thin N --threshold P\n\
            --checkpoint-every N --checkpoint PATH --resume PATH\n\
+           (Ctrl-C cancels cooperatively: the run checkpoints its completed\n\
+            prefix and the next invocation resumes it with --resume)\n\
+         \n\
+         serve flags (long-running daemon; JSON-lines requests over TCP):\n\
+           --addr HOST:PORT  (default 127.0.0.1:4615; port 0 picks a free port)\n\
+           --jobs N  (concurrent jobs, default 2)  --threads N (shared budget)\n\
+           --cache-bytes N[k|m|g]  (score-store cache budget, default 1g)\n\
+           --state-dir DIR|none  (job journal for crash recovery; default\n\
+                            results/service)\n\
+           wire commands: submit status events report cancel stats shutdown\n\
+           (submit args = the learn flag vector; see DESIGN.md section 15)\n\
          \n\
          tables flags: --table1 | --ppf | --pst-mem"
     );
 }
 
 fn cmd_learn(args: &[String]) -> Result<()> {
-    let cfg = RunConfig::from_args(args)?;
+    let cfg = parse_run_config(args)?;
     bnlearn::util::logging::set_level(cfg.log_level);
+    let control = ChainControl::shared();
+    interrupt::install(&control);
     if cfg.posterior {
-        return cmd_posterior(&cfg);
+        return cmd_posterior(&cfg, &control);
     }
-    let report = run_learning(&cfg, None)?;
+    let report = run_learning_controlled(&cfg, None, Some(control.clone()))?;
     println!("{}", report.summary());
     if cfg.trace {
         dump_traces(&cfg.trace_out, &report.result.traces)?;
@@ -111,13 +133,16 @@ fn cmd_learn(args: &[String]) -> Result<()> {
             println!("  {from} -> {to}");
         }
     }
+    if control.is_cancelled() {
+        println!("\ninterrupted: results cover the prefix completed before Ctrl-C");
+    }
     Ok(())
 }
 
 /// The `learn --posterior` mode: edge marginals, convergence
 /// diagnostics, consensus graph, threshold-swept ROC curve.
-fn cmd_posterior(cfg: &RunConfig) -> Result<()> {
-    let report = run_posterior(cfg, None)?;
+fn cmd_posterior(cfg: &RunConfig, control: &Arc<ChainControl>) -> Result<()> {
+    let report = run_posterior_controlled(cfg, None, Some(control.clone()))?;
     println!("{}", report.summary());
     if cfg.trace {
         dump_traces(&cfg.trace_out, &report.result.traces)?;
@@ -163,6 +188,13 @@ fn cmd_posterior(cfg: &RunConfig) -> Result<()> {
     if cfg.checkpoint_every > 0 {
         println!("checkpoint: every {} iters -> {:?}", cfg.checkpoint_every, cfg.checkpoint_path);
     }
+    if control.is_cancelled() {
+        if cfg.checkpoint_every > 0 {
+            println!("interrupted: resume from {:?} with --resume", cfg.checkpoint_path);
+        } else {
+            println!("interrupted: posterior reflects completed segments only");
+        }
+    }
     Ok(())
 }
 
@@ -180,7 +212,7 @@ fn dump_traces(path: &Path, traces: &[Vec<f64>]) -> Result<()> {
 }
 
 fn cmd_preprocess(args: &[String]) -> Result<()> {
-    let cfg = RunConfig::from_args(args)?;
+    let cfg = parse_run_config(args)?;
     bnlearn::util::logging::set_level(cfg.log_level);
     let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
     let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
@@ -302,6 +334,43 @@ fn cmd_tables(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The `serve` subcommand: run the service daemon in the foreground.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    bnlearn::service::serve(ServeConfig::from_args(args)?)
+}
+
+/// Parse learn/preprocess flags; on failure, print a usage hint naming
+/// every valid flag value before bubbling the error to the exit path.
+/// The hints are pulled live from the kind parsers' own error messages,
+/// so they can never drift from what actually parses.
+fn parse_run_config(args: &[String]) -> Result<RunConfig> {
+    RunConfig::from_args(args).map_err(|e| {
+        eprintln!("valid flag values:");
+        let probes = [
+            ("--engine", EngineKind::parse("?").unwrap_err()),
+            ("--store", StoreKind::parse("?").unwrap_err()),
+            ("--restrict", RestrictKind::parse("?").unwrap_err()),
+            ("--counting", CountingMode::parse("?").unwrap_err()),
+            ("--proposal", ProposalKind::parse("?").unwrap_err()),
+            ("--schedule", Schedule::parse("?").unwrap_err()),
+        ];
+        for (flag, err) in probes {
+            eprintln!("  {flag:<12} {}", parser_values(&err));
+        }
+        eprintln!("see `bnlearn help` for the full flag list");
+        e
+    })
+}
+
+/// The parenthesized alternatives in a kind parser's error message.
+fn parser_values(err: &anyhow::Error) -> String {
+    let msg = format!("{err:#}");
+    match (msg.rfind('('), msg.rfind(')')) {
+        (Some(open), Some(close)) if open < close => msg[open + 1..close].to_string(),
+        _ => msg,
+    }
+}
+
 fn cmd_info() -> Result<()> {
     println!("bnlearn {}", env!("CARGO_PKG_VERSION"));
     println!("artifacts dir: {:?}", default_artifacts_dir());
@@ -318,4 +387,58 @@ fn cmd_info() -> Result<()> {
     println!("threads: {}", bnlearn::coordinator::config::default_threads());
     println!("networks: {:?}", bnlearn::networks::names());
     Ok(())
+}
+
+/// SIGINT → cooperative cancellation (unix only). The first Ctrl-C
+/// trips the shared [`ChainControl`] so chains wind down at their next
+/// step check and the run still reports — and, for posterior runs,
+/// checkpoints — its completed prefix; the handler then restores the
+/// default disposition, so a second Ctrl-C kills the process outright.
+#[cfg(unix)]
+mod interrupt {
+    use bnlearn::mcmc::ChainControl;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    const SIGINT: i32 = 2;
+    const SIG_DFL: usize = 0;
+    static INTERRUPTED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_sigint(_signum: i32) {
+        INTERRUPTED.store(true, Ordering::SeqCst);
+        unsafe {
+            signal(SIGINT, SIG_DFL);
+        }
+    }
+
+    /// Install the handler and a watcher thread that forwards the
+    /// (async-signal-safe) flag into `control.cancel()`.
+    pub fn install(control: &Arc<ChainControl>) {
+        unsafe {
+            signal(SIGINT, on_sigint as usize);
+        }
+        let control = control.clone();
+        std::thread::spawn(move || loop {
+            if INTERRUPTED.load(Ordering::SeqCst) {
+                eprintln!("interrupt: cancelling at the next MCMC step (Ctrl-C again to kill)");
+                control.cancel();
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        });
+    }
+}
+
+#[cfg(not(unix))]
+mod interrupt {
+    use bnlearn::mcmc::ChainControl;
+    use std::sync::Arc;
+
+    /// No-op on targets without POSIX signals.
+    pub fn install(_control: &Arc<ChainControl>) {}
 }

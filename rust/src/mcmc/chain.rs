@@ -9,7 +9,10 @@
 //! the accepted order's best graph to the tracker. All proposal kinds
 //! are symmetric moves, so no Hastings correction is needed.
 
+use std::sync::Arc;
+
 use super::best::BestGraphTracker;
+use super::control::ChainControl;
 use super::order::Order;
 use crate::scorer::{BestGraph, OrderScorer};
 use crate::util::Pcg32;
@@ -80,6 +83,7 @@ pub struct McmcChain<'s, S: OrderScorer + ?Sized> {
     pub stats: ChainStats,
     record_trace: bool,
     proposal: ProposalKind,
+    control: Option<Arc<ChainControl>>,
     rng: Pcg32,
 }
 
@@ -101,6 +105,7 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
             stats: ChainStats::default(),
             record_trace: false,
             proposal: ProposalKind::Swap,
+            control: None,
             rng,
         }
     }
@@ -127,6 +132,7 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
             stats,
             record_trace: false,
             proposal: ProposalKind::Swap,
+            control: None,
             rng,
         }
     }
@@ -147,6 +153,21 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
     /// pattern and thus the trajectory.
     pub fn set_proposal(&mut self, proposal: ProposalKind) {
         self.proposal = proposal;
+    }
+
+    /// Attach a shared [`ChainControl`]: [`Self::run`] /
+    /// [`Self::run_observed`] poll its cancel flag between steps and
+    /// fold every completed step into its progress counters. The
+    /// control never touches RNG or scoring state, so an uncancelled
+    /// controlled run is bit-identical to an uncontrolled one.
+    pub fn set_control(&mut self, control: Arc<ChainControl>) {
+        self.control = Some(control);
+    }
+
+    /// True when an attached control has been cancelled (always false
+    /// without one).
+    pub fn is_cancelled(&self) -> bool {
+        self.control.as_ref().is_some_and(|c| c.is_cancelled())
     }
 
     /// The current order.
@@ -222,12 +243,19 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
         if self.record_trace {
             self.stats.trace.push(self.current_score);
         }
+        if let Some(control) = &self.control {
+            control.count_step(accept);
+        }
         accept
     }
 
-    /// Run `iters` steps.
+    /// Run `iters` steps, stopping early between steps if an attached
+    /// [`ChainControl`] is cancelled.
     pub fn run(&mut self, iters: u64) {
         for _ in 0..iters {
+            if self.is_cancelled() {
+                break;
+            }
             self.step();
         }
     }
@@ -236,9 +264,13 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
     /// its score) to `observe` after every transition — the sample
     /// emission hook the posterior layer accumulates edge marginals
     /// through. Rejected proposals re-emit the unchanged state, as MCMC
-    /// averaging requires.
+    /// averaging requires. Cancellation stops between steps, after the
+    /// last completed step's emission.
     pub fn run_observed<F: FnMut(&Order, f64)>(&mut self, iters: u64, mut observe: F) {
         for _ in 0..iters {
+            if self.is_cancelled() {
+                break;
+            }
             self.step();
             observe(&self.order, self.current_score);
         }
@@ -397,6 +429,36 @@ mod tests {
             assert!((score - check.score_order(&order, &mut out)).abs() < 1e-9, "{proposal:?}");
             assert!(chain.stats.accept_rate() > 0.0, "{proposal:?}");
         }
+    }
+
+    /// A pre-cancelled control stops the chain before its first step; a
+    /// live one ticks the shared counters without touching the
+    /// trajectory.
+    #[test]
+    fn control_cancels_between_steps_and_counts_progress() {
+        let (_, table) = fixture(6, 2, 120, 140);
+        let control = ChainControl::shared();
+        let mut scorer = SerialScorer::new(&table);
+        let mut chain = McmcChain::new(&mut scorer, 6, 2, 141);
+        chain.set_control(control.clone());
+        chain.run(50);
+        assert_eq!(chain.stats.iterations, 50);
+        assert_eq!(control.progress(), (50, chain.stats.accepted));
+
+        control.cancel();
+        chain.run(100);
+        assert_eq!(chain.stats.iterations, 50, "cancelled chain takes no further steps");
+        let mut observed = 0;
+        chain.run_observed(100, |_, _| observed += 1);
+        assert_eq!(observed, 0);
+
+        // An uncancelled controlled chain is bit-identical to a plain one.
+        let mut s1 = SerialScorer::new(&table);
+        let mut plain = McmcChain::new(&mut s1, 6, 2, 141);
+        plain.run(50);
+        assert_eq!(plain.current_score(), chain.current_score());
+        assert_eq!(plain.order(), chain.order());
+        assert_eq!(plain.stats.accepted, chain.stats.accepted);
     }
 
     #[test]

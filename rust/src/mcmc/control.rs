@@ -1,0 +1,88 @@
+//! Shared chain control: a cooperative cancellation flag polled
+//! between MH steps, plus lock-free progress counters the service
+//! daemon's event stream and the CLI's Ctrl-C handler read while
+//! chains run.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Control/telemetry block shared between a controller (the one-shot
+/// CLI's Ctrl-C handler, the service daemon's `cancel` endpoint) and
+/// the chains of one run.
+///
+/// Cancellation is **cooperative and step-granular**: chains poll the
+/// flag between MH steps, so no step is ever torn mid-transition and a
+/// cancelled chain's state is exactly the state after its last
+/// completed step — checkpointable and resumable. The posterior
+/// sampler additionally rolls a cancelled run back to its last
+/// checkpoint-segment boundary so the chains stay iteration-aligned
+/// (see `posterior::sampler`).
+///
+/// The counters are `Relaxed` telemetry: they sum steps across every
+/// chain sharing the block and may lag the true totals by in-flight
+/// steps, but they never participate in any trajectory decision.
+#[derive(Debug, Default)]
+pub struct ChainControl {
+    cancel: AtomicBool,
+    /// MH steps completed across all chains sharing this block.
+    pub iterations: AtomicU64,
+    /// Accepted proposals across all chains sharing this block.
+    pub accepted: AtomicU64,
+}
+
+impl ChainControl {
+    /// A fresh, uncancelled control block behind the [`Arc`] every
+    /// consumer (chain spec, sampler options, watcher thread) clones.
+    pub fn shared() -> Arc<Self> {
+        Arc::default()
+    }
+
+    /// Ask every chain sharing this block to stop before its next step.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// True once [`Self::cancel`] has been called.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::SeqCst)
+    }
+
+    /// Progress snapshot `(iterations, accepted)`.
+    pub fn progress(&self) -> (u64, u64) {
+        (self.iterations.load(Ordering::Relaxed), self.accepted.load(Ordering::Relaxed))
+    }
+
+    /// Fold one completed step into the shared counters.
+    pub(crate) fn count_step(&self, accepted: bool) {
+        self.iterations.fetch_add(1, Ordering::Relaxed);
+        if accepted {
+            self.accepted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_clear_and_latches() {
+        let control = ChainControl::shared();
+        assert!(!control.is_cancelled());
+        assert_eq!(control.progress(), (0, 0));
+        control.cancel();
+        assert!(control.is_cancelled());
+        control.cancel(); // idempotent
+        assert!(control.is_cancelled());
+    }
+
+    #[test]
+    fn counts_steps_across_clones() {
+        let control = ChainControl::shared();
+        let other = control.clone();
+        control.count_step(true);
+        other.count_step(false);
+        other.count_step(true);
+        assert_eq!(control.progress(), (3, 2));
+    }
+}

@@ -4,12 +4,14 @@
 
 pub mod best;
 pub mod chain;
+pub mod control;
 pub mod graphspace;
 pub mod order;
 pub mod runner;
 
 pub use best::BestGraphTracker;
 pub use chain::{ChainStats, McmcChain, ProposalKind};
+pub use control::ChainControl;
 pub use graphspace::GraphChain;
 pub use order::Order;
 pub use runner::{

@@ -4,8 +4,11 @@
 //! with "sampling in order space provides opportunities for parallel
 //! implementation").
 
+use std::sync::Arc;
+
 use super::best::BestGraphTracker;
 use super::chain::{ChainStats, McmcChain, ProposalKind};
+use super::control::ChainControl;
 use crate::bn::Dag;
 use crate::scorer::OrderScorer;
 use crate::util::Timer;
@@ -29,10 +32,13 @@ pub struct ChainSpec {
     pub record_trace: bool,
     /// Proposal move (see [`ProposalKind`]).
     pub proposal: ProposalKind,
+    /// Shared cancellation flag + progress counters attached to every
+    /// chain of the run (see [`ChainControl`]); `None` runs uncontrolled.
+    pub control: Option<Arc<ChainControl>>,
 }
 
 impl ChainSpec {
-    /// Defaults: one chain, no trace, uniform swap proposals.
+    /// Defaults: one chain, no trace, uniform swap proposals, no control.
     pub fn new(n: usize, iters: u64, topk: usize, seed: u64) -> Self {
         ChainSpec {
             n,
@@ -42,6 +48,7 @@ impl ChainSpec {
             chains: 1,
             record_trace: false,
             proposal: ProposalKind::Swap,
+            control: None,
         }
     }
 }
@@ -108,6 +115,9 @@ pub fn run_chain_spec<S: OrderScorer + ?Sized>(scorer: &mut S, spec: &ChainSpec)
     let mut chain = McmcChain::new(scorer, spec.n, spec.topk, spec.seed);
     chain.set_proposal(spec.proposal);
     chain.set_record_trace(spec.record_trace);
+    if let Some(control) = &spec.control {
+        chain.set_control(control.clone());
+    }
     chain.run(spec.iters);
     let traces = if spec.record_trace { vec![chain.stats.trace.clone()] } else { Vec::new() };
     LearnResult {
@@ -185,6 +195,9 @@ where
                     );
                     chain.set_proposal(spec.proposal);
                     chain.set_record_trace(spec.record_trace);
+                    if let Some(control) = &spec.control {
+                        chain.set_control(control.clone());
+                    }
                     chain.run(spec.iters);
                     (chain.tracker.clone(), chain.stats.clone())
                 })

@@ -34,7 +34,14 @@ const MAGIC: [u8; 4] = *b"BNPC";
 /// set — bumping the version makes stale files fail with a clear
 /// "format v1 is not supported" instead of a misleading
 /// fingerprint-mismatch error.
-const VERSION: u32 = 2;
+///
+/// v3: the fingerprint field set grew again — it now also hashes the
+/// restriction (`--restrict`/`--restrict-alpha`) and counting
+/// (`--counting`/`--chunk-rows`) configuration, closing a collision
+/// between configs that build different stores (see
+/// `coordinator::fingerprint`). Same byte layout, same convention:
+/// bump on any fingerprint-fieldset change.
+const VERSION: u32 = 3;
 
 /// One chain's resumable state.
 #[derive(Debug, Clone)]

@@ -7,11 +7,13 @@
 
 use anyhow::{bail, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use super::checkpoint::{ChainState, RunCheckpoint};
 use super::marginals::{MarginalAccumulator, MarginalState};
 use crate::mcmc::best::BestGraphTracker;
 use crate::mcmc::chain::{ChainStats, McmcChain, ProposalKind};
+use crate::mcmc::control::ChainControl;
 use crate::mcmc::runner::LearnResult;
 use crate::mcmc::Order;
 use crate::score::ScoreStore;
@@ -54,6 +56,13 @@ pub struct SamplerOptions {
     pub checkpoint_path: Option<PathBuf>,
     /// Resume from this checkpoint instead of starting fresh.
     pub resume: Option<PathBuf>,
+    /// Cooperative cancellation + progress counters. A cancelled run
+    /// stops on a *segment boundary*: the torn segment's chain states
+    /// are discarded so every chain stays iteration-aligned, the last
+    /// completed segment's checkpoint remains the resume point, and the
+    /// returned run is bit-identical to an uninterrupted run whose
+    /// `iters` equals the returned `iters_done`.
+    pub control: Option<Arc<ChainControl>>,
 }
 
 /// What a posterior run produces.
@@ -66,8 +75,11 @@ pub struct PosteriorRun {
     /// Final per-chain states (what the last checkpoint would hold).
     pub states: Vec<ChainState>,
     /// Iterations completed per chain (equals `iters` unless resumed
-    /// past the target).
+    /// past the target or cancelled at a segment boundary).
     pub iters_done: u64,
+    /// True when the run stopped early because its
+    /// [`SamplerOptions::control`] was cancelled.
+    pub cancelled: bool,
 }
 
 /// Run (or resume) `opts.chains` posterior chains to `opts.iters`
@@ -144,12 +156,25 @@ where
         None => ((0..opts.chains).map(|_| None).collect(), 0),
     };
 
+    let is_cancelled = || opts.control.as_ref().is_some_and(|c| c.is_cancelled());
     let mut done = start;
+    let mut cancelled = false;
     while done < opts.iters {
+        if is_cancelled() {
+            cancelled = true;
+            break;
+        }
         let seg = match opts.checkpoint_every {
             0 => opts.iters - done,
             every => every.min(opts.iters - done),
         };
+        // Cancellation mid-segment stops each chain between steps, at
+        // *uneven* per-chain iteration counts. Checkpoints and merged
+        // marginals both assume iteration-aligned chains, so a torn
+        // segment is discarded: keep the boundary snapshot and roll
+        // back to it, making the cancelled run bit-identical to an
+        // uninterrupted run with `iters = done`.
+        let boundary = if opts.control.is_some() { states.clone() } else { Vec::new() };
         // Workers are re-spawned per segment (engines rebuilt by
         // `make_scorer`): store-backed engine construction is O(s)
         // bookkeeping over an existing table, which is noise next to a
@@ -173,6 +198,11 @@ where
                 .map(|h| Some(h.join().expect("posterior chain panicked")))
                 .collect()
         });
+        if is_cancelled() {
+            states = boundary;
+            cancelled = true;
+            break;
+        }
         done += seg;
         if opts.checkpoint_every > 0 {
             let path = opts.checkpoint_path.as_ref().expect("validated above");
@@ -210,6 +240,7 @@ where
         marginals,
         states: finals,
         iters_done: done,
+        cancelled,
     })
 }
 
@@ -246,6 +277,9 @@ where
     };
     chain.set_proposal(opts.proposal);
     chain.set_record_trace(opts.record_trace);
+    if let Some(control) = &opts.control {
+        chain.set_control(control.clone());
+    }
     chain.run_observed(seg, |order, _score| acc.observe(order, store));
     let (order, score, rng, tracker, stats) = chain.into_parts();
     ChainState {
@@ -291,6 +325,7 @@ mod tests {
             checkpoint_every: 0,
             checkpoint_path: None,
             resume: None,
+            control: None,
         }
     }
 
@@ -391,6 +426,58 @@ mod tests {
         assert_eq!(full.marginals.samples, resumed.marginals.samples);
         assert_eq!(full.result.traces, resumed.result.traces);
         assert_eq!(resumed.iters_done, 160);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pre_cancelled_run_returns_empty_at_start() {
+        let (_, table) = fixture(5, 2, 150, 406);
+        let control = ChainControl::shared();
+        control.cancel();
+        let mut o = opts(5, 100, 2);
+        o.control = Some(control);
+        let run = run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).unwrap();
+        assert!(run.cancelled);
+        assert_eq!(run.iters_done, 0);
+        assert_eq!(run.marginals.samples, 0);
+        assert!(run.states.is_empty());
+        assert_eq!(run.result.stats.iterations, 0);
+    }
+
+    /// Cancellation lands on a checkpoint-segment boundary: the torn
+    /// segment is rolled back, the returned run is bit-identical to an
+    /// uninterrupted run targeted at that boundary, and the checkpoint
+    /// on disk is the matching resume point.
+    #[test]
+    fn cancelled_run_is_a_prefix_of_the_straight_run() {
+        let (_, table) = fixture(6, 2, 200, 407);
+        let dir = std::env::temp_dir().join("bnlearn_sampler_cancel_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let control = ChainControl::shared();
+        let mut o = opts(6, 1_000_000, 2);
+        o.checkpoint_every = 200;
+        o.checkpoint_path = Some(dir.join("cancel.ckpt"));
+        o.control = Some(control.clone());
+        let canceller = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            control.cancel();
+        });
+        let run = run_posterior_chains(|_| SerialScorer::new(&table), &table, &o).unwrap();
+        canceller.join().unwrap();
+        assert!(run.cancelled, "a 1M-iteration run should not outrun a 30ms cancel");
+        assert_eq!(run.iters_done % 200, 0, "stopped on a segment boundary");
+        assert!(run.iters_done < 1_000_000);
+        if run.iters_done > 0 {
+            let straight = opts(6, run.iters_done, 2);
+            let s =
+                run_posterior_chains(|_| SerialScorer::new(&table), &table, &straight).unwrap();
+            assert_eq!(run.result.best_score(), s.result.best_score());
+            assert_eq!(run.result.stats.accepted, s.result.stats.accepted);
+            assert_eq!(run.marginals.sums, s.marginals.sums);
+            assert_eq!(run.marginals.samples, s.marginals.samples);
+            let ck = RunCheckpoint::load(dir.join("cancel.ckpt")).unwrap();
+            assert_eq!(ck.iters_done, run.iters_done);
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,296 @@
+//! The shared score-store cache: immutable built stores keyed by
+//! [`crate::coordinator::store_fingerprint`], LRU-bounded by a byte
+//! budget.
+//!
+//! Preprocessing dominates wall-clock for short chains (the paper's
+//! Table IV splits it out for exactly that reason), and a daemon
+//! serving many jobs over the same dataset rebuilds the identical
+//! store again and again. Stores are immutable after construction and
+//! every consumer takes `&StoreHandle`, so sharing one `Arc` across
+//! concurrent jobs is safe — and because the fingerprint covers every
+//! store-shaping knob (dataset identity + seed, score params, backend,
+//! restriction, counting), a hit is *guaranteed* to hand back the
+//! bit-identical store the job would have built itself.
+//!
+//! Concurrency: single-flight builds. The first job to miss inserts a
+//! `Building` marker and builds outside the lock; concurrent jobs
+//! wanting the same key block on a condvar and count as *hits* when
+//! the build lands (they skipped their own build — that's the metric
+//! the tests assert). A build that panics clears the marker and wakes
+//! waiters so they can retry or fail on their own terms.
+//!
+//! Eviction: strict LRU by last-use clock, evicting until the resident
+//! bytes fit the budget. A store larger than the whole budget is handed
+//! to its job but never cached. `capacity == 0` disables caching
+//! entirely (every call builds).
+
+use std::collections::HashMap;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::registry::StoreHandle;
+use crate::score::ScoreStore;
+
+/// Telemetry snapshot (the `stats` protocol command serializes this).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from a resident (or in-flight) build.
+    pub hits: u64,
+    /// Lookups that had to build.
+    pub misses: u64,
+    /// Ready entries dropped to fit the byte budget.
+    pub evictions: u64,
+    /// Ready entries currently resident.
+    pub entries: usize,
+    /// Bytes of resident stores.
+    pub bytes: usize,
+}
+
+enum Slot {
+    /// A build is in flight on some job thread; waiters sleep on the
+    /// cache condvar.
+    Building,
+    /// Built and resident.
+    Ready { store: Arc<StoreHandle>, bytes: usize, last_used: u64 },
+}
+
+struct Inner {
+    slots: HashMap<u64, Slot>,
+    clock: u64,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// The daemon's store cache. See the module docs for the contract.
+pub struct StoreCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    ready: Condvar,
+}
+
+impl StoreCache {
+    /// A cache bounded to `capacity` resident bytes (0 disables).
+    pub fn new(capacity: usize) -> Self {
+        let inner =
+            Inner { slots: HashMap::new(), clock: 0, bytes: 0, hits: 0, misses: 0, evictions: 0 };
+        StoreCache { capacity, inner: Mutex::new(inner), ready: Condvar::new() }
+    }
+
+    /// Current telemetry.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.lock();
+        let entries = inner.slots.values().filter(|s| matches!(s, Slot::Ready { .. })).count();
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            entries,
+            bytes: inner.bytes,
+        }
+    }
+
+    /// The store for `key`, built by `build` on a miss. Returns the
+    /// (possibly shared) store and whether this call was a cache hit —
+    /// i.e. whether `build` was skipped.
+    pub fn get_or_build<F>(&self, key: u64, build: F) -> (Arc<StoreHandle>, bool)
+    where
+        F: FnOnce() -> StoreHandle,
+    {
+        if self.capacity == 0 {
+            let mut inner = self.lock();
+            inner.misses += 1;
+            drop(inner);
+            return (Arc::new(build()), false);
+        }
+        enum Probe {
+            Hit(Arc<StoreHandle>),
+            Wait,
+            Claim,
+        }
+        {
+            let mut inner = self.lock();
+            loop {
+                let probe = match inner.slots.get(&key) {
+                    Some(Slot::Ready { store, .. }) => Probe::Hit(store.clone()),
+                    Some(Slot::Building) => Probe::Wait,
+                    None => Probe::Claim,
+                };
+                match probe {
+                    Probe::Hit(store) => {
+                        inner.clock += 1;
+                        let now = inner.clock;
+                        if let Some(Slot::Ready { last_used, .. }) = inner.slots.get_mut(&key) {
+                            *last_used = now;
+                        }
+                        inner.hits += 1;
+                        return (store, true);
+                    }
+                    Probe::Wait => {
+                        // Another job is building this very store; wait
+                        // for it rather than duplicating the work.
+                        inner = self.ready.wait(inner).expect("store-cache lock poisoned");
+                    }
+                    Probe::Claim => {
+                        inner.slots.insert(key, Slot::Building);
+                        inner.misses += 1;
+                        break;
+                    }
+                }
+            }
+        }
+        // Build outside the lock — stores take seconds, lookups must not.
+        let built = panic::catch_unwind(AssertUnwindSafe(build));
+        let mut inner = self.lock();
+        let store = match built {
+            Ok(store) => Arc::new(store),
+            Err(payload) => {
+                inner.slots.remove(&key);
+                self.ready.notify_all();
+                panic::resume_unwind(payload);
+            }
+        };
+        let bytes = store.bytes();
+        if bytes > self.capacity {
+            // Too big to ever cache: hand it to the caller only.
+            inner.slots.remove(&key);
+        } else {
+            inner.clock += 1;
+            let slot = Slot::Ready { store: store.clone(), bytes, last_used: inner.clock };
+            inner.slots.insert(key, slot);
+            inner.bytes += bytes;
+            self.evict_to_fit(&mut inner);
+        }
+        self.ready.notify_all();
+        (store, false)
+    }
+
+    fn evict_to_fit(&self, inner: &mut Inner) {
+        while inner.bytes > self.capacity {
+            let victim = inner
+                .slots
+                .iter()
+                .filter_map(|(k, s)| match s {
+                    Slot::Ready { last_used, .. } => Some((*last_used, *k)),
+                    Slot::Building => None,
+                })
+                .min();
+            let Some((_, key)) = victim else { break };
+            if let Some(Slot::Ready { bytes, .. }) = inner.slots.remove(&key) {
+                inner.bytes -= bytes;
+                inner.evictions += 1;
+                crate::debug!("store cache evicted key {key:016x} ({bytes} bytes)");
+            }
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("store-cache lock poisoned")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{build_run_store, store_fingerprint, RunConfig, Workload};
+
+    fn small_store(seed: u64) -> StoreHandle {
+        let cfg = RunConfig { network: "asia".into(), rows: 80, seed, ..RunConfig::default() };
+        let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed).unwrap();
+        build_run_store(&cfg, &workload, None).0
+    }
+
+    #[test]
+    fn hit_skips_the_build_and_shares_the_store() {
+        let cache = StoreCache::new(1 << 30);
+        let (first, hit) = cache.get_or_build(7, || small_store(1));
+        assert!(!hit);
+        let (second, hit) = cache.get_or_build(7, || panic!("must not rebuild on a hit"));
+        assert!(hit);
+        assert!(Arc::ptr_eq(&first, &second), "hit returns the same allocation");
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+        assert_eq!(stats.bytes, first.bytes());
+    }
+
+    #[test]
+    fn lru_eviction_respects_the_byte_budget() {
+        let probe = small_store(1);
+        let one = probe.bytes();
+        // Room for two stores, not three.
+        let cache = StoreCache::new(2 * one + one / 2);
+        cache.get_or_build(1, || small_store(1));
+        cache.get_or_build(2, || small_store(2));
+        // Touch key 1 so key 2 is the LRU victim.
+        cache.get_or_build(1, || panic!("resident"));
+        cache.get_or_build(3, || small_store(3));
+        let stats = cache.stats();
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.entries, 2);
+        assert!(stats.bytes <= 2 * one + one / 2);
+        // Key 2 was evicted; key 1 survived the LRU pass.
+        let (_, hit) = cache.get_or_build(1, || panic!("resident"));
+        assert!(hit);
+        let (_, hit) = cache.get_or_build(2, || small_store(2));
+        assert!(!hit, "evicted entry rebuilds");
+    }
+
+    #[test]
+    fn oversized_store_is_returned_but_not_cached() {
+        let cache = StoreCache::new(16); // smaller than any real store
+        let (store, hit) = cache.get_or_build(5, || small_store(4));
+        assert!(!hit);
+        assert!(store.bytes() > 16);
+        assert_eq!(cache.stats().entries, 0);
+        let (_, hit) = cache.get_or_build(5, || small_store(4));
+        assert!(!hit, "oversized entries never hit");
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let cache = StoreCache::new(0);
+        let (_, hit) = cache.get_or_build(9, || small_store(5));
+        assert!(!hit);
+        let (_, hit) = cache.get_or_build(9, || small_store(5));
+        assert!(!hit);
+        assert_eq!(cache.stats().misses, 2);
+        assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn concurrent_same_key_builds_once_single_flight() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let cache = StoreCache::new(1 << 30);
+        let builds = AtomicUsize::new(0);
+        let cfg = RunConfig { network: "asia".into(), rows: 200, ..RunConfig::default() };
+        let key = store_fingerprint(&cfg);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    cache.get_or_build(key, || {
+                        builds.fetch_add(1, Ordering::SeqCst);
+                        small_store(6)
+                    });
+                });
+            }
+        });
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "single-flight build");
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 3, "waiters on an in-flight build count as hits");
+    }
+
+    #[test]
+    fn panicking_build_clears_the_marker() {
+        let cache = StoreCache::new(1 << 30);
+        let attempt = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            cache.get_or_build(11, || panic!("boom"));
+        }));
+        assert!(attempt.is_err());
+        // The key is buildable again (no wedged Building marker).
+        let (_, hit) = cache.get_or_build(11, || small_store(7));
+        assert!(!hit);
+        assert_eq!(cache.stats().entries, 1);
+    }
+}

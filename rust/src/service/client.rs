@@ -1,0 +1,107 @@
+//! A blocking JSON-lines client for the service daemon.
+//!
+//! One request, one response line — the daemon answers in order per
+//! connection, so a plain `BufReader` round-trip is the whole protocol.
+//! `events` long-polls server-side, which makes [`Client::wait`] a
+//! simple loop: keep asking from the last index until the reply is
+//! flagged `final`.
+//!
+//! The integration tests and the quickstart example drive a daemon
+//! through this type; the CI smoke test deliberately bypasses it to
+//! prove a shell script (`bash` + `/dev/tcp`) speaks the same wire.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+use super::protocol::Request;
+
+/// A connected daemon client. One request in flight at a time.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect to a daemon.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let writer = TcpStream::connect(addr).context("connecting to service daemon")?;
+        let reader = BufReader::new(writer.try_clone()?);
+        Ok(Client { reader, writer })
+    }
+
+    /// One request/response round-trip. Errors if the daemon replies
+    /// `ok:false` (carrying its error string) or hangs up.
+    pub fn call(&mut self, req: &Request) -> Result<Json> {
+        writeln!(self.writer, "{}", req.to_json())?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            bail!("daemon closed the connection");
+        }
+        let doc = Json::parse(line.trim_end()).context("parsing daemon response")?;
+        if doc.get("ok").and_then(Json::as_bool) != Some(true) {
+            let msg = doc.get("error").and_then(Json::as_str).unwrap_or("unknown error");
+            bail!("daemon error: {msg}");
+        }
+        Ok(doc)
+    }
+
+    /// Submit a run (one-shot CLI argument vector); returns the job id.
+    pub fn submit(&mut self, args: &[String]) -> Result<u64> {
+        let doc = self.call(&Request::Submit { args: args.to_vec() })?;
+        doc.get("job").and_then(Json::as_u64).context("submit reply missing job id")
+    }
+
+    /// Snapshot a job's state and progress counters.
+    pub fn status(&mut self, job: u64) -> Result<Json> {
+        self.call(&Request::Status { job })
+    }
+
+    /// Long-poll events from index `from`: returns the new events, the
+    /// next index to poll from, and whether the job is finished.
+    pub fn events(&mut self, job: u64, from: usize) -> Result<(Vec<Json>, usize, bool)> {
+        let doc = self.call(&Request::Events { job, from })?;
+        let events =
+            doc.get("events").and_then(Json::as_arr).map(<[Json]>::to_vec).unwrap_or_default();
+        let next = doc.get("next").and_then(Json::as_u64).unwrap_or(from as u64) as usize;
+        let done = doc.get("final").and_then(Json::as_bool).unwrap_or(false);
+        Ok((events, next, done))
+    }
+
+    /// Stream a job to completion, returning the full event log.
+    pub fn wait(&mut self, job: u64) -> Result<Vec<Json>> {
+        let mut log = Vec::new();
+        let mut from = 0;
+        loop {
+            let (events, next, done) = self.events(job, from)?;
+            log.extend(events);
+            from = next;
+            if done {
+                return Ok(log);
+            }
+        }
+    }
+
+    /// Fetch the terminal report of a finished job.
+    pub fn report(&mut self, job: u64) -> Result<Json> {
+        let doc = self.call(&Request::Report { job })?;
+        doc.get("report").cloned().context("report reply missing report object")
+    }
+
+    /// Request cooperative cancellation.
+    pub fn cancel(&mut self, job: u64) -> Result<()> {
+        self.call(&Request::Cancel { job }).map(|_| ())
+    }
+
+    /// Cache and queue telemetry.
+    pub fn stats(&mut self) -> Result<Json> {
+        self.call(&Request::Stats)
+    }
+
+    /// Ask the daemon to drain and stop.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.call(&Request::Shutdown).map(|_| ())
+    }
+}

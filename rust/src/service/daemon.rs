@@ -1,0 +1,659 @@
+//! The structure-learning service daemon behind the `serve` subcommand.
+//!
+//! One process, four moving parts:
+//! * an **accept loop** on a TCP listener, spawning a detached handler
+//!   per connection speaking the JSON-lines protocol
+//!   (`service::protocol`);
+//! * a **worker pool** (`--jobs` threads) pulling submitted jobs off a
+//!   FIFO queue and driving them through the coordinator's
+//!   `*_with_store` entry points;
+//! * the **shared score-store cache** (`service::cache`): jobs build
+//!   stores through it, so a second job with the same store
+//!   fingerprint skips the whole preprocessing phase;
+//! * a **journal** (`--state-dir`): each accepted job's argument
+//!   vector is written to `jobs/<id>.job` and removed on terminal
+//!   state, so a killed daemon requeues unfinished work on restart —
+//!   posterior jobs that already checkpointed resume from their own
+//!   checkpoint (the PR 2 `BNPC` format) instead of restarting.
+//!
+//! Concurrency discipline: all jobs run with `shared_exec` set, so
+//! their executors draw permits from one process-wide budget
+//! (`exec::install_shared`) instead of oversubscribing the host
+//! J-fold. None of this touches trajectories: a job through the daemon
+//! is bit-identical to the same config through the one-shot CLI
+//! (`tests/service.rs` diffs score bit patterns to prove it).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{self, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::cache::StoreCache;
+use super::job::{Job, JobId, JobState};
+use super::json::Json;
+use super::protocol::{self, Request};
+use crate::coordinator::{
+    build_run_store, run_learning_with_store, run_posterior_with_store, LearnReport,
+    PosteriorReport, RunConfig, Workload,
+};
+use crate::exec::Schedule;
+use crate::util::logging::Level;
+
+/// Daemon configuration (`serve` subcommand flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address; port 0 picks a free port (tests use this).
+    pub addr: String,
+    /// Concurrent job workers.
+    pub jobs: usize,
+    /// Total worker-thread budget shared across all jobs.
+    pub threads: usize,
+    /// Tile-assignment schedule for the shared executor.
+    pub schedule: Schedule,
+    /// Store-cache byte budget (0 disables caching).
+    pub cache_bytes: usize,
+    /// Journal directory (`--state-dir none` disables persistence).
+    pub state_dir: Option<PathBuf>,
+    /// Log verbosity.
+    pub log_level: Level,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:4615".into(),
+            jobs: 2,
+            threads: crate::coordinator::config::default_threads(),
+            schedule: Schedule::Balanced,
+            cache_bytes: 1 << 30,
+            state_dir: Some(PathBuf::from("results/service")),
+            log_level: Level::Info,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Parse `serve` subcommand flags.
+    pub fn from_args(args: &[String]) -> Result<Self> {
+        let mut cfg = ServeConfig::default();
+        let mut it = args.iter();
+        while let Some(key) = it.next() {
+            let mut next = || -> Result<&String> {
+                it.next().ok_or_else(|| anyhow::anyhow!("missing value after {key}"))
+            };
+            match key.as_str() {
+                "--addr" => cfg.addr = next()?.clone(),
+                "--jobs" => cfg.jobs = next()?.parse()?,
+                "--threads" => cfg.threads = next()?.parse()?,
+                "--schedule" => cfg.schedule = Schedule::parse(next()?)?,
+                "--cache-bytes" => cfg.cache_bytes = parse_bytes(next()?)?,
+                "--state-dir" => {
+                    let value = next()?;
+                    cfg.state_dir = if value == "none" { None } else { Some(value.into()) };
+                }
+                "--log-level" => cfg.log_level = Level::parse(next()?)?,
+                other => bail!("unknown serve flag {other:?}"),
+            }
+        }
+        if cfg.jobs == 0 {
+            bail!("--jobs must be >= 1");
+        }
+        Ok(cfg)
+    }
+}
+
+/// Parse a byte budget with an optional `k`/`m`/`g` suffix.
+fn parse_bytes(text: &str) -> Result<usize> {
+    let t = text.trim().to_ascii_lowercase();
+    let (digits, mult) = if let Some(p) = t.strip_suffix('g') {
+        (p, 1usize << 30)
+    } else if let Some(p) = t.strip_suffix('m') {
+        (p, 1usize << 20)
+    } else if let Some(p) = t.strip_suffix('k') {
+        (p, 1usize << 10)
+    } else {
+        (t.as_str(), 1)
+    };
+    let value: usize = digits.trim().parse().with_context(|| format!("bad byte size {text:?}"))?;
+    Ok(value * mult)
+}
+
+/// The daemon's shared state: job table, FIFO queue, store cache.
+pub struct Daemon {
+    cfg: ServeConfig,
+    addr: SocketAddr,
+    cache: StoreCache,
+    jobs: Mutex<BTreeMap<JobId, Arc<Job>>>,
+    queue: Mutex<VecDeque<JobId>>,
+    queue_ready: Condvar,
+    next_id: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+/// Handle on a started daemon: address, shutdown trigger, join.
+pub struct DaemonHandle {
+    daemon: Arc<Daemon>,
+    threads: Vec<thread::JoinHandle<()>>,
+}
+
+impl DaemonHandle {
+    /// The bound listen address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.daemon.addr
+    }
+
+    /// Trigger shutdown: cancel running jobs, stop accepting, drain.
+    pub fn shutdown(&self) {
+        self.daemon.begin_shutdown();
+    }
+
+    /// Wait for the accept loop and workers to exit.
+    pub fn join(self) {
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start the daemon: install the shared executor, bind, recover the
+/// journal, spawn workers + accept loop.
+pub fn start(cfg: ServeConfig) -> Result<DaemonHandle> {
+    crate::util::logging::set_level(cfg.log_level);
+    crate::exec::install_shared(cfg.threads, cfg.schedule);
+    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let daemon = Arc::new(Daemon {
+        cache: StoreCache::new(cfg.cache_bytes),
+        addr,
+        jobs: Mutex::new(BTreeMap::new()),
+        queue: Mutex::new(VecDeque::new()),
+        queue_ready: Condvar::new(),
+        next_id: AtomicU64::new(1),
+        shutdown: AtomicBool::new(false),
+        cfg,
+    });
+    daemon.recover_journal();
+    let mut threads = Vec::new();
+    for worker in 0..daemon.cfg.jobs {
+        let d = daemon.clone();
+        let t = thread::Builder::new()
+            .name(format!("svc-worker-{worker}"))
+            .spawn(move || d.worker_loop())?;
+        threads.push(t);
+    }
+    let d = daemon.clone();
+    let t =
+        thread::Builder::new().name("svc-accept".into()).spawn(move || d.accept_loop(listener))?;
+    threads.push(t);
+    crate::info!(
+        "service daemon on {addr}: {} workers, {} shared threads, {} cache bytes",
+        daemon.cfg.jobs,
+        daemon.cfg.threads,
+        daemon.cfg.cache_bytes
+    );
+    Ok(DaemonHandle { daemon, threads })
+}
+
+/// Run the daemon in the foreground (the `serve` subcommand): start,
+/// print the listening line (the CI smoke test waits for it), block
+/// until a `shutdown` request drains it.
+pub fn serve(cfg: ServeConfig) -> Result<()> {
+    let handle = start(cfg)?;
+    println!("bnlearn service listening on {}", handle.local_addr());
+    handle.join();
+    println!("bnlearn service stopped");
+    Ok(())
+}
+
+fn field(key: &str, value: Json) -> (String, Json) {
+    (key.to_string(), value)
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+impl Daemon {
+    fn job(&self, id: JobId) -> Option<Arc<Job>> {
+        self.jobs.lock().expect("job table lock poisoned").get(&id).cloned()
+    }
+
+    fn worker_loop(self: Arc<Self>) {
+        loop {
+            let id = {
+                let mut queue = self.queue.lock().expect("queue lock poisoned");
+                loop {
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    if let Some(id) = queue.pop_front() {
+                        break id;
+                    }
+                    queue = self.queue_ready.wait(queue).expect("queue lock poisoned");
+                }
+            };
+            if let Some(job) = self.job(id) {
+                self.run_job(&job);
+            }
+        }
+    }
+
+    fn accept_loop(self: Arc<Self>, listener: TcpListener) {
+        for stream in listener.incoming() {
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(stream) => {
+                    let d = self.clone();
+                    let spawned = thread::Builder::new()
+                        .name("svc-conn".into())
+                        .spawn(move || d.serve_connection(stream));
+                    if let Err(e) = spawned {
+                        crate::warn!("connection thread spawn failed: {e}");
+                    }
+                }
+                Err(e) => crate::warn!("accept failed: {e}"),
+            }
+        }
+        crate::info!("accept loop stopped");
+    }
+
+    fn serve_connection(&self, stream: TcpStream) {
+        let Ok(read_half) = stream.try_clone() else { return };
+        let reader = BufReader::new(read_half);
+        let mut writer = stream;
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let response = match Request::parse_line(&line) {
+                Ok(req) => self.handle(req),
+                Err(e) => protocol::error_response(&format!("{e:#}")),
+            };
+            if writeln!(writer, "{response}").is_err() {
+                break;
+            }
+        }
+    }
+
+    fn handle(&self, req: Request) -> Json {
+        match self.dispatch(req) {
+            Ok(fields) => protocol::ok_response(fields),
+            Err(e) => protocol::error_response(&format!("{e:#}")),
+        }
+    }
+
+    fn dispatch(&self, req: Request) -> Result<Vec<(String, Json)>> {
+        match req {
+            Request::Submit { args } => {
+                if self.shutdown.load(Ordering::SeqCst) {
+                    bail!("daemon is shutting down");
+                }
+                let cfg = RunConfig::from_args(&args)?;
+                let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+                let job = Job::queued(id, args, cfg);
+                self.journal_write(&job);
+                self.jobs.lock().expect("job table lock poisoned").insert(id, job);
+                self.queue.lock().expect("queue lock poisoned").push_back(id);
+                self.queue_ready.notify_one();
+                crate::info!("job {id}: queued");
+                Ok(vec![field("job", Json::num(id))])
+            }
+            Request::Status { job } => {
+                let job = self.require(job)?;
+                let (iterations, accepted) = job.control.progress();
+                Ok(vec![
+                    field("job", Json::num(job.id)),
+                    field("state", Json::str(job.state().name())),
+                    field("iterations", Json::num(iterations)),
+                    field("accepted", Json::num(accepted)),
+                ])
+            }
+            Request::Events { job, from } => {
+                let job = self.require(job)?;
+                // Long-poll: blocks this connection's thread only.
+                let (events, next, done) = job.wait_events(from);
+                Ok(vec![
+                    field("job", Json::num(job.id)),
+                    field("events", Json::Arr(events)),
+                    field("next", Json::num(next as u64)),
+                    field("final", Json::Bool(done)),
+                ])
+            }
+            Request::Report { job } => {
+                let job = self.require(job)?;
+                match job.report() {
+                    Some(report) => Ok(vec![
+                        field("job", Json::num(job.id)),
+                        field("state", Json::str(job.state().name())),
+                        field("report", report),
+                    ]),
+                    None => match job.error() {
+                        Some(e) => bail!("job {} failed: {e}", job.id),
+                        None => {
+                            bail!("job {} has no report yet (state {})", job.id, job.state().name())
+                        }
+                    },
+                }
+            }
+            Request::Cancel { job } => {
+                let job = self.require(job)?;
+                job.control.cancel();
+                if job.state() == JobState::Queued {
+                    job.finish(JobState::Cancelled, None, None);
+                    self.clear_journal(job.id);
+                }
+                crate::info!("job {}: cancel requested", job.id);
+                Ok(vec![field("job", Json::num(job.id))])
+            }
+            Request::Stats => {
+                let cache = self.cache.stats();
+                let jobs = self.jobs.lock().expect("job table lock poisoned").len();
+                let queued = self.queue.lock().expect("queue lock poisoned").len();
+                let cache_obj = obj(vec![
+                    ("hits", Json::num(cache.hits)),
+                    ("misses", Json::num(cache.misses)),
+                    ("evictions", Json::num(cache.evictions)),
+                    ("entries", Json::num(cache.entries as u64)),
+                    ("bytes", Json::num(cache.bytes as u64)),
+                ]);
+                Ok(vec![
+                    field("cache", cache_obj),
+                    field("jobs", Json::num(jobs as u64)),
+                    field("queued", Json::num(queued as u64)),
+                ])
+            }
+            Request::Shutdown => {
+                self.begin_shutdown();
+                Ok(vec![field("stopping", Json::Bool(true))])
+            }
+        }
+    }
+
+    fn require(&self, id: JobId) -> Result<Arc<Job>> {
+        self.job(id).ok_or_else(|| anyhow::anyhow!("no such job {id}"))
+    }
+
+    fn begin_shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        crate::info!("shutdown: cancelling running jobs");
+        for job in self.jobs.lock().expect("job table lock poisoned").values() {
+            job.control.cancel();
+        }
+        self.queue_ready.notify_all();
+        // A throwaway connection unblocks the accept loop so it can
+        // observe the shutdown flag.
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    // ---- job execution ----
+
+    fn run_job(&self, job: &Arc<Job>) {
+        if !job.start() {
+            return; // cancelled while queued
+        }
+        crate::info!("job {}: starting [{}]", job.id, job.args.join(" "));
+        let outcome = panic::catch_unwind(AssertUnwindSafe(|| self.execute(job)));
+        match outcome {
+            Ok(Ok(report)) => {
+                let state = if job.control.is_cancelled() {
+                    JobState::Cancelled
+                } else {
+                    JobState::Done
+                };
+                job.finish(state, Some(report), None);
+            }
+            Ok(Err(e)) => job.finish(JobState::Failed, None, Some(format!("{e:#}"))),
+            Err(_) => job.finish(JobState::Failed, None, Some("job panicked".to_string())),
+        }
+        self.clear_journal(job.id);
+        crate::info!("job {}: {}", job.id, job.state().name());
+    }
+
+    fn execute(&self, job: &Arc<Job>) -> Result<Json> {
+        let mut cfg = job.cfg.clone();
+        cfg.shared_exec = true;
+        job.push_event(obj(vec![("type", Json::str("phase")), ("phase", Json::str("build"))]));
+        let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
+        let mut preprocess_secs = 0.0;
+        let (store, cache_hit) = self.cache.get_or_build(job.store_key, || {
+            let (store, secs) = build_run_store(&cfg, &workload, None);
+            preprocess_secs = secs;
+            store
+        });
+        crate::info!(
+            "job {}: store cache {} (key {:016x})",
+            job.id,
+            if cache_hit { "hit" } else { "miss" },
+            job.store_key
+        );
+        job.push_event(obj(vec![
+            ("type", Json::str("cache")),
+            ("hit", Json::Bool(cache_hit)),
+            ("key", Json::str(format!("{:016x}", job.store_key))),
+        ]));
+        job.push_event(obj(vec![("type", Json::str("phase")), ("phase", Json::str("sample"))]));
+
+        // A sidecar thread streams progress events off the control's
+        // counters while the chains run; the scope joins it before the
+        // report is assembled.
+        let done = AtomicBool::new(false);
+        thread::scope(|scope| {
+            scope.spawn(|| {
+                let mut last = (0u64, 0u64);
+                while !done.load(Ordering::SeqCst) {
+                    thread::sleep(Duration::from_millis(100));
+                    let now = job.control.progress();
+                    if now != last {
+                        last = now;
+                        job.push_event(obj(vec![
+                            ("type", Json::str("progress")),
+                            ("iterations", Json::num(now.0)),
+                            ("accepted", Json::num(now.1)),
+                        ]));
+                    }
+                }
+            });
+            let control = Some(job.control.clone());
+            let report = if cfg.posterior {
+                run_posterior_with_store(&cfg, &workload, &store, preprocess_secs, control)
+                    .map(|r| posterior_report(&r, cache_hit))
+            } else {
+                run_learning_with_store(&cfg, &workload, &store, preprocess_secs, control)
+                    .map(|r| learn_report(&r, cache_hit))
+            };
+            done.store(true, Ordering::SeqCst);
+            report
+        })
+    }
+
+    // ---- journal ----
+
+    fn journal_dir(&self) -> Option<PathBuf> {
+        self.cfg.state_dir.as_ref().map(|d| d.join("jobs"))
+    }
+
+    fn journal_write(&self, job: &Job) {
+        let Some(dir) = self.journal_dir() else { return };
+        if let Err(e) = std::fs::create_dir_all(&dir) {
+            crate::warn!("journal: creating {dir:?} failed: {e}");
+            return;
+        }
+        let path = dir.join(format!("{}.job", job.id));
+        if let Err(e) = std::fs::write(&path, job.args.join("\n")) {
+            crate::warn!("journal: writing {path:?} failed: {e}");
+        }
+    }
+
+    fn clear_journal(&self, id: JobId) {
+        if let Some(dir) = self.journal_dir() {
+            let _ = std::fs::remove_file(dir.join(format!("{id}.job")));
+        }
+    }
+
+    /// Requeue every journaled job (runs before the workers spawn).
+    fn recover_journal(&self) {
+        let Some(dir) = self.journal_dir() else { return };
+        let Ok(entries) = std::fs::read_dir(&dir) else { return };
+        let mut found: Vec<(JobId, Vec<String>)> = Vec::new();
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("job") {
+                continue;
+            }
+            let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("");
+            let Ok(id) = stem.parse::<JobId>() else { continue };
+            let Ok(body) = std::fs::read_to_string(&path) else { continue };
+            let args: Vec<String> =
+                body.lines().filter(|l| !l.is_empty()).map(|l| l.to_string()).collect();
+            found.push((id, args));
+        }
+        found.sort();
+        for (id, mut args) in found {
+            let Ok(cfg) = RunConfig::from_args(&args) else {
+                crate::warn!("journal: job {id} args no longer parse; dropping");
+                self.clear_journal(id);
+                continue;
+            };
+            // A killed posterior job that already wrote a checkpoint
+            // resumes from it instead of restarting at iteration 0.
+            let resumable = cfg.posterior
+                && cfg.checkpoint_every > 0
+                && cfg.resume.is_none()
+                && cfg.checkpoint_path.exists();
+            if resumable {
+                args.push("--resume".into());
+                args.push(cfg.checkpoint_path.display().to_string());
+            }
+            let Ok(cfg) = RunConfig::from_args(&args) else { continue };
+            if self.next_id.load(Ordering::SeqCst) <= id {
+                self.next_id.store(id + 1, Ordering::SeqCst);
+            }
+            let job = Job::queued(id, args, cfg);
+            self.jobs.lock().expect("job table lock poisoned").insert(id, job);
+            self.queue.lock().expect("queue lock poisoned").push_back(id);
+            let suffix = if resumable { " (resuming)" } else { "" };
+            crate::info!("journal: requeued job {id}{suffix}");
+        }
+    }
+}
+
+/// Serialize a finished learning run for the `report` command. The
+/// best score travels both human-readable and as exact IEEE-754 bits.
+fn learn_report(report: &LearnReport, cache_hit: bool) -> Json {
+    let best_score = report.result.best_score().unwrap_or(f64::NAN);
+    let edges: Vec<Json> = report
+        .result
+        .best_dag()
+        .map(|dag| {
+            dag.edges()
+                .iter()
+                .map(|&(from, to)| Json::Arr(vec![Json::num(from as u64), Json::num(to as u64)]))
+                .collect()
+        })
+        .unwrap_or_default();
+    Json::Obj(vec![
+        field("type", Json::str("learn")),
+        field("best_score", Json::Num(best_score)),
+        field("best_score_bits", Json::str(protocol::f64_bits(best_score))),
+        field("edges", Json::Arr(edges)),
+        field("iterations", Json::num(report.result.stats.iterations)),
+        field("accepted", Json::num(report.result.stats.accepted)),
+        field("store", Json::str(report.store_name)),
+        field("store_bytes", Json::num(report.store_bytes as u64)),
+        field("cache_hit", Json::Bool(cache_hit)),
+        field("preprocess_secs", Json::Num(report.preprocess_secs)),
+        field("sampling_secs", Json::Num(report.sampling_secs)),
+        field("summary", Json::str(report.summary())),
+    ])
+}
+
+/// Serialize a finished posterior run for the `report` command.
+fn posterior_report(report: &PosteriorReport, cache_hit: bool) -> Json {
+    let best_score = report.result.best_score().unwrap_or(f64::NAN);
+    Json::Obj(vec![
+        field("type", Json::str("posterior")),
+        field("auc", Json::Num(report.auc)),
+        field("samples", Json::num(report.samples)),
+        field("iters_done", Json::num(report.iters_done)),
+        field("best_score", Json::Num(best_score)),
+        field("best_score_bits", Json::str(protocol::f64_bits(best_score))),
+        field("cache_hit", Json::Bool(cache_hit)),
+        field("summary", Json::str(report.summary())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn serve_config_parses_flags() {
+        let cfg = ServeConfig::from_args(&args(
+            "--addr 127.0.0.1:0 --jobs 3 --threads 4 --schedule static --cache-bytes 64m \
+             --state-dir none --log-level warn",
+        ))
+        .unwrap();
+        assert_eq!(cfg.addr, "127.0.0.1:0");
+        assert_eq!(cfg.jobs, 3);
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.schedule, Schedule::Static);
+        assert_eq!(cfg.cache_bytes, 64 << 20);
+        assert!(cfg.state_dir.is_none());
+        assert_eq!(cfg.log_level, Level::Warn);
+        // defaults
+        let d = ServeConfig::default();
+        assert_eq!(d.jobs, 2);
+        assert_eq!(d.cache_bytes, 1 << 30);
+        assert!(d.state_dir.is_some());
+        // rejections
+        assert!(ServeConfig::from_args(&args("--jobs 0")).is_err());
+        assert!(ServeConfig::from_args(&args("--bogus 1")).is_err());
+        assert!(ServeConfig::from_args(&args("--jobs")).is_err());
+    }
+
+    #[test]
+    fn byte_sizes_parse_with_suffixes() {
+        assert_eq!(parse_bytes("123").unwrap(), 123);
+        assert_eq!(parse_bytes("4k").unwrap(), 4 << 10);
+        assert_eq!(parse_bytes("2M").unwrap(), 2 << 20);
+        assert_eq!(parse_bytes("1g").unwrap(), 1 << 30);
+        assert!(parse_bytes("lots").is_err());
+        assert!(parse_bytes("1.5g").is_err());
+    }
+
+    #[test]
+    fn report_serializers_embed_exact_bits() {
+        // Synthesize the smallest possible learn run to exercise the
+        // serializer fields end-to-end.
+        let cfg =
+            RunConfig { network: "asia".into(), rows: 120, iters: 40, ..RunConfig::default() };
+        let report = crate::coordinator::run_learning(&cfg, None).unwrap();
+        let json = learn_report(&report, true);
+        assert_eq!(json.get("type").and_then(Json::as_str), Some("learn"));
+        assert_eq!(json.get("cache_hit").and_then(Json::as_bool), Some(true));
+        let bits = json.get("best_score_bits").and_then(Json::as_str).unwrap();
+        let exact = f64::from_bits(u64::from_str_radix(bits, 16).unwrap());
+        assert_eq!(exact.to_bits(), report.result.best_score().unwrap().to_bits());
+        assert!(json.get("edges").and_then(Json::as_arr).is_some());
+        // the whole report survives a wire round-trip
+        let wire = json.to_string();
+        let back = Json::parse(&wire).unwrap();
+        assert_eq!(back.get("best_score_bits").and_then(Json::as_str), Some(bits));
+    }
+}

@@ -1,0 +1,259 @@
+//! Job bookkeeping: lifecycle state machine, the append-only event log
+//! clients long-poll, and the cooperative cancellation handle.
+//!
+//! Lifecycle: `Queued → Running → {Done, Failed, Cancelled}`, with one
+//! shortcut — cancelling a still-queued job goes straight to
+//! `Cancelled` without ever running. Every terminal transition appends
+//! an `{"type":"end", ..., "final":true}` event, so a client streaming
+//! the event log needs no separate status poll to learn the job ended.
+//!
+//! Cancellation rides the same [`ChainControl`] the MCMC layer checks
+//! between Metropolis–Hastings steps (learn runs) or checkpoint
+//! segments (posterior runs): `cancel` latches the flag, the sampler
+//! winds down at its next check, and the job lands in `Cancelled` with
+//! whatever prefix it completed.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::json::Json;
+use crate::coordinator::{store_fingerprint, RunConfig};
+use crate::mcmc::ChainControl;
+
+/// Daemon-assigned job identifier (monotonic from 1).
+pub type JobId = u64;
+
+/// Where a job is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted, waiting for a worker.
+    Queued,
+    /// A worker is executing it.
+    Running,
+    /// Finished with a report.
+    Done,
+    /// Errored or panicked; see the job's error string.
+    Failed,
+    /// Cancelled before or during execution.
+    Cancelled,
+}
+
+impl JobState {
+    /// Wire name (the protocol's `state` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Whether the state is final (no further transitions).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+struct Progress {
+    state: JobState,
+    events: Vec<Json>,
+    report: Option<Json>,
+    error: Option<String>,
+}
+
+/// One submitted run: immutable request halves (`args`, parsed `cfg`,
+/// the store cache key) plus the mutex-guarded live halves (state,
+/// event log, terminal report).
+pub struct Job {
+    /// Daemon-assigned id.
+    pub id: JobId,
+    /// The raw submitted argument vector (journaled for recovery).
+    pub args: Vec<String>,
+    /// The parsed run configuration.
+    pub cfg: RunConfig,
+    /// Store-cache key ([`store_fingerprint`] of `cfg`).
+    pub store_key: u64,
+    /// Cancellation flag + live progress counters, shared with the
+    /// chains once the job runs.
+    pub control: Arc<ChainControl>,
+    progress: Mutex<Progress>,
+    changed: Condvar,
+}
+
+impl Job {
+    /// A freshly queued job.
+    pub fn queued(id: JobId, args: Vec<String>, cfg: RunConfig) -> Arc<Job> {
+        let store_key = store_fingerprint(&cfg);
+        let progress =
+            Progress { state: JobState::Queued, events: Vec::new(), report: None, error: None };
+        Arc::new(Job {
+            id,
+            args,
+            cfg,
+            store_key,
+            control: ChainControl::shared(),
+            progress: Mutex::new(progress),
+            changed: Condvar::new(),
+        })
+    }
+
+    /// Current lifecycle state.
+    pub fn state(&self) -> JobState {
+        self.lock().state
+    }
+
+    /// Append one event and wake long-pollers.
+    pub fn push_event(&self, event: Json) {
+        let mut p = self.lock();
+        p.events.push(event);
+        self.changed.notify_all();
+    }
+
+    /// Claim the job for execution: `Queued → Running`. Returns false
+    /// if it already left `Queued` (e.g. cancelled while waiting).
+    pub fn start(&self) -> bool {
+        let mut p = self.lock();
+        if p.state == JobState::Queued {
+            p.state = JobState::Running;
+            self.changed.notify_all();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Terminal transition: set the state, store the report/error, and
+    /// append the `"final"` event — all under one lock, so a client
+    /// that sees the final event is guaranteed to find the report.
+    pub fn finish(&self, state: JobState, report: Option<Json>, error: Option<String>) {
+        assert!(state.is_terminal());
+        let mut p = self.lock();
+        if p.state.is_terminal() {
+            return; // first terminal transition wins
+        }
+        p.state = state;
+        p.report = report;
+        let mut fields = vec![
+            ("type".to_string(), Json::str("end")),
+            ("state".to_string(), Json::str(state.name())),
+            ("final".to_string(), Json::Bool(true)),
+        ];
+        if let Some(msg) = &error {
+            fields.push(("error".to_string(), Json::str(msg.clone())));
+        }
+        p.error = error;
+        p.events.push(Json::Obj(fields));
+        self.changed.notify_all();
+    }
+
+    /// Snapshot `events[from..]` without blocking, with the next index
+    /// to poll from and whether the job is terminal.
+    pub fn events_from(&self, from: usize) -> (Vec<Json>, usize, bool) {
+        let p = self.lock();
+        let start = from.min(p.events.len());
+        (p.events[start..].to_vec(), p.events.len(), p.state.is_terminal())
+    }
+
+    /// Long-poll: block until events exist past `from` or the job is
+    /// terminal, then snapshot like [`Self::events_from`].
+    pub fn wait_events(&self, from: usize) -> (Vec<Json>, usize, bool) {
+        let mut p = self.lock();
+        while p.events.len() <= from && !p.state.is_terminal() {
+            p = self.changed.wait(p).expect("job lock poisoned");
+        }
+        let start = from.min(p.events.len());
+        (p.events[start..].to_vec(), p.events.len(), p.state.is_terminal())
+    }
+
+    /// The terminal report, once finished.
+    pub fn report(&self) -> Option<Json> {
+        self.lock().report.clone()
+    }
+
+    /// The terminal error string, if the job failed.
+    pub fn error(&self) -> Option<String> {
+        self.lock().error.clone()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Progress> {
+        self.progress.lock().expect("job lock poisoned")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> Arc<Job> {
+        Job::queued(1, vec!["--network".into(), "asia".into()], RunConfig::default())
+    }
+
+    #[test]
+    fn lifecycle_queued_running_done() {
+        let j = job();
+        assert_eq!(j.state(), JobState::Queued);
+        assert!(!j.state().is_terminal());
+        assert!(j.start());
+        assert_eq!(j.state(), JobState::Running);
+        assert!(!j.start(), "double-claim rejected");
+        j.finish(JobState::Done, Some(Json::num(42)), None);
+        assert_eq!(j.state(), JobState::Done);
+        assert_eq!(j.report(), Some(Json::num(42)));
+        assert!(j.error().is_none());
+        // terminal transitions are idempotent: first one wins
+        j.finish(JobState::Failed, None, Some("late".into()));
+        assert_eq!(j.state(), JobState::Done);
+        assert_eq!(j.report(), Some(Json::num(42)));
+    }
+
+    #[test]
+    fn cancelled_while_queued_never_starts() {
+        let j = job();
+        j.control.cancel();
+        j.finish(JobState::Cancelled, None, None);
+        assert!(!j.start());
+        assert_eq!(j.state(), JobState::Cancelled);
+    }
+
+    #[test]
+    fn finish_appends_a_final_event_with_the_report_visible() {
+        let j = job();
+        j.push_event(Json::str("one"));
+        j.finish(JobState::Failed, None, Some("boom".into()));
+        let (events, next, done) = j.events_from(0);
+        assert_eq!(events.len(), 2);
+        assert_eq!(next, 2);
+        assert!(done);
+        let end = &events[1];
+        assert_eq!(end.get("type").and_then(Json::as_str), Some("end"));
+        assert_eq!(end.get("state").and_then(Json::as_str), Some("failed"));
+        assert_eq!(end.get("final").and_then(Json::as_bool), Some(true));
+        assert_eq!(end.get("error").and_then(Json::as_str), Some("boom"));
+        // past-the-end polls return empty but keep the terminal flag
+        let (events, next, done) = j.events_from(10);
+        assert!(events.is_empty() && next == 2 && done);
+    }
+
+    #[test]
+    fn wait_events_unblocks_on_push_and_on_finish() {
+        let j = job();
+        std::thread::scope(|scope| {
+            let waiter = scope.spawn(|| j.wait_events(0));
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            j.push_event(Json::str("tick"));
+            let (events, next, done) = waiter.join().unwrap();
+            assert_eq!(events.len(), 1);
+            assert_eq!(next, 1);
+            assert!(!done);
+        });
+        std::thread::scope(|scope| {
+            let waiter = scope.spawn(|| j.wait_events(1));
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            j.finish(JobState::Done, None, None);
+            let (events, _, done) = waiter.join().unwrap();
+            assert_eq!(events.len(), 1, "the final event itself");
+            assert!(done);
+        });
+    }
+}

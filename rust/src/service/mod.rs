@@ -1,0 +1,44 @@
+//! The structure-learning service: a long-running daemon multiplexing
+//! concurrent learn/posterior jobs over one shared executor and one
+//! shared score-store cache.
+//!
+//! The one-shot CLI pays the full preprocessing cost (contingency
+//! counting + score-store construction) on every invocation. For
+//! interactive exploration — many short chains over the same dataset
+//! with different samplers, seeds, or iteration budgets — that cost
+//! dominates, and it is identical across runs. The daemon amortizes
+//! it: jobs with the same store fingerprint
+//! ([`crate::coordinator::store_fingerprint`]) share one immutable
+//! built store, so every run after the first skips straight to
+//! sampling.
+//!
+//! Layering, bottom up:
+//! * [`json`] — a dependency-free JSON value type (parse + print);
+//! * [`protocol`] — the JSON-lines wire protocol (requests, response
+//!   shaping, exact-`f64` encoding);
+//! * [`job`] — job lifecycle, event log, cancellation handle;
+//! * [`cache`] — the LRU-bounded, single-flight score-store cache;
+//! * [`daemon`] — the TCP listener, worker pool, journal, and the
+//!   `serve` subcommand entry point;
+//! * [`client`] — a blocking client used by tests and examples.
+//!
+//! Everything rides the standard library: `std::net` sockets, threads,
+//! and a hand-rolled JSON layer — no new dependencies.
+//!
+//! **Invariant** (enforced by `tests/service.rs`): a job submitted
+//! through the daemon produces bit-identical results to the same
+//! configuration run through the one-shot CLI, cache hit or miss.
+
+pub mod cache;
+pub mod client;
+pub mod daemon;
+pub mod job;
+pub mod json;
+pub mod protocol;
+
+pub use cache::{CacheStats, StoreCache};
+pub use client::Client;
+pub use daemon::{serve, start, DaemonHandle, ServeConfig};
+pub use job::{Job, JobId, JobState};
+pub use json::Json;
+pub use protocol::Request;

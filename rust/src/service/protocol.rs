@@ -1,0 +1,193 @@
+//! The JSON-lines wire protocol: request parsing and response shaping.
+//!
+//! Framing is one JSON object per `\n`-terminated line, both
+//! directions. Every request carries a `"cmd"` discriminator; every
+//! response carries `"ok"` (with an `"error"` string when false), so a
+//! shell client can drive the daemon with nothing but `bash`'s
+//! `/dev/tcp` and `grep` (the CI smoke test does exactly that).
+//!
+//! | cmd        | fields               | response payload                     |
+//! |------------|----------------------|--------------------------------------|
+//! | `submit`   | `args`: CLI strings  | `job` id                             |
+//! | `status`   | `job`                | `state`, live progress counters      |
+//! | `events`   | `job`, `from`        | `events[from..]`, `next`, `final`    |
+//! | `report`   | `job`                | the terminal report object           |
+//! | `cancel`   | `job`                | ack (cancellation is cooperative)    |
+//! | `stats`    | —                    | cache + queue telemetry              |
+//! | `shutdown` | —                    | ack, then the daemon drains and exits|
+//!
+//! `events` long-polls: the daemon holds the reply until the job has
+//! events past `from` (or reaches a terminal state), so a client loops
+//! `events` to stream progress without busy-waiting.
+
+use anyhow::{bail, Result};
+
+use super::json::Json;
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Enqueue a run; `args` is the same `--key value` vector the
+    /// one-shot CLI takes after `learn` (plus `--posterior` flags).
+    Submit { args: Vec<String> },
+    /// Snapshot a job's state and live progress counters.
+    Status { job: u64 },
+    /// Long-poll the job's event log starting at index `from`.
+    Events { job: u64, from: usize },
+    /// Fetch the terminal report of a finished job.
+    Report { job: u64 },
+    /// Request cooperative cancellation.
+    Cancel { job: u64 },
+    /// Cache and queue telemetry.
+    Stats,
+    /// Drain and stop the daemon.
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line.
+    pub fn parse_line(line: &str) -> Result<Request> {
+        let doc = Json::parse(line)?;
+        let cmd = doc.get("cmd").and_then(Json::as_str).unwrap_or_default().to_string();
+        let job = || -> Result<u64> {
+            match doc.get("job").and_then(Json::as_u64) {
+                Some(id) => Ok(id),
+                None => bail!("{cmd:?} needs a numeric \"job\" field"),
+            }
+        };
+        Ok(match cmd.as_str() {
+            "submit" => {
+                let items = doc
+                    .get("args")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("submit needs an \"args\" array"))?;
+                let mut args = Vec::with_capacity(items.len());
+                for item in items {
+                    match item.as_str() {
+                        Some(text) => args.push(text.to_string()),
+                        None => bail!("submit args must all be strings"),
+                    }
+                }
+                Request::Submit { args }
+            }
+            "status" => Request::Status { job: job()? },
+            "events" => {
+                let from = doc.get("from").and_then(Json::as_u64).unwrap_or(0) as usize;
+                Request::Events { job: job()?, from }
+            }
+            "report" => Request::Report { job: job()? },
+            "cancel" => Request::Cancel { job: job()? },
+            "stats" => Request::Stats,
+            "shutdown" => Request::Shutdown,
+            "" => bail!("request has no \"cmd\" field"),
+            other => bail!("unknown cmd {other:?}"),
+        })
+    }
+
+    /// Serialize for the client side of the wire.
+    pub fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        match self {
+            Request::Submit { args } => {
+                fields.push(("cmd".to_string(), Json::str("submit")));
+                let items = args.iter().map(|a| Json::str(a.clone())).collect();
+                fields.push(("args".to_string(), Json::Arr(items)));
+            }
+            Request::Status { job } => {
+                fields.push(("cmd".to_string(), Json::str("status")));
+                fields.push(("job".to_string(), Json::num(*job)));
+            }
+            Request::Events { job, from } => {
+                fields.push(("cmd".to_string(), Json::str("events")));
+                fields.push(("job".to_string(), Json::num(*job)));
+                fields.push(("from".to_string(), Json::num(*from as u64)));
+            }
+            Request::Report { job } => {
+                fields.push(("cmd".to_string(), Json::str("report")));
+                fields.push(("job".to_string(), Json::num(*job)));
+            }
+            Request::Cancel { job } => {
+                fields.push(("cmd".to_string(), Json::str("cancel")));
+                fields.push(("job".to_string(), Json::num(*job)));
+            }
+            Request::Stats => fields.push(("cmd".to_string(), Json::str("stats"))),
+            Request::Shutdown => fields.push(("cmd".to_string(), Json::str("shutdown"))),
+        }
+        Json::Obj(fields)
+    }
+}
+
+/// A success response: `{"ok":true, ...fields}`.
+pub fn ok_response(fields: Vec<(String, Json)>) -> Json {
+    let mut all = vec![("ok".to_string(), Json::Bool(true))];
+    all.extend(fields);
+    Json::Obj(all)
+}
+
+/// An error response: `{"ok":false,"error":msg}`.
+pub fn error_response(msg: &str) -> Json {
+    Json::Obj(vec![("ok".to_string(), Json::Bool(false)), ("error".to_string(), Json::str(msg))])
+}
+
+/// Format an `f64` as its 16-hex-digit IEEE-754 bit pattern. Decimal
+/// prints are for humans; scores that must survive the wire bit-exactly
+/// (the service ↔ one-shot identity tests diff these) travel as bits.
+pub fn f64_bits(value: f64) -> String {
+    format!("{:016x}", value.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_roundtrip_through_the_wire_format() {
+        let cases = vec![
+            Request::Submit { args: vec!["--network".into(), "asia".into()] },
+            Request::Status { job: 3 },
+            Request::Events { job: 3, from: 17 },
+            Request::Report { job: 9 },
+            Request::Cancel { job: 1 },
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for req in cases {
+            let line = req.to_json().to_string();
+            assert_eq!(Request::parse_line(&line).unwrap(), req, "{line}");
+        }
+    }
+
+    #[test]
+    fn events_from_defaults_to_zero() {
+        let req = Request::parse_line("{\"cmd\":\"events\",\"job\":2}").unwrap();
+        assert_eq!(req, Request::Events { job: 2, from: 0 });
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected_with_context() {
+        let err = |line: &str| format!("{:#}", Request::parse_line(line).unwrap_err());
+        assert!(err("{}").contains("no \"cmd\""));
+        assert!(err("{\"cmd\":\"warp\"}").contains("unknown cmd"));
+        assert!(err("{\"cmd\":\"status\"}").contains("\"job\""));
+        assert!(err("{\"cmd\":\"submit\"}").contains("args"));
+        assert!(err("{\"cmd\":\"submit\",\"args\":[1]}").contains("strings"));
+        assert!(Request::parse_line("not json").is_err());
+    }
+
+    #[test]
+    fn responses_carry_the_ok_flag() {
+        let ok = ok_response(vec![("job".to_string(), Json::num(4))]);
+        assert_eq!(ok.to_string(), "{\"ok\":true,\"job\":4}");
+        let err = error_response("nope");
+        assert_eq!(err.to_string(), "{\"ok\":false,\"error\":\"nope\"}");
+    }
+
+    #[test]
+    fn f64_bits_is_exact_and_parseable() {
+        let x = -12345.678901234567_f64;
+        let bits = f64_bits(x);
+        assert_eq!(bits.len(), 16);
+        let back = f64::from_bits(u64::from_str_radix(&bits, 16).unwrap());
+        assert_eq!(back.to_bits(), x.to_bits());
+    }
+}

@@ -1,0 +1,170 @@
+//! Service-daemon acceptance tests: concurrent jobs sharing one cached
+//! score store with results bit-identical to the one-shot CLI path,
+//! cooperative cancellation, checkpoint fingerprint-mismatch rejection
+//! through the daemon, and journal-based queue recovery.
+
+use std::time::{Duration, Instant};
+
+use bnlearn::coordinator::{run_learning, RunConfig};
+use bnlearn::service::protocol::f64_bits;
+use bnlearn::service::{start, Client, DaemonHandle, Json, ServeConfig};
+use bnlearn::util::logging::Level;
+
+fn args(s: &str) -> Vec<String> {
+    s.split_whitespace().map(|t| t.to_string()).collect()
+}
+
+fn start_daemon(state_dir: Option<std::path::PathBuf>) -> (DaemonHandle, Client) {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        jobs: 2,
+        state_dir,
+        log_level: Level::Warn,
+        ..ServeConfig::default()
+    };
+    let handle = start(cfg).unwrap();
+    let client = Client::connect(handle.local_addr()).unwrap();
+    (handle, client)
+}
+
+fn event_type<'a>(event: &'a Json, ty: &str) -> Option<&'a Json> {
+    (event.get("type").and_then(Json::as_str) == Some(ty)).then_some(event)
+}
+
+#[test]
+fn concurrent_jobs_share_one_store_and_match_the_one_shot_path() {
+    let (handle, mut client) = start_daemon(None);
+    let a = args("--network asia --rows 300 --seed 7 --iters 200");
+    let b = args("--network asia --rows 300 --seed 7 --iters 350");
+    let job_a = client.submit(&a).unwrap();
+    let job_b = client.submit(&b).unwrap();
+    let log_a = client.wait(job_a).unwrap();
+    let log_b = client.wait(job_b).unwrap();
+
+    // Same dataset/score/store knobs → same store fingerprint → the
+    // cache built exactly one store; the other job skipped its build.
+    let stats = client.stats().unwrap();
+    let cache = stats.get("cache").unwrap();
+    assert_eq!(cache.get("misses").and_then(Json::as_u64), Some(1), "{stats}");
+    assert_eq!(cache.get("hits").and_then(Json::as_u64), Some(1), "{stats}");
+    let hit_of = |log: &[Json]| {
+        let ev = log.iter().find_map(|e| event_type(e, "cache")).expect("cache event");
+        ev.get("hit").and_then(Json::as_bool).unwrap()
+    };
+    let (hit_a, hit_b) = (hit_of(&log_a), hit_of(&log_b));
+    assert!(hit_a != hit_b, "exactly one of the two jobs hits: {hit_a} vs {hit_b}");
+
+    // Both jobs are bit-identical to the same configs run one-shot.
+    for (argv, job, hit) in [(&a, job_a, hit_a), (&b, job_b, hit_b)] {
+        let report = client.report(job).unwrap();
+        let one_shot = run_learning(&RunConfig::from_args(argv).unwrap(), None).unwrap();
+        let want = f64_bits(one_shot.result.best_score().unwrap());
+        let got = report.get("best_score_bits").and_then(Json::as_str).unwrap();
+        assert_eq!(got, want, "job {job} diverged from the one-shot run");
+        let edges = report.get("edges").and_then(Json::as_arr).unwrap();
+        assert_eq!(edges.len(), one_shot.result.best_dag().unwrap().edge_count());
+        assert_eq!(report.get("cache_hit").and_then(Json::as_bool), Some(hit));
+    }
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn cancel_stops_a_running_job_and_the_daemon_survives() {
+    let (handle, mut client) = start_daemon(None);
+    let job = client.submit(&args("--network asia --rows 200 --seed 4 --iters 50000000")).unwrap();
+
+    // Wait until the chain is demonstrably running, then cancel.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let status = client.status(job).unwrap();
+        let state = status.get("state").and_then(Json::as_str).unwrap().to_string();
+        let iters = status.get("iterations").and_then(Json::as_u64).unwrap_or(0);
+        if state == "running" && iters > 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job never started: {status}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    client.cancel(job).unwrap();
+    let log = client.wait(job).unwrap();
+    let end = log.iter().find_map(|e| event_type(e, "end")).expect("end event");
+    assert_eq!(end.get("state").and_then(Json::as_str), Some("cancelled"), "{end}");
+
+    // The daemon is still healthy: a follow-up job runs to completion.
+    let next = client.submit(&args("--network asia --rows 200 --seed 4 --iters 50")).unwrap();
+    client.wait(next).unwrap();
+    let report = client.report(next).unwrap();
+    assert_eq!(report.get("type").and_then(Json::as_str), Some("learn"));
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn resume_with_a_different_counting_config_is_rejected() {
+    let dir = std::env::temp_dir().join("bnlearn_service_ckpt_it");
+    let _ = std::fs::remove_dir_all(&dir);
+    let ckpt = dir.join("run.ckpt");
+    let (handle, mut client) = start_daemon(None);
+    let base = format!(
+        "--network asia --rows 300 --seed 9 --posterior --burnin 10 --iters 100 \
+         --checkpoint-every 50 --checkpoint {}",
+        ckpt.display()
+    );
+    let head = client.submit(&args(&base)).unwrap();
+    client.wait(head).unwrap();
+    client.report(head).unwrap();
+    assert!(ckpt.exists(), "head run wrote its checkpoint");
+
+    // The store fingerprint now covers the counting configuration, so a
+    // resume under a different counting engine is a different workload.
+    let wrong = format!("{base} --counting naive --resume {}", ckpt.display());
+    let bad = client.submit(&args(&wrong)).unwrap();
+    client.wait(bad).unwrap();
+    let err = format!("{:#}", client.report(bad).unwrap_err());
+    assert!(err.contains("fingerprint"), "{err}");
+
+    // Positive control: the matching config resumes and finishes.
+    let resume = format!(
+        "{} --resume {}",
+        base.replace("--iters 100", "--iters 200"),
+        ckpt.display()
+    );
+    let good = client.submit(&args(&resume)).unwrap();
+    client.wait(good).unwrap();
+    let report = client.report(good).unwrap();
+    assert_eq!(report.get("type").and_then(Json::as_str), Some("posterior"));
+    assert_eq!(report.get("iters_done").and_then(Json::as_u64), Some(200));
+    handle.shutdown();
+    handle.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn journal_recovery_requeues_unfinished_jobs() {
+    let dir = std::env::temp_dir().join("bnlearn_service_journal_it");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("jobs")).unwrap();
+    let journaled = args("--network asia --rows 120 --seed 3 --iters 50");
+    std::fs::write(dir.join("jobs/5.job"), journaled.join("\n")).unwrap();
+
+    // A daemon started over that state dir requeues job 5 and runs it.
+    let (handle, mut client) = start_daemon(Some(dir.clone()));
+    client.wait(5).unwrap();
+    let report = client.report(5).unwrap();
+    assert_eq!(report.get("type").and_then(Json::as_str), Some("learn"));
+
+    // The id counter resumed past the journaled id, and the finished
+    // job's journal entry was cleared.
+    let next = client.submit(&args("--network asia --rows 120 --seed 3 --iters 20")).unwrap();
+    assert_eq!(next, 6);
+    client.wait(next).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while dir.join("jobs/5.job").exists() || dir.join("jobs/6.job").exists() {
+        assert!(Instant::now() < deadline, "journal entries not cleared");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    handle.shutdown();
+    handle.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}

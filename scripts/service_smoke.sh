@@ -1,0 +1,88 @@
+#!/usr/bin/env bash
+# End-to-end smoke test of `bnlearn serve` using nothing but bash:
+# JSON-lines over /dev/tcp, assertions via grep. Deliberately avoids the
+# Rust client library — this proves the daemon's wire format is plain
+# enough for any scripting environment (DESIGN.md §15).
+#
+# Usage: service_smoke.sh path/to/bnlearn
+set -euo pipefail
+
+BIN=${1:?usage: service_smoke.sh path/to/bnlearn}
+LOG=$(mktemp)
+STATE=$(mktemp -d)
+
+"$BIN" serve --addr 127.0.0.1:0 --jobs 2 --state-dir "$STATE" >"$LOG" 2>&1 &
+PID=$!
+trap 'kill "$PID" 2>/dev/null || true; cat "$LOG"' EXIT
+
+# Wait for the daemon to announce its ephemeral port.
+for _ in $(seq 1 100); do
+  grep -q 'bnlearn service listening on' "$LOG" && break
+  sleep 0.1
+done
+ADDR=$(sed -n 's/^bnlearn service listening on //p' "$LOG" | head -n1)
+PORT=${ADDR##*:}
+test -n "$PORT"
+echo "daemon up on port $PORT (pid $PID)"
+
+# One request line, one reply line, over a fresh /dev/tcp connection.
+rpc() {
+  local req=$1 resp
+  exec 3<>"/dev/tcp/127.0.0.1/$PORT"
+  printf '%s\n' "$req" >&3
+  IFS= read -r resp <&3
+  exec 3<&- 3>&-
+  printf '%s\n' "$resp"
+}
+
+SUBMIT='{"cmd":"submit","args":["--network","asia","--rows","300","--seed","7","--iters","ITERS"]}'
+
+R1=$(rpc "${SUBMIT/ITERS/150}")
+echo "submit #1 -> $R1"
+echo "$R1" | grep -q '"ok":true'
+JOB1=$(echo "$R1" | sed -n 's/.*"job":\([0-9]*\).*/\1/p')
+
+R2=$(rpc "${SUBMIT/ITERS/250}")
+echo "submit #2 -> $R2"
+echo "$R2" | grep -q '"ok":true'
+JOB2=$(echo "$R2" | sed -n 's/.*"job":\([0-9]*\).*/\1/p')
+
+# Long-poll the event stream until the job's final marker arrives. The
+# first reply flagged "final" also carries the "end" event (they are
+# published under one lock), so grepping it for the state is sound.
+wait_job() {
+  local job=$1 from=0 resp
+  for _ in $(seq 1 600); do
+    resp=$(rpc "{\"cmd\":\"events\",\"job\":$job,\"from\":$from}")
+    echo "$resp" | grep -q '"ok":true'
+    from=$(echo "$resp" | sed -n 's/.*"next":\([0-9]*\).*/\1/p')
+    if echo "$resp" | grep -q '"final":true'; then
+      printf '%s\n' "$resp"
+      return 0
+    fi
+  done
+  echo "job $job never finished" >&2
+  return 1
+}
+
+E1=$(wait_job "$JOB1")
+E2=$(wait_job "$JOB2")
+echo "$E1" | grep -q '"state":"done"'
+echo "$E2" | grep -q '"state":"done"'
+echo "jobs $JOB1 and $JOB2 done"
+
+# Reports carry exact IEEE-754 score bits.
+rpc "{\"cmd\":\"report\",\"job\":$JOB1}" | grep -q '"best_score_bits"'
+rpc "{\"cmd\":\"report\",\"job\":$JOB2}" | grep -q '"best_score_bits"'
+
+# The two jobs share one store fingerprint: one build, one cache hit.
+STATS=$(rpc '{"cmd":"stats"}')
+echo "stats -> $STATS"
+echo "$STATS" | grep -q '"misses":1'
+echo "$STATS" | grep -q '"hits":1'
+
+# Clean shutdown gates the test: the daemon must exit 0 on its own.
+rpc '{"cmd":"shutdown"}' | grep -q '"stopping":true'
+trap - EXIT
+wait "$PID"
+echo "daemon exited cleanly"
