@@ -56,8 +56,15 @@ fn main() -> anyhow::Result<()> {
         let n = w.n();
         let rl = {
             let exec = cfg.executor();
-            build_restriction(&w.data, s, RestrictKind::Mi { k }, 0.05, None, exec.as_ref())
-                .expect("mi restriction")
+            build_restriction(
+                &w.data,
+                s,
+                RestrictKind::Mi { k, mmpc: false },
+                0.05,
+                None,
+                exec.as_ref(),
+            )
+            .expect("mi restriction")
         };
 
         let naive_cfg = CountingConfig::naive();

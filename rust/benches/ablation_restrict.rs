@@ -70,8 +70,15 @@ fn main() -> anyhow::Result<()> {
         let t = Timer::start();
         let rl = {
             let exec = cfg.executor();
-            build_restriction(&w.data, s, RestrictKind::Mi { k }, 0.05, None, exec.as_ref())
-                .expect("mi restriction")
+            build_restriction(
+                &w.data,
+                s,
+                RestrictKind::Mi { k, mmpc: false },
+                0.05,
+                None,
+                exec.as_ref(),
+            )
+            .expect("mi restriction")
         };
         let restricted =
             ScoreTable::build_restricted_with(&w.data, BdeParams::default(), &rl, &cfg);

@@ -49,6 +49,11 @@ impl BinomialTable {
     pub fn n_max(&self) -> usize {
         self.n_max
     }
+
+    /// Resident heap bytes of the triangle.
+    pub fn bytes(&self) -> usize {
+        self.rows.iter().map(|r| r.len() * std::mem::size_of::<u64>()).sum()
+    }
 }
 
 /// Direct (slow) binomial for cross-checking in tests.

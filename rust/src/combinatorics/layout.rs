@@ -28,8 +28,26 @@ pub struct SubsetLayout {
 
 impl SubsetLayout {
     /// Build the layout for `n` nodes and maximal subset size `s`.
+    ///
+    /// Panics with a clear message when `C(n, ≤s)` overflows the u64
+    /// cell arithmetic — use [`Self::try_new`] (or probe with
+    /// [`Self::capacity`]) where the caller can recover.
     pub fn new(n: usize, s: usize) -> Self {
+        Self::try_new(n, s).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible [`Self::new`]: the checked-overflow constructor large-n
+    /// callers (ragged tile planning, capacity probes) go through.
+    pub fn try_new(n: usize, s: usize) -> Result<Self, String> {
         let s = s.min(n);
+        let cap = Self::capacity(n, s).ok_or_else(|| {
+            format!("subset layout C({n}, <={s}) overflows u64 cell arithmetic")
+        })?;
+        if cap > usize::MAX as u64 {
+            return Err(format!(
+                "subset layout C({n}, <={s}) = {cap} cells exceeds the address space"
+            ));
+        }
         let bt = BinomialTable::new(n.max(1));
         let mut offsets = Vec::with_capacity(s + 2);
         let mut acc = 0u64;
@@ -38,7 +56,22 @@ impl SubsetLayout {
             acc += bt.c(n, s - d);
         }
         offsets.push(acc);
-        SubsetLayout { n, s, offsets, bt }
+        // capacity() verified every term fits, so the saturating table
+        // agrees with the exact multiplicative sum.
+        debug_assert_eq!(acc, cap);
+        Ok(SubsetLayout { n, s, offsets, bt })
+    }
+
+    /// Exact `C(n, ≤s)` cell count — `None` when it overflows u64. The
+    /// capacity query callers test *before* allocating a dense row (or
+    /// deciding a pool must stay ragged); multiplicative u128
+    /// arithmetic, independent of the saturating Pascal table.
+    pub fn capacity(n: usize, s: usize) -> Option<u64> {
+        let mut total = 0u64;
+        for k in 0..=s.min(n) {
+            total = total.checked_add(binomial_checked(n as u64, k as u64)?)?;
+        }
+        Some(total)
     }
 
     /// Number of nodes.
@@ -59,6 +92,12 @@ impl SubsetLayout {
     /// Binomial table in use (shared with callers that need `C(n,k)`).
     pub fn binomials(&self) -> &BinomialTable {
         &self.bt
+    }
+
+    /// Resident heap bytes of the layout (offsets + binomial table) —
+    /// feeds the restricted layout's memory accounting.
+    pub fn bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<u64>() + self.bt.bytes()
     }
 
     /// First global index of the size-`k` block (blocks are stored in
@@ -131,6 +170,26 @@ impl SubsetLayout {
     }
 }
 
+/// `C(n, k)` with overflow detection: the classic multiplicative form
+/// (`acc ← acc·(n−i)/(i+1)`, exact at every step), failing instead of
+/// saturating once the running value leaves u64 — the arithmetic
+/// [`SubsetLayout::capacity`] trusts where the Pascal table saturates.
+fn binomial_checked(n: u64, k: u64) -> Option<u64> {
+    if k > n {
+        return Some(0);
+    }
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc.checked_mul((n - i) as u128)?;
+        acc /= (i + 1) as u128;
+        if acc > u64::MAX as u128 {
+            return None;
+        }
+    }
+    Some(acc as u64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,5 +255,27 @@ mod tests {
     fn total_matches_formula() {
         let l = SubsetLayout::new(60, 4);
         assert_eq!(l.total(), 487_635 + 34_220 + 1_770 + 60 + 1);
+    }
+
+    #[test]
+    fn capacity_matches_totals_and_detects_overflow() {
+        for (n, s) in [(6usize, 4usize), (60, 4), (128, 3), (512, 2), (3, 10)] {
+            let cap = SubsetLayout::capacity(n, s).expect("fits");
+            assert_eq!(cap as usize, SubsetLayout::new(n, s).total(), "n={n} s={s}");
+        }
+        // C(n, ≤s) past u64: C(10_000, 16) alone is ~1e53.
+        assert_eq!(SubsetLayout::capacity(10_000, 16), None);
+        assert!(SubsetLayout::try_new(10_000, 16).is_err());
+        // the error is a clear message, not a silent wrap
+        let err = SubsetLayout::try_new(10_000, 16).unwrap_err();
+        assert!(err.contains("overflows"), "{err}");
+        // big-but-fitting layouts construct fine through try_new
+        assert!(SubsetLayout::try_new(512, 3).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows")]
+    fn new_panics_clearly_on_overflow() {
+        SubsetLayout::new(10_000, 16);
     }
 }

@@ -1,5 +1,6 @@
 //! Per-node restricted subset layouts — the combinatorial core of the
-//! candidate-parent restriction subsystem (`crate::restrict`).
+//! candidate-parent restriction subsystem (`crate::restrict`), and the
+//! **native** score-space of every restricted store.
 //!
 //! The global [`SubsetLayout`] indexes every subset of `{0..n-1}` with
 //! `|subset| ≤ s`, so each node's score row holds `C(n, ≤s)` cells and
@@ -10,13 +11,15 @@
 //! the ragged per-node cell space every restricted store build, scorer
 //! fast path, and tile plan indexes through.
 //!
-//! Two index spaces coexist (DESIGN.md §13):
-//! * **global** indices — the full layout's, shared with unrestricted
-//!   stores and the engines' rank arithmetic; subsets outside a node's
-//!   pool have *no* cell and read back as the poison sentinel;
-//! * **cell** indices — a node's local layout index (`0..row_len(i)`),
-//!   with `row_start(i)` offsets flattening the ragged rows front to
-//!   back for tile planning and buffer splits.
+//! Since PR 8 the ragged space is primary, not a view over the dense
+//! grid: a restricted layout holds **no global `SubsetLayout`** and no
+//! `n × n` inverse matrix — only the sorted pools, the per-node local
+//! layouts, and u64 row offsets. Addressing is `(node, local_cell)`,
+//! with the flat **u64 cell id** `row_offsets[node] + cell` when a
+//! single scalar key is needed (tile plans, hashes). Nothing in the
+//! restricted path touches `C(n, ≤s)`-sized arithmetic, which is what
+//! breaks the n = 64 ceiling (DESIGN.md §16); `SubsetLayout` survives
+//! only as the full-pool/unrestricted special case.
 //!
 //! Local layouts inherit the paper's block ordering (largest subsets
 //! first, empty set last) over *pool positions*; pools are sorted by
@@ -27,30 +30,26 @@
 
 use super::layout::SubsetLayout;
 
-/// Hard bound on `s` for restricted layouts: global↔cell translation
+/// Hard bound on `s` for restricted layouts: cell↔subset translation
 /// decodes subsets into a stack buffer of this length.
 pub const MAX_S: usize = 16;
-
-/// Sentinel in the flat `pool_pos` inverse map: "not in this pool".
-const NOT_IN_POOL: u32 = u32::MAX;
 
 /// Per-node restricted subset layouts over candidate-parent pools.
 #[derive(Debug, Clone)]
 pub struct RestrictedLayout {
-    /// The full `C(n, ≤s)` layout restricted stores share with the rest
-    /// of the system (global index semantics, `n`/`s` bounds).
-    full: SubsetLayout,
+    n: usize,
+    s: usize,
     /// `pools[i]` — node i's candidate parents, sorted global ids,
-    /// never containing i.
+    /// never containing i. Sortedness is what lets
+    /// [`Self::pool_position`] binary-search instead of carrying the
+    /// old dense `n × n` inverse matrix.
     pools: Vec<Vec<usize>>,
-    /// Flat `[n × n]` inverse map: `pool_pos[i*n + v]` = position of
-    /// global node `v` in `pools[i]`, or [`NOT_IN_POOL`].
-    pool_pos: Vec<u32>,
     /// `locals[i]` — the `C(k_i, ≤ min(s, k_i))` layout over pool
     /// *positions* of node i.
     locals: Vec<SubsetLayout>,
-    /// Prefix sums of `locals[i].total()`; length n+1.
-    row_offsets: Vec<usize>,
+    /// u64 prefix sums of `locals[i].total()`; length n+1. The flat
+    /// cell-id space: cell `c` of node `i` has id `row_offsets[i] + c`.
+    row_offsets: Vec<u64>,
 }
 
 impl RestrictedLayout {
@@ -58,44 +57,44 @@ impl RestrictedLayout {
     pub fn new(n: usize, s: usize, pools: Vec<Vec<usize>>) -> Self {
         assert_eq!(pools.len(), n, "one pool per node");
         assert!(s <= MAX_S, "restricted layouts support s <= {MAX_S}, got {s}");
-        let mut pool_pos = vec![NOT_IN_POOL; n * n];
         let mut locals = Vec::with_capacity(n);
         let mut row_offsets = Vec::with_capacity(n + 1);
-        let mut acc = 0usize;
+        let mut acc = 0u64;
         for (i, pool) in pools.iter().enumerate() {
             assert!(
                 pool.windows(2).all(|w| w[0] < w[1]),
                 "pool of node {i} must be sorted and duplicate-free"
             );
-            for (pos, &v) in pool.iter().enumerate() {
+            if let Some(&v) = pool.last() {
                 assert!(v < n, "pool of node {i} names node {v} >= n");
-                assert_ne!(v, i, "pool of node {i} contains the node itself");
-                pool_pos[i * n + v] = pos as u32;
             }
-            let local = SubsetLayout::new(pool.len(), s);
+            assert!(
+                pool.binary_search(&i).is_err(),
+                "pool of node {i} contains the node itself"
+            );
+            let local = SubsetLayout::try_new(pool.len(), s).unwrap_or_else(|e| {
+                panic!("restricted row of node {i} (pool size {}): {e}", pool.len())
+            });
             row_offsets.push(acc);
-            acc += local.total();
+            acc = acc
+                .checked_add(local.total() as u64)
+                .unwrap_or_else(|| panic!("restricted cell space overflows u64 at node {i}"));
             locals.push(local);
         }
+        assert!(acc <= usize::MAX as u64, "restricted cell space exceeds the address space");
         row_offsets.push(acc);
-        RestrictedLayout { full: SubsetLayout::new(n, s), pools, pool_pos, locals, row_offsets }
+        RestrictedLayout { n, s, pools, locals, row_offsets }
     }
 
     /// Node count.
     pub fn n(&self) -> usize {
-        self.full.n()
+        self.n
     }
 
     /// Global parent-set size bound (per-node layouts clamp it to the
     /// pool size).
     pub fn s(&self) -> usize {
-        self.full.s()
-    }
-
-    /// The full global layout (shared index semantics with unrestricted
-    /// stores).
-    pub fn full(&self) -> &SubsetLayout {
-        &self.full
+        self.s
     }
 
     /// Node i's candidate-parent pool (sorted global ids).
@@ -103,15 +102,12 @@ impl RestrictedLayout {
         &self.pools[node]
     }
 
-    /// Position of global node `v` in `node`'s pool, if screened in.
+    /// Position of global node `v` in `node`'s pool, if screened in —
+    /// binary search over the sorted pool (O(log k) instead of an
+    /// O(n²)-memory inverse matrix).
     #[inline]
     pub fn pool_position(&self, node: usize, v: usize) -> Option<usize> {
-        let pos = self.pool_pos[node * self.n() + v];
-        if pos == NOT_IN_POOL {
-            None
-        } else {
-            Some(pos as usize)
-        }
+        self.pools[node].binary_search(&v).ok()
     }
 
     /// Node i's local layout over pool positions.
@@ -121,12 +117,12 @@ impl RestrictedLayout {
 
     /// Cells in node i's restricted row (`C(k_i, ≤ min(s, k_i))`).
     pub fn row_len(&self, node: usize) -> usize {
-        self.row_offsets[node + 1] - self.row_offsets[node]
+        (self.row_offsets[node + 1] - self.row_offsets[node]) as usize
     }
 
     /// First flat cell index of node i's row.
     pub fn row_start(&self, node: usize) -> usize {
-        self.row_offsets[node]
+        self.row_offsets[node] as usize
     }
 
     /// Per-node row lengths (the ragged tile planner's input).
@@ -134,15 +130,38 @@ impl RestrictedLayout {
         (0..self.n()).map(|i| self.row_len(i)).collect()
     }
 
-    /// Total cells across all restricted rows (`Σ_i C(k_i, ≤s)`).
-    pub fn total_cells(&self) -> usize {
-        *self.row_offsets.last().unwrap()
+    /// The flat u64 cell id of `(node, cell)` — the one scalar key the
+    /// ragged space exposes (`row_offsets[node] + cell`). Unlike the old
+    /// u32 global-layout keys this never touches `C(n, ≤s)` arithmetic,
+    /// so it stays exact at any n the pools themselves admit.
+    #[inline]
+    pub fn cell_id(&self, node: usize, cell: usize) -> u64 {
+        debug_assert!(cell < self.row_len(node));
+        self.row_offsets[node] + cell as u64
     }
 
-    /// Cells the *full* dense grid would hold (`n · C(n, ≤s)`) — the
-    /// denominator of every memory-reduction claim.
-    pub fn full_cells(&self) -> usize {
-        self.n() * self.full.total()
+    /// Invert [`Self::cell_id`]: the `(node, local_cell)` a flat id
+    /// addresses.
+    #[inline]
+    pub fn node_of_id(&self, id: u64) -> (usize, usize) {
+        debug_assert!(id < *self.row_offsets.last().unwrap());
+        let node = self.row_offsets.partition_point(|&o| o <= id) - 1;
+        (node, (id - self.row_offsets[node]) as usize)
+    }
+
+    /// Total cells across all restricted rows (`Σ_i C(k_i, ≤s)`).
+    pub fn total_cells(&self) -> usize {
+        *self.row_offsets.last().unwrap() as usize
+    }
+
+    /// Resident heap bytes of the layout itself — pools, per-node local
+    /// layouts, and row offsets. The acceptance stat for "no global
+    /// dense layout materialized": O(Σ k_i²), independent of `C(n, ≤s)`.
+    pub fn layout_bytes(&self) -> usize {
+        let pools: usize =
+            self.pools.iter().map(|p| p.len() * std::mem::size_of::<usize>()).sum();
+        let locals: usize = self.locals.iter().map(SubsetLayout::bytes).sum();
+        pools + locals + self.row_offsets.len() * std::mem::size_of::<u64>()
     }
 
     /// Largest pool size.
@@ -181,29 +200,6 @@ impl RestrictedLayout {
             *slot = pool[*slot];
         }
         &buf[..len]
-    }
-
-    /// Translate a node's local cell index into the full layout's global
-    /// index (pools are sorted, so the decoded set is already sorted).
-    pub fn global_from_cell(&self, node: usize, cell: usize) -> usize {
-        let mut buf = [0usize; MAX_S];
-        let len = self.subset_of(node, cell, &mut buf).len();
-        self.full.index_of(&buf[..len])
-    }
-
-    /// Translate a global layout index into a node's local cell index —
-    /// `None` when the subset reaches outside the node's pool (including
-    /// every subset containing the node itself).
-    pub fn cell_from_global(&self, node: usize, index: usize) -> Option<usize> {
-        let mut buf = [0usize; MAX_S];
-        let len = self.full.subset_of(index, &mut buf).len();
-        for slot in buf[..len].iter_mut() {
-            *slot = self.pool_position(node, *slot)?;
-        }
-        // len ≤ k_i follows from the positions being distinct, and
-        // len ≤ s from the full layout, so the local bound holds.
-        debug_assert!(len <= self.locals[node].s());
-        Some(self.locals[node].index_of(&buf[..len]))
     }
 
     /// Visit every `(cell_index, global_id_subset)` of one node's row in
@@ -246,13 +242,13 @@ mod tests {
         assert_eq!(rl.total_cells(), 25);
         assert_eq!(rl.row_start(0), 0);
         assert_eq!(rl.row_start(3), 12);
-        assert_eq!(rl.full_cells(), 5 * rl.full().total());
         assert_eq!(rl.max_pool(), 4);
         assert!((rl.mean_pool() - 2.0).abs() < 1e-12);
+        assert_eq!((rl.n(), rl.s()), (5, 2));
     }
 
     #[test]
-    fn cell_roundtrip_through_global_space() {
+    fn cell_roundtrip_through_subsets() {
         let rl = small();
         let mut buf = [0usize; MAX_S];
         for node in 0..5 {
@@ -261,10 +257,23 @@ mod tests {
                 assert!(subset.windows(2).all(|w| w[0] < w[1]), "sorted global ids");
                 assert!(!subset.contains(&node));
                 assert_eq!(rl.cell_index_of(node, &subset), Some(cell));
-                let g = rl.global_from_cell(node, cell);
-                assert_eq!(rl.cell_from_global(node, g), Some(cell));
             }
         }
+    }
+
+    #[test]
+    fn cell_ids_are_dense_and_invertible() {
+        let rl = small();
+        let mut next = 0u64;
+        for node in 0..5 {
+            for cell in 0..rl.row_len(node) {
+                let id = rl.cell_id(node, cell);
+                assert_eq!(id, next, "flat ids are dense front-to-back");
+                assert_eq!(rl.node_of_id(id), (node, cell));
+                next += 1;
+            }
+        }
+        assert_eq!(next, rl.total_cells() as u64);
     }
 
     #[test]
@@ -274,9 +283,8 @@ mod tests {
         assert_eq!(rl.cell_index_of(0, &[2]), None);
         assert_eq!(rl.cell_index_of(0, &[1, 2]), None);
         assert!(rl.cell_index_of(0, &[1]).is_some());
-        // self-containing global subsets translate to None.
-        let g = rl.full().index_of(&[0, 1]);
-        assert_eq!(rl.cell_from_global(0, g), None);
+        // subsets containing the node itself have no cell.
+        assert_eq!(rl.cell_index_of(0, &[0, 1]), None);
         // empty pool still has the empty-set cell.
         assert_eq!(rl.cell_index_of(2, &[]), Some(0));
         assert_eq!(rl.cell_index_of(2, &[0]), None);
@@ -300,22 +308,51 @@ mod tests {
     fn full_pools_cover_every_non_self_subset() {
         let (n, s) = (6usize, 3usize);
         let rl = RestrictedLayout::full_pools(n, s);
-        let full = rl.full().clone();
+        // The test builds the dense reference itself — the layout no
+        // longer carries one.
+        let full = SubsetLayout::new(n, s);
         for node in 0..n {
             assert_eq!(rl.pool(node).len(), n - 1);
             let mut cells = 0usize;
-            full.for_each(|g, subset| {
-                let cell = rl.cell_from_global(node, g);
-                if subset.contains(&node) {
-                    assert_eq!(cell, None, "self subsets have no cell");
-                } else {
-                    assert!(cell.is_some(), "node={node} subset={subset:?}");
-                    assert_eq!(rl.global_from_cell(node, cell.unwrap()), g);
-                    cells += 1;
+            let mut expected = Vec::new();
+            full.for_each(|_, subset| {
+                if !subset.contains(&node) {
+                    expected.push(subset.to_vec());
                 }
             });
+            rl.for_each_row(node, |cell, subset| {
+                assert_eq!(cell, cells);
+                assert_eq!(
+                    expected[cells], subset,
+                    "full pool must walk global non-self order, node={node}"
+                );
+                cells += 1;
+            });
             assert_eq!(cells, rl.row_len(node));
+            assert_eq!(cells, expected.len());
         }
+    }
+
+    /// The satellite claim: layout memory is O(Σ k_i²), not O(n²) — a
+    /// 512-node layout with k = 8 pools stays under what the old dense
+    /// `pool_pos` matrix alone would take (512² × 4 B = 1 MiB).
+    #[test]
+    fn layout_memory_scales_with_pools_not_n_squared() {
+        let n = 512usize;
+        let pools: Vec<Vec<usize>> =
+            (0..n).map(|i| (0..n).filter(|&v| v != i).take(8).collect()).collect();
+        let rl = RestrictedLayout::new(n, 3, pools);
+        let dense_inverse = n * n * std::mem::size_of::<u32>();
+        assert!(
+            rl.layout_bytes() < dense_inverse,
+            "{} bytes should undercut the {} byte dense inverse map",
+            rl.layout_bytes(),
+            dense_inverse
+        );
+        // and the id space is exact u64 arithmetic end-to-end
+        let last = rl.total_cells() as u64 - 1;
+        let (node, cell) = rl.node_of_id(last);
+        assert_eq!(rl.cell_id(node, cell), last);
     }
 
     #[test]

@@ -110,11 +110,13 @@ pub struct RunConfig {
     pub delta: bool,
     /// Cell-corruption probability (Fig. 11), 0 = clean.
     pub noise: f64,
-    /// Candidate-parent restriction (`--restrict none|mi:<k>`): `mi:<k>`
-    /// screens each node down to its top-k G²-associated candidates
-    /// (plus prior-encouraged parents) before preprocessing, shrinking
-    /// stores from `C(n, ≤s)` to `C(k, ≤s)` per node. `none` (default)
-    /// is bit-for-bit the unrestricted pipeline.
+    /// Candidate-parent restriction (`--restrict
+    /// none|mi:<k>|mi:<k>+mmpc`): `mi:<k>` screens each node down to
+    /// its top-k G²-associated candidates (plus prior-encouraged
+    /// parents) before preprocessing, shrinking stores from `C(n, ≤s)`
+    /// to `C(k, ≤s)` per node; `+mmpc` adds the conditional second pass
+    /// that drops pool members independent given a small conditioning
+    /// set. `none` (default) is bit-for-bit the unrestricted pipeline.
     pub restrict: RestrictKind,
     /// Significance level of the screening independence tests
     /// (`--restrict-alpha`): pairs with `p > alpha` never enter a pool.
@@ -412,8 +414,10 @@ mod tests {
     #[test]
     fn parses_restrict_flags() {
         let c = RunConfig::from_args(&args("--restrict mi:8 --restrict-alpha 0.01")).unwrap();
-        assert_eq!(c.restrict, RestrictKind::Mi { k: 8 });
+        assert_eq!(c.restrict, RestrictKind::Mi { k: 8, mmpc: false });
         assert_eq!(c.restrict_alpha, 0.01);
+        let m = RunConfig::from_args(&args("--restrict mi:6+mmpc")).unwrap();
+        assert_eq!(m.restrict, RestrictKind::Mi { k: 6, mmpc: true });
         // defaults: no restriction, alpha 0.05
         let d = RunConfig::default();
         assert_eq!(d.restrict, RestrictKind::None);

@@ -55,6 +55,11 @@ pub struct LearnReport {
     /// Mean candidate-pool size under restriction (None when
     /// unrestricted).
     pub pool_mean: Option<f64>,
+    /// Resident bytes of the native-ragged restricted layout — pools,
+    /// per-node local layouts, row offsets (None when unrestricted).
+    /// The acceptance stat for "no global dense table allocated": this
+    /// stays KBs where the dense translation grid would be GBs.
+    pub layout_bytes: Option<usize>,
     /// Gelman–Rubin PSRF over the chain traces (needs `--trace` and
     /// at least two chains).
     pub psrf: Option<f64>,
@@ -172,12 +177,12 @@ pub fn build_run_store(
     let store = match &restriction {
         Some(rl) => {
             crate::info!(
-                "restriction {}: mean pool {:.1}, max {}, {} of {} cells",
+                "restriction {}: mean pool {:.1}, max {}, {} ragged cells, layout {} B",
                 cfg.restrict.name(),
                 rl.mean_pool(),
                 rl.max_pool(),
                 rl.total_cells(),
-                rl.full_cells()
+                rl.layout_bytes()
             );
             registry::build_store_restricted(
                 cfg.store,
@@ -280,6 +285,7 @@ pub fn run_learning_with_store(
         store_entries: store.stored_entries(),
         restrict: cfg.restrict.name(),
         pool_mean: store.restriction().map(|rl| rl.mean_pool()),
+        layout_bytes: store.restriction().map(|rl| rl.layout_bytes()),
         psrf,
         ess,
     })
@@ -712,7 +718,7 @@ mod tests {
             rows: 250,
             iters: 200,
             seed: 13,
-            restrict: RestrictKind::Mi { k: 4 },
+            restrict: RestrictKind::Mi { k: 4, mmpc: false },
             ..RunConfig::default()
         };
         let report = run_learning(&cfg, None).unwrap();
@@ -727,10 +733,13 @@ mod tests {
             report.store_entries
         );
         assert!(report.result.best_dag().is_some());
-        // unrestricted reports carry no pool stats
+        // restricted runs report the (tiny) native-ragged layout cost
+        assert!(report.layout_bytes.unwrap() > 0);
+        // unrestricted reports carry no pool stats and no ragged layout
         let plain = RunConfig { restrict: RestrictKind::None, ..cfg };
         let report = run_learning(&plain, None).unwrap();
         assert!(report.pool_mean.is_none());
+        assert!(report.layout_bytes.is_none());
         assert!(!report.summary().contains("restrict="));
     }
 
@@ -741,7 +750,7 @@ mod tests {
             network: "asia".into(),
             rows: 100,
             iters: 20,
-            restrict: RestrictKind::Mi { k: 3 },
+            restrict: RestrictKind::Mi { k: 3, mmpc: false },
             ..RunConfig::default()
         };
         let cfg = RunConfig { engine: EngineKind::Sum, ..base.clone() };

@@ -44,9 +44,15 @@ pub fn fnv1a(text: &str) -> u64 {
 /// identity (minus seed), score parameters, store backend, and the
 /// restriction/counting knobs that decide which cells get built and
 /// how. Float fields hash their bit patterns, never a rounded print.
+/// The key width joins the field set because it names the store's
+/// *address space*: an unrestricted store keys cells by u32 global
+/// layout index, a restricted one by u64 native-ragged `(row offset +
+/// local cell)` ids — two stores in different key spaces must never
+/// share a cache entry even if every other knob agrees (DESIGN.md §16).
 fn store_fields(cfg: &RunConfig) -> String {
+    let keys = if cfg.restrict.is_none() { "keys:u32-dense" } else { "keys:u64-ragged" };
     format!(
-        "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+        "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
         cfg.network,
         cfg.rows,
         cfg.noise.to_bits(),
@@ -56,7 +62,8 @@ fn store_fields(cfg: &RunConfig) -> String {
         cfg.restrict.name(),
         cfg.restrict_alpha.to_bits(),
         cfg.counting.name(),
-        cfg.chunk_rows
+        cfg.chunk_rows,
+        keys
     )
 }
 
@@ -99,8 +106,11 @@ mod tests {
     #[test]
     fn store_fingerprint_separates_store_shaping_knobs() {
         let plain = store_fingerprint(&base());
-        let restricted = RunConfig { restrict: RestrictKind::Mi { k: 4 }, ..base() };
+        let restricted =
+            RunConfig { restrict: RestrictKind::Mi { k: 4, mmpc: false }, ..base() };
         assert_ne!(plain, store_fingerprint(&restricted));
+        let mmpc = RunConfig { restrict: RestrictKind::Mi { k: 4, mmpc: true }, ..base() };
+        assert_ne!(store_fingerprint(&restricted), store_fingerprint(&mmpc));
         let alpha = RunConfig { restrict_alpha: 0.01, ..restricted.clone() };
         assert_ne!(store_fingerprint(&restricted), store_fingerprint(&alpha));
         let naive = RunConfig { counting: CountingMode::Naive, ..base() };

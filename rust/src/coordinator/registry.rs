@@ -52,8 +52,16 @@ impl StoreHandle {
 }
 
 impl ScoreStore for StoreHandle {
-    fn layout(&self) -> &SubsetLayout {
+    fn layout(&self) -> Option<&SubsetLayout> {
         self.as_dyn().layout()
+    }
+
+    fn n(&self) -> usize {
+        self.as_dyn().n()
+    }
+
+    fn s(&self) -> usize {
+        self.as_dyn().s()
     }
 
     fn get(&self, node: usize, idx: usize) -> f32 {
@@ -403,7 +411,7 @@ mod tests {
         let rl = crate::restrict::build_restriction(
             &d,
             3,
-            RestrictKind::Mi { k: 3 },
+            RestrictKind::Mi { k: 3, mmpc: false },
             1.0,
             None,
             exec.as_ref(),
@@ -419,8 +427,11 @@ mod tests {
             build_store_restricted(StoreKind::Hash, &d, params, &rl, &cfg, None, &counting);
         assert!(dense.restriction().is_some());
         assert!(hash.restriction().is_some());
-        // Restricted stores hold far fewer entries than the full grid.
-        assert!(dense.stored_entries() < dense.n() * dense.subsets());
+        // Restricted stores hold far fewer entries than the full grid
+        // (the dense capacity is a u64 count now — never materialized).
+        let capacity = crate::combinatorics::SubsetLayout::capacity(dense.n(), 3)
+            .expect("C(8, ≤3) fits u64") as usize;
+        assert!(dense.stored_entries() < dense.n() * capacity);
         assert!(hash.stored_entries() <= dense.stored_entries());
         // Serial engines over both restricted backends agree.
         let mut rng = Pcg32::new(311);
@@ -453,7 +464,7 @@ mod tests {
 
     #[test]
     fn validate_restricted_gates_engines() {
-        let mi = RestrictKind::Mi { k: 8 };
+        let mi = RestrictKind::Mi { k: 8, mmpc: false };
         assert!(validate_restricted(EngineKind::Serial, mi).is_ok());
         assert!(validate_restricted(EngineKind::BitVec, mi).is_ok());
         assert!(validate_restricted(EngineKind::Sum, mi).is_err());

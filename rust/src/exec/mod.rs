@@ -37,7 +37,8 @@ pub mod tile;
 pub use executor::{DispatchStats, KernelExecutor, PoolExecutor, SerialExecutor};
 pub use shared::{install_shared, SharedExecutor};
 pub use tile::{
-    plan_ragged_tiles, plan_ragged_tiles_for, plan_tiles, plan_tiles_for, split_by_tiles, Tile,
+    plan_ragged_tiles, plan_ragged_tiles_for, plan_tiles, plan_tiles_for, ragged_cell_count,
+    split_by_tiles, Tile,
 };
 
 use anyhow::{bail, Result};

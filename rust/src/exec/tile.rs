@@ -51,6 +51,14 @@ pub fn plan_tiles_for(nodes: std::ops::Range<usize>, subsets: usize, tile: usize
     tiles
 }
 
+/// Total cells a ragged plan covers, summed in checked u64 — the
+/// capacity probe large-n callers run *before* allocating the
+/// concatenated buffer (`None` = the ragged cell space itself overflows
+/// u64, mirroring [`crate::combinatorics::SubsetLayout::capacity`]).
+pub fn ragged_cell_count(row_lens: &[usize]) -> Option<u64> {
+    row_lens.iter().try_fold(0u64, |acc, &l| acc.checked_add(l as u64))
+}
+
 /// [`plan_tiles`] over a **ragged** per-node cell space: row `node` has
 /// `row_lens[node]` cells (the restricted layouts' `C(k_i, ≤s)` rows).
 /// Tiles are emitted in flat row-major order over the concatenated
@@ -69,6 +77,14 @@ pub fn plan_ragged_tiles_for(
     row_lens: &[usize],
     tile: usize,
 ) -> Vec<Tile> {
+    // Checked u64 arithmetic over the planned range: a plan whose cell
+    // space leaves the address space must fail loudly here, not wrap
+    // inside a tile's start/end.
+    let total = nodes
+        .clone()
+        .try_fold(0u64, |acc, i| acc.checked_add(row_lens[i] as u64))
+        .expect("ragged tile plan overflows u64 cell arithmetic");
+    assert!(total <= usize::MAX as u64, "ragged tile plan exceeds the address space");
     let mut tiles = Vec::new();
     for node in nodes {
         let len = row_lens[node];

@@ -13,9 +13,10 @@
 //! * scoring: [`score`] (BDe local scores, preprocessing, and the
 //!   pluggable [`score::ScoreStore`] substrate — dense table or pruned
 //!   hash table), [`priors`], and the candidate-parent restriction
-//!   subsystem [`restrict`] (pairwise G² screening into per-node
-//!   [`combinatorics::RestrictedLayout`] pools — `--restrict mi:<k>`,
-//!   the 60+-node scaling route)
+//!   subsystem [`restrict`] (pairwise G² screening plus an optional
+//!   MMPC-style conditional pass into per-node native-ragged
+//!   [`combinatorics::RestrictedLayout`] pools — `--restrict
+//!   mi:<k>[+mmpc]`, the 60+/128+-node scaling route)
 //! * the learner: [`mcmc`] (Metropolis–Hastings over orders) driving a
 //!   pluggable [`scorer`] engine — serial ("GPP"), baselines, or the
 //!   AOT-compiled XLA executable loaded by [`runtime`] (behind the

@@ -75,9 +75,10 @@ fn print_usage() {
            --delta on|off  (incremental interval rescoring, default on; off = full\n\
                             rescore per step, bit-for-bit identical results)\n\
            --s N --gamma F --topk N --seed N --noise P --threads N --artifacts DIR\n\
-           --restrict none|mi:<k>  (candidate-parent screening: per-node top-k G²\n\
-                            pools shrink stores from C(n,s) to C(k,s); none = default,\n\
-                            bit-identical to the unscreened pipeline)\n\
+           --restrict none|mi:<k>[+mmpc]  (candidate-parent screening: per-node top-k\n\
+                            G² pools shrink stores from C(n,s) to C(k,s); +mmpc adds a\n\
+                            conditional second pass that drops explained-away pool\n\
+                            members; none = default, bit-identical unscreened pipeline)\n\
            --restrict-alpha P  (screening test significance level, default 0.05)\n\
            --schedule static|balanced  (tile assignment: round-robin vs the paper's\n\
                             balanced dynamic queue, default balanced; bit-identical)\n\
@@ -231,13 +232,18 @@ fn cmd_preprocess(args: &[String]) -> Result<()> {
     };
     let (store, stats) = match &restriction {
         Some(rl) => {
+            let dense_cells = bnlearn::combinatorics::SubsetLayout::capacity(rl.n(), rl.s())
+                .and_then(|c| c.checked_mul(rl.n() as u64))
+                .map(|c| c.to_string())
+                .unwrap_or_else(|| "u64-overflowing".into());
             println!(
-                "screen {}: mean pool {:.1}, max pool {}, {} of {} dense cells",
+                "screen {}: mean pool {:.1}, max pool {}, {} of {} dense cells, layout {} B",
                 cfg.restrict.name(),
                 rl.mean_pool(),
                 rl.max_pool(),
                 rl.total_cells(),
-                rl.full_cells()
+                dense_cells,
+                rl.layout_bytes()
             );
             build_store_restricted(
                 cfg.store,
@@ -260,11 +266,19 @@ fn cmd_preprocess(args: &[String]) -> Result<()> {
         ),
     };
     let secs = timer.elapsed_secs();
-    let dense_equiv = store.n() * store.subsets() * std::mem::size_of::<f32>();
+    // Restricted stores are natively ragged: no global layout exists,
+    // so the dense grid is a *capacity* (possibly astronomically large),
+    // never an allocation.
+    let explicit_cells = match store.restriction() {
+        Some(rl) => rl.total_cells(),
+        None => store.n() * store.subsets(),
+    };
+    let dense_equiv = bnlearn::combinatorics::SubsetLayout::capacity(store.n(), store.s())
+        .map(|c| c as f64 * store.n() as f64 * std::mem::size_of::<f32>() as f64);
     println!(
-        "preprocessed {} nodes x {} subsets into the {} store in {:.3}s with {} threads",
+        "preprocessed {} nodes x {} cells into the {} store in {:.3}s with {} threads",
         store.n(),
-        store.subsets(),
+        explicit_cells,
         store.name(),
         secs,
         cfg.threads
@@ -280,11 +294,15 @@ fn cmd_preprocess(args: &[String]) -> Result<()> {
         stats.imbalance()
     );
     println!(
-        "resident: {:.2} MB, {} stored entries ({:.1}% of the {:.2} MB dense grid)",
+        "resident: {:.2} MB, {} stored entries ({:.1}% of {} explicit cells; dense grid {})",
         store.bytes() as f64 / (1024.0 * 1024.0),
         store.stored_entries(),
-        100.0 * store.stored_entries() as f64 / (store.n() * store.subsets()).max(1) as f64,
-        dense_equiv as f64 / (1024.0 * 1024.0),
+        100.0 * store.stored_entries() as f64 / explicit_cells.max(1) as f64,
+        explicit_cells,
+        match dense_equiv {
+            Some(b) => format!("{:.2} MB", b / (1024.0 * 1024.0)),
+            None => "overflows u64".to_string(),
+        },
     );
     Ok(())
 }

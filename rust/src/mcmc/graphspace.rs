@@ -99,7 +99,7 @@ impl<'a> GraphChain<'a> {
         let mut parents = self.dag.parents(node).to_vec();
         edit(&mut parents);
         parents.sort_unstable();
-        if parents.len() > self.table.layout().s() {
+        if parents.len() > self.table.s() {
             return None; // outside the bounded hypothesis space
         }
         Some(self.table.score_of(node, &parents) as f64)

@@ -43,13 +43,15 @@ pub fn by_name(name: &str) -> Option<NamedStructure> {
         "asia" => Some(asia::asia()),
         "child" => Some(child::child()),
         "tiled64" => Some(tiled::tiled64()),
+        "tiled128" => Some(tiled::tiled128()),
+        "tiled256" => Some(tiled::tiled256()),
         _ => None,
     }
 }
 
 /// All repository network names.
 pub fn names() -> &'static [&'static str] {
-    &["alarm", "sachs", "asia", "child", "tiled64"]
+    &["alarm", "sachs", "asia", "child", "tiled64", "tiled128", "tiled256"]
 }
 
 #[cfg(test)]

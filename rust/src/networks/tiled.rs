@@ -1,27 +1,37 @@
-//! The 64-node tiled/layered synthetic benchmark — the named workload
-//! behind the paper's "more than 60 nodes" scale claim.
+//! The tiled/layered synthetic benchmark family — the named workloads
+//! behind the paper's "more than 60 nodes" scale claim and this repo's
+//! native-ragged 128/256-node runs.
 //!
 //! Published benchmark repositories stop at ALARM's 37 nodes in this
 //! codebase, so the >60-node regime had no named, reproducible
-//! structure to exercise. `tiled64` is a fixed 8×8 layered DAG in the
-//! style of synthetic gene-network tilings: 8 layers of 8 nodes, each
-//! non-input node drawing 1–3 parents from the previous layer, wiring
-//! chosen once by a **fixed generator seed** that is part of the
-//! structure's definition (change the seed, change the benchmark).
-//! All nodes are 3-state — the paper's gene expression model
-//! (under/normal/over-expressed). Max in-degree is 3, so `--s 3`
-//! covers the true structure.
+//! structure to exercise. Each `tiledN` is a fixed layered DAG in the
+//! style of synthetic gene-network tilings: `layers` layers of `width`
+//! nodes, each non-input node drawing 1–3 parents from the previous
+//! layer, wiring chosen once by a **fixed generator seed** that is part
+//! of the structure's definition (change the seed, change the
+//! benchmark). All nodes are 3-state — the paper's gene expression
+//! model (under/normal/over-expressed). Max in-degree is 3, so `--s 3`
+//! covers the true structure at every scale:
+//!
+//! * `tiled64` — 8 × 8, the original >60-node claim;
+//! * `tiled128` — 16 × 8, the first native-ragged target past the old
+//!   n = 64 key-space ceiling;
+//! * `tiled256` — 32 × 8, the scale headroom benchmark.
 
 use super::NamedStructure;
 use crate::bn::Dag;
 use crate::util::Pcg32;
 
-/// Layers × width of the tiled structure.
+/// Layers × width of the original 64-node tiling.
 const LAYERS: usize = 8;
 const WIDTH: usize = 8;
 
-/// The fixed wiring seed — part of the published structure definition.
+/// The fixed wiring seeds — part of the published structure
+/// definitions (one per scale, so the 64-node prefix of `tiled128` is
+/// NOT `tiled64`; each benchmark stands alone).
 const TILED_SEED: u64 = 0x7E64_0001;
+const TILED128_SEED: u64 = 0x7E64_0002;
+const TILED256_SEED: u64 = 0x7E64_0003;
 
 #[rustfmt::skip]
 const NODES: [&str; 64] = [
@@ -37,14 +47,14 @@ const NODES: [&str; 64] = [
 
 /// Deterministic layered wiring: each node of layer `l ≥ 1` draws 1–3
 /// distinct parents from layer `l − 1`.
-fn tiled_edges() -> Vec<(usize, usize)> {
-    let mut rng = Pcg32::new(TILED_SEED);
+fn tiled_edges(layers: usize, width: usize, seed: u64) -> Vec<(usize, usize)> {
+    let mut rng = Pcg32::new(seed);
     let mut edges = Vec::new();
-    for layer in 1..LAYERS {
-        for w in 0..WIDTH {
-            let to = layer * WIDTH + w;
+    for layer in 1..layers {
+        for w in 0..width {
+            let to = layer * width + w;
             let parents = 1 + rng.gen_range(3); // 1, 2, or 3
-            let mut cand: Vec<usize> = ((layer - 1) * WIDTH..layer * WIDTH).collect();
+            let mut cand: Vec<usize> = ((layer - 1) * width..layer * width).collect();
             for _ in 0..parents {
                 let pick = rng.gen_range(cand.len());
                 edges.push((cand.swap_remove(pick), to));
@@ -54,14 +64,44 @@ fn tiled_edges() -> Vec<(usize, usize)> {
     edges
 }
 
+/// Generated `t000`-style node names for the >64-node tilings (leaked
+/// once per call — structures are built a handful of times per run).
+fn leaked_names(n: usize) -> Vec<&'static str> {
+    (0..n).map(|i| &*Box::leak(format!("t{i:03}").into_boxed_str())).collect()
+}
+
+/// A layered tiling at an arbitrary scale.
+fn tiled(
+    name: &'static str,
+    layers: usize,
+    width: usize,
+    seed: u64,
+    node_names: Vec<&'static str>,
+) -> NamedStructure {
+    let n = layers * width;
+    debug_assert_eq!(node_names.len(), n);
+    NamedStructure {
+        name,
+        node_names,
+        dag: Dag::from_edges(n, &tiled_edges(layers, width, seed)),
+        states: vec![3; n],
+    }
+}
+
 /// The 64-node tiled benchmark structure (8 layers × 8 nodes, 3-state).
 pub fn tiled64() -> NamedStructure {
-    NamedStructure {
-        name: "tiled64",
-        node_names: NODES.to_vec(),
-        dag: Dag::from_edges(LAYERS * WIDTH, &tiled_edges()),
-        states: vec![3; LAYERS * WIDTH],
-    }
+    tiled("tiled64", LAYERS, WIDTH, TILED_SEED, NODES.to_vec())
+}
+
+/// The 128-node tiled benchmark (16 layers × 8 nodes, 3-state) — the
+/// first target past the old n = 64 key-space ceiling.
+pub fn tiled128() -> NamedStructure {
+    tiled("tiled128", 16, 8, TILED128_SEED, leaked_names(128))
+}
+
+/// The 256-node tiled benchmark (32 layers × 8 nodes, 3-state).
+pub fn tiled256() -> NamedStructure {
+    tiled("tiled256", 32, 8, TILED256_SEED, leaked_names(256))
 }
 
 #[cfg(test)]
@@ -70,30 +110,57 @@ mod tests {
 
     #[test]
     fn shape_is_fixed_and_layered() {
-        let t = tiled64();
-        assert_eq!(t.dag.n(), 64);
-        assert!(t.dag.is_acyclic());
-        assert!(t.dag.max_in_degree() <= 3);
-        // first layer has no parents; every later node has 1..=3
-        for w in 0..WIDTH {
-            assert!(t.dag.parents(w).is_empty());
-        }
-        for v in WIDTH..64 {
-            let ps = t.dag.parents(v);
-            assert!((1..=3).contains(&ps.len()), "node {v}: {ps:?}");
-            // parents come from the previous layer only
-            let layer = v / WIDTH;
-            assert!(ps.iter().all(|&p| p / WIDTH == layer - 1), "node {v}: {ps:?}");
+        for (t, layers) in [(tiled64(), 8usize), (tiled128(), 16), (tiled256(), 32)] {
+            let n = layers * WIDTH;
+            assert_eq!(t.dag.n(), n, "{}", t.name);
+            assert!(t.dag.is_acyclic());
+            assert!(t.dag.max_in_degree() <= 3);
+            // first layer has no parents; every later node has 1..=3
+            for w in 0..WIDTH {
+                assert!(t.dag.parents(w).is_empty());
+            }
+            for v in WIDTH..n {
+                let ps = t.dag.parents(v);
+                assert!((1..=3).contains(&ps.len()), "{} node {v}: {ps:?}", t.name);
+                // parents come from the previous layer only
+                let layer = v / WIDTH;
+                assert!(
+                    ps.iter().all(|&p| p / WIDTH == layer - 1),
+                    "{} node {v}: {ps:?}",
+                    t.name
+                );
+            }
         }
     }
 
     #[test]
     fn wiring_is_deterministic() {
-        // The fixed seed makes the structure a published artifact: two
-        // builds agree edge for edge.
+        // The fixed seeds make the structures published artifacts: two
+        // builds agree edge for edge, and the scales are distinct
+        // benchmarks (not prefixes of one another).
         let a = tiled64();
         let b = tiled64();
         assert_eq!(a.dag.edges(), b.dag.edges());
         assert!(a.dag.edge_count() >= 56, "at least one parent per non-input node");
+        assert_eq!(tiled128().dag.edges(), tiled128().dag.edges());
+        assert_eq!(tiled256().dag.edges(), tiled256().dag.edges());
+        let e64: std::collections::BTreeSet<(usize, usize)> =
+            a.dag.edges().into_iter().collect();
+        let prefix64: std::collections::BTreeSet<(usize, usize)> = tiled128()
+            .dag
+            .edges()
+            .into_iter()
+            .filter(|&(_, to)| to < 64)
+            .collect();
+        assert_ne!(e64, prefix64);
+    }
+
+    #[test]
+    fn names_are_unique_and_sized() {
+        for t in [tiled128(), tiled256()] {
+            assert_eq!(t.node_names.len(), t.dag.n());
+            let set: std::collections::BTreeSet<_> = t.node_names.iter().collect();
+            assert_eq!(set.len(), t.dag.n(), "{} duplicate node names", t.name);
+        }
     }
 }

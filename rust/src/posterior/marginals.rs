@@ -155,7 +155,7 @@ impl MarginalAccumulator {
     /// one (everything outside keeps its predecessor set), then replay
     /// every node's cached `(parent, probability)` pairs into the sums.
     fn accumulate<S: ScoreStore + ?Sized>(&mut self, order: &Order, store: &S) {
-        let n = store.layout().n();
+        let n = store.n();
         debug_assert_eq!(n, self.state.n, "order/store node count mismatch");
         let seq = order.seq();
 
@@ -202,7 +202,7 @@ impl MarginalAccumulator {
     /// replay re-walks the combinations (needed for edge membership
     /// anyway) but skips the expensive `rank_combination` + store probe.
     fn recompute_position<S: ScoreStore + ?Sized>(&mut self, order: &Order, p: usize, store: &S) {
-        let layout = store.layout();
+        let layout = store.dense_layout();
         let n = layout.n();
         let s = layout.s();
         let ln10 = std::f64::consts::LN_10;
@@ -286,8 +286,16 @@ mod tests {
     }
 
     impl ScoreStore for ConstStore {
-        fn layout(&self) -> &SubsetLayout {
-            &self.layout
+        fn layout(&self) -> Option<&SubsetLayout> {
+            Some(&self.layout)
+        }
+
+        fn n(&self) -> usize {
+            self.layout.n()
+        }
+
+        fn s(&self) -> usize {
+            self.layout.s()
         }
 
         fn get(&self, _node: usize, _idx: usize) -> f32 {
@@ -413,8 +421,14 @@ mod tests {
             layout: SubsetLayout,
         }
         impl ScoreStore for EmptyOnly {
-            fn layout(&self) -> &SubsetLayout {
-                &self.layout
+            fn layout(&self) -> Option<&SubsetLayout> {
+                Some(&self.layout)
+            }
+            fn n(&self) -> usize {
+                self.layout.n()
+            }
+            fn s(&self) -> usize {
+                self.layout.s()
             }
             fn get(&self, _node: usize, idx: usize) -> f32 {
                 let empty = self.layout.block_start(0) as usize;

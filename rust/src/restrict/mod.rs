@@ -23,7 +23,7 @@
 
 pub mod screen;
 
-pub use screen::{candidate_pools, pairwise_screen, PairScreen};
+pub use screen::{candidate_pools, mmpc_prune, pairwise_screen, PairScreen};
 
 use std::sync::Arc;
 
@@ -34,7 +34,8 @@ use crate::data::Dataset;
 use crate::exec::KernelExecutor;
 use crate::priors::InterfaceMatrix;
 
-/// Which candidate-parent restriction to apply (`--restrict none|mi:<k>`).
+/// Which candidate-parent restriction to apply
+/// (`--restrict none|mi:<k>|mi:<k>+mmpc`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RestrictKind {
     /// No restriction — the unrestricted (bit-identical) default.
@@ -43,6 +44,12 @@ pub enum RestrictKind {
     Mi {
         /// Pool size bound (priors can push individual pools past it).
         k: usize,
+        /// Run the MMPC-style conditional second pass after the pairwise
+        /// screen: pool members found independent of their node given a
+        /// small conditioning set from the pool are dropped
+        /// (symmetrically) before layout construction — trading extra
+        /// G² tests for tighter pools at 128+ nodes.
+        mmpc: bool,
     },
 }
 
@@ -51,28 +58,33 @@ impl RestrictKind {
     /// benchmark recall tests.
     pub const DEFAULT_K: usize = 8;
 
-    /// Parse from CLI text (`none` or `mi:<k>`).
+    /// Parse from CLI text (`none`, `mi:<k>`, or `mi:<k>+mmpc`).
     pub fn parse(text: &str) -> Result<Self> {
         if text == "none" {
             return Ok(RestrictKind::None);
         }
         if let Some(rest) = text.strip_prefix("mi:") {
-            let k: usize = rest
+            let (num, mmpc) = match rest.strip_suffix("+mmpc") {
+                Some(head) => (head, true),
+                None => (rest, false),
+            };
+            let k: usize = num
                 .parse()
                 .map_err(|_| anyhow::anyhow!("bad pool size in --restrict {text:?}"))?;
             if k == 0 {
                 bail!("--restrict mi:<k> needs k >= 1");
             }
-            return Ok(RestrictKind::Mi { k });
+            return Ok(RestrictKind::Mi { k, mmpc });
         }
-        bail!("unknown restriction {text:?} (none|mi:<k>)")
+        bail!("unknown restriction {text:?} (none|mi:<k>|mi:<k>+mmpc)")
     }
 
     /// Kind name for logs and reports.
     pub fn name(&self) -> String {
         match self {
             RestrictKind::None => "none".into(),
-            RestrictKind::Mi { k } => format!("mi:{k}"),
+            RestrictKind::Mi { k, mmpc: false } => format!("mi:{k}"),
+            RestrictKind::Mi { k, mmpc: true } => format!("mi:{k}+mmpc"),
         }
     }
 
@@ -97,9 +109,12 @@ pub fn build_restriction(
 ) -> Option<Arc<RestrictedLayout>> {
     match kind {
         RestrictKind::None => None,
-        RestrictKind::Mi { k } => {
+        RestrictKind::Mi { k, mmpc } => {
             let screen = pairwise_screen(data, exec);
-            let pools = candidate_pools(&screen, k, alpha, priors);
+            let mut pools = candidate_pools(&screen, k, alpha, priors);
+            if mmpc {
+                pools = mmpc_prune(data, pools, alpha, priors, exec);
+            }
             Some(Arc::new(RestrictedLayout::new(data.cols(), s, pools)))
         }
     }
@@ -112,15 +127,22 @@ mod tests {
     #[test]
     fn parse_and_name() {
         assert_eq!(RestrictKind::parse("none").unwrap(), RestrictKind::None);
-        assert_eq!(RestrictKind::parse("mi:8").unwrap(), RestrictKind::Mi { k: 8 });
-        assert_eq!(RestrictKind::parse("mi:1").unwrap(), RestrictKind::Mi { k: 1 });
+        assert_eq!(RestrictKind::parse("mi:8").unwrap(), RestrictKind::Mi { k: 8, mmpc: false });
+        assert_eq!(RestrictKind::parse("mi:1").unwrap(), RestrictKind::Mi { k: 1, mmpc: false });
+        assert_eq!(
+            RestrictKind::parse("mi:8+mmpc").unwrap(),
+            RestrictKind::Mi { k: 8, mmpc: true }
+        );
         assert!(RestrictKind::parse("mi:0").is_err());
+        assert!(RestrictKind::parse("mi:0+mmpc").is_err());
         assert!(RestrictKind::parse("mi:lots").is_err());
+        assert!(RestrictKind::parse("mi:8+mppc").is_err());
         assert!(RestrictKind::parse("topk:3").is_err());
         assert_eq!(RestrictKind::None.name(), "none");
-        assert_eq!(RestrictKind::Mi { k: 8 }.name(), "mi:8");
+        assert_eq!(RestrictKind::Mi { k: 8, mmpc: false }.name(), "mi:8");
+        assert_eq!(RestrictKind::Mi { k: 8, mmpc: true }.name(), "mi:8+mmpc");
         assert!(RestrictKind::None.is_none());
-        assert!(!RestrictKind::Mi { k: 2 }.is_none());
+        assert!(!RestrictKind::Mi { k: 2, mmpc: false }.is_none());
     }
 
     #[test]

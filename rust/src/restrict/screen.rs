@@ -150,6 +150,179 @@ pub fn candidate_pools(
     pools
 }
 
+/// Largest conditioning set the MMPC pass tries (the classic MMPC
+/// heuristic caps sepset growth; size-2 sets already separate the
+/// spouse/grandparent links the pairwise screen cannot).
+const MMPC_MAX_SEP: usize = 2;
+
+/// Strata bound for one conditioning set: past this, per-stratum counts
+/// are too thin to carry evidence and the test is skipped.
+const MMPC_MAX_STRATA: usize = 64;
+
+/// MMPC-style conditional second pass (Tsamardinos et al., the
+/// max-min parent/children skeleton phase as surfaced in bnlearn,
+/// arXiv:1406.7648): for every screened pair `(i, j)`, search small
+/// conditioning sets `S` drawn from the two candidate pools; if some
+/// `S` renders the pair conditionally independent (stratified G² fails
+/// to reject at `alpha`), the association is explained away — a spouse
+/// or grandparent link — and the pair is dropped from **both** pools.
+///
+/// Guard rails:
+/// * a test only counts as evidence of independence when the data can
+///   power it (`rows ≥ 5·df`, the classic heuristic) and the stratum
+///   count stays under [`MMPC_MAX_STRATA`] — an unpowered test never
+///   drops an edge;
+/// * prior-encouraged parents (R > 0.5) are never dropped from their
+///   child's pool, mirroring the first-pass rule;
+/// * the pair fan-out dispatches across `exec` and every test is a pure
+///   function of the data columns, so results are schedule-invariant.
+///
+/// Pools come back sorted, self-free, and never larger than they came
+/// in — so the restricted layout built on top only shrinks.
+pub fn mmpc_prune(
+    data: &Dataset,
+    pools: Vec<Vec<usize>>,
+    alpha: f64,
+    priors: Option<&InterfaceMatrix>,
+    exec: &dyn KernelExecutor,
+) -> Vec<Vec<usize>> {
+    let n = pools.len();
+    // Unordered pairs with membership in either direction (priors can
+    // make membership one-sided).
+    let pairs: Vec<(usize, usize)> = (0..n)
+        .flat_map(|i| ((i + 1)..n).map(move |j| (i, j)))
+        .filter(|&(i, j)| pools[i].contains(&j) || pools[j].contains(&i))
+        .collect();
+    let sep: Vec<std::sync::Mutex<bool>> =
+        pairs.iter().map(|_| std::sync::Mutex::new(false)).collect();
+    {
+        let pairs_ref = &pairs;
+        let pools_ref = &pools;
+        let sep_ref = &sep;
+        let kernel = move |_worker: usize, t: usize| {
+            let (i, j) = pairs_ref[t];
+            let found = separating_set_exists(data, i, j, pools_ref, alpha);
+            *sep_ref[t].lock().expect("sepset slot poisoned") = found;
+        };
+        exec.dispatch(pairs.len(), &kernel);
+    }
+    let mut pools = pools;
+    for (t, slot) in sep.into_iter().enumerate() {
+        if !slot.into_inner().expect("sepset slot poisoned") {
+            continue;
+        }
+        let (i, j) = pairs[t];
+        // Symmetric drop, except where a prior pins the membership.
+        let pinned = |child: usize, parent: usize| {
+            priors.is_some_and(|m| m.confident_parents(child).contains(&parent))
+        };
+        if !pinned(i, j) {
+            pools[i].retain(|&v| v != j);
+        }
+        if !pinned(j, i) {
+            pools[j].retain(|&v| v != i);
+        }
+    }
+    pools
+}
+
+/// Does some conditioning set `S` (|S| ≤ [`MMPC_MAX_SEP`], drawn from
+/// either endpoint's pool) make `i ⟂ j | S` at level `alpha`?
+fn separating_set_exists(
+    data: &Dataset,
+    i: usize,
+    j: usize,
+    pools: &[Vec<usize>],
+    alpha: f64,
+) -> bool {
+    // Deterministic candidate order: sorted union of the two pools.
+    let mut cands: Vec<usize> = pools[i]
+        .iter()
+        .chain(pools[j].iter())
+        .copied()
+        .filter(|&v| v != i && v != j)
+        .collect();
+    cands.sort_unstable();
+    cands.dedup();
+    // |S| = 1, then |S| = 2.
+    for (a, &u) in cands.iter().enumerate() {
+        if let Some((_, p)) = g2_cond(data, i, j, &[u]) {
+            if p > alpha {
+                return true;
+            }
+        }
+        if MMPC_MAX_SEP >= 2 {
+            for &v in &cands[a + 1..] {
+                if let Some((_, p)) = g2_cond(data, i, j, &[u, v]) {
+                    if p > alpha {
+                        return true;
+                    }
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Stratified G² test of `i ⟂ j | cond`: one contingency table per
+/// joint configuration of `cond`, expected counts computed within each
+/// stratum, `df = (r_i − 1)(r_j − 1) · q_cond`. Returns `None` when the
+/// test is unpowered (too many strata, or `rows < 5·df`) — the caller
+/// must treat that as "no evidence", never as independence.
+fn g2_cond(data: &Dataset, i: usize, j: usize, cond: &[usize]) -> Option<(f64, f64)> {
+    let (ri, rj) = (data.arity(i), data.arity(j));
+    let rows = data.rows();
+    let q: usize = cond.iter().map(|&c| data.arity(c)).try_fold(1usize, |acc, r| {
+        acc.checked_mul(r).filter(|&v| v <= MMPC_MAX_STRATA)
+    })?;
+    let df = ((ri - 1) * (rj - 1)).max(1) * q;
+    if rows < 5 * df {
+        return None;
+    }
+    let (ci, cj) = (data.column(i), data.column(j));
+    let mut counts = vec![0u32; q * ri * rj];
+    for row in 0..rows {
+        let mut code = 0usize;
+        let mut stride = 1usize;
+        for &c in cond {
+            code += data.value(row, c) as usize * stride;
+            stride *= data.arity(c);
+        }
+        counts[(code * ri + ci[row] as usize) * rj + cj[row] as usize] += 1;
+    }
+    let mut g2 = 0f64;
+    let mut row_tot = vec![0u64; ri];
+    let mut col_tot = vec![0u64; rj];
+    for s in 0..q {
+        let cell = |a: usize, b: usize| counts[(s * ri + a) * rj + b] as u64;
+        row_tot.iter_mut().for_each(|v| *v = 0);
+        col_tot.iter_mut().for_each(|v| *v = 0);
+        let mut n_s = 0u64;
+        for a in 0..ri {
+            for b in 0..rj {
+                let o = cell(a, b);
+                row_tot[a] += o;
+                col_tot[b] += o;
+                n_s += o;
+            }
+        }
+        if n_s == 0 {
+            continue;
+        }
+        for a in 0..ri {
+            for b in 0..rj {
+                let o = cell(a, b) as f64;
+                if o > 0.0 {
+                    let e = row_tot[a] as f64 * col_tot[b] as f64 / n_s as f64;
+                    g2 += o * (o / e).ln();
+                }
+            }
+        }
+    }
+    g2 *= 2.0;
+    Some((g2, chi2_sf(g2, df as f64)))
+}
+
 /// Survival function of the χ² distribution: `P(X ≥ x)` at `df` degrees
 /// of freedom — the regularized upper incomplete gamma `Q(df/2, x/2)`,
 /// via the standard series / continued-fraction split (Numerical
@@ -302,6 +475,75 @@ mod tests {
         // alpha = 1.0 with k = n−1 keeps everyone
         let pools = candidate_pools(&screen, n - 1, 1.0, None);
         assert!(pools.iter().all(|p| p.len() == n - 1));
+    }
+
+    /// MMPC drop semantics, made exact: three identical binary columns
+    /// are pairwise dependent, but any pair is *deterministically*
+    /// independent given the third (within each stratum the tested
+    /// variable is constant, so the stratified G² is exactly 0 and
+    /// p = 1) — every pair must be explained away and dropped, except
+    /// where a prior pins the membership.
+    #[test]
+    fn mmpc_drops_explained_away_pairs_and_honours_priors() {
+        let col: Vec<u8> = (0..200).map(|r| ((r * 7 + 3) % 5 % 2) as u8).collect();
+        let data = Dataset::from_columns(
+            vec![col.clone(), col.clone(), col],
+            vec![2, 2, 2],
+        );
+        let all_pools = vec![vec![1, 2], vec![0, 2], vec![0, 1]];
+        let pruned = mmpc_prune(&data, all_pools.clone(), 0.05, None, exec1().as_ref());
+        assert_eq!(pruned, vec![Vec::<usize>::new(); 3], "{pruned:?}");
+        // Prior pinning is directional: 1 stays in pool(0), but 0 is
+        // still dropped from pool(1).
+        let mut m = InterfaceMatrix::unbiased(3);
+        m.set(0, 1, 0.9);
+        let pinned = mmpc_prune(&data, all_pools.clone(), 0.05, Some(&m), exec1().as_ref());
+        assert_eq!(pinned[0], vec![1]);
+        assert!(pinned[1].is_empty() && pinned[2].is_empty());
+        // Schedule invariance: a pool executor prunes identically.
+        let pool_exec = ExecConfig::new(4, Schedule::Static, 0).executor();
+        assert_eq!(pruned, mmpc_prune(&data, all_pools, 0.05, None, pool_exec.as_ref()));
+    }
+
+    /// An unpowered conditional test is never evidence of independence:
+    /// with too few rows for `rows ≥ 5·df`, the MMPC pass drops nothing.
+    #[test]
+    fn mmpc_never_drops_on_unpowered_tests() {
+        let col: Vec<u8> = vec![0, 1, 0, 1, 1, 0, 1, 0];
+        let data = Dataset::from_columns(
+            vec![col.clone(), col.clone(), col],
+            vec![2, 2, 2],
+        );
+        let pools = vec![vec![1, 2], vec![0, 2], vec![0, 1]];
+        let pruned = mmpc_prune(&data, pools.clone(), 0.05, None, exec1().as_ref());
+        assert_eq!(pruned, pools, "8 rows cannot power a df=2 test");
+    }
+
+    /// Genuinely dependent pairs with no separating set survive the
+    /// pass: on a strong chain, adjacent pairs stay in-pool while the
+    /// endpoints' marginal association is explained away by the middle.
+    #[test]
+    fn mmpc_keeps_direct_edges_on_a_chain() {
+        // x0 → x1 → x2 with near-deterministic copies plus independent
+        // noise flips at fixed positions, so adjacent dependence remains
+        // conditionally strong while x0 ⟂ x2 | x1 exactly when the flip
+        // patterns differ.
+        let n_rows = 600usize;
+        let x0: Vec<u8> = (0..n_rows).map(|r| ((r * 13 + 5) % 7 % 2) as u8).collect();
+        let x1: Vec<u8> =
+            x0.iter().enumerate().map(|(r, &v)| if r % 29 == 0 { 1 - v } else { v }).collect();
+        let x2: Vec<u8> =
+            x1.iter().enumerate().map(|(r, &v)| if r % 31 == 7 { 1 - v } else { v }).collect();
+        let data = Dataset::from_columns(vec![x0, x1, x2], vec![2, 2, 2]);
+        let pools = vec![vec![1, 2], vec![0, 2], vec![0, 1]];
+        let pruned = mmpc_prune(&data, pools, 0.05, None, exec1().as_ref());
+        // adjacent links survive in both directions
+        assert!(pruned[0].contains(&1), "{pruned:?}");
+        assert!(pruned[1].contains(&0), "{pruned:?}");
+        assert!(pruned[1].contains(&2), "{pruned:?}");
+        assert!(pruned[2].contains(&1), "{pruned:?}");
+        // pools only ever shrink
+        assert!(pruned.iter().all(|p| p.len() <= 2));
     }
 
     /// Prior-encouraged parents survive even a screen that rejects

@@ -65,7 +65,7 @@ impl PriorFolder {
             padded,
             &crate::exec::SerialExecutor,
         );
-        let pst = ParentSetTable::build(store.layout());
+        let pst = ParentSetTable::build(store.dense_layout());
         let width = pst.width();
         let mut pst_padded = vec![pst.sentinel(); padded * width];
         pst_padded[..s_total * width].copy_from_slice(pst.raw());

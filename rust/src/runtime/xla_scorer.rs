@@ -66,7 +66,7 @@ impl XlaScorer {
         stem: &str,
         exec: &dyn crate::exec::KernelExecutor,
     ) -> Result<Self> {
-        let layout = store.layout().clone();
+        let layout = store.dense_layout().clone();
         let mut engine = ScoreEngine::load_variant(artifacts_dir, stem, layout.n(), layout.s())?;
         let pst = ParentSetTable::build(&layout);
         engine.upload_with(store, &pst, exec)?;

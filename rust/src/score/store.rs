@@ -40,12 +40,27 @@ use crate::exec::{plan_ragged_tiles_for, plan_tiles_for, split_by_tiles, Dispatc
 /// `Sync` is a supertrait so `&dyn ScoreStore` can be shared across the
 /// parallel-chain workers.
 pub trait ScoreStore: Sync {
-    /// The subset layout shared with engines and the runtime upload.
-    fn layout(&self) -> &SubsetLayout;
+    /// The global dense subset layout — the full-pool special case.
+    /// **`None` for stores built over a [`RestrictedLayout`]**: the
+    /// native ragged score space materializes no global `C(n, ≤s)`
+    /// translation table (DESIGN.md §16). Dense-only consumers (the
+    /// accelerator upload, sum-over-graphs, posterior marginals) go
+    /// through [`Self::dense_layout`], which panics with a clear
+    /// message instead of silently allocating one.
+    fn layout(&self) -> Option<&SubsetLayout>;
 
-    /// Score of `node` with the subset at global layout index `idx`;
-    /// [`NEG_SENTINEL`] for poisoned or pruned entries (restricted
-    /// stores: also for every subset outside the node's candidate pool).
+    /// Node count.
+    fn n(&self) -> usize;
+
+    /// Parent-set size bound (`s`).
+    fn s(&self) -> usize;
+
+    /// Score of `node` with the subset at **global** layout index
+    /// `idx`; [`NEG_SENTINEL`] for poisoned or pruned entries. Only
+    /// meaningful for dense stores — native-ragged restricted stores
+    /// have no global index space and panic; pool-aware consumers
+    /// address `(node, local_cell)` via [`Self::get_cell`] or subsets
+    /// via [`Self::score_of`].
     fn get(&self, node: usize, idx: usize) -> f32;
 
     /// The candidate-parent restriction this store was built over, if
@@ -58,7 +73,7 @@ pub trait ScoreStore: Sync {
     /// Direct read in the store's **cell** space. For unrestricted
     /// stores the cell space is the global layout (this default); a
     /// restricted store indexes node `node`'s ragged row directly with
-    /// `cell < restriction().row_len(node)`.
+    /// `cell < restriction().row_len(node)` — its primary keying.
     fn get_cell(&self, node: usize, cell: usize) -> f32 {
         self.get(node, cell)
     }
@@ -66,6 +81,7 @@ pub trait ScoreStore: Sync {
     /// Materialize `node`'s dense row into `out` (`out.len() == subsets()`),
     /// writing [`NEG_SENTINEL`] for entries the backend does not hold —
     /// the dense-materialize path the accelerator upload relies on.
+    /// Panics for native-ragged restricted stores (no dense row exists).
     fn fill_row(&self, node: usize, out: &mut [f32]);
 
     /// Resident bytes of the backing storage (Fig. 6-style accounting).
@@ -77,25 +93,46 @@ pub trait ScoreStore: Sync {
     /// Backend name for logs and benchmark tables.
     fn name(&self) -> &'static str;
 
-    /// Node count.
-    fn n(&self) -> usize {
-        self.layout().n()
+    /// The global layout, or a loud panic naming the misuse — the one
+    /// accessor dense-only consumers are allowed to lean on.
+    fn dense_layout(&self) -> &SubsetLayout {
+        self.layout().expect(
+            "this consumer needs the global dense subset layout, but the store was built over \
+             a candidate-parent restriction (native ragged space) — run with --restrict none",
+        )
     }
 
-    /// Subsets per node row (the paper's `S`).
+    /// Subsets per node row (the paper's `S`); dense stores only.
     fn subsets(&self) -> usize {
-        self.layout().total()
+        self.dense_layout().total()
     }
 
     /// Convenience: score of `node` with an explicit sorted parent set.
+    /// Works across both index spaces — restricted stores resolve the
+    /// subset through the pool (out-of-pool sets read the sentinel),
+    /// dense stores through the global layout.
     fn score_of(&self, node: usize, parents: &[usize]) -> f32 {
-        self.get(node, self.layout().index_of(parents))
+        match self.restriction() {
+            Some(rl) => match rl.cell_index_of(node, parents) {
+                Some(cell) => self.get_cell(node, cell),
+                None => NEG_SENTINEL,
+            },
+            None => self.get(node, self.dense_layout().index_of(parents)),
+        }
     }
 }
 
 impl ScoreStore for ScoreTable {
-    fn layout(&self) -> &SubsetLayout {
-        ScoreTable::layout(self)
+    fn layout(&self) -> Option<&SubsetLayout> {
+        ScoreTable::layout_opt(self)
+    }
+
+    fn n(&self) -> usize {
+        ScoreTable::n(self)
+    }
+
+    fn s(&self) -> usize {
+        ScoreTable::s(self)
     }
 
     fn get(&self, node: usize, idx: usize) -> f32 {
@@ -111,19 +148,11 @@ impl ScoreStore for ScoreTable {
     }
 
     fn fill_row(&self, node: usize, out: &mut [f32]) {
-        match ScoreTable::restriction(self) {
-            None => out.copy_from_slice(self.row(node)),
-            Some(rl) => {
-                // Dense-materialize the ragged row into global index
-                // space, sentinel for everything outside the pool.
-                assert_eq!(out.len(), self.subsets());
-                out.fill(NEG_SENTINEL);
-                let row = self.row(node);
-                for (cell, &v) in row.iter().enumerate() {
-                    out[rl.global_from_cell(node, cell)] = v;
-                }
-            }
-        }
+        assert!(
+            ScoreTable::restriction(self).is_none(),
+            "native-ragged restricted table has no dense row to materialize"
+        );
+        out.copy_from_slice(self.row(node));
     }
 
     fn bytes(&self) -> usize {
@@ -220,7 +249,12 @@ impl HashRow {
 /// [`RestrictedLayout`] (so the pool-aware fast path probes directly and
 /// only `get(global)` pays a translation).
 pub struct HashScoreStore {
-    layout: SubsetLayout,
+    /// Global dense layout — `Some` only for unrestricted builds; a
+    /// restricted store keys rows natively in pool-cell space and never
+    /// materializes the global translation table.
+    layout: Option<SubsetLayout>,
+    n: usize,
+    s: usize,
     rows: Vec<HashRow>,
     /// The candidate-parent restriction this store was built over.
     restrict: Option<Arc<RestrictedLayout>>,
@@ -364,7 +398,8 @@ impl HashScoreStore {
             cfg.schedule.name(),
             stats.summary()
         );
-        (HashScoreStore { layout, rows, restrict: None }, stats)
+        let s = layout.s();
+        (HashScoreStore { layout: Some(layout), n, s, rows, restrict: None }, stats)
     }
 
     /// Restricted build: fill each node's ragged pool row (tiled, same
@@ -489,33 +524,49 @@ impl HashScoreStore {
             cfg.schedule.name(),
             stats.summary()
         );
-        (HashScoreStore { layout: rl.full().clone(), rows, restrict: Some(rl.clone()) }, stats)
+        (
+            HashScoreStore { layout: None, n, s: rl.s(), rows, restrict: Some(rl.clone()) },
+            stats,
+        )
     }
 
-    /// Fraction of the dense table's entries this store retains.
+    /// Fraction of the dense table's entries this store retains. The
+    /// dense denominator is the *capacity* `n · C(n, ≤s)` — never
+    /// materialized for restricted stores, and ~0 when it would not
+    /// even fit in u64.
     pub fn retained_fraction(&self) -> f64 {
-        let dense = self.layout.n() * self.layout.total();
-        if dense == 0 {
+        let per_row = match SubsetLayout::capacity(self.n, self.s) {
+            Some(c) => c as f64,
+            None => return 0.0,
+        };
+        let dense = self.n as f64 * per_row;
+        if dense == 0.0 {
             return 0.0;
         }
-        self.stored_entries() as f64 / dense as f64
+        self.stored_entries() as f64 / dense
     }
 }
 
 impl ScoreStore for HashScoreStore {
-    fn layout(&self) -> &SubsetLayout {
-        &self.layout
+    fn layout(&self) -> Option<&SubsetLayout> {
+        self.layout.as_ref()
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn s(&self) -> usize {
+        self.s
     }
 
     fn get(&self, node: usize, idx: usize) -> f32 {
-        debug_assert!(idx < self.layout.total());
-        match &self.restrict {
-            None => self.rows[node].get(idx as u32).unwrap_or(NEG_SENTINEL),
-            Some(rl) => match rl.cell_from_global(node, idx) {
-                Some(cell) => self.rows[node].get(cell as u32).unwrap_or(NEG_SENTINEL),
-                None => NEG_SENTINEL,
-            },
-        }
+        assert!(
+            self.restrict.is_none(),
+            "global-index get on a native-ragged restricted hash store — use get_cell/score_of"
+        );
+        debug_assert!(idx < self.dense_layout().total());
+        self.rows[node].get(idx as u32).unwrap_or(NEG_SENTINEL)
     }
 
     fn restriction(&self) -> Option<&RestrictedLayout> {
@@ -527,23 +578,16 @@ impl ScoreStore for HashScoreStore {
     }
 
     fn fill_row(&self, node: usize, out: &mut [f32]) {
-        assert_eq!(out.len(), self.layout.total());
+        assert!(
+            self.restrict.is_none(),
+            "native-ragged restricted hash store has no dense row to materialize"
+        );
+        assert_eq!(out.len(), self.dense_layout().total());
         out.fill(NEG_SENTINEL);
         let row = &self.rows[node];
-        match &self.restrict {
-            None => {
-                for (slot, &k) in row.keys.iter().enumerate() {
-                    if k != EMPTY_KEY {
-                        out[k as usize] = row.vals[slot];
-                    }
-                }
-            }
-            Some(rl) => {
-                for (slot, &k) in row.keys.iter().enumerate() {
-                    if k != EMPTY_KEY {
-                        out[rl.global_from_cell(node, k as usize)] = row.vals[slot];
-                    }
-                }
+        for (slot, &k) in row.keys.iter().enumerate() {
+            if k != EMPTY_KEY {
+                out[k as usize] = row.vals[slot];
             }
         }
     }
@@ -641,7 +685,7 @@ mod tests {
         let params = BdeParams::default();
         let dense = ScoreTable::build(&data, params, 3, 2);
         let hash = HashScoreStore::build(&data, params, 3, 2, None);
-        let layout = ScoreStore::layout(&dense).clone();
+        let layout = dense.layout().clone();
         for i in 0..7usize {
             layout.for_each(|idx, subset| {
                 let d = ScoreStore::get(&dense, i, idx);
@@ -668,7 +712,7 @@ mod tests {
         let params = BdeParams::default();
         let dense = ScoreTable::build(&data, params, 3, 1);
         let hash = HashScoreStore::build(&data, params, 3, 1, None);
-        let layout = ScoreStore::layout(&hash).clone();
+        let layout = hash.layout().expect("unrestricted store is dense").clone();
         for i in 0..6usize {
             layout.for_each(|idx, subset| {
                 if subset.contains(&i) {
@@ -711,7 +755,7 @@ mod tests {
     fn stored_keys_roundtrip_through_layout() {
         let data = small_data(7, 120, 205);
         let hash = HashScoreStore::build(&data, BdeParams::default(), 3, 2, None);
-        let layout = ScoreStore::layout(&hash).clone();
+        let layout = hash.layout().expect("unrestricted store is dense").clone();
         let mut buf = vec![0usize; layout.s().max(1)];
         for i in 0..7usize {
             let row = &hash.rows[i];
@@ -739,7 +783,7 @@ mod tests {
         let mut dense = ScoreTable::build(&data, params, 2, 1);
         dense.add_priors(&ppf);
         let hash = HashScoreStore::build(&data, params, 2, 1, Some(&ppf));
-        let layout = ScoreStore::layout(&hash).clone();
+        let layout = hash.layout().expect("unrestricted store is dense").clone();
         for i in 0..n {
             layout.for_each(|idx, subset| {
                 let h = hash.get(i, idx);
@@ -781,9 +825,9 @@ mod tests {
     }
 
     /// Restricted hash rows: values agree with the restricted dense
-    /// table wherever retained, pruning is dominance-only within the
-    /// pool space, and a full-pool restriction reads back exactly like
-    /// the unrestricted hash store through the global `get`.
+    /// table wherever retained, neither backend materializes a global
+    /// layout, and a full-pool restriction reads back exactly like the
+    /// unrestricted hash store through `score_of`.
     #[test]
     fn restricted_hash_matches_restricted_dense_and_unrestricted() {
         let data = small_data(8, 140, 208);
@@ -800,16 +844,26 @@ mod tests {
         let dense = ScoreTable::build_restricted_with(&data, params, &rl, &cfg);
         let hash = HashScoreStore::build_restricted_with(&data, params, &rl, &cfg, None);
         assert!(hash.restriction().is_some());
+        assert!(ScoreStore::layout(&hash).is_none(), "ragged store materialized a global layout");
+        assert!(dense.layout_opt().is_none(), "ragged table materialized a global layout");
         assert!(hash.stored_entries() <= dense.cells());
-        let layout = ScoreStore::layout(&hash).clone();
         for i in 0..8usize {
-            layout.for_each(|idx, subset| {
-                let d = ScoreStore::get(&dense, i, idx);
-                let h = ScoreStore::get(&hash, i, idx);
+            rl.for_each_row(i, |cell, subset| {
+                let d = dense.get_cell(i, cell);
+                let h = ScoreStore::get_cell(&hash, i, cell);
                 if h > NEG_SENTINEL {
                     assert_eq!(h, d, "i={i} subset={subset:?}");
                 }
+                // score_of resolves the subset through the pool to the
+                // same cell in both backends.
+                assert_eq!(ScoreStore::score_of(&hash, i, subset), h);
+                assert_eq!(dense.score_of(i, subset), d);
             });
+            // Out-of-pool subsets read the sentinel through score_of.
+            let outside = (0..8usize)
+                .find(|&v| v != i && rl.pool_position(i, v).is_none())
+                .expect("some node outside the pool");
+            assert_eq!(ScoreStore::score_of(&hash, i, &[outside]), NEG_SENTINEL);
             // The empty set survives pruning in every row.
             let empty_cell = rl.local(i).block_start(0) as usize;
             assert!(ScoreStore::get_cell(&hash, i, empty_cell) > NEG_SENTINEL);
@@ -840,9 +894,17 @@ mod tests {
         );
         let plain = HashScoreStore::build(&data, params, 3, 1, None);
         assert_eq!(full.stored_entries(), plain.stored_entries());
-        layout.for_each(|idx, _| {
+        let layout = plain.layout().expect("unrestricted store is dense").clone();
+        layout.for_each(|idx, subset| {
             for i in 0..8usize {
-                assert_eq!(ScoreStore::get(&full, i, idx), ScoreStore::get(&plain, i, idx));
+                // score_of bridges the two index spaces: pool resolution
+                // on the ragged side, global indexing on the dense side
+                // (self subsets read the sentinel through both).
+                assert_eq!(
+                    ScoreStore::score_of(&full, i, subset),
+                    ScoreStore::get(&plain, i, idx),
+                    "i={i} subset={subset:?}"
+                );
             }
         });
     }

@@ -42,7 +42,10 @@ pub const NEG_SENTINEL: f32 = -1.0e30;
 /// unrestricted, ragged `Σ_i C(k_i, ≤s)` rows when built over a
 /// [`RestrictedLayout`] (candidate-parent pools).
 pub struct ScoreTable {
-    layout: SubsetLayout,
+    /// Global dense layout — `Some` only for unrestricted builds. A
+    /// restricted table is natively ragged and never materializes the
+    /// global `C(n, ≤s)` translation table (DESIGN.md §16).
+    layout: Option<SubsetLayout>,
     n: usize,
     /// Unrestricted: row-major `data[i * S + j] = ls(i, subset_j)`.
     /// Restricted: concatenated ragged rows in restricted-cell order.
@@ -127,7 +130,7 @@ impl ScoreTable {
             counting.mode.name(),
             stats.summary()
         );
-        (ScoreTable { layout, n, data: table, restrict: None }, stats)
+        (ScoreTable { layout: Some(layout), n, data: table, restrict: None }, stats)
     }
 
     /// Restricted build: compute only the cells of each node's
@@ -197,10 +200,7 @@ impl ScoreTable {
             counting.mode.name(),
             stats.summary()
         );
-        (
-            ScoreTable { layout: rl.full().clone(), n, data: table, restrict: Some(rl.clone()) },
-            stats,
-        )
+        (ScoreTable { layout: None, n, data: table, restrict: Some(rl.clone()) }, stats)
     }
 
     /// Node count.
@@ -208,29 +208,45 @@ impl ScoreTable {
         self.n
     }
 
-    /// Subset layout (shared with scorers and the runtime upload).
+    /// Global dense subset layout (shared with scorers and the runtime
+    /// upload). Panics for restricted tables — the native ragged space
+    /// has no global layout; go through [`Self::restriction`] instead.
     pub fn layout(&self) -> &SubsetLayout {
-        &self.layout
+        self.layout.as_ref().expect(
+            "restricted score table is natively ragged and holds no global dense layout \
+             — address cells through restriction()/get_cell/score_of",
+        )
     }
 
-    /// Number of subsets per node row (the paper's S).
+    /// The layout as the `Option` it is: `None` for restricted builds.
+    pub fn layout_opt(&self) -> Option<&SubsetLayout> {
+        self.layout.as_ref()
+    }
+
+    /// Parent-set size bound `s`.
+    pub fn s(&self) -> usize {
+        match &self.restrict {
+            Some(rl) => rl.s(),
+            None => self.layout().s(),
+        }
+    }
+
+    /// Number of subsets per node row (the paper's S); dense only.
     pub fn subsets(&self) -> usize {
-        self.layout.total()
+        self.layout().total()
     }
 
     /// Score of `node` with the subset at **global** layout index `idx`.
-    /// Restricted tables translate the index into the node's pool space;
-    /// out-of-pool subsets read back as [`NEG_SENTINEL`] (they were
-    /// screened out of the hypothesis space).
+    /// Dense tables only — a restricted table has no global index space
+    /// and panics; pool-aware readers use [`Self::get_cell`] /
+    /// [`Self::score_of`].
     #[inline]
     pub fn get(&self, node: usize, idx: usize) -> f32 {
-        match &self.restrict {
-            None => self.data[node * self.layout.total() + idx],
-            Some(rl) => match rl.cell_from_global(node, idx) {
-                Some(cell) => self.data[rl.row_start(node) + cell],
-                None => NEG_SENTINEL,
-            },
-        }
+        assert!(
+            self.restrict.is_none(),
+            "global-index get on a native-ragged restricted table — use get_cell/score_of"
+        );
+        self.data[node * self.dense_total() + idx]
     }
 
     /// Direct read in the store's cell space: for unrestricted tables
@@ -239,9 +255,16 @@ impl ScoreTable {
     #[inline]
     pub fn get_cell(&self, node: usize, cell: usize) -> f32 {
         match &self.restrict {
-            None => self.data[node * self.layout.total() + cell],
+            None => self.data[node * self.dense_total() + cell],
             Some(rl) => self.data[rl.row_start(node) + cell],
         }
+    }
+
+    /// Subsets per dense row without touching the layout accessor's
+    /// panic path (`data` is exactly `n` rows).
+    #[inline]
+    fn dense_total(&self) -> usize {
+        self.data.len() / self.n
     }
 
     /// Score row of one node (restricted tables: the ragged pool row in
@@ -249,7 +272,7 @@ impl ScoreTable {
     pub fn row(&self, node: usize) -> &[f32] {
         match &self.restrict {
             None => {
-                let s = self.layout.total();
+                let s = self.dense_total();
                 &self.data[node * s..(node + 1) * s]
             }
             Some(rl) => {
@@ -276,8 +299,17 @@ impl ScoreTable {
     }
 
     /// Convenience: score of `node` with an explicit sorted parent set.
+    /// Works across both index spaces — restricted tables resolve the
+    /// subset through the pool ([`NEG_SENTINEL`] when any member is
+    /// outside it), dense tables through the global layout.
     pub fn score_of(&self, node: usize, parents: &[usize]) -> f32 {
-        self.get(node, self.layout.index_of(parents))
+        match &self.restrict {
+            Some(rl) => match rl.cell_index_of(node, parents) {
+                Some(cell) => self.data[rl.row_start(node) + cell],
+                None => NEG_SENTINEL,
+            },
+            None => self.get(node, self.layout().index_of(parents)),
+        }
     }
 
     /// Add the pairwise-prior contribution (Eq. 9): for every entry,
@@ -294,8 +326,8 @@ impl ScoreTable {
             }
             return;
         }
-        let total = self.layout.total();
-        let layout = self.layout.clone();
+        let layout = self.layout().clone();
+        let total = layout.total();
         for i in 0..n {
             let row = &mut self.data[i * total..(i + 1) * total];
             add_priors_to_row(&layout, i, ppf, row);
@@ -1260,11 +1292,15 @@ mod tests {
         let restricted =
             ScoreTable::build_restricted_with(&data, params, &rl, &ExecConfig::balanced(2));
         assert!(restricted.cells() < dense.cells());
+        assert!(restricted.layout_opt().is_none(), "ragged table materialized a global layout");
         let layout = dense.layout().clone();
         for i in 0..7usize {
             layout.for_each(|idx, subset| {
                 let want = dense.get(i, idx);
-                let got = restricted.get(i, idx);
+                // score_of bridges the index spaces: pool resolution on
+                // the ragged side (self subsets are out-of-pool and read
+                // the sentinel, matching the dense table's poison).
+                let got = restricted.score_of(i, subset);
                 if subset.contains(&i) {
                     assert_eq!(want, NEG_SENTINEL);
                     assert_eq!(got, NEG_SENTINEL);

@@ -19,11 +19,12 @@ use crate::score::{ScoreStore, ScoreTable};
 
 /// Bit-vector enumerate-and-filter order scorer over a bounded store.
 ///
-/// Over a restricted store the engine stays correct without a special
-/// path: every candidate mask reads through the global `get`, and
-/// out-of-pool subsets come back as the poison sentinel — never the
-/// argmax (the empty set is always in-pool). It keeps paying the full
-/// 2^n enumeration either way; that *is* the baseline's defining waste.
+/// Over a restricted store the engine resolves each candidate mask
+/// through the pool (`cell_index_of`) and reads the node's ragged row
+/// directly; out-of-pool masks are skipped — they were screened out of
+/// the hypothesis space (the empty set is always in-pool, so the argmax
+/// is well-defined). It keeps paying the full 2^n enumeration either
+/// way; that *is* the baseline's defining waste.
 pub struct BitVecScorer<'a, S: ScoreStore + ?Sized = ScoreTable> {
     store: &'a S,
     n: usize,
@@ -62,12 +63,14 @@ impl<'a, S: ScoreStore + ?Sized> BitVecScorer<'a, S> {
 
     /// Score the node at position `p`: scan all 2^n masks, filter the
     /// order-consistent ones (the baseline's defining waste), keep the
-    /// argmax. The layout reference is hoisted out of the mask loop —
-    /// `store.layout()` was previously one virtual call *per mask*.
+    /// argmax. The layout/restriction reference is hoisted out of the
+    /// mask loop — `store.layout()` was previously one virtual call
+    /// *per mask*.
     fn score_position(&mut self, order: &Order, p: usize, out: &mut BestGraph) -> f64 {
         let store = self.store;
-        let layout = store.layout();
-        let s = layout.s();
+        let s = store.s();
+        let restriction = store.restriction();
+        let layout = if restriction.is_none() { Some(store.dense_layout()) } else { None };
         let size = 1usize << self.n;
         let node = order.seq()[p];
         // Predecessor bitmask.
@@ -92,8 +95,16 @@ impl<'a, S: ScoreStore + ?Sized> BitVecScorer<'a, S> {
                 self.decode.push(m.trailing_zeros() as usize);
                 m &= m - 1;
             }
-            let idx = layout.index_of(&self.decode);
-            let ls = store.get(node, idx);
+            let ls = match restriction {
+                None => {
+                    let layout = layout.expect("dense store has a layout");
+                    store.get(node, layout.index_of(&self.decode))
+                }
+                Some(rl) => match rl.cell_index_of(node, &self.decode) {
+                    Some(cell) => store.get_cell(node, cell),
+                    None => continue, // screened out of the pool space
+                },
+            };
             if ls > best {
                 best = ls;
                 best_mask = mask;

@@ -109,10 +109,14 @@ struct RestrictedState {
 impl<'a, S: ScoreStore + ?Sized> SerialScorer<'a, S> {
     /// New engine over a preprocessed score store.
     pub fn new(store: &'a S) -> Self {
-        let layout = store.layout();
-        let (n, s) = (layout.n(), layout.s());
-        // offsets[k] = first index of the size-k block.
-        let offsets: Vec<u64> = (0..=s).map(|k| layout.block_start(k)).collect();
+        let (n, s) = (store.n(), store.s());
+        // offsets[k] = first index of the size-k block; only the dense
+        // path ranks in global space — a restricted store has no global
+        // layout to take block starts from.
+        let offsets: Vec<u64> = match store.layout() {
+            Some(layout) => (0..=s).map(|k| layout.block_start(k)).collect(),
+            None => Vec::new(),
+        };
         let restricted = store.restriction().map(|rl| {
             let mut ranks = Vec::with_capacity(n);
             let mut local_offsets = Vec::with_capacity(n);
@@ -169,8 +173,7 @@ impl<'a, S: ScoreStore + ?Sized> SerialScorer<'a, S> {
             return self.score_position_restricted(order, p, out);
         }
         let store = self.store;
-        let layout = store.layout();
-        let s = layout.s();
+        let s = store.s();
         let node = order.seq()[p];
         // Sorted candidate parents = the p predecessors.
         self.preds.clear();
@@ -279,7 +282,7 @@ impl<'a, S: ScoreStore + ?Sized> SerialScorer<'a, S> {
 
 impl<S: ScoreStore + ?Sized> OrderScorer for SerialScorer<'_, S> {
     fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
-        let n = self.store.layout().n();
+        let n = self.store.n();
         debug_assert_eq!(order.n(), n);
         debug_assert_eq!(out.n(), n);
 
@@ -429,8 +432,14 @@ mod tests {
             sizes: Vec<u8>,
         }
         impl ScoreStore for SizeStore {
-            fn layout(&self) -> &SubsetLayout {
-                &self.layout
+            fn layout(&self) -> Option<&SubsetLayout> {
+                Some(&self.layout)
+            }
+            fn n(&self) -> usize {
+                self.layout.n()
+            }
+            fn s(&self) -> usize {
+                self.layout.s()
             }
             fn get(&self, _node: usize, idx: usize) -> f32 {
                 self.sizes[idx] as f32

@@ -33,7 +33,7 @@ pub struct SumScorer<'a, S: ScoreStore + ?Sized = ScoreTable> {
 impl<'a, S: ScoreStore + ?Sized> SumScorer<'a, S> {
     /// New engine over a preprocessed score store.
     pub fn new(store: &'a S) -> Self {
-        let layout = store.layout();
+        let layout = store.dense_layout();
         let (n, s) = (layout.n(), layout.s());
         let offsets: Vec<u64> = (0..=s).map(|k| layout.block_start(k)).collect();
         SumScorer {
@@ -56,7 +56,7 @@ impl<S: ScoreStore + ?Sized> SumScorer<'_, S> {
         let max_ls = self.ranks.score_node(order, p, out);
 
         let store = self.store;
-        let layout = store.layout();
+        let layout = store.dense_layout();
         let s = layout.s();
         let ln10 = std::f64::consts::LN_10;
         let node = order.seq()[p];
@@ -92,7 +92,7 @@ impl<S: ScoreStore + ?Sized> SumScorer<'_, S> {
 impl<S: ScoreStore + ?Sized> OrderScorer for SumScorer<'_, S> {
     fn score_order(&mut self, order: &Order, out: &mut BestGraph) -> f64 {
         // The sum-based order score, log-sum-exp per node in log10 space.
-        let n = self.store.layout().n();
+        let n = self.store.n();
         let mut total = 0f64;
         for p in 0..n {
             total += self.lse_position(order, p, out);

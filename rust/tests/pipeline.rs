@@ -225,7 +225,7 @@ fn dense_and_hash_stores_agree_on_30_node_network() {
 fn hash_store_poisons_self_parent_subsets() {
     let (data, table, _) = workload(8, 120, 77);
     let hash = HashScoreStore::build(&data, BdeParams::default(), 3, 2, None);
-    let layout = ScoreStore::layout(&hash).clone();
+    let layout = ScoreStore::layout(&hash).expect("unrestricted store is dense").clone();
     for i in 0..8usize {
         layout.for_each(|idx, subset| {
             if subset.contains(&i) {

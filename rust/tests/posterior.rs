@@ -25,7 +25,7 @@ fn tiny_workload(n: usize, s: usize, rows: usize, seed: u64) -> (Dataset, ScoreT
 /// every DAG consistent with it (the product of per-node parent-set
 /// choices), in plain f64 arithmetic.
 fn brute_force_marginals(table: &ScoreTable, order: &Order) -> Vec<f64> {
-    let layout = ScoreStore::layout(table);
+    let layout = ScoreStore::layout(table).expect("unrestricted table is dense");
     let n = layout.n();
     let s = layout.s();
 

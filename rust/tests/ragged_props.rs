@@ -1,0 +1,95 @@
+//! Property tests of the native ragged score space at scale (DESIGN.md
+//! §16): for random candidate pools at n ∈ {64, 128} —
+//!
+//! * global ⇄ local addressing round-trips: every `(node, cell)` decodes
+//!   to a sorted in-pool subset that indexes back to the same cell, and
+//!   the flat u64 cell ids are dense, ordered, and invertible;
+//! * ragged tile plans cover every cell of the concatenated rows exactly
+//!   once for any tile size — the invariant the restricted store builds
+//!   split their buffers on;
+//! * out-of-pool subsets have no cell (the screened space is closed).
+//!
+//! The companion trajectory property — full pools reproduce the
+//! unrestricted pipeline bit for bit — lives in `tests/restrict.rs`.
+
+use bnlearn::combinatorics::RestrictedLayout;
+use bnlearn::exec::{plan_ragged_tiles, ragged_cell_count};
+use bnlearn::util::Pcg32;
+
+/// Random sorted self-free pools of ~k candidates per node.
+fn random_pools(n: usize, k: usize, rng: &mut Pcg32) -> Vec<Vec<usize>> {
+    (0..n)
+        .map(|i| {
+            let mut pool = Vec::with_capacity(k);
+            while pool.len() < k {
+                let v = rng.gen_range(n);
+                if v != i && !pool.contains(&v) {
+                    pool.push(v);
+                }
+            }
+            pool.sort_unstable();
+            pool
+        })
+        .collect()
+}
+
+#[test]
+fn global_local_roundtrip_at_scale() {
+    for (n, k, seed) in [(64usize, 8usize, 0xA1u64), (128, 8, 0xA2), (128, 12, 0xA3)] {
+        let mut rng = Pcg32::new(seed);
+        let rl = RestrictedLayout::new(n, 3, random_pools(n, k, &mut rng));
+        let mut buf = [0usize; bnlearn::combinatorics::restricted::MAX_S];
+        let mut next_id = 0u64;
+        for node in 0..n {
+            for cell in 0..rl.row_len(node) {
+                // subset round-trip
+                let subset = rl.subset_of(node, cell, &mut buf).to_vec();
+                assert!(subset.windows(2).all(|w| w[0] < w[1]), "n={n} node={node}");
+                assert!(!subset.contains(&node));
+                assert!(subset.iter().all(|&p| rl.pool_position(node, p).is_some()));
+                assert_eq!(rl.cell_index_of(node, &subset), Some(cell), "n={n} node={node}");
+                // flat id round-trip: dense, ordered, invertible
+                let id = rl.cell_id(node, cell);
+                assert_eq!(id, next_id, "ids must be dense front-to-back");
+                assert_eq!(rl.node_of_id(id), (node, cell));
+                next_id += 1;
+            }
+            // out-of-pool singleton reads back as "no cell"
+            if let Some(out) = (0..n).find(|&v| v != node && rl.pool_position(node, v).is_none())
+            {
+                assert_eq!(rl.cell_index_of(node, &[out]), None);
+            }
+        }
+        assert_eq!(next_id, rl.total_cells() as u64);
+        // the checked planner arithmetic agrees with the layout
+        assert_eq!(ragged_cell_count(&rl.row_lens()), Some(rl.total_cells() as u64));
+    }
+}
+
+#[test]
+fn ragged_tile_plans_cover_every_cell_exactly_once_at_scale() {
+    for (n, k, seed) in [(64usize, 8usize, 0xB1u64), (128, 8, 0xB2)] {
+        let mut rng = Pcg32::new(seed);
+        let rl = RestrictedLayout::new(n, 3, random_pools(n, k, &mut rng));
+        let row_lens = rl.row_lens();
+        for tile in [0usize, 1, 7, 64, 100_000] {
+            let tiles = plan_ragged_tiles(&row_lens, tile);
+            let mut covered = vec![0usize; n];
+            let mut expect_start = vec![0usize; n];
+            let mut flat = 0u64;
+            for t in &tiles {
+                assert!(t.start < t.end && t.end <= row_lens[t.node], "{t:?}");
+                assert_eq!(t.start, expect_start[t.node], "gap/overlap at {t:?}");
+                // tile cells map onto the flat u64 id space in order
+                assert_eq!(rl.cell_id(t.node, t.start), flat, "{t:?}");
+                expect_start[t.node] = t.end;
+                covered[t.node] += t.cells();
+                flat += t.cells() as u64;
+            }
+            assert_eq!(covered, row_lens, "n={n} tile={tile}");
+            assert_eq!(flat, rl.total_cells() as u64);
+            // row-major emission: node ids never decrease
+            assert!(tiles.windows(2).all(|w| w[0].node <= w[1].node));
+        }
+    }
+}

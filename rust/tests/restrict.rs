@@ -83,7 +83,7 @@ fn alarm_screening_recall_at_default_k() {
         let rl = build_restriction(
             &w.data,
             4,
-            RestrictKind::Mi { k: RestrictKind::DEFAULT_K },
+            RestrictKind::Mi { k: RestrictKind::DEFAULT_K, mmpc: false },
             0.05,
             None,
             exec.as_ref(),
@@ -114,7 +114,7 @@ fn tiled64_restricted_learn_end_to_end() {
         chains: 2,
         s: 3,
         seed: 23,
-        restrict: RestrictKind::Mi { k: 8 },
+        restrict: RestrictKind::Mi { k: 8, mmpc: false },
         ..RunConfig::default()
     };
     let report = run_learning(&cfg, None).unwrap();
@@ -153,6 +153,69 @@ fn tiled64_restricted_learn_end_to_end() {
     );
 }
 
+/// The first native-ragged run past the old u32 / n = 64 key-space
+/// ceiling: `--restrict mi:8+mmpc` learns the 128-node tiled network
+/// end to end with **no global dense `SubsetLayout` allocated** — the
+/// acceptance stat is `LearnReport::layout_bytes`, the resident bytes
+/// of the per-node ragged layout, which stays KB-scale where the dense
+/// `[128 × C(128, ≤3)]` translation grid alone would be ~180 MB.
+#[test]
+fn tiled128_native_ragged_learn_end_to_end() {
+    let cfg = RunConfig {
+        network: "tiled128".into(),
+        rows: 600,
+        iters: 800,
+        chains: 2,
+        s: 3,
+        seed: 41,
+        restrict: RestrictKind::Mi { k: 8, mmpc: true },
+        ..RunConfig::default()
+    };
+    let report = run_learning(&cfg, None).unwrap();
+    assert_eq!(report.restrict, "mi:8+mmpc");
+
+    // no-global-dense-table stat: the ragged layout (pools + per-node
+    // local layouts + row offsets) must stay under a megabyte resident.
+    let layout_bytes = report.layout_bytes.expect("restricted run reports layout bytes");
+    assert!(layout_bytes > 0);
+    assert!(layout_bytes < 1 << 20, "ragged layout {layout_bytes}B not KB-scale");
+
+    // the score store itself sits orders of magnitude below the dense
+    // grid this n would need (capacity query — nothing dense allocated).
+    let dense_cells = bnlearn::combinatorics::SubsetLayout::capacity(128, 3)
+        .expect("C(128, ≤3) fits u64") as usize;
+    let dense_bytes = 128 * dense_cells * std::mem::size_of::<f32>();
+    assert!(
+        report.store_bytes * 100 <= dense_bytes,
+        "restricted store {}B not 100x below dense {dense_bytes}B",
+        report.store_bytes
+    );
+
+    // the run actually learned: a best graph exists and recovers signal
+    // with few false positives (bounds deliberately loose — this is a
+    // smoke test, the calibrated numbers live in benches/ablation_scale).
+    assert!(report.result.best_dag().is_some());
+    assert!(report.roc.tpr > 0.10, "TPR {}", report.roc.tpr);
+    assert!(report.roc.fpr < 0.05, "FPR {}", report.roc.fpr);
+
+    // the two-pass screen (G² top-k + MMPC conditional prune) keeps the
+    // layered truth reachable at n = 128.
+    let w = Workload::build(&cfg.network, cfg.rows, 0.0, cfg.seed).unwrap();
+    let exec = ExecConfig::balanced(2).executor();
+    let rl = build_restriction(&w.data, 3, cfg.restrict, 0.05, None, exec.as_ref()).unwrap();
+    let (mut hits, mut total) = (0usize, 0usize);
+    for &(from, to) in w.truth_dag().edges().iter() {
+        total += 1;
+        if rl.pool(to).contains(&from) {
+            hits += 1;
+        }
+    }
+    assert!(
+        hits as f64 >= 0.75 * total as f64,
+        "tiled128 mmpc pool recall {hits}/{total} below 0.75"
+    );
+}
+
 /// Restriction honours priors end to end: a prior-encouraged edge whose
 /// parent the screen would drop still ends up scoreable (in-pool).
 #[test]
@@ -163,7 +226,7 @@ fn prior_encouraged_edges_stay_scoreable_under_restriction() {
     let mut m = InterfaceMatrix::unbiased(12);
     m.set(5, 9, 0.95); // user is confident in 9 → 5
     // k=1 pools are as hostile to weak edges as screening gets.
-    let kind = RestrictKind::Mi { k: 1 };
+    let kind = RestrictKind::Mi { k: 1, mmpc: false };
     let rl = build_restriction(&w.data, 3, kind, 0.05, Some(&m), exec.as_ref()).unwrap();
     assert!(rl.pool(5).contains(&9), "prior-encouraged parent screened out");
 }
