@@ -99,6 +99,21 @@ pub fn store_mb(store: &dyn ScoreStore) -> f64 {
     store.bytes() as f64 / (1024.0 * 1024.0)
 }
 
+/// Process peak resident set in bytes for the `peak_resident_bytes`
+/// bench columns (0 when the probe is unavailable off Linux — a real
+/// watermark is never 0, so the sentinel is unambiguous in the CSVs).
+pub fn peak_rss_bytes() -> usize {
+    bnlearn::util::procinfo::peak_resident_bytes().unwrap_or(0)
+}
+
+/// The same watermark formatted for markdown tables (`n/a` off Linux).
+pub fn peak_rss_mb() -> String {
+    match bnlearn::util::procinfo::peak_resident_bytes() {
+        Some(b) => format!("{:.1}", b as f64 / (1024.0 * 1024.0)),
+        None => "n/a".into(),
+    }
+}
+
 /// Format seconds like the paper's tables (seconds with enough digits).
 pub fn fmt_s(secs: f64) -> String {
     if secs < 1e-3 {

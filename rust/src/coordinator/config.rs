@@ -141,6 +141,11 @@ pub struct RunConfig {
     /// Row-chunk size of the chunked counting path (`--chunk-rows N`;
     /// 0 = auto-engage on large datasets). Prefix mode only.
     pub chunk_rows: usize,
+    /// Consult the process-shared cross-tile count cache during store
+    /// builds (`--count-cache on|off`, default on). Pure work saving:
+    /// stores are bit-identical either way, and the cache self-bypasses
+    /// below its row threshold, so small runs never pay for it.
+    pub count_cache: bool,
     /// Log verbosity (`--log-level debug` adds the per-tile timing
     /// histogram of every store build).
     pub log_level: Level,
@@ -192,6 +197,7 @@ impl Default for RunConfig {
             tile: 0,
             counting: CountingMode::Prefix,
             chunk_rows: 0,
+            count_cache: true,
             log_level: Level::Info,
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             posterior: false,
@@ -239,9 +245,18 @@ impl RunConfig {
         cfg
     }
 
-    /// The counting-engine configuration store builds run with.
+    /// The counting-engine configuration store builds run with. With
+    /// `--count-cache on` (the default) the process-shared count cache
+    /// rides along, keyed under this config's dataset fingerprint.
     pub fn counting_config(&self) -> CountingConfig {
-        CountingConfig { mode: self.counting, chunk_rows: self.chunk_rows }
+        let cc = CountingConfig { mode: self.counting, chunk_rows: self.chunk_rows, cache: None };
+        if !self.count_cache {
+            return cc;
+        }
+        cc.with_cache(crate::score::adcache::CountCacheRef {
+            cache: crate::score::adcache::shared(),
+            dataset_key: crate::coordinator::fingerprint::dataset_fingerprint(self),
+        })
     }
 
     /// Parse `--key value` pairs (after the subcommand) into a config.
@@ -273,6 +288,7 @@ impl RunConfig {
                 "--tile" => cfg.tile = next()?.parse()?,
                 "--counting" => cfg.counting = CountingMode::parse(next()?)?,
                 "--chunk-rows" => cfg.chunk_rows = next()?.parse()?,
+                "--count-cache" => cfg.count_cache = parse_on_off(next()?)?,
                 "--log-level" => cfg.log_level = Level::parse(next()?)?,
                 "--artifacts" => cfg.artifacts_dir = next()?.into(),
                 // boolean flags take no value
@@ -449,6 +465,22 @@ mod tests {
         // bad values rejected
         assert!(RunConfig::from_args(&args("--counting magic")).is_err());
         assert!(RunConfig::from_args(&args("--chunk-rows lots")).is_err());
+    }
+
+    #[test]
+    fn parses_count_cache_flag() {
+        let off = RunConfig::from_args(&args("--count-cache off")).unwrap();
+        assert!(!off.count_cache);
+        assert!(off.counting_config().cache.is_none());
+        let on = RunConfig::from_args(&args("--count-cache on")).unwrap();
+        assert!(on.count_cache);
+        let cc = on.counting_config();
+        let cache = cc.cache.expect("cache attached when on");
+        assert_eq!(cache.dataset_key, crate::coordinator::dataset_fingerprint(&on));
+        // default on; equality ignores the attachment
+        assert!(RunConfig::default().count_cache);
+        assert_eq!(cc, CountingConfig::prefix());
+        assert!(RunConfig::from_args(&args("--count-cache maybe")).is_err());
     }
 
     #[test]

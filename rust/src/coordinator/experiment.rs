@@ -66,6 +66,10 @@ pub struct LearnReport {
     /// Total effective sample size over the chain traces (needs
     /// `--trace`).
     pub ess: Option<f64>,
+    /// Process peak resident set (`VmHWM`) sampled when the report is
+    /// assembled — the bounded-memory acceptance number for out-of-core
+    /// runs. Best-effort: `None` off Linux.
+    pub peak_resident_bytes: Option<usize>,
 }
 
 impl LearnReport {
@@ -89,8 +93,12 @@ impl LearnReport {
             Some(mean) => format!(" restrict={}(pool≈{mean:.1})", self.restrict),
             None => String::new(),
         };
+        let peak = match self.peak_resident_bytes {
+            Some(b) => format!(" peakRSS={:.1}MB", b as f64 / (1024.0 * 1024.0)),
+            None => String::new(),
+        };
         format!(
-            "net={} n={} engine={} store={}({:.1}MB){} iters={} chains={} | score={} TPR={:.3} FPR={:.4} SHD={} | preproc={:.2}s setup={:.2}s sample={:.2}s ({:.3}ms/iter) accept={:.2}{}",
+            "net={} n={} engine={} store={}({:.1}MB){} iters={} chains={} | score={} TPR={:.3} FPR={:.4} SHD={} | preproc={:.2}s setup={:.2}s sample={:.2}s ({:.3}ms/iter) accept={:.2}{}{}",
             self.config.network,
             n,
             self.config.engine.name(),
@@ -109,6 +117,7 @@ impl LearnReport {
             self.per_iter_secs * 1e3,
             self.result.stats.accept_rate(),
             diag,
+            peak,
         )
     }
 }
@@ -288,6 +297,7 @@ pub fn run_learning_with_store(
         layout_bytes: store.restriction().map(|rl| rl.layout_bytes()),
         psrf,
         ess,
+        peak_resident_bytes: crate::util::procinfo::peak_resident_bytes(),
     })
 }
 

@@ -74,6 +74,25 @@ pub fn store_fingerprint(cfg: &RunConfig) -> u64 {
     fnv1a(&format!("store|{}|seed:{}", store_fields(cfg), cfg.seed))
 }
 
+/// Identity of the *dataset* a config resolves — network spec, rows,
+/// noise, and the seed that drives wiring and sampling. The count
+/// cache ([`crate::score::adcache`]) scopes its keys under this, so
+/// the same contingency counts serve every store shape built over the
+/// same data (different `s`, restriction, backend, counting mode)
+/// while different data can never collide. Deliberately a strict
+/// subset of [`store_fingerprint`]'s fields: anything that only
+/// changes *which* counts get queried — never their values — stays
+/// out.
+pub fn dataset_fingerprint(cfg: &RunConfig) -> u64 {
+    fnv1a(&format!(
+        "dataset|{}|{}|{}|{}",
+        cfg.network,
+        cfg.rows,
+        cfg.noise.to_bits(),
+        cfg.seed
+    ))
+}
+
 /// Checkpoint identity of a posterior trajectory (see module docs).
 /// `--iters`, chain-independent knobs like `--threshold`, output
 /// paths, and `--delta` (bit-for-bit identical either way) are
@@ -132,6 +151,30 @@ mod tests {
         assert_eq!(plain, store_fingerprint(&iters));
         let proposal = RunConfig { proposal: ProposalKind::Adjacent, ..base() };
         assert_eq!(plain, store_fingerprint(&proposal));
+    }
+
+    /// The dataset fingerprint moves with the data axes only — store
+    /// shape, counting engine, and consumers all map to the same data.
+    #[test]
+    fn dataset_fingerprint_tracks_data_axes_only() {
+        let plain = dataset_fingerprint(&base());
+        for moved in [
+            RunConfig { network: "alarm".into(), ..base() },
+            RunConfig { rows: 999, ..base() },
+            RunConfig { noise: 0.05, ..base() },
+            RunConfig { seed: 99, ..base() },
+        ] {
+            assert_ne!(plain, dataset_fingerprint(&moved));
+        }
+        for same in [
+            RunConfig { s: 2, ..base() },
+            RunConfig { store: crate::coordinator::StoreKind::Hash, ..base() },
+            RunConfig { counting: CountingMode::Naive, ..base() },
+            RunConfig { chunk_rows: 64, ..base() },
+            RunConfig { restrict: RestrictKind::Mi { k: 4, mmpc: false }, ..base() },
+        ] {
+            assert_eq!(plain, dataset_fingerprint(&same));
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub use experiment::{
     run_learning_with_store, run_posterior, run_posterior_controlled, run_posterior_on,
     run_posterior_with_store, LearnReport, PosteriorReport,
 };
-pub use fingerprint::{posterior_fingerprint, store_fingerprint};
+pub use fingerprint::{dataset_fingerprint, posterior_fingerprint, store_fingerprint};
 pub use registry::{
     build_store, build_store_restricted, build_store_stats, build_store_with, make_engine,
     StoreHandle,

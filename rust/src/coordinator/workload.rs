@@ -21,9 +21,27 @@ pub struct Workload {
 
 impl Workload {
     /// Build from a spec: a repository name (`alarm`, `sachs`, `asia`,
-    /// `child`) or `random:<n>:<edges>[:<states>]`.
+    /// `child`), `random:<n>:<edges>[:<states>]`, or `bnd:<path>` — an
+    /// ingested `.bnd` file served straight from its mmap (`rows`
+    /// truncates to a logical prefix; `0` = every stored row).
     pub fn build(spec: &str, rows: usize, noise: f64, seed: u64) -> Result<Self> {
         let mut rng = Pcg32::new(seed);
+        if let Some(path) = spec.strip_prefix("bnd:") {
+            if noise > 0.0 {
+                bail!("noise is unsupported for bnd: datasets — perturb before ingesting");
+            }
+            let data = Dataset::load_bnd(path, Some(rows))
+                .with_context(|| format!("opening bnd dataset {path:?}"))?;
+            // External data has no generating network; an edgeless
+            // placeholder keeps truth-relative metrics well-defined
+            // (SHD against it is just the learned edge count).
+            let truth = Network::with_random_cpts(
+                Dag::empty(data.cols()),
+                data.arities().to_vec(),
+                &mut rng,
+            );
+            return Ok(Workload { spec: spec.to_string(), truth, data });
+        }
         let truth = resolve_network(spec, &mut rng)?;
         let mut data = forward_sample(&truth, rows, &mut rng);
         if noise > 0.0 {
@@ -117,5 +135,26 @@ mod tests {
         assert!(Workload::build("nope", 10, 0.0, 1).is_err());
         assert!(Workload::build("random:x:y", 10, 0.0, 1).is_err());
         assert!(Workload::build("random:5", 10, 0.0, 1).is_err());
+    }
+
+    #[test]
+    fn builds_mapped_bnd_workload() {
+        let sampled = Workload::build("asia", 200, 0.0, 11).unwrap();
+        let path = std::env::temp_dir().join("bnlearn_workload_test.bnd");
+        sampled.data.save_bnd(&path).unwrap();
+        let spec = format!("bnd:{}", path.display());
+        // rows = 0 maps every stored row; a positive count is a prefix.
+        let full = Workload::build(&spec, 0, 0.0, 1).unwrap();
+        assert!(full.data.is_mapped());
+        assert_eq!(full.data, sampled.data);
+        assert_eq!(full.n(), sampled.n());
+        assert_eq!(full.truth_dag().edge_count(), 0, "placeholder truth is edgeless");
+        let prefix = Workload::build(&spec, 50, 0.0, 1).unwrap();
+        assert_eq!(prefix.data.rows(), 50);
+        assert_eq!(prefix.data.column(0), &sampled.data.column(0)[..50]);
+        // More rows than stored, and noise, are loud errors.
+        assert!(Workload::build(&spec, 999, 0.0, 1).is_err());
+        assert!(Workload::build(&spec, 0, 0.1, 1).is_err());
+        let _ = std::fs::remove_file(path);
     }
 }

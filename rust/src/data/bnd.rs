@@ -1,0 +1,454 @@
+//! The packed on-disk dataset format (`.bnd`) and its mmap-backed
+//! reader — the out-of-core half of the big-N storage story.
+//!
+//! A `.bnd` file is the [`crate::data::Dataset`] laid out exactly the
+//! way the counting engines walk it: **column-major**, one contiguous
+//! u8 run per variable, behind a tiny fixed header. Mapping the file
+//! read-only makes `Dataset::column` a pointer into the page cache, so
+//! a 10⁷-row build touches pages on demand instead of materializing
+//! ~10⁷·n cells on the heap — resident memory is bounded by the kernel
+//! page cache's working set, not the dataset size.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size      field
+//! 0       4         magic "BND1"
+//! 4       1         cell width in bytes (1 or 2; only 1 is produced
+//!                   and accepted today — `Dataset` cells are u8)
+//! 5       4         cols (u32)
+//! 9       8         rows (u64)
+//! 17      2·cols    per-column arity (u16, >= 1)
+//! 17+2c   cols·rows column-major cell payload
+//! ```
+//!
+//! Writers: [`save`] serializes an in-memory dataset (benches/tests);
+//! [`ingest_csv`] converts a CSV **streaming in two passes** at bounded
+//! memory (the `bnlearn ingest` subcommand) — pass 1 counts rows and
+//! infers arities line-by-line, pass 2 re-reads the rows in
+//! `block_rows`-row blocks and scatters each block to the per-column
+//! file offsets, so peak heap is `cols · block_rows` bytes no matter
+//! how many rows the CSV holds.
+//!
+//! The loader trusts the header it validated at ingest time: cell
+//! values are *not* re-scanned against their arity on open (that would
+//! fault in the whole file and defeat the point). A corrupt payload
+//! cell fails later with a bounds-check panic in the counting kernels,
+//! never undefined behaviour.
+
+use std::fs::{self, File};
+use std::io::{self, BufRead, BufReader, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::Dataset;
+
+/// File magic: `.bnd` version 1.
+pub const MAGIC: [u8; 4] = *b"BND1";
+
+/// Default row-block size for [`ingest_csv`] (`block_rows == 0`).
+pub const DEFAULT_BLOCK_ROWS: usize = 1 << 16;
+
+/// Fixed header length up to (not including) the arity table.
+const FIXED_HEADER: usize = 4 + 1 + 4 + 8;
+
+fn header_len(cols: usize) -> usize {
+    FIXED_HEADER + 2 * cols
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::other(msg.into())
+}
+
+// ---- mmap ----
+
+/// A read-only mapping of a whole file. On unix this is `mmap(2)`
+/// called through a raw `extern "C"` binding (no libc crate in the
+/// offline dependency set — the same idiom as the CLI's `signal(2)`
+/// handler); elsewhere it degrades to reading the file onto the heap,
+/// keeping the API portable if not out-of-core.
+#[cfg(unix)]
+mod region {
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    pub struct MapRegion {
+        ptr: *mut u8,
+        len: usize,
+    }
+
+    // The mapping is PROT_READ/MAP_PRIVATE and never mutated after
+    // construction, so shared references from any thread are fine.
+    unsafe impl Send for MapRegion {}
+    unsafe impl Sync for MapRegion {}
+
+    impl MapRegion {
+        pub fn map(file: &File, len: usize) -> io::Result<Self> {
+            if len == 0 {
+                return Ok(MapRegion { ptr: std::ptr::null_mut(), len: 0 });
+            }
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(MapRegion { ptr, len })
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            if self.len == 0 {
+                &[]
+            } else {
+                unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+            }
+        }
+    }
+
+    impl Drop for MapRegion {
+        fn drop(&mut self) {
+            if self.len != 0 {
+                unsafe {
+                    munmap(self.ptr, self.len);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod region {
+    use std::fs::File;
+    use std::io::{self, Read};
+
+    pub struct MapRegion {
+        buf: Vec<u8>,
+    }
+
+    impl MapRegion {
+        pub fn map(file: &File, len: usize) -> io::Result<Self> {
+            let mut buf = Vec::with_capacity(len);
+            let mut f = file;
+            f.read_to_end(&mut buf)?;
+            buf.truncate(len);
+            Ok(MapRegion { buf })
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            &self.buf
+        }
+    }
+}
+
+/// The mapped payload of an opened `.bnd` file: per-column slices
+/// served straight out of the mapping, page-granular.
+pub struct MappedColumns {
+    region: region::MapRegion,
+    payload: usize,
+    stored_rows: usize,
+    cols: usize,
+    path: PathBuf,
+}
+
+impl MappedColumns {
+    /// Rows physically present in the file (a `Dataset` view may use a
+    /// logical prefix of them).
+    pub fn stored_rows(&self) -> usize {
+        self.stored_rows
+    }
+
+    /// Variable count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The first `rows` cells of column `i` as a slice into the map.
+    pub fn column(&self, i: usize, rows: usize) -> &[u8] {
+        debug_assert!(i < self.cols && rows <= self.stored_rows);
+        let base = self.payload + i * self.stored_rows;
+        &self.region.as_slice()[base..base + rows]
+    }
+}
+
+impl std::fmt::Debug for MappedColumns {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MappedColumns")
+            .field("path", &self.path)
+            .field("cols", &self.cols)
+            .field("stored_rows", &self.stored_rows)
+            .finish()
+    }
+}
+
+// ---- header ----
+
+fn write_header(w: &mut impl Write, cols: usize, rows: usize, states: &[usize]) -> io::Result<()> {
+    w.write_all(&MAGIC)?;
+    w.write_all(&[1u8])?;
+    w.write_all(&u32::try_from(cols).map_err(|_| bad("too many columns for .bnd"))?.to_le_bytes())?;
+    w.write_all(&(rows as u64).to_le_bytes())?;
+    for (i, &a) in states.iter().enumerate() {
+        if a == 0 || a > u16::MAX as usize {
+            return Err(bad(format!("column {i}: arity {a} outside .bnd's u16 range")));
+        }
+        w.write_all(&(a as u16).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Open a `.bnd` file: validate the header, map the whole file, return
+/// the mapped payload plus the per-column arities.
+pub fn open(path: impl AsRef<Path>) -> io::Result<(MappedColumns, Vec<usize>)> {
+    let path = path.as_ref();
+    let mut f = File::open(path)?;
+    let mut fixed = [0u8; FIXED_HEADER];
+    f.read_exact(&mut fixed).map_err(|_| bad(format!("{path:?}: truncated .bnd header")))?;
+    if fixed[..4] != MAGIC {
+        return Err(bad(format!("{path:?}: not a .bnd file (bad magic)")));
+    }
+    let width = fixed[4];
+    if width != 1 {
+        return Err(bad(format!("{path:?}: cell width {width} unsupported (only u8 cells today)")));
+    }
+    let cols = u32::from_le_bytes(fixed[5..9].try_into().unwrap()) as usize;
+    let rows64 = u64::from_le_bytes(fixed[9..17].try_into().unwrap());
+    let rows = usize::try_from(rows64).map_err(|_| bad("row count exceeds usize"))?;
+    let mut arity_bytes = vec![0u8; 2 * cols];
+    f.read_exact(&mut arity_bytes).map_err(|_| bad(format!("{path:?}: truncated arity table")))?;
+    let states: Vec<usize> = arity_bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]) as usize)
+        .collect();
+    if states.iter().any(|&a| a == 0) {
+        return Err(bad(format!("{path:?}: zero arity in header")));
+    }
+    let payload = header_len(cols);
+    let expected = payload as u64
+        + (cols as u64)
+            .checked_mul(rows64)
+            .ok_or_else(|| bad("payload size overflows u64"))?;
+    let actual = f.metadata()?.len();
+    if actual != expected {
+        return Err(bad(format!("{path:?}: file is {actual} bytes, header implies {expected}")));
+    }
+    f.seek(SeekFrom::Start(0))?;
+    let region = region::MapRegion::map(&f, expected as usize)?;
+    Ok((
+        MappedColumns { region, payload, stored_rows: rows, cols, path: path.to_path_buf() },
+        states,
+    ))
+}
+
+/// Serialize an in-memory dataset as `.bnd` (benches and tests; real
+/// big-N data arrives via [`ingest_csv`]).
+pub fn save(data: &Dataset, path: impl AsRef<Path>) -> io::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut w = io::BufWriter::new(File::create(path)?);
+    write_header(&mut w, data.cols(), data.rows(), data.arities())?;
+    for c in 0..data.cols() {
+        w.write_all(data.column(c))?;
+    }
+    w.flush()
+}
+
+/// Convert a CSV (the `Dataset::to_csv` dialect: `X0,X1,…` header, one
+/// u8 observation per line) to `.bnd`, streaming at bounded memory.
+///
+/// Pass 1 reads line-by-line to count rows, validate field counts, and
+/// infer per-column arities as `max+1`. Pass 2 re-reads the rows in
+/// blocks of `block_rows` (`0` = [`DEFAULT_BLOCK_ROWS`]) and writes
+/// each block's columns to their final offsets with positioned writes,
+/// so peak heap is `cols · block_rows` bytes. Returns `(cols, rows)`.
+pub fn ingest_csv(
+    csv: impl AsRef<Path>,
+    out: impl AsRef<Path>,
+    block_rows: usize,
+) -> io::Result<(usize, usize)> {
+    let csv = csv.as_ref();
+    let out = out.as_ref();
+    let block = if block_rows == 0 { DEFAULT_BLOCK_ROWS } else { block_rows };
+
+    // Pass 1: shape + arities.
+    let mut reader = BufReader::new(File::open(csv)?);
+    let mut header = String::new();
+    if reader.read_line(&mut header)? == 0 {
+        return Err(bad(format!("{csv:?}: empty csv")));
+    }
+    let cols = header.trim_end().split(',').count();
+    let mut maxv = vec![0u8; cols];
+    let mut rows = 0usize;
+    let mut line = String::new();
+    let mut lineno = 1usize;
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        lineno += 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut fields = 0usize;
+        for (c, fieldtext) in line.trim_end().split(',').enumerate() {
+            if c >= cols {
+                return Err(bad(format!("line {lineno}: too many fields")));
+            }
+            let v: u8 = fieldtext
+                .trim()
+                .parse()
+                .map_err(|e| bad(format!("line {lineno}: {e}")))?;
+            maxv[c] = maxv[c].max(v);
+            fields += 1;
+        }
+        if fields != cols {
+            return Err(bad(format!("line {lineno}: {fields} fields != {cols}")));
+        }
+        rows += 1;
+    }
+    let states: Vec<usize> = maxv.iter().map(|&m| m as usize + 1).collect();
+
+    // Write the header and pre-size the file so pass 2 can scatter
+    // blocks to their final positions.
+    if let Some(parent) = out.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut file = File::create(out)?;
+    {
+        let mut head = Vec::with_capacity(header_len(cols));
+        write_header(&mut head, cols, rows, &states)?;
+        file.write_all(&head)?;
+    }
+    let payload = header_len(cols) as u64;
+    file.set_len(payload + (cols as u64) * (rows as u64))?;
+
+    // Pass 2: block-buffered column scatter.
+    let mut reader = BufReader::new(File::open(csv)?);
+    let mut skip = String::new();
+    reader.read_line(&mut skip)?;
+    let mut bufs: Vec<Vec<u8>> = vec![Vec::with_capacity(block.min(rows.max(1))); cols];
+    let mut row_base = 0u64;
+    let mut flush = |file: &mut File, bufs: &mut Vec<Vec<u8>>, row_base: u64| -> io::Result<u64> {
+        let filled = bufs.first().map_or(0, |b| b.len()) as u64;
+        for (c, buf) in bufs.iter_mut().enumerate() {
+            file.seek(SeekFrom::Start(payload + (c as u64) * (rows as u64) + row_base))?;
+            file.write_all(buf)?;
+            buf.clear();
+        }
+        Ok(row_base + filled)
+    };
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        for (c, fieldtext) in line.trim_end().split(',').enumerate() {
+            // Pass 1 already validated; a file mutated between passes
+            // still can't write out of bounds.
+            let v: u8 = fieldtext.trim().parse().map_err(|e| bad(format!("{e}")))?;
+            bufs.get_mut(c).ok_or_else(|| bad("csv changed between passes"))?.push(v);
+        }
+        if bufs[0].len() >= block {
+            row_base = flush(&mut file, &mut bufs, row_base)?;
+        }
+    }
+    row_base = flush(&mut file, &mut bufs, row_base)?;
+    if row_base != rows as u64 {
+        return Err(bad(format!("csv changed between passes: {row_base} rows != {rows}")));
+    }
+    file.flush()?;
+    Ok((cols, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Dataset {
+        Dataset::from_columns(
+            vec![vec![0, 1, 2, 1, 0], vec![1, 0, 1, 1, 0], vec![3, 3, 0, 2, 1]],
+            vec![3, 2, 4],
+        )
+    }
+
+    #[test]
+    fn save_open_roundtrip() {
+        let d = sample();
+        let path = std::env::temp_dir().join("bnlearn_bnd_roundtrip.bnd");
+        save(&d, &path).unwrap();
+        let d2 = Dataset::load_bnd(&path, None).unwrap();
+        assert!(d2.is_mapped());
+        assert_eq!(d, d2);
+        // Logical truncation takes a row prefix.
+        let d3 = Dataset::load_bnd(&path, Some(3)).unwrap();
+        assert_eq!(d3.rows(), 3);
+        assert_eq!(d3.column(2), &d.column(2)[..3]);
+        assert!(Dataset::load_bnd(&path, Some(99)).is_err());
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn ingest_matches_in_memory_loader() {
+        let d = sample();
+        let dir = std::env::temp_dir();
+        let csv = dir.join("bnlearn_bnd_ingest.csv");
+        let bnd = dir.join("bnlearn_bnd_ingest.bnd");
+        d.save_csv(&csv).unwrap();
+        // Tiny block size forces multiple scatter flushes.
+        let (cols, rows) = ingest_csv(&csv, &bnd, 2).unwrap();
+        assert_eq!((cols, rows), (3, 5));
+        let mapped = Dataset::load_bnd(&bnd, None).unwrap();
+        // Ingest infers arity as max+1 — compare against the same
+        // inference on the CSV path.
+        let inmem = Dataset::load_csv(&csv, None).unwrap();
+        assert_eq!(mapped, inmem);
+        let _ = fs::remove_file(csv);
+        let _ = fs::remove_file(bnd);
+    }
+
+    #[test]
+    fn open_rejects_corrupt_headers() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("bnlearn_bnd_corrupt.bnd");
+        fs::write(&path, b"NOPE").unwrap();
+        assert!(open(&path).is_err());
+        // Right magic, truncated payload.
+        let d = sample();
+        save(&d, &path).unwrap();
+        let full = fs::read(&path).unwrap();
+        fs::write(&path, &full[..full.len() - 3]).unwrap();
+        assert!(open(&path).is_err());
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn empty_dataset_roundtrips() {
+        let d = Dataset::from_columns(vec![], vec![]);
+        let path = std::env::temp_dir().join("bnlearn_bnd_empty.bnd");
+        save(&d, &path).unwrap();
+        let d2 = Dataset::load_bnd(&path, None).unwrap();
+        assert_eq!(d2.rows(), 0);
+        assert_eq!(d2.cols(), 0);
+        let _ = fs::remove_file(path);
+    }
+}

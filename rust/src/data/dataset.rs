@@ -4,20 +4,51 @@
 //! handful of parent columns per local score — row-major would stride.
 //! States are `u8` (the paper's gene model uses 3 states; everything we
 //! learn has < 256).
+//!
+//! Storage is a [`DatasetBacking`]: either heap-resident columns
+//! (sampled workloads, CSV loads) or an mmap'd `.bnd` file
+//! ([`crate::data::bnd`]) whose columns are served page-granular
+//! straight out of the mapping — every consumer goes through
+//! [`Dataset::column`]/[`Dataset::chunks`] and never notices which.
 
 use std::fmt::Write as _;
 use std::fs;
 use std::io;
 use std::path::Path;
+use std::sync::Arc;
+
+use super::bnd;
+
+/// Where a dataset's cells live.
+#[derive(Debug, Clone)]
+pub enum DatasetBacking {
+    /// Heap-resident per-variable columns.
+    InMemory(Vec<Vec<u8>>),
+    /// A read-only mapping of a `.bnd` file; cloning shares the map.
+    Mapped(Arc<bnd::MappedColumns>),
+}
 
 /// Complete discrete data: `cols` variables × `rows` observations.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone)]
 pub struct Dataset {
-    columns: Vec<Vec<u8>>,
+    backing: DatasetBacking,
     /// Per-variable state count (arity).
     states: Vec<usize>,
     rows: usize,
 }
+
+// Equality is by content, not by backing: a mapped dataset equals the
+// in-memory dataset holding the same cells (the ingest round-trip test
+// depends on this).
+impl PartialEq for Dataset {
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows
+            && self.states == other.states
+            && (0..self.cols()).all(|c| self.column(c) == other.column(c))
+    }
+}
+
+impl Eq for Dataset {}
 
 impl Dataset {
     /// Build from per-variable columns; all columns must share a length
@@ -33,7 +64,7 @@ impl Dataset {
                 states[i]
             );
         }
-        Dataset { columns, states, rows }
+        Dataset { backing: DatasetBacking::InMemory(columns), states, rows }
     }
 
     /// Observations count.
@@ -43,7 +74,7 @@ impl Dataset {
 
     /// Variable count.
     pub fn cols(&self) -> usize {
-        self.columns.len()
+        self.states.len()
     }
 
     /// Arity of variable `i`.
@@ -56,20 +87,34 @@ impl Dataset {
         &self.states
     }
 
-    /// Full column of variable `i`.
-    pub fn column(&self, i: usize) -> &[u8] {
-        &self.columns[i]
+    /// Whether the cells live in an mmap'd `.bnd` file.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.backing, DatasetBacking::Mapped(_))
     }
 
-    /// Mutable column (noise injection).
+    /// Full column of variable `i`.
+    pub fn column(&self, i: usize) -> &[u8] {
+        match &self.backing {
+            DatasetBacking::InMemory(cols) => &cols[i],
+            DatasetBacking::Mapped(map) => map.column(i, self.rows),
+        }
+    }
+
+    /// Mutable column (noise injection). Mapped datasets are read-only;
+    /// perturb before ingesting instead.
     pub fn column_mut(&mut self, i: usize) -> &mut [u8] {
-        &mut self.columns[i]
+        match &mut self.backing {
+            DatasetBacking::InMemory(cols) => &mut cols[i],
+            DatasetBacking::Mapped(_) => {
+                panic!("column_mut on a mapped dataset: .bnd data is read-only")
+            }
+        }
     }
 
     /// Single cell.
     #[inline]
     pub fn value(&self, row: usize, col: usize) -> u8 {
-        self.columns[col][row]
+        self.column(col)[row]
     }
 
     /// Row-chunk ranges of at most `chunk_rows` rows each, covering
@@ -137,6 +182,30 @@ impl Dataset {
         });
         Ok(Dataset::from_columns(columns, states))
     }
+
+    /// Open a `.bnd` file as a mapped dataset. `rows` truncates to a
+    /// logical row prefix (`None`/`Some(0)` = all stored rows; more
+    /// rows than stored is an error — never silently short).
+    pub fn load_bnd(path: impl AsRef<Path>, rows: Option<usize>) -> io::Result<Self> {
+        let (map, states) = bnd::open(&path)?;
+        let stored = map.stored_rows();
+        let rows = match rows {
+            None | Some(0) => stored,
+            Some(r) if r <= stored => r,
+            Some(r) => {
+                return Err(io::Error::other(format!(
+                    "{:?} stores {stored} rows, {r} requested",
+                    path.as_ref()
+                )))
+            }
+        };
+        Ok(Dataset { backing: DatasetBacking::Mapped(Arc::new(map)), states, rows })
+    }
+
+    /// Serialize as `.bnd` (see [`crate::data::bnd`]).
+    pub fn save_bnd(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        bnd::save(self, path)
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +223,7 @@ mod tests {
         assert_eq!(d.cols(), 2);
         assert_eq!(d.arity(0), 3);
         assert_eq!(d.value(2, 0), 2);
+        assert!(!d.is_mapped());
     }
 
     #[test]
@@ -166,6 +236,33 @@ mod tests {
         let d3 = Dataset::load_csv(&path, None).unwrap();
         assert_eq!(d3.column(0), d.column(0));
         let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn bnd_roundtrip_is_content_equal() {
+        let d = tiny();
+        let path = std::env::temp_dir().join("bnlearn_ds_test.bnd");
+        d.save_bnd(&path).unwrap();
+        let m = Dataset::load_bnd(&path, None).unwrap();
+        assert!(m.is_mapped());
+        // Content equality crosses backings in both directions, and a
+        // clone of a mapped dataset shares the same map.
+        assert_eq!(d, m);
+        assert_eq!(m, d);
+        let m2 = m.clone();
+        assert_eq!(m2.column(1), m.column(1));
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    #[should_panic(expected = "read-only")]
+    fn mapped_rejects_mutation() {
+        let d = tiny();
+        let path = std::env::temp_dir().join("bnlearn_ds_mut.bnd");
+        d.save_bnd(&path).unwrap();
+        let mut m = Dataset::load_bnd(&path, None).unwrap();
+        let _ = fs::remove_file(&path);
+        m.column_mut(0)[0] = 1;
     }
 
     #[test]

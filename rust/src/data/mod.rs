@@ -1,7 +1,8 @@
 //! Datasets of discrete observations and their perturbations.
 
+pub mod bnd;
 pub mod dataset;
 pub mod noise;
 
-pub use dataset::Dataset;
+pub use dataset::{Dataset, DatasetBacking};
 pub use noise::inject_noise;

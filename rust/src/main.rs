@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   learn       run the full learning pipeline on a network spec
 //!   preprocess  time the score-table preprocessing stage only
+//!   ingest      convert a CSV dataset to packed column-major .bnd
 //!   serve       run the structure-learning service daemon
 //!   tables      print paper artifacts: --table1, --ppf, --pst-mem
 //!   info        show artifact manifest + environment
@@ -10,6 +11,8 @@
 //! Examples:
 //!   bnlearn learn --network alarm --rows 1000 --iters 5000 --engine xla
 //!   bnlearn learn --network random:20:25 --iters 10000 --noise 0.05
+//!   bnlearn ingest --csv data.csv --out data.bnd
+//!   bnlearn learn --network bnd:data.bnd --rows 0 --restrict mi:8
 //!   bnlearn serve --addr 127.0.0.1:4615 --jobs 2
 //!   bnlearn tables --table1
 
@@ -50,6 +53,7 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "learn" => cmd_learn(rest),
         "preprocess" => cmd_preprocess(rest),
+        "ingest" => cmd_ingest(rest),
         "serve" => cmd_serve(rest),
         "tables" => cmd_tables(rest),
         "info" => cmd_info(),
@@ -65,10 +69,12 @@ fn print_usage() {
     println!(
         "bnlearn — order-space MCMC Bayesian network structure learning\n\
          \n\
-         usage: bnlearn <learn|preprocess|serve|tables|info> [flags]\n\
+         usage: bnlearn <learn|preprocess|ingest|serve|tables|info> [flags]\n\
          \n\
          learn flags:\n\
-           --network <name|random:n:edges[:states]>  (default sachs)\n\
+           --network <name|random:n:edges[:states]|bnd:path>  (default sachs;\n\
+                            bnd: serves an ingested .bnd file page-granular from\n\
+                            mmap — --rows truncates to a prefix, 0 = all rows)\n\
            --rows N --iters N --chains N --engine serial|xla|bitvec|sum|recompute\n\
            --store dense|hash  (score-store backend; hash prunes dominated sets)\n\
            --proposal swap|adjacent|mixed  (MH move; adjacent = O(1) delta steps)\n\
@@ -89,6 +95,9 @@ fn print_usage() {
                             reference — bit-identical stores either way)\n\
            --chunk-rows N  (row-chunk size of the chunked counting path, 0 =\n\
                             auto-engage on large datasets; prefix mode only)\n\
+           --count-cache on|off  (cross-tile N_ijk count cache, default on;\n\
+                            bit-identical stores either way — off is for\n\
+                            ablation benches)\n\
            --log-level error|warn|info|debug  (debug adds per-tile timing histograms)\n\
            --trace [--trace-out PATH]  (record per-iteration score traces to CSV)\n\
          \n\
@@ -97,6 +106,14 @@ fn print_usage() {
            --checkpoint-every N --checkpoint PATH --resume PATH\n\
            (Ctrl-C cancels cooperatively: the run checkpoints its completed\n\
             prefix and the next invocation resumes it with --resume)\n\
+         \n\
+         ingest flags (stream a CSV into packed column-major .bnd):\n\
+           --csv PATH  (input; header row + integer states, as save_csv writes)\n\
+           --out PATH  (output .bnd; default = input with .bnd extension)\n\
+           --block-rows N  (rows buffered per column between flushes,\n\
+                            default 65536 — memory ceiling is cols x block)\n\
+           --network NAME --rows N [--seed N]  (instead of --csv: forward-sample\n\
+                            a repository network straight to --out)\n\
          \n\
          serve flags (long-running daemon; JSON-lines requests over TCP):\n\
            --addr HOST:PORT  (default 127.0.0.1:4615; port 0 picks a free port)\n\
@@ -304,6 +321,66 @@ fn cmd_preprocess(args: &[String]) -> Result<()> {
             None => "overflows u64".to_string(),
         },
     );
+    Ok(())
+}
+
+/// The `ingest` subcommand: stream a CSV into the packed `.bnd` format
+/// at bounded memory — or forward-sample a repository network straight
+/// to disk — so `learn --network bnd:<path>` can later serve the file
+/// from an mmap.
+fn cmd_ingest(args: &[String]) -> Result<()> {
+    let mut csv: Option<String> = None;
+    let mut network: Option<String> = None;
+    let mut rows = 0usize;
+    let mut seed = 0u64;
+    let mut out: Option<String> = None;
+    let mut block_rows = 0usize;
+    let mut it = args.iter();
+    while let Some(flag) = it.next() {
+        let mut next = || {
+            it.next().map(String::as_str).ok_or_else(|| anyhow::anyhow!("{flag} needs a value"))
+        };
+        match flag.as_str() {
+            "--csv" => csv = Some(next()?.to_string()),
+            "--network" => network = Some(next()?.to_string()),
+            "--rows" => rows = next()?.parse()?,
+            "--seed" => seed = next()?.parse()?,
+            "--out" => out = Some(next()?.to_string()),
+            "--block-rows" => block_rows = next()?.parse()?,
+            other => bail!(
+                "unknown ingest flag {other:?} (--csv, --network, --rows, --seed, --out, \
+                 --block-rows)"
+            ),
+        }
+    }
+    let timer = Timer::start();
+    let (out, cols, rows) = match (csv, network) {
+        (Some(_), Some(_)) => bail!("ingest takes --csv or --network, not both"),
+        (Some(csv), None) => {
+            let out = out.unwrap_or_else(|| {
+                Path::new(&csv).with_extension("bnd").to_string_lossy().into_owned()
+            });
+            let (cols, rows) = bnlearn::data::bnd::ingest_csv(&csv, &out, block_rows)?;
+            (out, cols, rows)
+        }
+        (None, Some(network)) => {
+            if rows == 0 {
+                bail!("ingest --network needs --rows N");
+            }
+            let Some(out) = out else { bail!("ingest --network needs --out PATH") };
+            let w = Workload::build(&network, rows, 0.0, seed)?;
+            w.data.save_bnd(&out)?;
+            (out, w.data.cols(), w.data.rows())
+        }
+        (None, None) => bail!("ingest needs --csv PATH or --network NAME"),
+    };
+    let bytes = std::fs::metadata(&out)?.len();
+    println!(
+        "ingested {rows} rows x {cols} cols -> {out} ({:.2} MB) in {:.3}s",
+        bytes as f64 / (1024.0 * 1024.0),
+        timer.elapsed_secs()
+    );
+    println!("learn from it with: bnlearn learn --network bnd:{out} --rows 0");
     Ok(())
 }
 

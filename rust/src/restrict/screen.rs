@@ -9,11 +9,23 @@
 //! test is a pure function of the two data columns, so the fan-out over
 //! workers is schedule-invariant: identical statistics for any
 //! `--threads`/`--schedule`/`--tile`.
+//!
+//! Counting streams through [`Dataset::chunks`] in
+//! [`SCREEN_CHUNK`]-row blocks: contingency accumulation is u32
+//! addition, so the chunk boundaries are invisible in the statistics,
+//! and on an mmap-backed (`bnd:`) dataset each test's working set is a
+//! bounded page window per column instead of the whole 10⁷-row run —
+//! `--restrict` screens big-N data without faulting it all in at once.
 
 use crate::data::Dataset;
 use crate::exec::KernelExecutor;
 use crate::priors::InterfaceMatrix;
 use crate::score::lgamma::lgamma;
+
+/// Row-block size for streaming contingency accumulation (u8 cells:
+/// 64 KiB per column per block — comfortably inside L2 even with a
+/// conditioning set in play).
+pub const SCREEN_CHUNK: usize = 1 << 16;
 
 /// Symmetric pairwise test results over all `n(n−1)/2` node pairs.
 pub struct PairScreen {
@@ -69,8 +81,10 @@ fn g2_pair(data: &Dataset, i: usize, j: usize) -> (f64, f64) {
         return (0.0, 1.0);
     }
     let mut counts = vec![0u32; ri * rj];
-    for (&a, &b) in ci.iter().zip(cj) {
-        counts[a as usize * rj + b as usize] += 1;
+    for range in data.chunks(SCREEN_CHUNK) {
+        for (&a, &b) in ci[range.clone()].iter().zip(&cj[range]) {
+            counts[a as usize * rj + b as usize] += 1;
+        }
     }
     let mut row_tot = vec![0u64; ri];
     let mut col_tot = vec![0u64; rj];
@@ -280,15 +294,25 @@ fn g2_cond(data: &Dataset, i: usize, j: usize, cond: &[usize]) -> Option<(f64, f
         return None;
     }
     let (ci, cj) = (data.column(i), data.column(j));
-    let mut counts = vec![0u32; q * ri * rj];
-    for row in 0..rows {
-        let mut code = 0usize;
-        let mut stride = 1usize;
+    let cond_cols: Vec<&[u8]> = cond.iter().map(|&c| data.column(c)).collect();
+    let strides: Vec<usize> = {
+        let mut s = Vec::with_capacity(cond.len());
+        let mut acc = 1usize;
         for &c in cond {
-            code += data.value(row, c) as usize * stride;
-            stride *= data.arity(c);
+            s.push(acc);
+            acc *= data.arity(c);
         }
-        counts[(code * ri + ci[row] as usize) * rj + cj[row] as usize] += 1;
+        s
+    };
+    let mut counts = vec![0u32; q * ri * rj];
+    for range in data.chunks(SCREEN_CHUNK) {
+        for row in range {
+            let mut code = 0usize;
+            for (col, &stride) in cond_cols.iter().zip(&strides) {
+                code += col[row] as usize * stride;
+            }
+            counts[(code * ri + ci[row] as usize) * rj + cj[row] as usize] += 1;
+        }
     }
     let mut g2 = 0f64;
     let mut row_tot = vec![0u64; ri];

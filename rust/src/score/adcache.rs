@@ -1,0 +1,323 @@
+//! The cross-tile count cache: AD-tree-style contingency reuse
+//! *across* tiles, nodes, and whole store builds.
+//!
+//! PR 6's `PrefixCounter` reuses parent-config codes only along one
+//! subset-DFS path; this module persists the finished product — the
+//! dense `N_ijk` histogram of a `(node, parent set)` query — keyed by
+//! the *dataset* half of the store fingerprint, so the same counts
+//! serve every tile that needs them, every counting mode, and every
+//! subsequent build over the same data (the daemon's cross-job case).
+//! That is the "keep the low-order tables around" half of Scutari's
+//! optimised-bnlearn observation (arXiv 1406.7648); a full AD-tree is
+//! unnecessary because the DFS already enumerates queries in subset
+//! order.
+//!
+//! Retention policy:
+//! * **k ≤ 1 entries are pinned** — per-node marginals and per-pair
+//!   tables are tiny (`r_i`, `r_m·r_i` cells), shared by *every*
+//!   superset query's subtree, and never evicted;
+//! * **k ≥ 2 entries are LRU** under the byte budget; an entry larger
+//!   than the whole budget is served to its caller but never inserted;
+//! * **small datasets bypass the cache entirely** (`rows < min_rows`,
+//!   the leaf-list regime): below the threshold a whole-column recount
+//!   is cheaper than a shared-map probe, so the builders keep their
+//!   allocation-free hot path.
+//!
+//! Determinism: the cache stores *exact u32 counts*, and cached-hit
+//! scoring folds them in ascending config-code order — the same
+//! emission contract every counting path honours (DESIGN.md §14) — so
+//! stores are bit-identical with the cache on or off, warm or cold.
+//! Lookup keys include the dataset fingerprint, making cross-dataset
+//! collisions impossible rather than unlikely.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default shared-instance byte budget (the one-shot CLI path; the
+/// daemon installs its own slice of `--cache-bytes`).
+pub const DEFAULT_BUDGET: usize = 1 << 28;
+
+/// Default row threshold below which the cache declines to engage.
+pub const DEFAULT_MIN_ROWS: usize = 1 << 14;
+
+/// Telemetry snapshot (the daemon's `stats` command serializes this).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CountCacheStats {
+    /// Histogram lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to count.
+    pub misses: u64,
+    /// Histograms admitted.
+    pub insertions: u64,
+    /// LRU entries dropped to fit the byte budget.
+    pub evictions: u64,
+    /// Entries currently resident (pinned + LRU).
+    pub entries: usize,
+    /// Bytes of resident histograms.
+    pub bytes: usize,
+}
+
+#[derive(Debug, PartialEq, Eq, Hash)]
+struct Key {
+    dataset: u64,
+    node: u32,
+    /// Sorted-ascending global parent column ids.
+    parents: Box<[u16]>,
+}
+
+struct Entry {
+    hist: Arc<Vec<u32>>,
+    bytes: usize,
+    last_used: u64,
+    pinned: bool,
+}
+
+struct Inner {
+    map: HashMap<Key, Entry>,
+    clock: u64,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+/// The count cache. See the module docs for the retention and
+/// determinism contract.
+pub struct CountCache {
+    capacity: usize,
+    min_rows: usize,
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for CountCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("CountCache")
+            .field("capacity", &self.capacity)
+            .field("min_rows", &self.min_rows)
+            .field("stats", &s)
+            .finish()
+    }
+}
+
+/// Approximate resident cost of one entry: histogram cells plus map
+/// and key overhead.
+fn entry_bytes(parents: usize, cells: usize) -> usize {
+    cells * std::mem::size_of::<u32>() + parents * 2 + 64
+}
+
+impl CountCache {
+    /// A cache bounded to `capacity` LRU bytes, bypassed below
+    /// `min_rows` rows. `capacity == 0` disables it entirely.
+    pub fn new(capacity: usize, min_rows: usize) -> Self {
+        let inner = Inner {
+            map: HashMap::new(),
+            clock: 0,
+            bytes: 0,
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+        };
+        CountCache { capacity, min_rows, inner: Mutex::new(inner) }
+    }
+
+    /// Whether the cache engages for a dataset of `rows` rows.
+    pub fn admits(&self, rows: usize) -> bool {
+        self.capacity > 0 && rows >= self.min_rows
+    }
+
+    /// Bytes currently resident (the daemon charges these against its
+    /// `--cache-bytes` budget alongside the store cache).
+    pub fn bytes(&self) -> usize {
+        self.lock().bytes
+    }
+
+    /// Current telemetry.
+    pub fn stats(&self) -> CountCacheStats {
+        let inner = self.lock();
+        CountCacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            insertions: inner.insertions,
+            evictions: inner.evictions,
+            entries: inner.map.len(),
+            bytes: inner.bytes,
+        }
+    }
+
+    /// The cached dense histogram (`hist[code·r_i + state]`) for
+    /// `(dataset, node, parents)`, or `None` (counted as a miss).
+    pub fn lookup(&self, dataset: u64, node: usize, parents: &[u16]) -> Option<Arc<Vec<u32>>> {
+        let key = Key { dataset, node: node as u32, parents: parents.into() };
+        let mut inner = self.lock();
+        inner.clock += 1;
+        let now = inner.clock;
+        match inner.map.get_mut(&key) {
+            Some(entry) => {
+                entry.last_used = now;
+                let hist = entry.hist.clone();
+                inner.hits += 1;
+                Some(hist)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Admit a freshly-counted histogram. k ≤ 1 entries are pinned;
+    /// larger ones evict LRU peers to fit (or are dropped when bigger
+    /// than the whole budget). Re-inserting an existing key is a no-op
+    /// (concurrent builders may race to the same miss — both counted
+    /// the same bytes, so either copy is fine).
+    pub fn insert(&self, dataset: u64, node: usize, parents: &[u16], hist: Arc<Vec<u32>>) {
+        let pinned = parents.len() <= 1;
+        let bytes = entry_bytes(parents.len(), hist.len());
+        if !pinned && bytes > self.capacity {
+            return;
+        }
+        let key = Key { dataset, node: node as u32, parents: parents.into() };
+        let mut inner = self.lock();
+        if inner.map.contains_key(&key) {
+            return;
+        }
+        inner.clock += 1;
+        let now = inner.clock;
+        inner.map.insert(key, Entry { hist, bytes, last_used: now, pinned });
+        inner.bytes += bytes;
+        inner.insertions += 1;
+        self.evict_to_fit(&mut inner);
+    }
+
+    /// Evict LRU unpinned entries until the budget fits. Pinned
+    /// entries never leave, so the resident floor is the (tiny)
+    /// marginal + pair table set.
+    fn evict_to_fit(&self, inner: &mut Inner) {
+        while inner.bytes > self.capacity {
+            let victim = inner
+                .map
+                .iter()
+                .filter(|(_, e)| !e.pinned)
+                .map(|(k, e)| (e.last_used, k.dataset, k.node, k.parents.clone()))
+                .min();
+            let Some((_, dataset, node, parents)) = victim else { break };
+            if let Some(e) = inner.map.remove(&Key { dataset, node, parents }) {
+                inner.bytes -= e.bytes;
+                inner.evictions += 1;
+            }
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("count-cache lock poisoned")
+    }
+}
+
+/// A handle attaching a cache to one dataset's builds: the cache plus
+/// the dataset fingerprint its keys are scoped under
+/// ([`crate::coordinator::dataset_fingerprint`]).
+#[derive(Debug, Clone)]
+pub struct CountCacheRef {
+    /// The (usually process-shared) cache.
+    pub cache: Arc<CountCache>,
+    /// Dataset identity folded into every key.
+    pub dataset_key: u64,
+}
+
+static SHARED: OnceLock<Arc<CountCache>> = OnceLock::new();
+
+/// Install the process-wide shared count cache. First call wins (the
+/// daemon calls this at startup with its `--cache-bytes` slice, before
+/// any job runs); later calls return the installed instance.
+pub fn install_shared(cache: Arc<CountCache>) -> Arc<CountCache> {
+    SHARED.get_or_init(|| cache).clone()
+}
+
+/// The process-wide shared cache, creating a default-budget one on
+/// first use ([`DEFAULT_BUDGET`], [`DEFAULT_MIN_ROWS`]).
+pub fn shared() -> Arc<CountCache> {
+    SHARED.get_or_init(|| Arc::new(CountCache::new(DEFAULT_BUDGET, DEFAULT_MIN_ROWS))).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist(cells: usize, fill: u32) -> Arc<Vec<u32>> {
+        Arc::new(vec![fill; cells])
+    }
+
+    #[test]
+    fn lookup_miss_then_hit() {
+        let c = CountCache::new(1 << 20, 0);
+        assert!(c.lookup(1, 0, &[2, 3]).is_none());
+        c.insert(1, 0, &[2, 3], hist(12, 7));
+        let got = c.lookup(1, 0, &[2, 3]).unwrap();
+        assert_eq!(*got, vec![7u32; 12]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions, s.entries), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn keys_are_scoped_by_dataset_node_and_parents() {
+        let c = CountCache::new(1 << 20, 0);
+        c.insert(1, 0, &[2], hist(6, 1));
+        assert!(c.lookup(2, 0, &[2]).is_none(), "different dataset");
+        assert!(c.lookup(1, 1, &[2]).is_none(), "different node");
+        assert!(c.lookup(1, 0, &[3]).is_none(), "different parents");
+        assert!(c.lookup(1, 0, &[]).is_none(), "different k");
+        assert!(c.lookup(1, 0, &[2]).is_some());
+    }
+
+    #[test]
+    fn lru_eviction_spares_pinned_entries() {
+        // Budget fits roughly two big entries.
+        let big = entry_bytes(2, 1000);
+        let c = CountCache::new(2 * big + big / 2, 0);
+        c.insert(1, 0, &[], hist(4, 1)); // pinned marginal
+        c.insert(1, 0, &[1], hist(8, 1)); // pinned pair
+        c.insert(1, 0, &[1, 2], hist(1000, 1));
+        c.insert(1, 0, &[1, 3], hist(1000, 1));
+        // Touch the first big entry so the second is the LRU victim.
+        assert!(c.lookup(1, 0, &[1, 2]).is_some());
+        c.insert(1, 0, &[1, 4], hist(1000, 1));
+        let s = c.stats();
+        assert!(s.evictions >= 1);
+        assert!(c.lookup(1, 0, &[]).is_some(), "pinned marginal survives");
+        assert!(c.lookup(1, 0, &[1]).is_some(), "pinned pair survives");
+        assert!(c.lookup(1, 0, &[1, 2]).is_some(), "recently-used entry survives");
+        assert!(c.lookup(1, 0, &[1, 3]).is_none(), "LRU entry evicted");
+    }
+
+    #[test]
+    fn oversized_unpinned_entries_are_not_admitted() {
+        let c = CountCache::new(64, 0);
+        c.insert(1, 0, &[1, 2], hist(1000, 1));
+        assert!(c.lookup(1, 0, &[1, 2]).is_none());
+        assert_eq!(c.stats().insertions, 0);
+        // Pinned entries are exempt from the size gate.
+        c.insert(1, 0, &[1], hist(1000, 1));
+        assert!(c.lookup(1, 0, &[1]).is_some());
+    }
+
+    #[test]
+    fn admits_honours_capacity_and_min_rows() {
+        let c = CountCache::new(1 << 20, 1000);
+        assert!(!c.admits(999));
+        assert!(c.admits(1000));
+        let disabled = CountCache::new(0, 0);
+        assert!(!disabled.admits(1_000_000));
+    }
+
+    #[test]
+    fn reinsert_is_a_noop() {
+        let c = CountCache::new(1 << 20, 0);
+        c.insert(1, 0, &[2], hist(6, 1));
+        c.insert(1, 0, &[2], hist(6, 99));
+        assert_eq!(*c.lookup(1, 0, &[2]).unwrap(), vec![1u32; 6]);
+        assert_eq!(c.stats().insertions, 1);
+    }
+}

@@ -19,6 +19,7 @@
 use std::collections::HashMap;
 
 use crate::data::Dataset;
+use crate::score::adcache::CountCacheRef;
 
 /// Reusable scratch for one thread's counting loop; avoids re-allocating
 /// and re-zeroing per local score (the preprocessing stage computes
@@ -194,6 +195,53 @@ impl CountsWorkspace {
         }
     }
 
+    /// Accumulate the dense `N_ijk` histogram for `(node, parents)`
+    /// into `hist[code·r_i + state]` — the count-cache miss path of
+    /// naive mode, which needs the full histogram materialized (not
+    /// just emitted) so it can be admitted to the cache. Only legal
+    /// when `q·r_i` fits the dense regime: `hist.len()` must be
+    /// exactly `q · arity(node)`. Adds are plain u32 increments over
+    /// rows in order, so the resulting counts are identical to every
+    /// other counting path's.
+    pub fn accumulate_dense(
+        &mut self,
+        data: &Dataset,
+        node: usize,
+        parents: &[usize],
+        hist: &mut [u32],
+    ) {
+        let rows = data.rows();
+        let arity = data.arity(node);
+        let node_col = data.column(node);
+        if parents.is_empty() {
+            debug_assert_eq!(hist.len(), arity);
+            for &v in node_col {
+                hist[v as usize] += 1;
+            }
+            return;
+        }
+        if self.codes.len() != rows {
+            self.codes.resize(rows, 0);
+        }
+        let mut stride = 1u32;
+        for (pi, &m) in parents.iter().enumerate() {
+            let col = data.column(m);
+            if pi == 0 {
+                for (code, &v) in self.codes.iter_mut().zip(col) {
+                    *code = v as u32;
+                }
+            } else {
+                for (code, &v) in self.codes.iter_mut().zip(col) {
+                    *code += v as u32 * stride;
+                }
+            }
+            stride *= data.arity(m) as u32;
+        }
+        for (r, &code) in self.codes.iter().enumerate() {
+            hist[code as usize * arity + node_col[r] as usize] += 1;
+        }
+    }
+
     /// Wide-code sparse counting for parent spaces whose mixed-radix
     /// codes exceed u32 (q up to 255^19 ≈ 2^152 fits u128 comfortably
     /// for ≤ 19 parents of arity ≤ 255). Emission is ascending-code,
@@ -288,7 +336,7 @@ pub(crate) const AUTO_MIN_ROWS: usize = 1 << 18;
 
 /// Counting-engine configuration threaded from the CLI down into the
 /// table builders.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone)]
 pub struct CountingConfig {
     /// Engine selection (default [`CountingMode::Prefix`]).
     pub mode: CountingMode,
@@ -296,17 +344,40 @@ pub struct CountingConfig {
     /// (engage at [`AUTO_MIN_ROWS`] rows with [`AUTO_CHUNK_ROWS`]-row
     /// chunks). Ignored in naive mode.
     pub chunk_rows: usize,
+    /// Cross-tile count cache consulted by every counting path
+    /// ([`crate::score::adcache`]); `None` = uncached. Pure reuse of
+    /// exact u32 counts — never part of config identity (see the
+    /// `PartialEq` impl) and never fingerprinted.
+    pub cache: Option<CountCacheRef>,
 }
+
+/// Equality compares the *result-shaping* knobs only: the cache is a
+/// work-saving attachment that cannot change a single output bit, so
+/// two configs differing only in `cache` are the same configuration
+/// (the CLI round-trip tests compare against the bare constructors).
+impl PartialEq for CountingConfig {
+    fn eq(&self, other: &Self) -> bool {
+        self.mode == other.mode && self.chunk_rows == other.chunk_rows
+    }
+}
+
+impl Eq for CountingConfig {}
 
 impl CountingConfig {
     /// The reference configuration: naive counting, never chunked.
     pub fn naive() -> Self {
-        CountingConfig { mode: CountingMode::Naive, chunk_rows: 0 }
+        CountingConfig { mode: CountingMode::Naive, chunk_rows: 0, cache: None }
     }
 
     /// The default configuration: prefix counting, auto chunking.
     pub fn prefix() -> Self {
-        CountingConfig { mode: CountingMode::Prefix, chunk_rows: 0 }
+        CountingConfig { mode: CountingMode::Prefix, chunk_rows: 0, cache: None }
+    }
+
+    /// This configuration with a count cache attached.
+    pub fn with_cache(mut self, cache: CountCacheRef) -> Self {
+        self.cache = Some(cache);
+        self
     }
 
     /// Chunk size to use for a dataset of `rows` rows, or `None` to count
@@ -488,8 +559,47 @@ mod tests {
         let auto = CountingConfig::prefix();
         assert_eq!(auto.chunk_for(1000), None);
         assert_eq!(auto.chunk_for(AUTO_MIN_ROWS), Some(AUTO_CHUNK_ROWS));
-        let explicit = CountingConfig { mode: CountingMode::Prefix, chunk_rows: 500 };
+        let explicit = CountingConfig { chunk_rows: 500, ..CountingConfig::prefix() };
         assert_eq!(explicit.chunk_for(400), None);
         assert_eq!(explicit.chunk_for(501), Some(500));
+    }
+
+    #[test]
+    fn accumulate_dense_matches_emission() {
+        let d = dataset();
+        let mut ws = CountsWorkspace::new();
+        for (node, parents) in
+            [(0usize, vec![]), (0, vec![2]), (0, vec![1, 2]), (1, vec![0]), (2, vec![0, 1])]
+        {
+            let r_i = d.arity(node);
+            let q: usize = parents.iter().map(|&p| d.arity(p)).product::<usize>().max(1);
+            let mut hist = vec![0u32; q * r_i];
+            ws.accumulate_dense(&d, node, &parents, &mut hist);
+            // The dense histogram scanned in ascending code order must
+            // reproduce for_each_config's emission exactly.
+            let mut from_hist = Vec::new();
+            for code in 0..q {
+                let counts = &hist[code * r_i..(code + 1) * r_i];
+                let n_ik: u32 = counts.iter().sum();
+                if n_ik > 0 {
+                    from_hist.push((n_ik, counts.to_vec()));
+                }
+            }
+            let mut emitted = Vec::new();
+            ws.for_each_config(&d, node, &parents, |n, c| emitted.push((n, c.to_vec())));
+            assert_eq!(from_hist, emitted, "node {node} parents {parents:?}");
+        }
+    }
+
+    #[test]
+    fn config_equality_ignores_the_cache() {
+        use crate::score::adcache::{CountCache, CountCacheRef};
+        use std::sync::Arc;
+        let cached = CountingConfig::prefix().with_cache(CountCacheRef {
+            cache: Arc::new(CountCache::new(1 << 20, 0)),
+            dataset_key: 42,
+        });
+        assert_eq!(cached, CountingConfig::prefix());
+        assert_ne!(cached, CountingConfig::naive());
     }
 }

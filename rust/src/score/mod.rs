@@ -2,6 +2,7 @@
 //! preprocessing stage that materializes every local score once
 //! (Section III-A).
 
+pub mod adcache;
 pub mod bde;
 pub mod counts;
 pub mod lgamma;
@@ -9,6 +10,7 @@ pub mod prefix;
 pub mod store;
 pub mod table;
 
+pub use adcache::{CountCache, CountCacheRef};
 pub use bde::{BdeParams, LocalScorer};
 pub use counts::{CountingConfig, CountingMode, CountsWorkspace};
 pub use lgamma::{lgamma, log10_gamma};

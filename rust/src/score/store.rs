@@ -350,7 +350,7 @@ impl HashScoreStore {
                         exec.as_ref(),
                         &tiles,
                         &slices,
-                        counting.mode,
+                        counting,
                         chunk,
                     ),
                     None => fill_tiles(
@@ -360,7 +360,7 @@ impl HashScoreStore {
                         exec.as_ref(),
                         &tiles,
                         &slices,
-                        counting.mode,
+                        counting,
                     ),
                 });
             }
@@ -472,7 +472,7 @@ impl HashScoreStore {
                         exec.as_ref(),
                         &tiles,
                         &slices,
-                        counting.mode,
+                        counting,
                         chunk,
                     ),
                     None => fill_tiles(
@@ -482,7 +482,7 @@ impl HashScoreStore {
                         exec.as_ref(),
                         &tiles,
                         &slices,
-                        counting.mode,
+                        counting,
                     ),
                 });
             }

@@ -24,6 +24,7 @@
 
 use std::sync::Arc;
 
+use super::adcache::CountCacheRef;
 use super::bde::{BdeParams, LocalScorer};
 use super::counts::{CountingConfig, CountingMode, CountsWorkspace, DENSE_LIMIT};
 use super::lgamma::log10_gamma;
@@ -115,11 +116,11 @@ impl ScoreTable {
                     exec.as_ref(),
                     &tiles,
                     &slices,
-                    counting.mode,
+                    counting,
                     chunk,
                 ),
                 None => {
-                    fill_tiles(data, params, &grid, exec.as_ref(), &tiles, &slices, counting.mode)
+                    fill_tiles(data, params, &grid, exec.as_ref(), &tiles, &slices, counting)
                 }
             }
         };
@@ -185,11 +186,11 @@ impl ScoreTable {
                     exec.as_ref(),
                     &tiles,
                     &slices,
-                    counting.mode,
+                    counting,
                     chunk,
                 ),
                 None => {
-                    fill_tiles(data, params, &grid, exec.as_ref(), &tiles, &slices, counting.mode)
+                    fill_tiles(data, params, &grid, exec.as_ref(), &tiles, &slices, counting)
                 }
             }
         };
@@ -468,7 +469,7 @@ enum Sink<'o> {
 }
 
 /// Per-leaf layout of a tile's histogram bank (chunked path).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub(crate) struct LeafPlan {
     /// Cell offset of this leaf's `q · r_i` histogram in the bank.
     off: u64,
@@ -477,6 +478,9 @@ pub(crate) struct LeafPlan {
     q: u32,
     /// Parent-set size.
     k: u8,
+    /// Sorted-ascending global parent ids — the count-cache key of this
+    /// leaf's histogram. Empty for poisoned leaves.
+    parents: Box<[u16]>,
 }
 
 /// Histogram-bank layout for one tile of the chunked path.
@@ -509,7 +513,7 @@ pub(crate) fn plan_window(
     for idx in lo..hi {
         let subset = grid.subset_of(node, idx, &mut buf);
         if matches!(grid, Grid::Full(_)) && subset.contains(&node) {
-            leaves.push(LeafPlan { off: 0, q: 0, k: 0 });
+            leaves.push(LeafPlan { off: 0, q: 0, k: 0, parents: Box::default() });
             continue;
         }
         let q: u128 =
@@ -517,7 +521,12 @@ pub(crate) fn plan_window(
         if q > u32::MAX as u128 || q * r_i as u128 > DENSE_LIMIT as u128 {
             return None;
         }
-        leaves.push(LeafPlan { off: cells, q: q as u32, k: subset.len() as u8 });
+        leaves.push(LeafPlan {
+            off: cells,
+            q: q as u32,
+            k: subset.len() as u8,
+            parents: subset.iter().map(|&m| m as u16).collect(),
+        });
         cells += q as u64 * r_i as u64;
         if cells > CHUNK_TILE_CELLS {
             return None;
@@ -554,7 +563,7 @@ pub(crate) fn fill_tiles(
     exec: &dyn KernelExecutor,
     tiles: &[Tile],
     slices: &[std::sync::Mutex<&mut [f32]>],
-    mode: CountingMode,
+    counting: &CountingConfig,
 ) -> DispatchStats {
     debug_assert_eq!(tiles.len(), slices.len());
     let s_build = grid.s_build();
@@ -565,7 +574,7 @@ pub(crate) fn fill_tiles(
         let t = tiles[i];
         let mut lane = lanes_ref[worker].lock().expect("builder lane poisoned");
         let builder =
-            lane.get_or_insert_with(|| FastRowBuilder::new(data, params, s_build, mode));
+            lane.get_or_insert_with(|| FastRowBuilder::new(data, params, s_build, counting));
         let mut guard = slices[i].lock().expect("tile slice poisoned");
         builder.fill_grid_range(grid, t.node, t.start, t.end, &mut guard);
     };
@@ -582,6 +591,13 @@ pub(crate) fn fill_tiles(
 /// chunk size, thread count, or schedule. Tiles the planner declines
 /// (oversized banks, sparse-path leaves) fall back to the classic fill in
 /// phase 2.
+///
+/// Count-cache integration works at tile granularity: a tile whose live
+/// leaves are *all* resident in the cache skips phase 1 entirely and
+/// copies the cached histograms into its bank (the daemon's warm-rebuild
+/// fast path); a tile that had to count offers its finished bank slices
+/// to the cache after phase 2. Cached counts are the exact u32 sums the
+/// cold path produces, so scores stay bit-identical warm or cold.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn fill_tiles_chunked(
     data: &Dataset,
@@ -590,15 +606,33 @@ pub(crate) fn fill_tiles_chunked(
     exec: &dyn KernelExecutor,
     tiles: &[Tile],
     slices: &[std::sync::Mutex<&mut [f32]>],
-    mode: CountingMode,
+    counting: &CountingConfig,
     chunk_rows: usize,
 ) -> DispatchStats {
     debug_assert_eq!(tiles.len(), slices.len());
-    debug_assert_eq!(mode, CountingMode::Prefix, "only the prefix engine chunks");
+    debug_assert_eq!(counting.mode, CountingMode::Prefix, "only the prefix engine chunks");
+    let cache = counting.cache.as_ref().filter(|cr| cr.cache.admits(data.rows()));
     let chunks: Vec<std::ops::Range<usize>> = data.chunks(chunk_rows).collect();
     let n_chunks = chunks.len().max(1);
     let plans: Vec<Option<WindowPlan>> =
         tiles.iter().map(|t| plan_window(data, grid, t.node, t.start, t.end)).collect();
+    // Cache probe: `Some(hists)` when every live leaf of the tile is
+    // resident (hists in leaf order, poisoned leaves skipped).
+    let cached: Vec<Option<Vec<Arc<Vec<u32>>>>> = plans
+        .iter()
+        .zip(tiles)
+        .map(|(plan, t)| {
+            let (cr, plan) = (cache?, plan.as_ref()?);
+            let mut hists = Vec::new();
+            for lp in &plan.leaves {
+                if lp.q == 0 {
+                    continue;
+                }
+                hists.push(cr.cache.lookup(cr.dataset_key, t.node, &lp.parents)?);
+            }
+            Some(hists)
+        })
+        .collect();
     let banks: Vec<std::sync::Mutex<Vec<u32>>> = plans
         .iter()
         .map(|p| {
@@ -611,6 +645,7 @@ pub(crate) fn fill_tiles_chunked(
         (0..exec.threads().max(1)).map(|_| std::sync::Mutex::new(None)).collect();
     let lanes_ref = &lanes;
     let plans_ref = &plans;
+    let cached_ref = &cached;
     let banks_ref = &banks;
     let chunks_ref = &chunks;
 
@@ -621,11 +656,14 @@ pub(crate) fn fill_tiles_chunked(
             Some(p) => p,
             None => return, // classic fallback handles this tile in phase 2
         };
+        if cached_ref[ti].is_some() {
+            return; // fully cached: phase 2 scores straight from the cache
+        }
         let chunk = chunks_ref[task % n_chunks].clone();
         let t = tiles[ti];
         let mut lane = lanes_ref[worker].lock().expect("builder lane poisoned");
         let builder =
-            lane.get_or_insert_with(|| FastRowBuilder::new(data, params, s_build, mode));
+            lane.get_or_insert_with(|| FastRowBuilder::new(data, params, s_build, counting));
         builder.accumulate_chunk(grid, t.node, t.start, t.end, plan, chunk.start, chunk.end);
         let cells = plan.cells as usize;
         let mut bank = banks_ref[ti].lock().expect("histogram bank poisoned");
@@ -640,11 +678,46 @@ pub(crate) fn fill_tiles_chunked(
         let t = tiles[ti];
         let mut lane = lanes_ref[worker].lock().expect("builder lane poisoned");
         let builder =
-            lane.get_or_insert_with(|| FastRowBuilder::new(data, params, s_build, mode));
+            lane.get_or_insert_with(|| FastRowBuilder::new(data, params, s_build, counting));
         let mut guard = slices[ti].lock().expect("tile slice poisoned");
         match &plans_ref[ti] {
             Some(plan) => {
-                let bank = banks_ref[ti].lock().expect("histogram bank poisoned");
+                let mut bank = banks_ref[ti].lock().expect("histogram bank poisoned");
+                let r_i = data.arity(t.node);
+                match &cached_ref[ti] {
+                    Some(hists) => {
+                        // Replay cached histograms into the bank at their
+                        // planned offsets; scoring below is then exactly
+                        // the cold path over identical counts.
+                        let mut next = hists.iter();
+                        for lp in &plan.leaves {
+                            if lp.q == 0 {
+                                continue;
+                            }
+                            let base = lp.off as usize;
+                            let cells = lp.q as usize * r_i;
+                            let h = next.next().expect("cached tile short a histogram");
+                            bank[base..base + cells].copy_from_slice(h);
+                        }
+                    }
+                    None => {
+                        if let Some(cr) = cache {
+                            for lp in &plan.leaves {
+                                if lp.q == 0 {
+                                    continue;
+                                }
+                                let base = lp.off as usize;
+                                let cells = lp.q as usize * r_i;
+                                cr.cache.insert(
+                                    cr.dataset_key,
+                                    t.node,
+                                    &lp.parents,
+                                    Arc::new(bank[base..base + cells].to_vec()),
+                                );
+                            }
+                        }
+                    }
+                }
                 builder.score_window_from_hist(t.node, plan, &bank, &mut guard);
             }
             None => builder.fill_grid_range(grid, t.node, t.start, t.end, &mut guard),
@@ -736,6 +809,9 @@ struct FastRowBuilder<'a> {
     /// Private partial histogram for the chunked path (merged into the
     /// tile bank after each chunk task).
     hist: Vec<u32>,
+    /// Cross-tile count cache, `None` when absent or when the dataset is
+    /// below the cache's row threshold (the leaf-list regime).
+    cache: Option<CountCacheRef>,
     log10_gamma: f64,
     /// `lg_int[m] = log10 Γ(m)` for integer m — with the K2 prior every
     /// lgamma argument in Eq. (4) is an integer bounded by rows + max
@@ -749,7 +825,7 @@ impl<'a> FastRowBuilder<'a> {
         data: &'a crate::data::Dataset,
         params: BdeParams,
         s: usize,
-        mode: CountingMode,
+        counting: &CountingConfig,
     ) -> Self {
         let rows = data.rows();
         let r_max = (0..data.cols()).map(|i| data.arity(i)).max().unwrap_or(2);
@@ -762,14 +838,16 @@ impl<'a> FastRowBuilder<'a> {
             let last = *lg_int.last().unwrap();
             lg_int.push(last + (m as f64).log10());
         }
+        let cache = counting.cache.clone().filter(|cr| cr.cache.admits(rows));
         FastRowBuilder {
             data,
             params,
-            mode,
+            mode: counting.mode,
             pc: PrefixCounter::new(s),
             chosen: Vec::with_capacity(s + 1),
             ws: CountsWorkspace::new(),
             hist: Vec::new(),
+            cache,
             log10_gamma: params.gamma.log10(),
             lg_int,
         }
@@ -1027,7 +1105,8 @@ impl<'a> FastRowBuilder<'a> {
     /// [`CountsWorkspace`] (both engines share the sparse path, keeping
     /// them bit-identical there too).
     fn score_leaf(&mut self, node: usize, k: usize) -> f64 {
-        let FastRowBuilder { data, params, mode, pc, ws, chosen, lg_int, log10_gamma, .. } = self;
+        let FastRowBuilder { data, params, mode, pc, ws, chosen, lg_int, log10_gamma, cache, .. } =
+            self;
         let data: &Dataset = data;
         let lg_int: &[f64] = lg_int;
         let r_i = data.arity(node);
@@ -1037,6 +1116,40 @@ impl<'a> FastRowBuilder<'a> {
         let mut acc = k as f64 * *log10_gamma;
         let dense_ok = q_wide <= u32::MAX as u128
             && (q_wide as u64).saturating_mul(r_i as u64) <= DENSE_LIMIT as u64;
+        if dense_ok {
+            if let Some(cr) = cache {
+                // Cache route: materialize (or fetch) the full dense
+                // histogram and fold it in ascending code order skipping
+                // unobserved configs — the exact emission order of both
+                // uncached engines below, so the score is bit-identical.
+                let q = q_wide as usize;
+                let parents: Vec<u16> = chosen.iter().map(|&m| m as u16).collect();
+                let hist = match cr.cache.lookup(cr.dataset_key, node, &parents) {
+                    Some(hist) => hist,
+                    None => {
+                        let mut fresh = vec![0u32; q * r_i];
+                        if *mode == CountingMode::Prefix {
+                            debug_assert_eq!(pc.q_at(k), Some(q));
+                            pc.accumulate_window(k, data.column(node), r_i, &mut fresh);
+                        } else {
+                            ws.accumulate_dense(data, node, chosen, &mut fresh);
+                        }
+                        let fresh = Arc::new(fresh);
+                        cr.cache.insert(cr.dataset_key, node, &parents, fresh.clone());
+                        fresh
+                    }
+                };
+                for code in 0..q {
+                    let counts = &hist[code * r_i..(code + 1) * r_i];
+                    let n_ik: u32 = counts.iter().sum();
+                    if n_ik == 0 {
+                        continue;
+                    }
+                    fold_config(lg_int, r_i, &math, n_ik, counts, &mut acc);
+                }
+                return acc;
+            }
+        }
         if *mode == CountingMode::Prefix && dense_ok {
             debug_assert_eq!(pc.q_at(k), Some(q_wide as usize));
             pc.count_window(k, data.column(node), r_i, |n_ik, counts| {
@@ -1091,7 +1204,7 @@ impl FullScoreTable {
                             data,
                             params,
                             n.saturating_sub(1),
-                            CountingMode::Prefix,
+                            &CountingConfig::prefix(),
                         );
                         for (i, row) in mine {
                             row.fill(NEG_SENTINEL);
@@ -1215,7 +1328,7 @@ mod tests {
             ScoreTable::build_counted_with(&data, params, 3, &cfg, &CountingConfig::prefix()).0;
         assert_eq!(naive.raw(), prefix.raw());
         for chunk_rows in [16usize, 64, 129] {
-            let chunked = CountingConfig { mode: CountingMode::Prefix, chunk_rows };
+            let chunked = CountingConfig { chunk_rows, ..CountingConfig::prefix() };
             let table = ScoreTable::build_counted_with(&data, params, 3, &cfg, &chunked).0;
             assert_eq!(naive.raw(), table.raw(), "chunk_rows={chunk_rows}");
         }
@@ -1237,10 +1350,37 @@ mod tests {
         )
         .0;
         assert_eq!(rnaive.raw(), rprefix.raw());
-        let chunked = CountingConfig { mode: CountingMode::Prefix, chunk_rows: 32 };
+        let chunked = CountingConfig { chunk_rows: 32, ..CountingConfig::prefix() };
         let rchunked =
             ScoreTable::build_restricted_counted_with(&data, params, &rl, &cfg, &chunked).0;
         assert_eq!(rnaive.raw(), rchunked.raw());
+    }
+
+    /// The count cache never changes a byte: cold cache, warm cache,
+    /// and both counting modes sharing one cache all reproduce the
+    /// uncached table exactly — including the chunked path, whose
+    /// fully-cached tiles skip phase 1 and score from cached hists.
+    #[test]
+    fn count_cache_is_bit_identical_cold_and_warm() {
+        use crate::score::adcache::{CountCache, CountCacheRef};
+        let data = small_data(6, 140, 54);
+        let params = BdeParams::default();
+        let cfg = ExecConfig::balanced(3);
+        let baseline =
+            ScoreTable::build_counted_with(&data, params, 3, &cfg, &CountingConfig::prefix()).0;
+        let cache = Arc::new(CountCache::new(1 << 24, 0));
+        let cr = CountCacheRef { cache: cache.clone(), dataset_key: 7 };
+        for counting in [
+            CountingConfig::prefix().with_cache(cr.clone()),
+            CountingConfig::naive().with_cache(cr.clone()),
+            CountingConfig { chunk_rows: 32, ..CountingConfig::prefix() }.with_cache(cr.clone()),
+        ] {
+            let t = ScoreTable::build_counted_with(&data, params, 3, &cfg, &counting).0;
+            assert_eq!(baseline.raw(), t.raw(), "counting={counting:?}");
+        }
+        let s = cache.stats();
+        assert!(s.insertions > 0, "cache was never populated");
+        assert!(s.hits > 0, "warm rebuilds never hit");
     }
 
     /// Counting modes also agree under the BDeu prior (non-integer
@@ -1256,7 +1396,7 @@ mod tests {
         let prefix =
             ScoreTable::build_counted_with(&data, params, 3, &cfg, &CountingConfig::prefix()).0;
         assert_eq!(naive.raw(), prefix.raw());
-        let chunked = CountingConfig { mode: CountingMode::Prefix, chunk_rows: 17 };
+        let chunked = CountingConfig { chunk_rows: 17, ..CountingConfig::prefix() };
         let table = ScoreTable::build_counted_with(&data, params, 3, &cfg, &chunked).0;
         assert_eq!(naive.raw(), table.raw());
     }

@@ -23,12 +23,21 @@
 //! bytes fit the budget. A store larger than the whole budget is handed
 //! to its job but never cached. `capacity == 0` disables caching
 //! entirely (every call builds).
+//!
+//! Budget sharing: when constructed [`with_counts`](StoreCache::with_counts),
+//! the cache co-owns the daemon's cross-tile count cache
+//! ([`crate::score::adcache::CountCache`]) and charges its resident
+//! bytes against the same `--cache-bytes` budget — the *effective*
+//! store budget at any lookup is `capacity - counts.bytes()`. Counts
+//! are small relative to stores, so they win the contention; the store
+//! side simply evicts a little deeper.
 
 use std::collections::HashMap;
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::coordinator::registry::StoreHandle;
+use crate::score::adcache::CountCache;
 use crate::score::ScoreStore;
 
 /// Telemetry snapshot (the `stats` protocol command serializes this).
@@ -66,6 +75,9 @@ struct Inner {
 /// The daemon's store cache. See the module docs for the contract.
 pub struct StoreCache {
     capacity: usize,
+    /// Count cache sharing this budget, if any — its resident bytes
+    /// shrink the effective store budget (see module docs).
+    counts: Option<Arc<CountCache>>,
     inner: Mutex<Inner>,
     ready: Condvar,
 }
@@ -73,9 +85,22 @@ pub struct StoreCache {
 impl StoreCache {
     /// A cache bounded to `capacity` resident bytes (0 disables).
     pub fn new(capacity: usize) -> Self {
+        Self::with_counts(capacity, None)
+    }
+
+    /// A cache whose byte budget is shared with `counts`: stores may
+    /// only occupy `capacity - counts.bytes()` at any moment.
+    pub fn with_counts(capacity: usize, counts: Option<Arc<CountCache>>) -> Self {
         let inner =
             Inner { slots: HashMap::new(), clock: 0, bytes: 0, hits: 0, misses: 0, evictions: 0 };
-        StoreCache { capacity, inner: Mutex::new(inner), ready: Condvar::new() }
+        StoreCache { capacity, counts, inner: Mutex::new(inner), ready: Condvar::new() }
+    }
+
+    /// The store budget left after the co-owned count cache's resident
+    /// bytes. Evaluated per lookup: counts grow and shrink between
+    /// builds, so the store side re-reads the watermark every time.
+    fn budget(&self) -> usize {
+        self.capacity.saturating_sub(self.counts.as_ref().map_or(0, |c| c.bytes()))
     }
 
     /// Current telemetry.
@@ -152,8 +177,9 @@ impl StoreCache {
             }
         };
         let bytes = store.bytes();
-        if bytes > self.capacity {
-            // Too big to ever cache: hand it to the caller only.
+        if bytes > self.budget() {
+            // Too big to cache right now (possibly because the count
+            // cache holds part of the budget): hand it to the caller only.
             inner.slots.remove(&key);
         } else {
             inner.clock += 1;
@@ -167,7 +193,8 @@ impl StoreCache {
     }
 
     fn evict_to_fit(&self, inner: &mut Inner) {
-        while inner.bytes > self.capacity {
+        let budget = self.budget();
+        while inner.bytes > budget {
             let victim = inner
                 .slots
                 .iter()
@@ -256,6 +283,28 @@ mod tests {
         assert!(!hit);
         assert_eq!(cache.stats().misses, 2);
         assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn count_cache_bytes_charge_the_shared_budget() {
+        let one = small_store(1).bytes();
+        assert!(one > 1024, "probe store unexpectedly tiny: {one} bytes");
+        let counts = Arc::new(CountCache::new(1 << 20, 0));
+        // Room for one-and-a-half stores while the count cache is empty.
+        let cache = StoreCache::with_counts(one + one / 2, Some(counts.clone()));
+        cache.get_or_build(1, || small_store(1));
+        assert_eq!(cache.stats().entries, 1);
+        // Grow the count cache by about a quarter store: two stores no
+        // longer fit the shared budget, so caching the second evicts
+        // the first (LRU) instead of exceeding `capacity - counts`.
+        counts.insert(1, 0, &[1, 2], Arc::new(vec![0u32; one / 16]));
+        assert!(counts.bytes() >= one / 4, "counts resident: {}", counts.bytes());
+        cache.get_or_build(2, || small_store(2));
+        let stats = cache.stats();
+        assert_eq!((stats.entries, stats.evictions), (1, 1));
+        assert!(stats.bytes + counts.bytes() <= one + one / 2, "joint budget respected");
+        let (_, hit) = cache.get_or_build(1, || small_store(1));
+        assert!(!hit, "key 1 was the LRU victim of the shrunken budget");
     }
 
     #[test]

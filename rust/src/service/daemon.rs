@@ -41,10 +41,12 @@ use super::json::Json;
 use super::protocol::{self, Request};
 use crate::coordinator::{
     build_run_store, run_learning_with_store, run_posterior_with_store, LearnReport,
-    PosteriorReport, RunConfig, Workload,
+    PosteriorReport, RunConfig, StoreHandle, Workload,
 };
 use crate::exec::Schedule;
+use crate::score::adcache::{self, CountCache};
 use crate::util::logging::Level;
+use crate::util::Timer;
 
 /// Daemon configuration (`serve` subcommand flags).
 #[derive(Debug, Clone)]
@@ -130,6 +132,9 @@ pub struct Daemon {
     cfg: ServeConfig,
     addr: SocketAddr,
     cache: StoreCache,
+    /// The process-shared count cache (its bytes charge the store
+    /// cache's budget; held here for the `stats` command).
+    counts: Arc<CountCache>,
     jobs: Mutex<BTreeMap<JobId, Arc<Job>>>,
     queue: Mutex<VecDeque<JobId>>,
     queue_ready: Condvar,
@@ -167,10 +172,21 @@ impl DaemonHandle {
 pub fn start(cfg: ServeConfig) -> Result<DaemonHandle> {
     crate::util::logging::set_level(cfg.log_level);
     crate::exec::install_shared(cfg.threads, cfg.schedule);
+    // A quarter of --cache-bytes goes to the cross-tile count cache;
+    // installing it as the process-shared instance means every job's
+    // counting path (RunConfig::counting_config) draws from this
+    // budgeted slice, and StoreCache charges its resident bytes
+    // against the same total. First install wins, so in-process tests
+    // that already touched the shared cache just reuse it.
+    let counts = adcache::install_shared(Arc::new(CountCache::new(
+        cfg.cache_bytes / 4,
+        adcache::DEFAULT_MIN_ROWS,
+    )));
     let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
     let addr = listener.local_addr()?;
     let daemon = Arc::new(Daemon {
-        cache: StoreCache::new(cfg.cache_bytes),
+        cache: StoreCache::with_counts(cfg.cache_bytes, Some(counts.clone())),
+        counts,
         addr,
         jobs: Mutex::new(BTreeMap::new()),
         queue: Mutex::new(VecDeque::new()),
@@ -357,6 +373,7 @@ impl Daemon {
             }
             Request::Stats => {
                 let cache = self.cache.stats();
+                let counts = self.counts.stats();
                 let jobs = self.jobs.lock().expect("job table lock poisoned").len();
                 let queued = self.queue.lock().expect("queue lock poisoned").len();
                 let cache_obj = obj(vec![
@@ -366,8 +383,17 @@ impl Daemon {
                     ("entries", Json::num(cache.entries as u64)),
                     ("bytes", Json::num(cache.bytes as u64)),
                 ]);
+                let counts_obj = obj(vec![
+                    ("hits", Json::num(counts.hits)),
+                    ("misses", Json::num(counts.misses)),
+                    ("insertions", Json::num(counts.insertions)),
+                    ("evictions", Json::num(counts.evictions)),
+                    ("entries", Json::num(counts.entries as u64)),
+                    ("bytes", Json::num(counts.bytes as u64)),
+                ]);
                 Ok(vec![
                     field("cache", cache_obj),
+                    field("count_cache", counts_obj),
                     field("jobs", Json::num(jobs as u64)),
                     field("queued", Json::num(queued as u64)),
                 ])
@@ -425,13 +451,45 @@ impl Daemon {
         let mut cfg = job.cfg.clone();
         cfg.shared_exec = true;
         job.push_event(obj(vec![("type", Json::str("phase")), ("phase", Json::str("build"))]));
-        let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
+        // Workload construction + store preprocessing can dominate
+        // wall-clock on big-N jobs and has no iteration counter to
+        // stream, so a heartbeat sidecar pushes elapsed-time progress
+        // events every ~500ms until the build lands (cheap 100ms polls
+        // keep the scope join prompt).
+        let build_timer = Timer::start();
+        let build_done = AtomicBool::new(false);
         let mut preprocess_secs = 0.0;
-        let (store, cache_hit) = self.cache.get_or_build(job.store_key, || {
-            let (store, secs) = build_run_store(&cfg, &workload, None);
-            preprocess_secs = secs;
-            store
+        let built: Result<(Workload, Arc<StoreHandle>, bool)> = thread::scope(|scope| {
+            scope.spawn(|| {
+                let mut ticks = 0u32;
+                loop {
+                    thread::sleep(Duration::from_millis(100));
+                    if build_done.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    ticks += 1;
+                    if ticks % 5 == 0 {
+                        job.push_event(obj(vec![
+                            ("type", Json::str("progress")),
+                            ("phase", Json::str("build")),
+                            ("elapsed_secs", Json::Num(build_timer.elapsed_secs())),
+                        ]));
+                    }
+                }
+            });
+            let result = (|| {
+                let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
+                let (store, cache_hit) = self.cache.get_or_build(job.store_key, || {
+                    let (store, secs) = build_run_store(&cfg, &workload, None);
+                    preprocess_secs = secs;
+                    store
+                });
+                Ok((workload, store, cache_hit))
+            })();
+            build_done.store(true, Ordering::SeqCst);
+            result
         });
+        let (workload, store, cache_hit) = built?;
         crate::info!(
             "job {}: store cache {} (key {:016x})",
             job.id,

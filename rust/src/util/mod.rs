@@ -3,6 +3,7 @@
 
 pub mod csvio;
 pub mod logging;
+pub mod procinfo;
 pub mod rng;
 pub mod stats;
 pub mod timer;

@@ -204,7 +204,7 @@ fn prefix_overflow_recovers_on_backtrack() {
 }
 
 fn cfg_chunk(mode: CountingMode, chunk_rows: usize) -> CountingConfig {
-    CountingConfig { mode, chunk_rows }
+    CountingConfig { mode, chunk_rows, cache: None }
 }
 
 /// Dense stores: naive, prefix, and every chunking of prefix produce the

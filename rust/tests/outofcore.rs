@@ -1,0 +1,273 @@
+//! The out-of-core + count-cache contract, end to end.
+//!
+//! Two invariants, crossed against each other and everything else:
+//!   1. **backing is invisible** — a `.bnd`-mapped dataset builds the
+//!      same stores, byte for byte, as the in-memory dataset it was
+//!      serialized from, for every counting mode × chunk size × thread
+//!      count × store backend × restriction;
+//!   2. **the count cache is invisible** — builds with the cross-tile
+//!      cache attached (cold or warm, shared across naive/prefix/
+//!      chunked builds) reproduce the uncached bytes exactly, while the
+//!      cache's own telemetry proves it actually engaged.
+//! Plus the format itself: CSV → `bnlearn ingest` → `.bnd` → mmap
+//! round-trips the dataset, and a full learning run over the mapped
+//! file is trajectory-identical to the same run over the sampled data.
+
+use std::sync::Arc;
+
+use bnlearn::bn::sampling::forward_sample;
+use bnlearn::bn::Network;
+use bnlearn::combinatorics::RestrictedLayout;
+use bnlearn::coordinator::{run_learning, LearnReport, RunConfig, Workload};
+use bnlearn::data::{bnd, Dataset};
+use bnlearn::exec::{ExecConfig, Schedule};
+use bnlearn::score::{
+    BdeParams, CountCache, CountCacheRef, CountingConfig, CountingMode, HashScoreStore,
+    ScoreStore, ScoreTable,
+};
+use bnlearn::util::Pcg32;
+
+/// Mixed-arity forward-sampled workload (same shape as the counting
+/// tests, so shapes with 4-state columns and collisions are covered).
+fn workload(n: usize, rows: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let dag = bnlearn::bn::random::random_dag(n, 3, n + 2, &mut rng);
+    let arities: Vec<usize> = (0..n).map(|i| if i % 4 == 0 { 4 } else { 2 }).collect();
+    let net = Network::with_random_cpts(dag, arities, &mut rng);
+    forward_sample(&net, rows, &mut rng)
+}
+
+fn temp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+/// A fresh cache that engages at any row count (`min_rows = 0`), keyed
+/// under an arbitrary dataset id — tests force engagement far below the
+/// production `DEFAULT_MIN_ROWS` threshold.
+fn eager_cache(dataset_key: u64) -> CountCacheRef {
+    CountCacheRef { cache: Arc::new(CountCache::new(1 << 24, 0)), dataset_key }
+}
+
+/// Dense full-grid stores: every backing × thread count × chunk size ×
+/// cache state reproduces the uncached in-memory naive build exactly.
+/// One cache is shared across ALL combinations, so later iterations hit
+/// histograms inserted by earlier ones — the warm path is exercised
+/// against the cold reference in the same loop.
+#[test]
+fn dense_store_bytes_survive_backing_chunking_threads_and_cache() {
+    let inmem = workload(8, 600, 41);
+    let path = temp("bnlearn_outofcore_dense.bnd");
+    inmem.save_bnd(&path).unwrap();
+    let mapped = Dataset::load_bnd(&path, None).unwrap();
+    assert!(mapped.is_mapped() && !inmem.is_mapped());
+    assert_eq!(inmem, mapped, "content-equal before any store is built");
+
+    let params = BdeParams::default();
+    let exec1 = ExecConfig::new(1, Schedule::Balanced, 0);
+    let (reference, _) =
+        ScoreTable::build_counted_with(&inmem, params, 3, &exec1, &CountingConfig::naive());
+    let shared = eager_cache(991);
+    for (which, data) in [("inmem", &inmem), ("mapped", &mapped)] {
+        for threads in [1usize, 3] {
+            for chunk_rows in [0usize, 64, 257] {
+                for cached in [false, true] {
+                    let counting = CountingConfig {
+                        mode: CountingMode::Prefix,
+                        chunk_rows,
+                        cache: cached.then(|| shared.clone()),
+                    };
+                    let exec = ExecConfig::new(threads, Schedule::Balanced, 32);
+                    let (table, _) =
+                        ScoreTable::build_counted_with(data, params, 3, &exec, &counting);
+                    assert_eq!(
+                        reference.raw(),
+                        table.raw(),
+                        "{which} threads={threads} chunk={chunk_rows} cached={cached}"
+                    );
+                }
+            }
+        }
+    }
+    let stats = shared.cache.stats();
+    assert!(stats.insertions > 0, "cache never engaged: {stats:?}");
+    assert!(stats.hits > 0, "warm builds never hit: {stats:?}");
+    let _ = std::fs::remove_file(path);
+}
+
+/// Restricted and hash-backed stores: the same matrix over the ragged
+/// key space (pools of 4) and the pruning backend.
+#[test]
+fn restricted_and_hash_stores_survive_backing_and_cache() {
+    let inmem = workload(8, 500, 42);
+    let n = inmem.cols();
+    let path = temp("bnlearn_outofcore_ragged.bnd");
+    inmem.save_bnd(&path).unwrap();
+    let mapped = Dataset::load_bnd(&path, None).unwrap();
+
+    let params = BdeParams::default();
+    let exec = ExecConfig::new(3, Schedule::Balanced, 16);
+    let pools: Vec<Vec<usize>> =
+        (0..n).map(|i| (0..n).filter(|&c| c != i).take(4).collect()).collect();
+    let rl = Arc::new(RestrictedLayout::new(n, 3, pools));
+    let naive = CountingConfig::naive();
+    let (dense_ref, _) =
+        ScoreTable::build_restricted_counted_with(&inmem, params, &rl, &exec, &naive);
+    let hash_ref =
+        HashScoreStore::build_restricted_counted_with(&inmem, params, &rl, &exec, None, &naive).0;
+
+    let shared = eager_cache(992);
+    for (which, data) in [("inmem", &inmem), ("mapped", &mapped)] {
+        for chunk_rows in [0usize, 128] {
+            let counting = CountingConfig {
+                mode: CountingMode::Prefix,
+                chunk_rows,
+                cache: Some(shared.clone()),
+            };
+            let (dense, _) =
+                ScoreTable::build_restricted_counted_with(data, params, &rl, &exec, &counting);
+            assert_eq!(dense_ref.raw(), dense.raw(), "{which} chunk={chunk_rows}");
+            let hash = HashScoreStore::build_restricted_counted_with(
+                data, params, &rl, &exec, None, &counting,
+            )
+            .0;
+            assert_eq!(hash_ref.stored_entries(), hash.stored_entries(), "{which}");
+            for node in 0..n {
+                for cell in 0..rl.row_len(node) {
+                    assert_eq!(
+                        hash_ref.get_cell(node, cell),
+                        hash.get_cell(node, cell),
+                        "{which} chunk={chunk_rows} node {node} cell {cell}"
+                    );
+                }
+            }
+        }
+    }
+    assert!(shared.cache.stats().hits > 0, "ragged warm path never hit");
+    let _ = std::fs::remove_file(path);
+}
+
+/// CSV → `ingest_csv` → mmap round-trip at the integration level: the
+/// streamed two-pass converter and the in-memory CSV loader agree, a
+/// prefix load truncates, and stores built over the ingested file match
+/// stores over the original sample.
+#[test]
+fn ingest_roundtrips_csv_and_builds_identical_stores() {
+    let sampled = workload(6, 400, 43);
+    // Pin every column's first `arity` rows to an enumeration of its
+    // states: ingest infers arity as max+1, so full coverage makes the
+    // inferred header provably equal to the generating arities (a rare
+    // never-sampled state would otherwise shrink it).
+    let cols: Vec<Vec<u8>> = (0..sampled.cols())
+        .map(|c| {
+            let mut col = sampled.column(c).to_vec();
+            for v in 0..sampled.arities()[c] {
+                col[v] = v as u8;
+            }
+            col
+        })
+        .collect();
+    let data = Dataset::from_columns(cols, sampled.arities().to_vec());
+    let csv = temp("bnlearn_outofcore_roundtrip.csv");
+    let out = temp("bnlearn_outofcore_roundtrip.bnd");
+    data.save_csv(&csv).unwrap();
+    // A tiny block size forces many scatter flushes through pass 2.
+    let (cols, rows) = bnd::ingest_csv(&csv, &out, 37).unwrap();
+    assert_eq!((cols, rows), (6, 400));
+    let mapped = Dataset::load_bnd(&out, None).unwrap();
+    assert_eq!(mapped, Dataset::load_csv(&csv, None).unwrap());
+    assert_eq!(mapped.arities(), data.arities());
+    let prefix = Dataset::load_bnd(&out, Some(123)).unwrap();
+    assert_eq!(prefix.rows(), 123);
+    assert_eq!(prefix.column(3), &data.column(3)[..123]);
+
+    let params = BdeParams::default();
+    let exec = ExecConfig::new(2, Schedule::Balanced, 0);
+    let (a, _) = ScoreTable::build_counted_with(&data, params, 3, &exec, &CountingConfig::prefix());
+    let (b, _) =
+        ScoreTable::build_counted_with(&mapped, params, 3, &exec, &CountingConfig::prefix());
+    assert_eq!(a.raw(), b.raw());
+    let _ = std::fs::remove_file(csv);
+    let _ = std::fs::remove_file(out);
+}
+
+/// Warm rebuilds are bit-identical and actually cheaper in counting
+/// work: a second build with the same warm cache serves every dense
+/// histogram from memory (hits grow, insertions don't).
+#[test]
+fn warm_rebuild_is_bit_identical_and_served_from_cache() {
+    let data = workload(7, 450, 44);
+    let params = BdeParams::default();
+    let exec = ExecConfig::new(2, Schedule::Balanced, 0);
+    let shared = eager_cache(993);
+    let counting = CountingConfig::prefix().with_cache(shared.clone());
+    let (cold, _) = ScoreTable::build_counted_with(&data, params, 3, &exec, &counting);
+    let after_cold = shared.cache.stats();
+    assert!(after_cold.insertions > 0);
+    let (warm, _) = ScoreTable::build_counted_with(&data, params, 3, &exec, &counting);
+    let after_warm = shared.cache.stats();
+    assert_eq!(cold.raw(), warm.raw());
+    assert_eq!(
+        after_warm.insertions, after_cold.insertions,
+        "warm build should re-insert nothing"
+    );
+    assert!(after_warm.hits > after_cold.hits, "warm build should hit");
+}
+
+/// End-to-end out-of-core learning: `--network bnd:<path>` over a
+/// mapped file produces the same trajectory (best scores and graphs) as
+/// the in-memory run that generated the file — the store is identical,
+/// and the chain seed is the only other input.
+#[test]
+fn learning_over_mapped_bnd_matches_in_memory_run() {
+    let base = RunConfig {
+        network: "asia".into(),
+        rows: 500,
+        iters: 150,
+        chains: 2,
+        s: 2,
+        seed: 45,
+        threads: 2,
+        ..RunConfig::default()
+    };
+    let sampled = Workload::build(&base.network, base.rows, 0.0, base.seed).unwrap();
+    let path = temp("bnlearn_outofcore_learn.bnd");
+    sampled.data.save_bnd(&path).unwrap();
+    let a = run_learning(&base, None).unwrap();
+    let mapped_cfg = RunConfig { network: format!("bnd:{}", path.display()), ..base.clone() };
+    let b = run_learning(&mapped_cfg, None).unwrap();
+    let scores = |r: &LearnReport| -> Vec<u64> {
+        r.result.best.iter().map(|(s, _)| s.to_bits()).collect()
+    };
+    assert_eq!(scores(&a), scores(&b), "best-score bits diverged across backing");
+    let edges = |r: &LearnReport| -> Vec<Vec<(usize, usize)>> {
+        r.result.best.iter().map(|(_, d)| d.edges()).collect()
+    };
+    assert_eq!(edges(&a), edges(&b), "best-graph structures diverged across backing");
+    let _ = std::fs::remove_file(path);
+}
+
+/// `--count-cache on|off` cannot move a trajectory: identical best
+/// scores and graphs either way, at a row count where the shared cache
+/// genuinely engages (rows ≥ DEFAULT_MIN_ROWS).
+#[test]
+fn count_cache_flag_is_trajectory_invisible_at_scale() {
+    let base = RunConfig {
+        network: "asia".into(),
+        rows: 20_000,
+        iters: 60,
+        s: 2,
+        seed: 46,
+        threads: 2,
+        ..RunConfig::default()
+    };
+    let on = RunConfig { count_cache: true, ..base.clone() };
+    let off = RunConfig { count_cache: false, ..base };
+    assert!(on.counting_config().cache.is_some(), "flag should attach the shared cache");
+    assert!(off.counting_config().cache.is_none());
+    let a = run_learning(&on, None).unwrap();
+    let b = run_learning(&off, None).unwrap();
+    let bits = |r: &LearnReport| -> Vec<u64> {
+        r.result.best.iter().map(|(s, _)| s.to_bits()).collect()
+    };
+    assert_eq!(bits(&a), bits(&b), "count cache changed a trajectory");
+}
