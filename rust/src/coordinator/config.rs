@@ -171,6 +171,13 @@ pub struct RunConfig {
     pub checkpoint_path: std::path::PathBuf,
     /// Resume a posterior run from this checkpoint.
     pub resume: Option<std::path::PathBuf>,
+    /// Write the telemetry registry as a JSON snapshot to this file
+    /// when the run finishes (`--metrics-out`; the one-shot analogue
+    /// of the daemon's `GET /metrics`).
+    pub metrics_out: Option<std::path::PathBuf>,
+    /// Install a JSONL span-trace sink in this directory
+    /// (`--trace-dir`; see `telemetry::span`).
+    pub trace_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -209,6 +216,8 @@ impl Default for RunConfig {
             checkpoint_every: 0,
             checkpoint_path: "results/posterior.ckpt".into(),
             resume: None,
+            metrics_out: None,
+            trace_dir: None,
         }
     }
 }
@@ -301,6 +310,8 @@ impl RunConfig {
                 "--checkpoint-every" => cfg.checkpoint_every = next()?.parse()?,
                 "--checkpoint" => cfg.checkpoint_path = next()?.into(),
                 "--resume" => cfg.resume = Some(next()?.into()),
+                "--metrics-out" => cfg.metrics_out = Some(next()?.into()),
+                "--trace-dir" => cfg.trace_dir = Some(next()?.into()),
                 other => bail!("unknown flag {other:?}"),
             }
         }
@@ -380,6 +391,18 @@ mod tests {
         assert_eq!(d.thin, 1);
         assert_eq!(d.checkpoint_every, 0);
         assert!(d.resume.is_none());
+    }
+
+    #[test]
+    fn parses_telemetry_flags() {
+        let c = RunConfig::from_args(&args(
+            "--metrics-out results/metrics.json --trace-dir results/traces",
+        ))
+        .unwrap();
+        assert_eq!(c.metrics_out, Some(std::path::PathBuf::from("results/metrics.json")));
+        assert_eq!(c.trace_dir, Some(std::path::PathBuf::from("results/traces")));
+        let d = RunConfig::default();
+        assert!(d.metrics_out.is_none() && d.trace_dir.is_none());
     }
 
     #[test]

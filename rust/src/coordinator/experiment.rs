@@ -168,11 +168,13 @@ pub fn build_run_store(
     workload: &Workload,
     priors: Option<&InterfaceMatrix>,
 ) -> (StoreHandle, f64) {
+    let _span = crate::span!("store_build");
     let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
     let timer = Timer::start();
     let ppf = priors.map(|m| m.ppf_matrix());
     let exec_cfg = cfg.exec_config();
     let restriction = {
+        let _span = crate::span!("restrict_screen");
         let exec = exec_cfg.executor();
         crate::restrict::build_restriction(
             &workload.data,
@@ -238,6 +240,7 @@ pub fn run_learning_with_store(
     let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
 
     // ---- engine setup + sampling ----
+    let _span = crate::span!("learn_sample");
     let mut setup_secs = 0.0;
     let result = match cfg.engine {
         EngineKind::Xla => run_xla_chain(cfg, store.as_dyn(), n, &mut setup_secs, control)?,
@@ -280,6 +283,7 @@ pub fn run_learning_with_store(
         .clone();
     let psrf = diagnostics::psrf(&result.traces);
     let ess = diagnostics::ess_total(&result.traces);
+    set_diagnostic_gauges(psrf, ess);
     Ok(LearnReport {
         config: cfg.clone(),
         roc: roc_point(workload.truth_dag(), &best),
@@ -299,6 +303,18 @@ pub fn run_learning_with_store(
         ess,
         peak_resident_bytes: crate::util::procinfo::peak_resident_bytes(),
     })
+}
+
+/// Mirror finished-run convergence diagnostics into the telemetry
+/// gauges (the daemon's sidecar refreshes the same gauges live).
+fn set_diagnostic_gauges(psrf: Option<f64>, ess: Option<f64>) {
+    let tm = crate::telemetry::metrics::chain();
+    if let Some(p) = psrf {
+        tm.psrf.set(p);
+    }
+    if let Some(e) = ess {
+        tm.ess.set(e);
+    }
 }
 
 /// Crude work model: a full rescore enumerates ~C(n, s+1) candidate
@@ -530,6 +546,7 @@ pub fn run_posterior_with_store(
         resume: cfg.resume.clone(),
         control,
     };
+    let _span = crate::span!("posterior_sample");
     let engine_exec = engine_executor(cfg, n, None);
     let engine_exec_ref = engine_exec.as_deref();
     let run = run_posterior_chains(
@@ -561,6 +578,7 @@ pub fn run_posterior_with_store(
         .collect();
     let psrf = diagnostics::psrf(&post_traces);
     let ess = diagnostics::ess_total(&post_traces);
+    set_diagnostic_gauges(psrf, ess);
 
     let truth = workload.truth_dag();
     let consensus_graph = consensus::consensus_dag(n, &edge_probs, cfg.threshold);

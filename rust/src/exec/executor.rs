@@ -58,13 +58,28 @@ pub trait KernelExecutor: Sync {
             };
             self.dispatch(items, &timed);
         }
-        DispatchStats {
+        let stats = DispatchStats {
             worker_busy_secs: worker_nanos
                 .iter()
                 .map(|a| a.load(Ordering::Relaxed) as f64 * 1e-9)
                 .collect(),
             item_secs: item_nanos.iter().map(|a| a.load(Ordering::Relaxed) as f64 * 1e-9).collect(),
+        };
+        // Mirror the profile into the live registry: accumulated busy
+        // seconds per worker slot, per-item cost histogram, and the
+        // imbalance of this dispatch as a gauge — the same numbers
+        // `DispatchStats` reports post-hoc, scrapeable mid-run.
+        let m = crate::telemetry::metrics::exec();
+        for (worker, &busy) in stats.worker_busy_secs.iter().enumerate() {
+            if busy > 0.0 {
+                m.worker_busy.with(&[&worker.to_string()]).add(busy);
+            }
         }
+        for &secs in &stats.item_secs {
+            m.item_seconds.observe(secs);
+        }
+        m.imbalance.set(stats.imbalance());
+        stats
     }
 }
 
@@ -177,6 +192,9 @@ impl KernelExecutor for SerialExecutor {
     }
 
     fn dispatch(&self, items: usize, kernel: &(dyn Fn(usize, usize) + Sync)) {
+        let m = crate::telemetry::metrics::exec();
+        m.dispatches.inc();
+        m.items.add(items as u64);
         for item in 0..items {
             kernel(0, item);
         }
@@ -214,6 +232,9 @@ impl KernelExecutor for PoolExecutor {
     }
 
     fn dispatch(&self, items: usize, kernel: &(dyn Fn(usize, usize) + Sync)) {
+        let m = crate::telemetry::metrics::exec();
+        m.dispatches.inc();
+        m.items.add(items as u64);
         let workers = self.threads.min(items);
         if workers <= 1 {
             for item in 0..items {
@@ -237,6 +258,12 @@ impl KernelExecutor for PoolExecutor {
             }
             Schedule::Balanced => {
                 let next = AtomicUsize::new(0);
+                // Live queue depth: each claim publishes how many items
+                // the shared queue still holds. Racy by design (one
+                // relaxed store per claim) — a scraper sees the depth
+                // within one item of the truth.
+                let depth = &m.queue_depth;
+                depth.set_u64(items as u64);
                 std::thread::scope(|scope| {
                     let next = &next;
                     for worker in 0..workers {
@@ -245,10 +272,12 @@ impl KernelExecutor for PoolExecutor {
                             if item >= items {
                                 break;
                             }
+                            depth.set_u64((items - item - 1) as u64);
                             kernel(worker, item);
                         });
                     }
                 });
+                depth.set_u64(0);
             }
         }
     }

@@ -30,7 +30,13 @@
 //!   are paired (`--engine … --store dense|hash`)
 //! * the service layer: [`service`] (the `serve` subcommand's daemon —
 //!   JSON-lines TCP protocol, async job queue, shared score-store
-//!   cache, streaming progress, cooperative cancellation).
+//!   cache, streaming progress, cooperative cancellation, and the
+//!   `--http-addr` observability endpoint serving `GET /metrics`)
+//! * observability: [`telemetry`] (process-wide metrics registry,
+//!   per-layer metric handles, `crate::span!` RAII trace timers) —
+//!   written to by every layer above, rendered by the service layer's
+//!   HTTP endpoint and the CLI's `--metrics-out`; strictly passive
+//!   (never read back by the algorithms it observes).
 
 // Carried codebase idioms clippy dislikes but that read better here
 // (index-parallel loops over node/subset grids, paper-shaped argument
@@ -57,4 +63,5 @@ pub mod runtime;
 pub mod score;
 pub mod scorer;
 pub mod service;
+pub mod telemetry;
 pub mod util;

@@ -100,6 +100,11 @@ fn print_usage() {
                             ablation benches)\n\
            --log-level error|warn|info|debug  (debug adds per-tile timing histograms)\n\
            --trace [--trace-out PATH]  (record per-iteration score traces to CSV)\n\
+           --metrics-out FILE  (write the telemetry registry as a JSON snapshot\n\
+                            when the run finishes — the one-shot analogue of the\n\
+                            daemon's GET /metrics)\n\
+           --trace-dir DIR  (append JSONL span-trace events — one line per timed\n\
+                            phase — to DIR/trace-<pid>.jsonl)\n\
          \n\
          posterior flags (learn --posterior; needs --store dense, host engine):\n\
            --posterior --burnin N --thin N --threshold P\n\
@@ -121,6 +126,9 @@ fn print_usage() {
            --cache-bytes N[k|m|g]  (score-store cache budget, default 1g)\n\
            --state-dir DIR|none  (job journal for crash recovery; default\n\
                             results/service)\n\
+           --http-addr HOST:PORT|none  (observability endpoint: GET /metrics in\n\
+                            Prometheus text format, /healthz, /jobs; default none,\n\
+                            port 0 picks a free port)\n\
            wire commands: submit status events report cancel stats shutdown\n\
            (submit args = the learn flag vector; see DESIGN.md section 15)\n\
          \n\
@@ -131,12 +139,14 @@ fn print_usage() {
 fn cmd_learn(args: &[String]) -> Result<()> {
     let cfg = parse_run_config(args)?;
     bnlearn::util::logging::set_level(cfg.log_level);
+    init_telemetry(&cfg)?;
     let control = ChainControl::shared();
     interrupt::install(&control);
     if cfg.posterior {
         return cmd_posterior(&cfg, &control);
     }
     let report = run_learning_controlled(&cfg, None, Some(control.clone()))?;
+    write_metrics_snapshot(&cfg)?;
     println!("{}", report.summary());
     if cfg.trace {
         dump_traces(&cfg.trace_out, &report.result.traces)?;
@@ -161,6 +171,7 @@ fn cmd_learn(args: &[String]) -> Result<()> {
 /// diagnostics, consensus graph, threshold-swept ROC curve.
 fn cmd_posterior(cfg: &RunConfig, control: &Arc<ChainControl>) -> Result<()> {
     let report = run_posterior_controlled(cfg, None, Some(control.clone()))?;
+    write_metrics_snapshot(cfg)?;
     println!("{}", report.summary());
     if cfg.trace {
         dump_traces(&cfg.trace_out, &report.result.traces)?;
@@ -204,7 +215,11 @@ fn cmd_posterior(cfg: &RunConfig, control: &Arc<ChainControl>) -> Result<()> {
         report.baseline_auc
     );
     if cfg.checkpoint_every > 0 {
-        println!("checkpoint: every {} iters -> {:?}", cfg.checkpoint_every, cfg.checkpoint_path);
+        bnlearn::info!(
+            "checkpoint: every {} iters -> {:?}",
+            cfg.checkpoint_every,
+            cfg.checkpoint_path
+        );
     }
     if control.is_cancelled() {
         if cfg.checkpoint_every > 0 {
@@ -213,6 +228,30 @@ fn cmd_posterior(cfg: &RunConfig, control: &Arc<ChainControl>) -> Result<()> {
             println!("interrupted: posterior reflects completed segments only");
         }
     }
+    Ok(())
+}
+
+/// Install the `--trace-dir` JSONL span sink before a run starts, so
+/// the preprocessing spans are captured too.
+fn init_telemetry(cfg: &RunConfig) -> Result<()> {
+    if let Some(dir) = &cfg.trace_dir {
+        let path = bnlearn::telemetry::install_trace_dir(dir)?;
+        bnlearn::info!("span traces -> {path:?}");
+    }
+    Ok(())
+}
+
+/// Write the telemetry registry as a `--metrics-out` JSON snapshot —
+/// the one-shot analogue of the daemon's `GET /metrics`, so benches
+/// and CI can assert on the same numbers a scraper would see.
+fn write_metrics_snapshot(cfg: &RunConfig) -> Result<()> {
+    let Some(path) = &cfg.metrics_out else { return Ok(()) };
+    bnlearn::telemetry::metrics::refresh_process_gauges();
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, bnlearn::telemetry::registry().render_json())?;
+    bnlearn::info!("metrics snapshot -> {path:?}");
     Ok(())
 }
 
@@ -225,13 +264,14 @@ fn dump_traces(path: &Path, traces: &[Vec<f64>]) -> Result<()> {
         }
     }
     t.write_csv(path)?;
-    println!("wrote {} trace rows -> {path:?}", t.rows.len());
+    bnlearn::info!("wrote {} trace rows -> {path:?}", t.rows.len());
     Ok(())
 }
 
 fn cmd_preprocess(args: &[String]) -> Result<()> {
     let cfg = parse_run_config(args)?;
     bnlearn::util::logging::set_level(cfg.log_level);
+    init_telemetry(&cfg)?;
     let workload = Workload::build(&cfg.network, cfg.rows, cfg.noise, cfg.seed)?;
     let params = BdeParams { gamma: cfg.gamma, ..BdeParams::default() };
     let timer = Timer::start();
@@ -321,6 +361,7 @@ fn cmd_preprocess(args: &[String]) -> Result<()> {
             None => "overflows u64".to_string(),
         },
     );
+    write_metrics_snapshot(&cfg)?;
     Ok(())
 }
 
@@ -520,7 +561,9 @@ mod interrupt {
         let control = control.clone();
         std::thread::spawn(move || loop {
             if INTERRUPTED.load(Ordering::SeqCst) {
-                eprintln!("interrupt: cancelling at the next MCMC step (Ctrl-C again to kill)");
+                bnlearn::warn!(
+                    "interrupt: cancelling at the next MCMC step (Ctrl-C again to kill)"
+                );
                 control.cancel();
                 return;
             }

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use super::best::BestGraphTracker;
-use super::control::ChainControl;
+use super::control::{ChainControl, ScoreWindow};
 use super::order::Order;
 use crate::scorer::{BestGraph, OrderScorer};
 use crate::util::Pcg32;
@@ -84,6 +84,7 @@ pub struct McmcChain<'s, S: OrderScorer + ?Sized> {
     record_trace: bool,
     proposal: ProposalKind,
     control: Option<Arc<ChainControl>>,
+    window: Option<Arc<ScoreWindow>>,
     rng: Pcg32,
 }
 
@@ -106,6 +107,7 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
             record_trace: false,
             proposal: ProposalKind::Swap,
             control: None,
+            window: None,
             rng,
         }
     }
@@ -133,6 +135,7 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
             record_trace: false,
             proposal: ProposalKind::Swap,
             control: None,
+            window: None,
             rng,
         }
     }
@@ -155,12 +158,24 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
         self.proposal = proposal;
     }
 
-    /// Attach a shared [`ChainControl`]: [`Self::run`] /
-    /// [`Self::run_observed`] poll its cancel flag between steps and
-    /// fold every completed step into its progress counters. The
-    /// control never touches RNG or scoring state, so an uncancelled
-    /// controlled run is bit-identical to an uncontrolled one.
+    /// Attach a shared [`ChainControl`] as chain 0 of its run — see
+    /// [`Self::set_control_indexed`].
     pub fn set_control(&mut self, control: Arc<ChainControl>) {
+        self.set_control_indexed(control, 0);
+    }
+
+    /// Attach a shared [`ChainControl`] as chain `index` of its run:
+    /// [`Self::run`] / [`Self::run_observed`] poll its cancel flag
+    /// between steps, fold every completed step into its progress
+    /// counters, record post-step scores into the control's rolling
+    /// score window for `index` (feeding live PSRF/ESS gauges), and
+    /// tick the global `bnlearn_chain_*` telemetry. The control never
+    /// touches RNG or scoring state, so an uncancelled controlled run
+    /// is bit-identical to an uncontrolled one. Keyed by `index` so a
+    /// checkpoint-segmented chain keeps appending to the same window
+    /// across segments.
+    pub fn set_control_indexed(&mut self, control: Arc<ChainControl>, index: usize) {
+        self.window = Some(control.window(index));
         self.control = Some(control);
     }
 
@@ -244,7 +259,19 @@ impl<'s, S: OrderScorer + ?Sized> McmcChain<'s, S> {
             self.stats.trace.push(self.current_score);
         }
         if let Some(control) = &self.control {
+            // Telemetry only — write-only from the chain's point of
+            // view, gated on an attached control so bare library/bench
+            // chains pay zero per-step atomics.
             control.count_step(accept);
+            let tm = crate::telemetry::metrics::chain();
+            tm.steps.inc();
+            if accept {
+                tm.accepts.inc();
+            }
+            tm.interval_length.observe((hi - lo) as f64);
+            if let Some(window) = &self.window {
+                window.record(self.current_score);
+            }
         }
         accept
     }

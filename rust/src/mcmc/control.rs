@@ -4,7 +4,64 @@
 //! chains run.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+/// Capacity of each chain's rolling score window (recent post-step
+/// scores): big enough for PSRF/ESS to stabilize, small enough that a
+/// window is a few KB.
+pub const ROLLING_WINDOW: usize = 512;
+
+/// A rolling window of one chain's recent post-step scores, feeding
+/// the live PSRF/ESS telemetry gauges. Single writer (the chain), any
+/// number of snapshot readers; a small mutex-guarded ring, locked once
+/// per MH step by the writer.
+///
+/// Like the progress counters, windows are **telemetry only**: nothing
+/// the chain computes ever reads them back.
+#[derive(Debug, Default)]
+pub struct ScoreWindow {
+    ring: Mutex<Ring>,
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    buf: Vec<f64>,
+    total: u64,
+}
+
+impl ScoreWindow {
+    /// Record a post-step score (overwrites the oldest entry once the
+    /// window is full).
+    pub fn record(&self, score: f64) {
+        let mut ring = self.ring.lock().expect("score window lock poisoned");
+        if ring.buf.len() < ROLLING_WINDOW {
+            ring.buf.push(score);
+        } else {
+            let pos = (ring.total % ROLLING_WINDOW as u64) as usize;
+            ring.buf[pos] = score;
+        }
+        ring.total += 1;
+    }
+
+    /// Scores recorded so far (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.ring.lock().expect("score window lock poisoned").total
+    }
+
+    /// The window contents, oldest first.
+    pub fn snapshot(&self) -> Vec<f64> {
+        let ring = self.ring.lock().expect("score window lock poisoned");
+        if ring.total <= ROLLING_WINDOW as u64 {
+            ring.buf.clone()
+        } else {
+            let pos = (ring.total % ROLLING_WINDOW as u64) as usize;
+            let mut out = Vec::with_capacity(ROLLING_WINDOW);
+            out.extend_from_slice(&ring.buf[pos..]);
+            out.extend_from_slice(&ring.buf[..pos]);
+            out
+        }
+    }
+}
 
 /// Control/telemetry block shared between a controller (the one-shot
 /// CLI's Ctrl-C handler, the service daemon's `cancel` endpoint) and
@@ -28,6 +85,9 @@ pub struct ChainControl {
     pub iterations: AtomicU64,
     /// Accepted proposals across all chains sharing this block.
     pub accepted: AtomicU64,
+    /// Rolling score windows, one per chain index (see
+    /// [`Self::window`]); read by the live PSRF/ESS diagnostics.
+    windows: Mutex<Vec<Arc<ScoreWindow>>>,
 }
 
 impl ChainControl {
@@ -58,6 +118,24 @@ impl ChainControl {
         if accepted {
             self.accepted.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// The rolling score window of chain `chain` (created on first
+    /// use). Keyed by index so a checkpoint-segmented run's chain `c`
+    /// keeps appending to the same window across segments.
+    pub fn window(&self, chain: usize) -> Arc<ScoreWindow> {
+        let mut windows = self.windows.lock().expect("windows lock poisoned");
+        while windows.len() <= chain {
+            windows.push(Arc::new(ScoreWindow::default()));
+        }
+        windows[chain].clone()
+    }
+
+    /// Snapshot every chain's rolling score window, oldest first per
+    /// chain (empty for chains that have not stepped yet).
+    pub fn rolling_traces(&self) -> Vec<Vec<f64>> {
+        let windows = self.windows.lock().expect("windows lock poisoned");
+        windows.iter().map(|w| w.snapshot()).collect()
     }
 }
 

@@ -196,7 +196,7 @@ where
                     chain.set_proposal(spec.proposal);
                     chain.set_record_trace(spec.record_trace);
                     if let Some(control) = &spec.control {
-                        chain.set_control(control.clone());
+                        chain.set_control_indexed(control.clone(), c);
                     }
                     chain.run(spec.iters);
                     (chain.tracker.clone(), chain.stats.clone())

@@ -278,7 +278,7 @@ where
     chain.set_proposal(opts.proposal);
     chain.set_record_trace(opts.record_trace);
     if let Some(control) = &opts.control {
-        chain.set_control(control.clone());
+        chain.set_control_indexed(control.clone(), c);
     }
     chain.run_observed(seg, |order, _score| acc.observe(order, store));
     let (order, score, rng, tracker, stats) = chain.into_parts();

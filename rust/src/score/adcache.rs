@@ -154,15 +154,18 @@ impl CountCache {
         let mut inner = self.lock();
         inner.clock += 1;
         let now = inner.clock;
+        let tm = crate::telemetry::metrics::count_cache();
         match inner.map.get_mut(&key) {
             Some(entry) => {
                 entry.last_used = now;
                 let hist = entry.hist.clone();
                 inner.hits += 1;
+                tm.hits.inc();
                 Some(hist)
             }
             None => {
                 inner.misses += 1;
+                tm.misses.inc();
                 None
             }
         }
@@ -190,6 +193,10 @@ impl CountCache {
         inner.bytes += bytes;
         inner.insertions += 1;
         self.evict_to_fit(&mut inner);
+        let tm = crate::telemetry::metrics::count_cache();
+        tm.insertions.inc();
+        tm.bytes.set_u64(inner.bytes as u64);
+        tm.entries.set_u64(inner.map.len() as u64);
     }
 
     /// Evict LRU unpinned entries until the budget fits. Pinned
@@ -207,6 +214,7 @@ impl CountCache {
             if let Some(e) = inner.map.remove(&Key { dataset, node, parents }) {
                 inner.bytes -= e.bytes;
                 inner.evictions += 1;
+                crate::telemetry::metrics::count_cache().evictions.inc();
             }
         }
     }

@@ -578,7 +578,10 @@ pub(crate) fn fill_tiles(
         let mut guard = slices[i].lock().expect("tile slice poisoned");
         builder.fill_grid_range(grid, t.node, t.start, t.end, &mut guard);
     };
-    exec.dispatch_timed(tiles.len(), &kernel)
+    let stats = exec.dispatch_timed(tiles.len(), &kernel);
+    let cells: u64 = tiles.iter().map(|t| t.cells() as u64).sum();
+    crate::telemetry::metrics::counting().cells.with(&[counting.mode.name()]).add(cells);
+    stats
 }
 
 /// Row-chunked fill for large datasets: phase 1 fans `tiles × chunks`
@@ -670,6 +673,7 @@ pub(crate) fn fill_tiles_chunked(
         for (b, &h) in bank.iter_mut().zip(&builder.hist[..cells]) {
             *b += h;
         }
+        crate::telemetry::metrics::counting().chunk_merges.inc();
     };
     let mut stats = exec.dispatch_timed(tiles.len() * n_chunks, &accumulate);
 
@@ -724,6 +728,8 @@ pub(crate) fn fill_tiles_chunked(
         }
     };
     stats.merge(&exec.dispatch_timed(tiles.len(), &score));
+    let cells: u64 = tiles.iter().map(|t| t.cells() as u64).sum();
+    crate::telemetry::metrics::counting().cells.with(&[counting.mode.name()]).add(cells);
     stats
 }
 

@@ -123,10 +123,12 @@ impl StoreCache {
     where
         F: FnOnce() -> StoreHandle,
     {
+        let tm = crate::telemetry::metrics::store_cache();
         if self.capacity == 0 {
             let mut inner = self.lock();
             inner.misses += 1;
             drop(inner);
+            tm.misses.inc();
             return (Arc::new(build()), false);
         }
         enum Probe {
@@ -150,6 +152,7 @@ impl StoreCache {
                             *last_used = now;
                         }
                         inner.hits += 1;
+                        tm.hits.inc();
                         return (store, true);
                     }
                     Probe::Wait => {
@@ -160,6 +163,7 @@ impl StoreCache {
                     Probe::Claim => {
                         inner.slots.insert(key, Slot::Building);
                         inner.misses += 1;
+                        tm.misses.inc();
                         break;
                     }
                 }
@@ -186,8 +190,12 @@ impl StoreCache {
             let slot = Slot::Ready { store: store.clone(), bytes, last_used: inner.clock };
             inner.slots.insert(key, slot);
             inner.bytes += bytes;
+            tm.insertions.inc();
             self.evict_to_fit(&mut inner);
         }
+        tm.bytes.set_u64(inner.bytes as u64);
+        let entries = inner.slots.values().filter(|s| matches!(s, Slot::Ready { .. })).count();
+        tm.entries.set_u64(entries as u64);
         self.ready.notify_all();
         (store, false)
     }
@@ -207,6 +215,7 @@ impl StoreCache {
             if let Some(Slot::Ready { bytes, .. }) = inner.slots.remove(&key) {
                 inner.bytes -= bytes;
                 inner.evictions += 1;
+                crate::telemetry::metrics::store_cache().evictions.inc();
                 crate::debug!("store cache evicted key {key:016x} ({bytes} bytes)");
             }
         }

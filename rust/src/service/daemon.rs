@@ -31,11 +31,12 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::cache::StoreCache;
+use super::http;
 use super::job::{Job, JobId, JobState};
 use super::json::Json;
 use super::protocol::{self, Request};
@@ -65,6 +66,9 @@ pub struct ServeConfig {
     pub state_dir: Option<PathBuf>,
     /// Log verbosity.
     pub log_level: Level,
+    /// Observability HTTP endpoint address (`--http-addr`; `None`
+    /// disables it). Port 0 picks a free port.
+    pub http_addr: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -77,6 +81,7 @@ impl Default for ServeConfig {
             cache_bytes: 1 << 30,
             state_dir: Some(PathBuf::from("results/service")),
             log_level: Level::Info,
+            http_addr: None,
         }
     }
 }
@@ -101,6 +106,10 @@ impl ServeConfig {
                     cfg.state_dir = if value == "none" { None } else { Some(value.into()) };
                 }
                 "--log-level" => cfg.log_level = Level::parse(next()?)?,
+                "--http-addr" => {
+                    let value = next()?;
+                    cfg.http_addr = if value == "none" { None } else { Some(value.clone()) };
+                }
                 other => bail!("unknown serve flag {other:?}"),
             }
         }
@@ -131,6 +140,7 @@ fn parse_bytes(text: &str) -> Result<usize> {
 pub struct Daemon {
     cfg: ServeConfig,
     addr: SocketAddr,
+    started: Instant,
     cache: StoreCache,
     /// The process-shared count cache (its bytes charge the store
     /// cache's budget; held here for the `stats` command).
@@ -140,6 +150,8 @@ pub struct Daemon {
     queue_ready: Condvar,
     next_id: AtomicU64,
     shutdown: AtomicBool,
+    /// Stop handle of the `--http-addr` listener, when one is running.
+    http: Mutex<Option<http::HttpStop>>,
 }
 
 /// Handle on a started daemon: address, shutdown trigger, join.
@@ -165,6 +177,11 @@ impl DaemonHandle {
             let _ = t.join();
         }
     }
+
+    /// The bound `--http-addr` endpoint address, when one is running.
+    pub fn http_addr(&self) -> Option<SocketAddr> {
+        self.daemon.http.lock().expect("http lock poisoned").as_ref().map(|h| h.addr())
+    }
 }
 
 /// Start the daemon: install the shared executor, bind, recover the
@@ -188,15 +205,23 @@ pub fn start(cfg: ServeConfig) -> Result<DaemonHandle> {
         cache: StoreCache::with_counts(cfg.cache_bytes, Some(counts.clone())),
         counts,
         addr,
+        started: Instant::now(),
         jobs: Mutex::new(BTreeMap::new()),
         queue: Mutex::new(VecDeque::new()),
         queue_ready: Condvar::new(),
         next_id: AtomicU64::new(1),
         shutdown: AtomicBool::new(false),
+        http: Mutex::new(None),
         cfg,
     });
     daemon.recover_journal();
     let mut threads = Vec::new();
+    if let Some(http_addr) = daemon.cfg.http_addr.clone() {
+        let (stop, handle) = http::start(&http_addr, daemon.clone())?;
+        crate::info!("http endpoint on {}", stop.addr());
+        *daemon.http.lock().expect("http lock poisoned") = Some(stop);
+        threads.push(handle);
+    }
     for worker in 0..daemon.cfg.jobs {
         let d = daemon.clone();
         let t = thread::Builder::new()
@@ -223,6 +248,10 @@ pub fn start(cfg: ServeConfig) -> Result<DaemonHandle> {
 pub fn serve(cfg: ServeConfig) -> Result<()> {
     let handle = start(cfg)?;
     println!("bnlearn service listening on {}", handle.local_addr());
+    if let Some(addr) = handle.http_addr() {
+        // The smoke script parses this line to find the scrape port.
+        println!("bnlearn metrics listening on {addr}");
+    }
     handle.join();
     println!("bnlearn service stopped");
     Ok(())
@@ -232,13 +261,75 @@ fn field(key: &str, value: Json) -> (String, Json) {
     (key.to_string(), value)
 }
 
+/// `hits / (hits + misses)` — NaN (serialized as JSON `null`) while a
+/// cache is untouched.
+fn hit_rate(hits: u64, misses: u64) -> Json {
+    Json::Num(hits as f64 / (hits + misses) as f64)
+}
+
 fn obj(fields: Vec<(&str, Json)>) -> Json {
     Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Lifecycle states in census order (`stats` and the `/metrics`
+/// `bnlearn_daemon_jobs` family report all five, including zeros).
+const JOB_STATES: [JobState; 5] =
+    [JobState::Queued, JobState::Running, JobState::Done, JobState::Failed, JobState::Cancelled];
+
 impl Daemon {
     fn job(&self, id: JobId) -> Option<Arc<Job>> {
         self.jobs.lock().expect("job table lock poisoned").get(&id).cloned()
+    }
+
+    /// Seconds since the daemon started.
+    pub(crate) fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Count the live job table by lifecycle state.
+    fn job_census(&self) -> [(&'static str, u64); 5] {
+        let mut counts = [0u64; 5];
+        for job in self.jobs.lock().expect("job table lock poisoned").values() {
+            let state = job.state();
+            if let Some(i) = JOB_STATES.iter().position(|s| *s == state) {
+                counts[i] += 1;
+            }
+        }
+        let mut census = [("", 0u64); 5];
+        for (slot, (state, count)) in census.iter_mut().zip(JOB_STATES.iter().zip(counts)) {
+            *slot = (state.name(), count);
+        }
+        census
+    }
+
+    /// Refresh the daemon-level gauges (uptime, per-state job census).
+    /// Called at scrape and `stats` time; purely observational.
+    pub(crate) fn observe(&self) {
+        let tm = crate::telemetry::metrics::daemon();
+        tm.uptime_seconds.set(self.uptime_secs());
+        for (state, count) in self.job_census() {
+            tm.jobs.with(&[state]).set_u64(count);
+        }
+    }
+
+    /// The live job table for `GET /jobs`.
+    pub(crate) fn jobs_json(&self) -> Json {
+        let jobs = self.jobs.lock().expect("job table lock poisoned");
+        Json::Arr(
+            jobs.values()
+                .map(|job| {
+                    let (iterations, accepted) = job.control.progress();
+                    let args = job.args.iter().map(|a| Json::str(a.as_str())).collect();
+                    obj(vec![
+                        ("job", Json::num(job.id)),
+                        ("state", Json::str(job.state().name())),
+                        ("iterations", Json::num(iterations)),
+                        ("accepted", Json::num(accepted)),
+                        ("args", Json::Arr(args)),
+                    ])
+                })
+                .collect(),
+        )
     }
 
     fn worker_loop(self: Arc<Self>) {
@@ -372,6 +463,7 @@ impl Daemon {
                 Ok(vec![field("job", Json::num(job.id))])
             }
             Request::Stats => {
+                self.observe();
                 let cache = self.cache.stats();
                 let counts = self.counts.stats();
                 let jobs = self.jobs.lock().expect("job table lock poisoned").len();
@@ -382,6 +474,7 @@ impl Daemon {
                     ("evictions", Json::num(cache.evictions)),
                     ("entries", Json::num(cache.entries as u64)),
                     ("bytes", Json::num(cache.bytes as u64)),
+                    ("hit_rate", hit_rate(cache.hits, cache.misses)),
                 ]);
                 let counts_obj = obj(vec![
                     ("hits", Json::num(counts.hits)),
@@ -390,12 +483,17 @@ impl Daemon {
                     ("evictions", Json::num(counts.evictions)),
                     ("entries", Json::num(counts.entries as u64)),
                     ("bytes", Json::num(counts.bytes as u64)),
+                    ("hit_rate", hit_rate(counts.hits, counts.misses)),
                 ]);
+                let states =
+                    obj(self.job_census().iter().map(|&(s, c)| (s, Json::num(c))).collect());
                 Ok(vec![
                     field("cache", cache_obj),
                     field("count_cache", counts_obj),
                     field("jobs", Json::num(jobs as u64)),
                     field("queued", Json::num(queued as u64)),
+                    field("states", states),
+                    field("uptime_secs", Json::Num(self.uptime_secs())),
                 ])
             }
             Request::Shutdown => {
@@ -418,6 +516,9 @@ impl Daemon {
             job.control.cancel();
         }
         self.queue_ready.notify_all();
+        if let Some(http) = self.http.lock().expect("http lock poisoned").as_ref() {
+            http.stop();
+        }
         // A throwaway connection unblocks the accept loop so it can
         // observe the shutdown flag.
         let _ = TcpStream::connect(self.addr);
@@ -469,10 +570,12 @@ impl Daemon {
                     }
                     ticks += 1;
                     if ticks % 5 == 0 {
+                        let peak = crate::telemetry::metrics::refresh_process_gauges();
                         job.push_event(obj(vec![
                             ("type", Json::str("progress")),
                             ("phase", Json::str("build")),
                             ("elapsed_secs", Json::Num(build_timer.elapsed_secs())),
+                            ("peak_resident_bytes", peak.map_or(Json::Null, Json::num)),
                         ]));
                     }
                 }
@@ -515,10 +618,23 @@ impl Daemon {
                     let now = job.control.progress();
                     if now != last {
                         last = now;
+                        // Refresh the rolling convergence gauges from
+                        // the chains' score windows (telemetry only —
+                        // the run never reads these back).
+                        let tm = crate::telemetry::metrics::chain();
+                        let traces = job.control.rolling_traces();
+                        if let Some(p) = crate::posterior::diagnostics::psrf(&traces) {
+                            tm.psrf.set(p);
+                        }
+                        if let Some(e) = crate::posterior::diagnostics::ess_total(&traces) {
+                            tm.ess.set(e);
+                        }
+                        let peak = crate::telemetry::metrics::refresh_process_gauges();
                         job.push_event(obj(vec![
                             ("type", Json::str("progress")),
                             ("iterations", Json::num(now.0)),
                             ("accepted", Json::num(now.1)),
+                            ("peak_resident_bytes", peak.map_or(Json::Null, Json::num)),
                         ]));
                     }
                 }
@@ -664,7 +780,7 @@ mod tests {
     fn serve_config_parses_flags() {
         let cfg = ServeConfig::from_args(&args(
             "--addr 127.0.0.1:0 --jobs 3 --threads 4 --schedule static --cache-bytes 64m \
-             --state-dir none --log-level warn",
+             --state-dir none --log-level warn --http-addr 127.0.0.1:0",
         ))
         .unwrap();
         assert_eq!(cfg.addr, "127.0.0.1:0");
@@ -674,11 +790,15 @@ mod tests {
         assert_eq!(cfg.cache_bytes, 64 << 20);
         assert!(cfg.state_dir.is_none());
         assert_eq!(cfg.log_level, Level::Warn);
+        assert_eq!(cfg.http_addr.as_deref(), Some("127.0.0.1:0"));
+        let off = ServeConfig::from_args(&args("--http-addr none")).unwrap();
+        assert!(off.http_addr.is_none());
         // defaults
         let d = ServeConfig::default();
         assert_eq!(d.jobs, 2);
         assert_eq!(d.cache_bytes, 1 << 30);
         assert!(d.state_dir.is_some());
+        assert!(d.http_addr.is_none());
         // rejections
         assert!(ServeConfig::from_args(&args("--jobs 0")).is_err());
         assert!(ServeConfig::from_args(&args("--bogus 1")).is_err());

@@ -1,0 +1,127 @@
+//! The daemon's observability endpoint: a minimal HTTP/1.1 listener
+//! (`serve --http-addr`) serving
+//!
+//! * `GET /metrics` — the global [`crate::telemetry`] registry in
+//!   Prometheus text exposition format 0.0.4;
+//! * `GET /healthz` — a JSON liveness probe (`ok` + uptime);
+//! * `GET /jobs` — the live job table as JSON (id, state, progress,
+//!   argument vector), reusing [`super::json`].
+//!
+//! Scraping is **passive**: every handler only refreshes gauges and
+//! renders snapshots — it never touches job state, the queue, or any
+//! chain, so a run scraped continuously is bit-identical to one never
+//! scraped (the concurrent-scraper test in `tests/service.rs` holds
+//! this). Requests are handled serially on one `svc-http` thread;
+//! every response closes its connection, which keeps the loop a dozen
+//! lines and is plenty for scrape traffic.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use super::daemon::Daemon;
+use super::json::Json;
+
+/// Stop handle for a running HTTP listener: the daemon keeps one and
+/// trips it from `begin_shutdown`.
+pub(crate) struct HttpStop {
+    addr: SocketAddr,
+    flag: Arc<AtomicBool>,
+}
+
+impl HttpStop {
+    /// The bound address (resolves port 0).
+    pub(crate) fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask the listener thread to exit; a throwaway connection
+    /// unblocks its accept call so it observes the flag.
+    pub(crate) fn stop(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// Bind `addr` and spawn the `svc-http` listener thread.
+pub(crate) fn start(addr: &str, daemon: Arc<Daemon>) -> Result<(HttpStop, thread::JoinHandle<()>)> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding http endpoint {addr}"))?;
+    let bound = listener.local_addr()?;
+    let flag = Arc::new(AtomicBool::new(false));
+    let stop = HttpStop { addr: bound, flag: flag.clone() };
+    let handle = thread::Builder::new().name("svc-http".into()).spawn(move || {
+        for stream in listener.incoming() {
+            if flag.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(stream) => serve_request(stream, &daemon),
+                Err(e) => crate::warn!("http accept failed: {e}"),
+            }
+        }
+        crate::info!("http endpoint stopped");
+    })?;
+    Ok((stop, handle))
+}
+
+/// Handle one connection: parse the request line, drain the headers,
+/// route, respond, close.
+fn serve_request(stream: TcpStream, daemon: &Arc<Daemon>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut request_line = String::new();
+    if reader.read_line(&mut request_line).is_err() {
+        return;
+    }
+    let mut header = String::new();
+    loop {
+        header.clear();
+        match reader.read_line(&mut header) {
+            Ok(0) => break,
+            Ok(_) if header.trim_end().is_empty() => break,
+            Ok(_) => continue,
+            Err(_) => return,
+        }
+    }
+    let mut parts = request_line.split_whitespace();
+    let (method, target) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let path = target.split('?').next().unwrap_or("");
+    let mut writer = stream;
+    if method != "GET" {
+        respond(&mut writer, "405 Method Not Allowed", "text/plain", "method not allowed\n");
+        return;
+    }
+    match path {
+        "/metrics" => {
+            daemon.observe();
+            crate::telemetry::metrics::refresh_process_gauges();
+            let body = crate::telemetry::registry().render_prometheus();
+            respond(&mut writer, "200 OK", "text/plain; version=0.0.4; charset=utf-8", &body);
+        }
+        "/healthz" => {
+            let body = Json::Obj(vec![
+                ("ok".to_string(), Json::Bool(true)),
+                ("uptime_secs".to_string(), Json::Num(daemon.uptime_secs())),
+            ]);
+            respond(&mut writer, "200 OK", "application/json", &body.to_string());
+        }
+        "/jobs" => {
+            respond(&mut writer, "200 OK", "application/json", &daemon.jobs_json().to_string());
+        }
+        _ => respond(&mut writer, "404 Not Found", "text/plain", "not found\n"),
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: &str, content_type: &str, body: &str) {
+    let _ = write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+}

@@ -20,6 +20,8 @@
 //! * [`cache`] — the LRU-bounded, single-flight score-store cache;
 //! * [`daemon`] — the TCP listener, worker pool, journal, and the
 //!   `serve` subcommand entry point;
+//! * [`http`] — the `--http-addr` observability endpoint (`/metrics`
+//!   Prometheus text, `/healthz`, `/jobs`);
 //! * [`client`] — a blocking client used by tests and examples.
 //!
 //! Everything rides the standard library: `std::net` sockets, threads,
@@ -32,6 +34,7 @@
 pub mod cache;
 pub mod client;
 pub mod daemon;
+pub mod http;
 pub mod job;
 pub mod json;
 pub mod protocol;

@@ -1,0 +1,300 @@
+//! The crate's metric handles, registered once against the global
+//! registry and cached in `OnceLock`s so instrumented hot paths never
+//! touch the registration mutex.
+//!
+//! Naming scheme (DESIGN.md §18): every metric is
+//! `bnlearn_<layer>_<what>[_<unit>][_total]` — layer ∈ {exec, cache,
+//! count, chain, daemon, process}; counters end in `_total`, byte and
+//! second units are spelled out, families carry their discriminating
+//! label (`worker`, `cache`, `mode`, `state`).
+
+use std::sync::OnceLock;
+
+use super::registry::{Counter, CounterVec, FloatCounterVec, Gauge, GaugeVec, Histogram};
+
+/// Exec-layer metrics: dispatch volume, per-worker busy time, live
+/// queue depth, and the imbalance ratio of the last timed dispatch.
+pub struct ExecMetrics {
+    /// Dispatches issued (any executor backend).
+    pub dispatches: Counter,
+    /// Work items executed across all dispatches.
+    pub items: Counter,
+    /// Items not yet claimed in the currently-running balanced
+    /// dispatch (0 between dispatches).
+    pub queue_depth: Gauge,
+    /// `DispatchStats::imbalance()` of the most recent timed dispatch
+    /// (1.0 = perfectly balanced, `threads` = one worker did it all).
+    pub imbalance: Gauge,
+    /// Accumulated busy seconds per worker slot of timed dispatches.
+    pub worker_busy: FloatCounterVec,
+    /// Per-item wall seconds of timed dispatches.
+    pub item_seconds: Histogram,
+}
+
+/// Handles for the exec layer.
+pub fn exec() -> &'static ExecMetrics {
+    static M: OnceLock<ExecMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = super::registry();
+        ExecMetrics {
+            dispatches: r.counter(
+                "bnlearn_exec_dispatches_total",
+                "Kernel dispatches issued by the exec layer",
+            ),
+            items: r.counter(
+                "bnlearn_exec_items_total",
+                "Work items executed across all dispatches",
+            ),
+            queue_depth: r.gauge(
+                "bnlearn_exec_queue_depth",
+                "Unclaimed items in the running balanced dispatch",
+            ),
+            imbalance: r.gauge(
+                "bnlearn_exec_imbalance",
+                "Worker load-imbalance ratio of the last timed dispatch (1.0 = balanced)",
+            ),
+            worker_busy: r.float_counter_vec(
+                "bnlearn_exec_worker_busy_seconds_total",
+                "Accumulated busy seconds per worker slot (timed dispatches)",
+                &["worker"],
+            ),
+            item_seconds: r.histogram(
+                "bnlearn_exec_item_seconds",
+                "Wall seconds per work item (timed dispatches)",
+                &[1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0],
+            ),
+        }
+    })
+}
+
+/// Cache metrics, one family per statistic with a `cache` label:
+/// `store` (the daemon's score-store cache) and `count` (the
+/// cross-tile count cache).
+pub struct CacheMetrics {
+    pub hits: CounterVec,
+    pub misses: CounterVec,
+    pub evictions: CounterVec,
+    pub insertions: CounterVec,
+    pub bytes: GaugeVec,
+    pub entries: GaugeVec,
+}
+
+/// Handles for both caches (label value picks the cache).
+pub fn cache() -> &'static CacheMetrics {
+    static M: OnceLock<CacheMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = super::registry();
+        CacheMetrics {
+            hits: r.counter_vec("bnlearn_cache_hits_total", "Cache lookup hits", &["cache"]),
+            misses: r.counter_vec("bnlearn_cache_misses_total", "Cache lookup misses", &["cache"]),
+            evictions: r.counter_vec(
+                "bnlearn_cache_evictions_total",
+                "Entries evicted to fit the byte budget",
+                &["cache"],
+            ),
+            insertions: r.counter_vec(
+                "bnlearn_cache_insertions_total",
+                "Entries inserted",
+                &["cache"],
+            ),
+            bytes: r.gauge_vec("bnlearn_cache_bytes", "Resident cache bytes", &["cache"]),
+            entries: r.gauge_vec("bnlearn_cache_entries", "Resident cache entries", &["cache"]),
+        }
+    })
+}
+
+/// One cache's pre-resolved child handles: hot paths (the count
+/// cache's per-query lookups) tick these without re-resolving the
+/// label each call.
+pub struct CacheHandles {
+    pub hits: Counter,
+    pub misses: Counter,
+    pub evictions: Counter,
+    pub insertions: Counter,
+    pub bytes: Gauge,
+    pub entries: Gauge,
+}
+
+fn cache_handles(label: &str) -> CacheHandles {
+    let m = cache();
+    let l = &[label];
+    CacheHandles {
+        hits: m.hits.with(l),
+        misses: m.misses.with(l),
+        evictions: m.evictions.with(l),
+        insertions: m.insertions.with(l),
+        bytes: m.bytes.with(l),
+        entries: m.entries.with(l),
+    }
+}
+
+/// The score-store cache's resolved handles (`cache="store"`).
+pub fn store_cache() -> &'static CacheHandles {
+    static M: OnceLock<CacheHandles> = OnceLock::new();
+    M.get_or_init(|| cache_handles("store"))
+}
+
+/// The cross-tile count cache's resolved handles (`cache="count"`).
+pub fn count_cache() -> &'static CacheHandles {
+    static M: OnceLock<CacheHandles> = OnceLock::new();
+    M.get_or_init(|| cache_handles("count"))
+}
+
+/// Counting-engine metrics: cell emission rate per counting mode and
+/// chunked-phase histogram merges.
+pub struct CountMetrics {
+    /// Score cells filled, labeled by counting mode (`prefix`/`naive`).
+    pub cells: CounterVec,
+    /// Private-histogram merges performed by the chunked counting path.
+    pub chunk_merges: Counter,
+}
+
+/// Handles for the counting engine.
+pub fn counting() -> &'static CountMetrics {
+    static M: OnceLock<CountMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = super::registry();
+        CountMetrics {
+            cells: r.counter_vec(
+                "bnlearn_count_cells_total",
+                "Score cells filled by the counting engine",
+                &["mode"],
+            ),
+            chunk_merges: r.counter(
+                "bnlearn_count_chunk_merges_total",
+                "Histogram partial merges in the chunked counting path",
+            ),
+        }
+    })
+}
+
+/// MCMC chain metrics. Steps and accepts are live counters (steps/sec
+/// and the acceptance rate are their scrape-side derivatives); PSRF and
+/// ESS are rolling-window gauges refreshed by whoever owns the run's
+/// `ChainControl` (the daemon's progress sidecar, the one-shot
+/// coordinator at diagnostics time).
+pub struct ChainMetrics {
+    pub steps: Counter,
+    pub accepts: Counter,
+    /// Length `hi - lo` of each step's rescored interval.
+    pub interval_length: Histogram,
+    /// Rolling Gelman–Rubin PSRF over the chains' recent score windows
+    /// (NaN until ≥ 2 chains have windows).
+    pub psrf: Gauge,
+    /// Rolling effective sample size over the same windows.
+    pub ess: Gauge,
+}
+
+/// Handles for the MCMC layer.
+pub fn chain() -> &'static ChainMetrics {
+    static M: OnceLock<ChainMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = super::registry();
+        ChainMetrics {
+            steps: r.counter("bnlearn_chain_steps_total", "Metropolis-Hastings steps completed"),
+            accepts: r.counter("bnlearn_chain_accepts_total", "Accepted MH proposals"),
+            interval_length: r.histogram(
+                "bnlearn_chain_interval_length",
+                "Rescored interval length per MH step",
+                &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0],
+            ),
+            psrf: r.gauge(
+                "bnlearn_chain_psrf",
+                "Rolling Gelman-Rubin PSRF over recent per-chain score windows",
+            ),
+            ess: r.gauge(
+                "bnlearn_chain_ess",
+                "Rolling effective sample size over recent per-chain score windows",
+            ),
+        }
+    })
+}
+
+/// Process-level metrics.
+pub struct ProcessMetrics {
+    /// VmHWM from /proc/self/status (peak resident set, bytes).
+    pub peak_resident_bytes: Gauge,
+}
+
+/// Handles for process-level gauges.
+pub fn process() -> &'static ProcessMetrics {
+    static M: OnceLock<ProcessMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = super::registry();
+        ProcessMetrics {
+            peak_resident_bytes: r.gauge(
+                "bnlearn_process_peak_resident_bytes",
+                "Peak resident set size (VmHWM) of this process",
+            ),
+        }
+    })
+}
+
+/// Re-read VmHWM into the peak-RSS gauge. Called by the daemon's
+/// heartbeat sidecars and before every scrape/snapshot, so the gauge is
+/// fresh at each observation point without a dedicated poller thread.
+pub fn refresh_process_gauges() -> Option<u64> {
+    let peak = crate::util::procinfo::peak_resident_bytes()? as u64;
+    process().peak_resident_bytes.set_u64(peak);
+    Some(peak)
+}
+
+/// Daemon metrics: uptime and the live per-state job census.
+pub struct DaemonMetrics {
+    pub uptime_seconds: Gauge,
+    /// Jobs per lifecycle state (`queued`/`running`/`done`/`failed`/
+    /// `cancelled`), refreshed at scrape and stats time.
+    pub jobs: GaugeVec,
+}
+
+/// Handles for the daemon.
+pub fn daemon() -> &'static DaemonMetrics {
+    static M: OnceLock<DaemonMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = super::registry();
+        DaemonMetrics {
+            uptime_seconds: r.gauge(
+                "bnlearn_daemon_uptime_seconds",
+                "Seconds since the daemon started",
+            ),
+            jobs: r.gauge_vec(
+                "bnlearn_daemon_jobs",
+                "Jobs in the daemon's table by lifecycle state",
+                &["state"],
+            ),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_cached_and_usable() {
+        let a = exec();
+        let b = exec();
+        assert!(std::ptr::eq(a, b), "OnceLock caches the handle struct");
+        a.dispatches.inc();
+        assert!(b.dispatches.get() >= 1);
+        cache().hits.with(&["store"]).inc();
+        counting().cells.with(&["prefix"]).add(10);
+        chain().interval_length.observe(3.0);
+        daemon().jobs.with(&["queued"]).set(0.0);
+        // the global registry renders all of the above
+        let text = super::super::registry().render_prometheus();
+        assert!(text.contains("bnlearn_exec_dispatches_total"));
+        assert!(text.contains("bnlearn_cache_hits_total{cache=\"store\"}"));
+        assert!(text.contains("bnlearn_count_cells_total{mode=\"prefix\"}"));
+        assert!(text.contains("bnlearn_chain_interval_length_bucket"));
+    }
+
+    #[test]
+    fn process_gauge_refreshes_on_linux() {
+        // VmHWM exists on Linux; elsewhere the refresh is a no-op None.
+        if let Some(peak) = refresh_process_gauges() {
+            assert!(peak > 0);
+            assert_eq!(process().peak_resident_bytes.get(), peak as f64);
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Telemetry substrate: the process-wide metrics registry, the
+//! pre-registered metric handles for each layer, and the span tracer.
+//!
+//! Three parts:
+//! * [`mod@registry`] — dependency-free counters/gauges/histograms and
+//!   labeled families with Prometheus-text and JSON rendering;
+//! * [`metrics`] — the crate's named handles (`bnlearn_exec_*`,
+//!   `bnlearn_cache_*`, `bnlearn_count_*`, `bnlearn_chain_*`,
+//!   `bnlearn_daemon_*`, `bnlearn_process_*`), registered once against
+//!   the global registry;
+//! * [`mod@span`] — RAII timers (`crate::span!`) that emit JSONL trace
+//!   events when `--trace-dir` installs a sink.
+//!
+//! **Passivity invariant.** Telemetry observes; it never steers.
+//! Instrumented sites only *write* metrics (relaxed atomics) and the
+//! algorithms never read them back, so trajectories, stores, and
+//! reports are bit-identical with telemetry scraped continuously,
+//! snapshotted once, or ignored — the same contract `ChainControl`'s
+//! progress counters already kept, extended to the whole crate and
+//! locked by `tests/telemetry.rs` and the `/metrics`-scraper test in
+//! `tests/service.rs`.
+
+pub mod metrics;
+pub mod registry;
+pub mod span;
+
+use std::sync::OnceLock;
+
+pub use registry::{
+    Counter, CounterVec, FloatCounter, FloatCounterVec, Gauge, GaugeVec, Histogram, Kind,
+    MetricSnapshot, Registry, Sample, Value,
+};
+pub use span::{install_trace_dir, trace_enabled, Span};
+
+/// The process-wide registry every instrumented layer writes to and
+/// every surface (`GET /metrics`, `--metrics-out`) renders from.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn global_registry_is_a_singleton() {
+        let a = super::registry() as *const _;
+        let b = super::registry() as *const _;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,781 @@
+//! Dependency-free metrics registry: atomic counters, gauges,
+//! fixed-bucket histograms, and labeled families, rendered to the
+//! Prometheus text exposition format (0.0.4) or a JSON snapshot.
+//!
+//! Everything is lock-free on the hot path: a [`Counter`] is one
+//! `fetch_add`, a [`Gauge`] one `store` of f64 bits, a [`Histogram`]
+//! observation one `fetch_add` on its bucket plus a CAS loop on the
+//! f64 sum. Registration and label resolution take a mutex, so
+//! instrumented sites resolve their handles **once** (see
+//! `telemetry::metrics`) and clone the cheap `Arc`-backed handles.
+//!
+//! The passivity contract: nothing in this module is ever read back by
+//! the algorithms it observes. Metrics flow one way — from the code to
+//! a scraper — so trajectories and stores are bit-identical whether a
+//! registry is scraped continuously or never consulted at all.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotone integer counter (`_total` metrics).
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Monotone float counter (accumulated seconds and other non-integer
+/// totals). Adds CAS on the f64 bit pattern — fine for per-dispatch
+/// sites, too slow for per-cell ones (use [`Counter`] there).
+#[derive(Clone, Debug, Default)]
+pub struct FloatCounter(Arc<AtomicU64>);
+
+impl FloatCounter {
+    /// Add `x` (negative and non-finite increments are ignored so the
+    /// counter stays monotone).
+    pub fn add(&self, x: f64) {
+        if x.is_nan() || x <= 0.0 {
+            return;
+        }
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + x).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Instantaneous float value (queue depths, ratios, byte watermarks).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, x: f64) {
+        self.0.store(x.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Set from an integer (bytes, item counts).
+    pub fn set_u64(&self, x: u64) {
+        self.set(x as f64);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram. Buckets store per-bin counts internally;
+/// rendering accumulates them, so the exposed `_bucket` series are
+/// cumulative and `le="+Inf"` always equals `_count` by construction.
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistogramCore>);
+
+#[derive(Debug)]
+struct HistogramCore {
+    /// Upper bounds, strictly increasing; an implicit `+Inf` bucket
+    /// catches the overflow.
+    bounds: Vec<f64>,
+    /// Per-bin (non-cumulative) counts, `bounds.len() + 1` slots.
+    bins: Vec<AtomicU64>,
+    /// Sum of observations (f64 bits, CAS-updated).
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "histogram bounds must increase");
+        let bins = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram(Arc::new(HistogramCore {
+            bounds: bounds.to_vec(),
+            bins,
+            sum: AtomicU64::new(0),
+        }))
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, x: f64) {
+        if x.is_nan() {
+            return;
+        }
+        let core = &self.0;
+        let bin = core.bounds.partition_point(|&b| b < x);
+        core.bins[bin].fetch_add(1, Ordering::Relaxed);
+        let mut cur = core.sum.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + x).to_bits();
+            match core.sum.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Total observation count.
+    pub fn count(&self) -> u64 {
+        self.0.bins.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of observations.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum.load(Ordering::Relaxed))
+    }
+
+    /// Cumulative `(upper_bound, count)` pairs, `+Inf` last.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let core = &self.0;
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(core.bins.len());
+        for (i, bin) in core.bins.iter().enumerate() {
+            acc += bin.load(Ordering::Relaxed);
+            let bound = core.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((bound, acc));
+        }
+        out
+    }
+}
+
+/// Metric kind, for `# TYPE` lines and the JSON snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Slot {
+    Counter(Counter),
+    Float(FloatCounter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// One named metric family: fixed label names, children per label-value
+/// tuple. Unlabeled metrics are families with a single child at the
+/// empty tuple.
+#[derive(Debug)]
+struct Family {
+    name: String,
+    help: String,
+    kind: Kind,
+    float: bool,
+    labels: Vec<String>,
+    bounds: Vec<f64>,
+    children: Mutex<BTreeMap<Vec<String>, Slot>>,
+}
+
+impl Family {
+    fn slot(&self, values: &[&str]) -> Slot {
+        assert_eq!(
+            values.len(),
+            self.labels.len(),
+            "metric {} takes {} label values",
+            self.name,
+            self.labels.len()
+        );
+        let key: Vec<String> = values.iter().map(|v| v.to_string()).collect();
+        let mut children = self.children.lock().expect("metric family lock poisoned");
+        children
+            .entry(key)
+            .or_insert_with(|| match (self.kind, self.float) {
+                (Kind::Counter, false) => Slot::Counter(Counter::default()),
+                (Kind::Counter, true) => Slot::Float(FloatCounter::default()),
+                (Kind::Gauge, _) => Slot::Gauge(Gauge::default()),
+                (Kind::Histogram, _) => Slot::Histogram(Histogram::new(&self.bounds)),
+            })
+            .clone()
+    }
+}
+
+/// Labeled family of integer counters.
+#[derive(Clone, Debug)]
+pub struct CounterVec(Arc<Family>);
+
+impl CounterVec {
+    /// The child counter at `values` (created on first use).
+    pub fn with(&self, values: &[&str]) -> Counter {
+        match self.0.slot(values) {
+            Slot::Counter(c) => c,
+            _ => unreachable!("CounterVec holds counters"),
+        }
+    }
+}
+
+/// Labeled family of float counters.
+#[derive(Clone, Debug)]
+pub struct FloatCounterVec(Arc<Family>);
+
+impl FloatCounterVec {
+    /// The child counter at `values` (created on first use).
+    pub fn with(&self, values: &[&str]) -> FloatCounter {
+        match self.0.slot(values) {
+            Slot::Float(c) => c,
+            _ => unreachable!("FloatCounterVec holds float counters"),
+        }
+    }
+}
+
+/// Labeled family of gauges.
+#[derive(Clone, Debug)]
+pub struct GaugeVec(Arc<Family>);
+
+impl GaugeVec {
+    /// The child gauge at `values` (created on first use).
+    pub fn with(&self, values: &[&str]) -> Gauge {
+        match self.0.slot(values) {
+            Slot::Gauge(g) => g,
+            _ => unreachable!("GaugeVec holds gauges"),
+        }
+    }
+}
+
+/// A snapshot sample value (see [`Registry::snapshot`]).
+#[derive(Debug, Clone)]
+pub enum Value {
+    Counter(u64),
+    Float(f64),
+    Gauge(f64),
+    Histogram {
+        /// Cumulative `(le, count)` pairs, `+Inf` last.
+        buckets: Vec<(f64, u64)>,
+        sum: f64,
+        count: u64,
+    },
+}
+
+/// One labeled sample of a family.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// `(label_name, label_value)` pairs in declaration order.
+    pub labels: Vec<(String, String)>,
+    pub value: Value,
+}
+
+/// Snapshot of one metric family.
+#[derive(Debug, Clone)]
+pub struct MetricSnapshot {
+    pub name: String,
+    pub help: String,
+    pub kind: Kind,
+    pub samples: Vec<Sample>,
+}
+
+/// The metric registry: named families, idempotent registration.
+#[derive(Debug, Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Arc<Family>>>,
+}
+
+impl Registry {
+    /// An empty registry (tests; production code uses the process-wide
+    /// [`crate::telemetry::registry()`]).
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    fn family(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        float: bool,
+        labels: &[&str],
+        bounds: &[f64],
+    ) -> Arc<Family> {
+        let mut families = self.families.lock().expect("registry lock poisoned");
+        let fam = families.entry(name.to_string()).or_insert_with(|| {
+            Arc::new(Family {
+                name: name.to_string(),
+                help: help.to_string(),
+                kind,
+                float,
+                labels: labels.iter().map(|l| l.to_string()).collect(),
+                bounds: bounds.to_vec(),
+                children: Mutex::new(BTreeMap::new()),
+            })
+        });
+        assert!(
+            fam.kind == kind && fam.float == float && fam.labels.len() == labels.len(),
+            "metric {name} re-registered with a different shape"
+        );
+        fam.clone()
+    }
+
+    /// Register (or fetch) an unlabeled integer counter.
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        match self.family(name, help, Kind::Counter, false, &[], &[]).slot(&[]) {
+            Slot::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or fetch) an unlabeled float counter.
+    pub fn float_counter(&self, name: &str, help: &str) -> FloatCounter {
+        match self.family(name, help, Kind::Counter, true, &[], &[]).slot(&[]) {
+            Slot::Float(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or fetch) an unlabeled gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        match self.family(name, help, Kind::Gauge, false, &[], &[]).slot(&[]) {
+            Slot::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or fetch) an unlabeled histogram with the given
+    /// strictly-increasing upper bounds (an implicit `+Inf` is added).
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[f64]) -> Histogram {
+        match self.family(name, help, Kind::Histogram, false, &[], bounds).slot(&[]) {
+            Slot::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or fetch) a labeled counter family.
+    pub fn counter_vec(&self, name: &str, help: &str, labels: &[&str]) -> CounterVec {
+        CounterVec(self.family(name, help, Kind::Counter, false, labels, &[]))
+    }
+
+    /// Register (or fetch) a labeled float-counter family.
+    pub fn float_counter_vec(&self, name: &str, help: &str, labels: &[&str]) -> FloatCounterVec {
+        FloatCounterVec(self.family(name, help, Kind::Counter, true, labels, &[]))
+    }
+
+    /// Register (or fetch) a labeled gauge family.
+    pub fn gauge_vec(&self, name: &str, help: &str, labels: &[&str]) -> GaugeVec {
+        GaugeVec(self.family(name, help, Kind::Gauge, false, labels, &[]))
+    }
+
+    /// A point-in-time copy of every family, sorted by metric name and
+    /// label values. Concurrent updates may land between reads of
+    /// different counters — fine for monitoring, never consulted by the
+    /// algorithms themselves.
+    pub fn snapshot(&self) -> Vec<MetricSnapshot> {
+        let families: Vec<Arc<Family>> =
+            self.families.lock().expect("registry lock poisoned").values().cloned().collect();
+        families
+            .iter()
+            .map(|fam| {
+                let children = fam.children.lock().expect("metric family lock poisoned");
+                let samples = children
+                    .iter()
+                    .map(|(values, slot)| Sample {
+                        labels: fam.labels.iter().cloned().zip(values.iter().cloned()).collect(),
+                        value: match slot {
+                            Slot::Counter(c) => Value::Counter(c.get()),
+                            Slot::Float(c) => Value::Float(c.get()),
+                            Slot::Gauge(g) => Value::Gauge(g.get()),
+                            Slot::Histogram(h) => Value::Histogram {
+                                buckets: h.cumulative_buckets(),
+                                sum: h.sum(),
+                                count: h.count(),
+                            },
+                        },
+                    })
+                    .collect();
+                MetricSnapshot {
+                    name: fam.name.clone(),
+                    help: fam.help.clone(),
+                    kind: fam.kind,
+                    samples,
+                }
+            })
+            .collect()
+    }
+
+    /// Render the registry in the Prometheus text exposition format
+    /// (version 0.0.4): `# HELP` / `# TYPE` per family, one line per
+    /// sample, histogram `_bucket`/`_sum`/`_count` expansion.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for m in self.snapshot() {
+            let _ = writeln!(out, "# HELP {} {}", m.name, escape_help(&m.help));
+            let _ = writeln!(out, "# TYPE {} {}", m.name, m.kind.name());
+            for s in &m.samples {
+                match &s.value {
+                    Value::Counter(v) => {
+                        let _ = writeln!(out, "{}{} {v}", m.name, render_labels(&s.labels, None));
+                    }
+                    Value::Float(v) | Value::Gauge(v) => {
+                        let _ = writeln!(
+                            out,
+                            "{}{} {}",
+                            m.name,
+                            render_labels(&s.labels, None),
+                            fmt_value(*v)
+                        );
+                    }
+                    Value::Histogram { buckets, sum, count } => {
+                        for (le, c) in buckets {
+                            let _ = writeln!(
+                                out,
+                                "{}_bucket{} {c}",
+                                m.name,
+                                render_labels(&s.labels, Some(*le))
+                            );
+                        }
+                        let _ = writeln!(
+                            out,
+                            "{}_sum{} {}",
+                            m.name,
+                            render_labels(&s.labels, None),
+                            fmt_value(*sum)
+                        );
+                        let _ = writeln!(
+                            out,
+                            "{}_count{} {count}",
+                            m.name,
+                            render_labels(&s.labels, None)
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Render the registry as one JSON document (the `--metrics-out`
+    /// snapshot). Hand-rolled like `service::json`, so benches and CI
+    /// can assert on the same numbers the daemon exposes over HTTP.
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{\"metrics\":[");
+        for (i, m) in self.snapshot().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"name\":{},\"kind\":\"{}\",\"help\":{},\"samples\":[",
+                json_str(&m.name),
+                m.kind.name(),
+                json_str(&m.help)
+            );
+            for (j, s) in m.samples.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str("{\"labels\":{");
+                for (k, (name, value)) in s.labels.iter().enumerate() {
+                    if k > 0 {
+                        out.push(',');
+                    }
+                    let _ = write!(out, "{}:{}", json_str(name), json_str(value));
+                }
+                out.push_str("},\"value\":");
+                match &s.value {
+                    Value::Counter(v) => {
+                        let _ = write!(out, "{v}");
+                    }
+                    Value::Float(v) | Value::Gauge(v) => out.push_str(&json_num(*v)),
+                    Value::Histogram { buckets, sum, count } => {
+                        let _ = write!(
+                            out,
+                            "{{\"count\":{count},\"sum\":{},\"buckets\":[",
+                            json_num(*sum)
+                        );
+                        for (k, (le, c)) in buckets.iter().enumerate() {
+                            if k > 0 {
+                                out.push(',');
+                            }
+                            let _ = write!(out, "{{\"le\":{},\"count\":{c}}}", json_num(*le));
+                        }
+                        out.push_str("]}");
+                    }
+                }
+                out.push('}');
+            }
+            out.push_str("]}");
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Prometheus sample-value formatting: integral floats print without a
+/// fraction, non-finite values use the canonical `+Inf`/`-Inf`/`NaN`.
+fn fmt_value(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".into()
+    } else if x.is_infinite() {
+        if x > 0.0 {
+            "+Inf".into()
+        } else {
+            "-Inf".into()
+        }
+    } else if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Render a label set (plus an optional `le` for histogram buckets) in
+/// declaration order; empty sets render as nothing.
+fn render_labels(labels: &[(String, String)], le: Option<f64>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    for (i, (name, value)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{name}=\"{}\"", escape_label(value));
+    }
+    if let Some(le) = le {
+        if !labels.is_empty() {
+            out.push(',');
+        }
+        let _ = write!(out, "le=\"{}\"", fmt_value(le));
+    }
+    out.push('}');
+    out
+}
+
+/// Escape a HELP line: backslash and newline only, per the format spec.
+fn escape_help(text: &str) -> String {
+    text.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Escape a label value: backslash, double-quote, newline.
+fn escape_label(text: &str) -> String {
+    text.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Minimal JSON string literal (registry names/labels are controlled
+/// identifiers, but escape defensively anyway).
+fn json_str(text: &str) -> String {
+    let mut out = String::with_capacity(text.len() + 2);
+    out.push('"');
+    for c in text.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Crate-internal escape hook for the span tracer's JSONL lines.
+pub(crate) fn json_escape_for_trace(text: &str) -> String {
+    json_str(text)
+}
+
+/// JSON number: non-finite values become `null` (JSON has neither
+/// `Inf` nor `NaN`), mirroring `service::json`'s policy.
+fn json_num(x: f64) -> String {
+    if !x.is_finite() {
+        "null".into()
+    } else if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_float_counters_accumulate() {
+        let reg = Registry::new();
+        let c = reg.counter("c_total", "a counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // idempotent re-registration returns the same child
+        assert_eq!(reg.counter("c_total", "a counter").get(), 5);
+
+        let f = reg.float_counter("f_total", "a float counter");
+        f.add(0.5);
+        f.add(1.25);
+        f.add(-3.0); // ignored: counters are monotone
+        f.add(f64::NAN); // ignored
+        assert_eq!(f.get(), 1.75);
+
+        let g = reg.gauge("g", "a gauge");
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+        g.set_u64(7);
+        assert_eq!(g.get(), 7.0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_inf_matches_count() {
+        let reg = Registry::new();
+        let h = reg.histogram("h", "hist", &[1.0, 2.0, 4.0]);
+        for x in [0.5, 1.0, 1.5, 3.0, 100.0] {
+            h.observe(x);
+        }
+        h.observe(f64::NAN); // dropped
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 106.0).abs() < 1e-12);
+        let buckets = h.cumulative_buckets();
+        // observe uses le (x <= bound): 1.0 falls in the le="1" bucket
+        assert_eq!(buckets[0], (1.0, 2));
+        assert_eq!(buckets[1], (2.0, 3));
+        assert_eq!(buckets[2], (4.0, 4));
+        assert_eq!(buckets[3].1, 5, "+Inf bucket equals count");
+        assert!(buckets[3].0.is_infinite());
+        // cumulativeness: counts never decrease
+        for w in buckets.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn labeled_families_key_by_value_tuple() {
+        let reg = Registry::new();
+        let v = reg.counter_vec("req_total", "requests", &["method"]);
+        v.with(&["get"]).add(3);
+        v.with(&["put"]).inc();
+        v.with(&["get"]).inc();
+        assert_eq!(v.with(&["get"]).get(), 4);
+        assert_eq!(v.with(&["put"]).get(), 1);
+
+        let g = reg.gauge_vec("depth", "queue depth", &["queue"]);
+        g.with(&["a"]).set(1.0);
+        g.with(&["b"]).set(2.0);
+        assert_eq!(g.with(&["b"]).get(), 2.0);
+
+        let f = reg.float_counter_vec("busy_seconds_total", "busy", &["worker"]);
+        f.with(&["0"]).add(0.25);
+        assert_eq!(f.with(&["0"]).get(), 0.25);
+    }
+
+    #[test]
+    #[should_panic(expected = "takes 1 label values")]
+    fn wrong_label_arity_panics() {
+        let reg = Registry::new();
+        let v = reg.counter_vec("x_total", "x", &["k"]);
+        v.with(&[]);
+    }
+
+    #[test]
+    fn prometheus_rendering_escapes_and_orders() {
+        let reg = Registry::new();
+        let v = reg.counter_vec("bn_req_total", "line1\nline2 \\slash", &["path"]);
+        v.with(&["b\"quote\\slash\nline"]).inc();
+        v.with(&["a"]).add(2);
+        reg.gauge("bn_depth", "plain").set(1.5);
+        let text = reg.render_prometheus();
+        // HELP escaping: newline + backslash
+        assert!(text.contains("# HELP bn_req_total line1\\nline2 \\\\slash"));
+        assert!(text.contains("# TYPE bn_req_total counter"));
+        // label escaping: quote, backslash, newline
+        assert!(text.contains("bn_req_total{path=\"b\\\"quote\\\\slash\\nline\"} 1"));
+        // samples sorted by label values: "a" before "b..."
+        let a = text.find("path=\"a\"").unwrap();
+        let b = text.find("path=\"b").unwrap();
+        assert!(a < b, "label values render in sorted order");
+        // families sorted by name: bn_depth before bn_req_total
+        assert!(text.find("bn_depth").unwrap() < text.find("bn_req_total").unwrap());
+        assert!(text.contains("bn_depth 1.5"));
+    }
+
+    #[test]
+    fn prometheus_histogram_expansion() {
+        let reg = Registry::new();
+        let h = reg.histogram("bn_lat_seconds", "latency", &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(5.0);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE bn_lat_seconds histogram"));
+        assert!(text.contains("bn_lat_seconds_bucket{le=\"0.1\"} 1"));
+        assert!(text.contains("bn_lat_seconds_bucket{le=\"1\"} 2"));
+        assert!(text.contains("bn_lat_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("bn_lat_seconds_count 3"));
+        assert!(text.contains("bn_lat_seconds_sum 5.55"));
+    }
+
+    #[test]
+    fn json_snapshot_parses_with_service_json() {
+        let reg = Registry::new();
+        reg.counter("a_total", "count").add(3);
+        reg.gauge_vec("b", "gauge", &["x"]).with(&["q\"v"]).set(f64::INFINITY);
+        reg.histogram("c", "hist", &[1.0]).observe(0.5);
+        let text = reg.render_json();
+        let doc = crate::service::json::Json::parse(&text).expect("snapshot is valid JSON");
+        let metrics = doc.get("metrics").and_then(|m| m.as_arr()).unwrap();
+        assert_eq!(metrics.len(), 3);
+        assert_eq!(metrics[0].get("name").and_then(|n| n.as_str()), Some("a_total"));
+        let sample = &metrics[0].get("samples").and_then(|s| s.as_arr()).unwrap()[0];
+        assert_eq!(sample.get("value").and_then(|v| v.as_u64()), Some(3));
+        // non-finite gauge serializes as null
+        let b = &metrics[1].get("samples").and_then(|s| s.as_arr()).unwrap()[0];
+        assert_eq!(b.get("value"), Some(&crate::service::json::Json::Null));
+        // histogram carries count/sum/buckets
+        let c = &metrics[2].get("samples").and_then(|s| s.as_arr()).unwrap()[0];
+        let v = c.get("value").unwrap();
+        assert_eq!(v.get("count").and_then(|x| x.as_u64()), Some(1));
+        assert!(v.get("buckets").and_then(|x| x.as_arr()).is_some());
+    }
+
+    #[test]
+    fn value_formatting() {
+        assert_eq!(fmt_value(3.0), "3");
+        assert_eq!(fmt_value(1.5), "1.5");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(2.0), "2");
+    }
+
+    #[test]
+    #[should_panic(expected = "different shape")]
+    fn kind_mismatch_panics() {
+        let reg = Registry::new();
+        reg.counter("m", "as counter");
+        reg.gauge("m", "as gauge");
+    }
+}

@@ -1,8 +1,12 @@
 //! Service-daemon acceptance tests: concurrent jobs sharing one cached
 //! score store with results bit-identical to the one-shot CLI path,
 //! cooperative cancellation, checkpoint fingerprint-mismatch rejection
-//! through the daemon, and journal-based queue recovery.
+//! through the daemon, journal-based queue recovery, and the
+//! `--http-addr` observability endpoint (mid-job `/metrics` scrapes,
+//! scraper passivity).
 
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::time::{Duration, Instant};
 
 use bnlearn::coordinator::{run_learning, RunConfig};
@@ -20,11 +24,28 @@ fn start_daemon(state_dir: Option<std::path::PathBuf>) -> (DaemonHandle, Client)
         jobs: 2,
         state_dir,
         log_level: Level::Warn,
+        http_addr: Some("127.0.0.1:0".into()),
         ..ServeConfig::default()
     };
     let handle = start(cfg).unwrap();
     let client = Client::connect(handle.local_addr()).unwrap();
     (handle, client)
+}
+
+/// Minimal HTTP/1.1 request against the daemon's observability
+/// endpoint; returns `(head, body)`.
+fn http_request(addr: SocketAddr, method: &str, path: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(stream, "{method} {path} HTTP/1.1\r\nHost: bnlearn\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).unwrap();
+    let (head, body) = response.split_once("\r\n\r\n").expect("header/body split");
+    (head.to_string(), body.to_string())
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    http_request(addr, "GET", path)
 }
 
 fn event_type<'a>(event: &'a Json, ty: &str) -> Option<&'a Json> {
@@ -167,4 +188,111 @@ fn journal_recovery_requeues_unfinished_jobs() {
     handle.shutdown();
     handle.join();
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn metrics_endpoint_serves_prometheus_mid_job() {
+    let (handle, mut client) = start_daemon(None);
+    let addr = handle.http_addr().expect("daemon started with --http-addr");
+
+    // Liveness probe answers before any job exists.
+    let (head, body) = http_get(addr, "/healthz");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    let health = Json::parse(&body).unwrap();
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true), "{body}");
+    assert!(health.get("uptime_secs").is_some(), "{body}");
+
+    // Park a long-running job, then scrape while it is demonstrably
+    // mid-flight.
+    let job = client.submit(&args("--network asia --rows 200 --seed 4 --iters 50000000")).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let status = client.status(job).unwrap();
+        let running = status.get("state").and_then(Json::as_str) == Some("running");
+        let iters = status.get("iterations").and_then(Json::as_u64).unwrap_or(0);
+        if running && iters > 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job never started: {status}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let (head, metrics) = http_get(addr, "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(head.contains("text/plain; version=0.0.4"), "{head}");
+    for needle in [
+        "# TYPE bnlearn_chain_steps_total counter",
+        "bnlearn_chain_steps_total",
+        "bnlearn_chain_accepts_total",
+        "bnlearn_chain_interval_length_bucket",
+        "bnlearn_exec_dispatches_total",
+        "bnlearn_exec_worker_busy_seconds_total",
+        "bnlearn_cache_misses_total{cache=\"store\"}",
+        "bnlearn_daemon_jobs{state=\"running\"} 1",
+        "bnlearn_daemon_uptime_seconds",
+    ] {
+        assert!(metrics.contains(needle), "scrape is missing {needle:?}:\n{metrics}");
+    }
+
+    // The job table endpoint lists the running job with its argv.
+    let (_, jobs_body) = http_get(addr, "/jobs");
+    let jobs = Json::parse(&jobs_body).unwrap();
+    let entry = jobs
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|j| j.get("job").and_then(Json::as_u64) == Some(job))
+        .expect("running job listed in /jobs");
+    assert_eq!(entry.get("state").and_then(Json::as_str), Some("running"), "{jobs_body}");
+    assert!(entry.get("iterations").and_then(Json::as_u64).unwrap() > 0, "{jobs_body}");
+
+    // Unknown paths 404, non-GET methods 405, and neither disturbs the
+    // daemon or the running job.
+    let (head, _) = http_get(addr, "/nope");
+    assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+    let (head, _) = http_request(addr, "POST", "/metrics");
+    assert!(head.starts_with("HTTP/1.1 405"), "{head}");
+
+    client.cancel(job).unwrap();
+    client.wait(job).unwrap();
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn concurrent_scraper_leaves_results_bit_identical() {
+    let (handle, mut client) = start_daemon(None);
+    let addr = handle.http_addr().expect("daemon started with --http-addr");
+
+    // Hammer /metrics from a side thread for the whole life of the job.
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let scraper = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut scrapes = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let (head, _) = http_get(addr, "/metrics");
+                assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+                scrapes += 1;
+            }
+            scrapes
+        })
+    };
+
+    let argv = args("--network asia --rows 300 --seed 13 --iters 2000 --chains 2");
+    let job = client.submit(&argv).unwrap();
+    client.wait(job).unwrap();
+    let report = client.report(job).unwrap();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let scrapes = scraper.join().unwrap();
+    assert!(scrapes > 0, "the scraper thread never completed a scrape");
+
+    // Scraped continuously, the job's result is still bit-identical to
+    // an unscraped one-shot run of the same config.
+    let one_shot = run_learning(&RunConfig::from_args(&argv).unwrap(), None).unwrap();
+    let want = f64_bits(one_shot.result.best_score().unwrap());
+    let got = report.get("best_score_bits").and_then(Json::as_str).unwrap();
+    assert_eq!(got, want, "concurrent scraping changed the trajectory");
+    handle.shutdown();
+    handle.join();
 }

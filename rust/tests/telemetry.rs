@@ -1,0 +1,161 @@
+//! Telemetry passivity acceptance tests: trajectories, reports, and
+//! posterior checkpoints are bit-identical whether the telemetry layer
+//! is idle, ticking under an attached `ChainControl`, or rendered
+//! concurrently by a scraper — plus span-sink and snapshot-format
+//! integration checks.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use bnlearn::coordinator::{
+    run_learning, run_learning_controlled, run_posterior, run_posterior_controlled, RunConfig,
+};
+use bnlearn::mcmc::ChainControl;
+use bnlearn::service::Json;
+
+fn cfg(s: &str) -> RunConfig {
+    let argv: Vec<String> = s.split_whitespace().map(|t| t.to_string()).collect();
+    RunConfig::from_args(&argv).unwrap()
+}
+
+/// Spawn a thread that renders the global registry (both exposition
+/// formats) in a tight loop until `stop` trips — an in-process stand-in
+/// for a scraper hammering `GET /metrics`.
+fn spawn_render_hammer(stop: Arc<AtomicBool>) -> std::thread::JoinHandle<u64> {
+    std::thread::spawn(move || {
+        let mut renders = 0u64;
+        while !stop.load(Ordering::Relaxed) {
+            let text = bnlearn::telemetry::registry().render_prometheus();
+            assert!(!text.is_empty());
+            let json = bnlearn::telemetry::registry().render_json();
+            assert!(Json::parse(&json).is_ok(), "snapshot stays valid JSON mid-run");
+            renders += 1;
+        }
+        renders
+    })
+}
+
+#[test]
+fn learning_is_bit_identical_with_telemetry_on_and_off() {
+    let config = cfg("--network asia --rows 400 --seed 21 --iters 1500 --chains 2 --trace");
+
+    // Telemetry "off": no control attached, so the chains skip every
+    // per-step metric write.
+    let baseline = run_learning(&config, None).unwrap();
+
+    // Telemetry "on": a control ticks the per-step counters and rolling
+    // score windows, while a concurrent hammer renders the registry.
+    let stop = Arc::new(AtomicBool::new(false));
+    let hammer = spawn_render_hammer(stop.clone());
+    let control = ChainControl::shared();
+    let telemetered = run_learning_controlled(&config, None, Some(control.clone())).unwrap();
+    stop.store(true, Ordering::Relaxed);
+    let renders = hammer.join().unwrap();
+    assert!(renders > 0, "the render hammer never completed a pass");
+
+    // The telemetry ticked...
+    let (iterations, _accepted) = control.progress();
+    assert_eq!(iterations, 2 * 1500, "both chains folded every step into the control");
+    let windows = control.rolling_traces();
+    assert_eq!(windows.len(), 2, "one rolling score window per chain");
+    assert!(windows.iter().all(|w| !w.is_empty()));
+
+    // ...and changed nothing: same best score bits, same full traces.
+    let want = baseline.result.best_score().unwrap().to_bits();
+    let got = telemetered.result.best_score().unwrap().to_bits();
+    assert_eq!(want, got, "telemetry changed the best score");
+    assert_eq!(baseline.result.traces, telemetered.result.traces, "trajectories diverged");
+}
+
+#[test]
+fn posterior_checkpoints_are_bit_identical_with_telemetry() {
+    let dir = std::env::temp_dir().join("bnlearn_telemetry_ckpt_it");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let plain = dir.join("plain.ckpt");
+    let scraped = dir.join("scraped.ckpt");
+    let base = "--network asia --rows 300 --seed 5 --posterior --burnin 20 --iters 200 \
+                --checkpoint-every 50 --checkpoint";
+
+    let baseline = run_posterior(&cfg(&format!("{base} {}", plain.display())), None).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let hammer = spawn_render_hammer(stop.clone());
+    let control = ChainControl::shared();
+    let telemetered = run_posterior_controlled(
+        &cfg(&format!("{base} {}", scraped.display())),
+        None,
+        Some(control),
+    )
+    .unwrap();
+    stop.store(true, Ordering::Relaxed);
+    hammer.join().unwrap();
+
+    // Edge marginals match bit-for-bit and the checkpoint files are
+    // byte-identical.
+    assert_eq!(baseline.edge_probs.len(), telemetered.edge_probs.len());
+    for (i, (a, b)) in baseline.edge_probs.iter().zip(&telemetered.edge_probs).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "edge marginal {i} diverged");
+    }
+    let plain_bytes = std::fs::read(&plain).unwrap();
+    let scraped_bytes = std::fs::read(&scraped).unwrap();
+    assert_eq!(plain_bytes, scraped_bytes, "checkpoint bytes diverged under telemetry");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn span_sink_writes_parseable_jsonl_trace_events() {
+    let dir = std::env::temp_dir().join("bnlearn_telemetry_trace_it");
+    let _ = std::fs::remove_dir_all(&dir);
+    // First install wins and lives for the process; this test only
+    // appends to it (other tests in this binary stay span-silent until
+    // the install, and their spans landing here too would be harmless).
+    let path = bnlearn::telemetry::install_trace_dir(&dir).unwrap();
+    assert!(bnlearn::telemetry::trace_enabled());
+
+    run_learning(&cfg("--network asia --rows 200 --seed 3 --iters 100"), None).unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut names = Vec::new();
+    for line in text.lines() {
+        let event = Json::parse(line).expect("every trace line is one JSON object");
+        assert_eq!(event.get("ev").and_then(Json::as_str), Some("span"), "{line}");
+        assert!(event.get("dur_us").and_then(Json::as_u64).is_some(), "{line}");
+        assert!(event.get("start_us").and_then(Json::as_u64).is_some(), "{line}");
+        names.push(event.get("name").and_then(Json::as_str).unwrap().to_string());
+    }
+    for phase in ["store_build", "learn_sample"] {
+        assert!(names.iter().any(|n| n == phase), "no {phase:?} span in {names:?}");
+    }
+    // The sink is process-global, so leave the directory in place for
+    // any later spans; temp dirs are reaped by the OS.
+}
+
+#[test]
+fn metrics_snapshot_covers_the_instrumented_layers() {
+    // Run something real so the exec/count/chain layers have ticked in
+    // this process, then check both exposition formats name them.
+    run_learning(&cfg("--network asia --rows 200 --seed 8 --iters 150"), None).unwrap();
+    bnlearn::telemetry::metrics::refresh_process_gauges();
+
+    let text = bnlearn::telemetry::registry().render_prometheus();
+    for needle in [
+        "# TYPE bnlearn_exec_dispatches_total counter",
+        "bnlearn_exec_worker_busy_seconds_total",
+        "bnlearn_exec_imbalance",
+        "bnlearn_count_cells_total{mode=",
+        "# TYPE bnlearn_chain_interval_length histogram",
+        "bnlearn_chain_interval_length_bucket{le=\"+Inf\"}",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+
+    let json = bnlearn::telemetry::registry().render_json();
+    let doc = Json::parse(&json).expect("snapshot is valid JSON");
+    let metrics = doc.get("metrics").and_then(Json::as_arr).unwrap();
+    let names: Vec<&str> =
+        metrics.iter().filter_map(|m| m.get("name").and_then(Json::as_str)).collect();
+    for name in ["bnlearn_exec_dispatches_total", "bnlearn_count_cells_total"] {
+        assert!(names.contains(&name), "snapshot is missing {name}: {names:?}");
+    }
+}

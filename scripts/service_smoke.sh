@@ -11,19 +11,32 @@ BIN=${1:?usage: service_smoke.sh path/to/bnlearn}
 LOG=$(mktemp)
 STATE=$(mktemp -d)
 
-"$BIN" serve --addr 127.0.0.1:0 --jobs 2 --state-dir "$STATE" >"$LOG" 2>&1 &
+"$BIN" serve --addr 127.0.0.1:0 --jobs 2 --state-dir "$STATE" \
+  --http-addr 127.0.0.1:0 >"$LOG" 2>&1 &
 PID=$!
 trap 'kill "$PID" 2>/dev/null || true; cat "$LOG"' EXIT
 
-# Wait for the daemon to announce its ephemeral port.
+# Wait for the daemon to announce its ephemeral ports.
 for _ in $(seq 1 100); do
-  grep -q 'bnlearn service listening on' "$LOG" && break
+  grep -q 'bnlearn metrics listening on' "$LOG" && break
   sleep 0.1
 done
 ADDR=$(sed -n 's/^bnlearn service listening on //p' "$LOG" | head -n1)
 PORT=${ADDR##*:}
 test -n "$PORT"
-echo "daemon up on port $PORT (pid $PID)"
+HTTP_ADDR=$(sed -n 's/^bnlearn metrics listening on //p' "$LOG" | head -n1)
+HTTP_PORT=${HTTP_ADDR##*:}
+test -n "$HTTP_PORT"
+echo "daemon up on port $PORT, metrics on $HTTP_PORT (pid $PID)"
+
+# One HTTP GET over /dev/tcp against the observability endpoint.
+scrape() {
+  local path=$1
+  exec 4<>"/dev/tcp/127.0.0.1/$HTTP_PORT"
+  printf 'GET %s HTTP/1.1\r\nHost: bnlearn\r\nConnection: close\r\n\r\n' "$path" >&4
+  cat <&4
+  exec 4<&- 4>&-
+}
 
 # One request line, one reply line, over a fresh /dev/tcp connection.
 rpc() {
@@ -80,6 +93,34 @@ STATS=$(rpc '{"cmd":"stats"}')
 echo "stats -> $STATS"
 echo "$STATS" | grep -q '"misses":1'
 echo "$STATS" | grep -q '"hits":1'
+
+# --- observability endpoint ---
+H=$(scrape /healthz)
+echo "$H" | grep -q '200 OK'
+echo "$H" | grep -q '"ok":true'
+echo "healthz ok"
+
+# Park a long job so the /metrics scrape demonstrably happens mid-run.
+R3=$(rpc "${SUBMIT/ITERS/50000000}")
+echo "$R3" | grep -q '"ok":true'
+JOB3=$(echo "$R3" | sed -n 's/.*"job":\([0-9]*\).*/\1/p')
+for _ in $(seq 1 300); do
+  rpc "{\"cmd\":\"status\",\"job\":$JOB3}" | grep -q '"state":"running"' && break
+  sleep 0.1
+done
+
+M=$(scrape /metrics)
+echo "$M" | grep -q '200 OK'
+echo "$M" | grep -q 'bnlearn_exec_worker_busy_seconds_total'
+echo "$M" | grep -Eq 'bnlearn_cache_hits_total\{cache="store"\} [1-9]'
+echo "$M" | grep -Eq 'bnlearn_chain_steps_total [1-9]'
+echo "$M" | grep -q 'bnlearn_daemon_jobs{state="running"} 1'
+echo "$M" | grep -q 'bnlearn_daemon_uptime_seconds'
+echo "metrics scrape ok mid-job $JOB3"
+
+rpc "{\"cmd\":\"cancel\",\"job\":$JOB3}" | grep -q '"ok":true'
+wait_job "$JOB3" | grep -q '"state":"cancelled"'
+echo "job $JOB3 cancelled"
 
 # Clean shutdown gates the test: the daemon must exit 0 on its own.
 rpc '{"cmd":"shutdown"}' | grep -q '"stopping":true'
